@@ -1,0 +1,167 @@
+//! CNF training via the adjoint equation (Table 5 stand-in): fit a 2-D
+//! continuous normalizing flow to a mixture of Gaussians,
+//! optimize-then-discretize, comparing the **per-instance** and **joint**
+//! adjoint backward passes — the axis of Table 5.
+//!
+//! ```text
+//! cargo run --release --example cnf_adjoint [-- --steps 120]
+//! ```
+
+use rode::nn::{Adam, Parameterized, Rng64};
+use rode::prelude::*;
+use rode::problems::CnfDynamics;
+use rode::solver::{adjoint_backward_joint, adjoint_backward_parallel, AdjointOptions};
+use std::fs;
+use std::io::Write;
+
+const D: usize = 2;
+const T1: f64 = 1.0;
+
+/// Mixture of two Gaussians in 2-D.
+fn sample_data(rng: &mut Rng64, n: usize) -> Vec<[f64; D]> {
+    (0..n)
+        .map(|_| {
+            let c = if rng.uniform() < 0.5 { [-1.5, 0.0] } else { [1.5, 0.0] };
+            [c[0] + 0.4 * rng.normal(), c[1] + 0.4 * rng.normal()]
+        })
+        .collect()
+}
+
+fn log_standard_normal(z: &[f64]) -> f64 {
+    let mut acc = -(D as f64) * 0.5 * (2.0 * std::f64::consts::PI).ln();
+    for zi in z.iter().take(D) {
+        acc -= 0.5 * zi * zi;
+    }
+    acc
+}
+
+/// Forward solve data→base: returns final augmented states and NLL.
+fn forward(model: &CnfDynamics, batch: &[[f64; D]]) -> (BatchVec, f64) {
+    let b = batch.len();
+    let mut y0 = BatchVec::zeros(b, D + 1);
+    for (i, x) in batch.iter().enumerate() {
+        y0.row_mut(i)[..D].copy_from_slice(x);
+        // logp channel starts at 0: accumulates -∫div.
+    }
+    let grid = TimeGrid::linspace_shared(b, 0.0, T1, 2);
+    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_max_steps(2_000);
+    let sol = solve_ivp_parallel(model, &y0, &grid, &opts);
+    assert!(sol.all_success(), "{:?}", sol.status);
+    let mut y1 = BatchVec::zeros(b, D + 1);
+    let mut nll = 0.0;
+    for i in 0..b {
+        y1.row_mut(i).copy_from_slice(sol.y_final(i));
+        let z = sol.y_final(i);
+        // log p(x) = log N(z(T)) + Δlogp where Δlogp = -∫ div = z[D]... sign:
+        // dlogp/dt = -div, logp(T)-logp(0) = -∫div, and change of variables
+        // gives log p_x(x) = log p_z(z(T)) + ∫ div dt computed backwards —
+        // with our convention: log p_x(x) = log N(z(T)) - y1[D].
+        nll -= log_standard_normal(&z[..D]) - z[D];
+    }
+    (y1, nll / b as f64)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let train_steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+
+    fs::create_dir_all("results").expect("mkdir results");
+    let mut rng = Rng64::new(11);
+    let mut model = CnfDynamics::new(D, &[32, 32], &mut rng);
+    let n_params = rode::problems::OdeSystem::n_params(&model);
+    println!("CNF stand-in: d = {D}, {n_params} parameters, adjoint backward");
+    let mut params = vec![0.0; n_params];
+    model.params(&mut params);
+    let mut opt = Adam::new(n_params, 2e-3);
+
+    let batch_size = 32;
+    let adj_opts =
+        AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(5_000));
+
+    let mut logf = fs::File::create("results/cnf_loss.csv").unwrap();
+    writeln!(logf, "step,nll_per_dim").unwrap();
+    let t_start = std::time::Instant::now();
+    let mut first_nll = None;
+    let mut last_nll = 0.0;
+    for step in 0..train_steps {
+        let data = sample_data(&mut rng, batch_size);
+        let (y1, nll) = forward(&model, &data);
+        first_nll.get_or_insert(nll);
+        last_nll = nll;
+
+        // dL/dy(T): L = mean_i [ -log N(z_i(T)) + logp_acc_i ]
+        let mut dl = BatchVec::zeros(batch_size, D + 1);
+        for i in 0..batch_size {
+            let z = y1.row(i);
+            let row = dl.row_mut(i);
+            for d in 0..D {
+                row[d] = z[d] / batch_size as f64; // -∂logN/∂z = z
+            }
+            row[D] = 1.0 / batch_size as f64;
+        }
+        // Joint adjoint (the fast variant the paper recommends for training).
+        let res = adjoint_backward_joint(&model, &y1, &dl, 0.0, T1, &adj_opts);
+        assert!(res.status.iter().all(|s| *s == Status::Success));
+        opt.step(&mut params, &res.dl_dparams);
+        model.set_params(&params);
+
+        if step % 20 == 0 || step + 1 == train_steps {
+            println!("step {step:>4}: NLL/dim {:.4}", nll / D as f64);
+        }
+        writeln!(logf, "{step},{}", nll / D as f64).unwrap();
+    }
+    println!(
+        "trained {train_steps} steps in {:.1}s; NLL/dim {:.3} -> {:.3}",
+        t_start.elapsed().as_secs_f64(),
+        first_nll.unwrap() / D as f64,
+        last_nll / D as f64
+    );
+    assert!(
+        last_nll < first_nll.unwrap(),
+        "training did not reduce the NLL"
+    );
+
+    // --- Table 5 axis: per-instance vs joint backward ------------------------
+    println!("\n=== adjoint variants on one batch (Table 5 axis) ===");
+    let data = sample_data(&mut rng, batch_size);
+    let (y1, _) = forward(&model, &data);
+    let mut dl = BatchVec::zeros(batch_size, D + 1);
+    for i in 0..batch_size {
+        dl.row_mut(i)[0] = 1.0;
+    }
+    let t0s = vec![0.0; batch_size];
+    let t1s = vec![T1; batch_size];
+
+    let t = std::time::Instant::now();
+    let par = adjoint_backward_parallel(&model, &y1, &dl, &t0s, &t1s, &adj_opts);
+    let par_time = t.elapsed().as_secs_f64() * 1e3;
+    let t = std::time::Instant::now();
+    let joint = adjoint_backward_joint(&model, &y1, &dl, 0.0, T1, &adj_opts);
+    let joint_time = t.elapsed().as_secs_f64() * 1e3;
+
+    let par_steps: u64 = par.stats.iter().map(|s| s.n_steps).sum();
+    let joint_steps: u64 = joint.stats.iter().map(|s| s.n_steps).sum();
+    println!(
+        "per-instance adjoint: {par_time:9.1} ms, {par_steps:>5} total steps, state size b(2f+p) = {}",
+        batch_size * (2 * (D + 1) + n_params)
+    );
+    println!(
+        "joint adjoint:        {joint_time:9.1} ms, {joint_steps:>5} total steps, state size b·2f+p  = {}",
+        batch_size * 2 * (D + 1) + n_params
+    );
+    println!(
+        "(paper Table 5: torchode per-instance bw loop 58.1 ms vs torchode-joint 2.38 ms —\n\
+         the joint variant must be dramatically cheaper; gradient agreement below)"
+    );
+    let mut max_diff = 0.0f64;
+    for (a, b) in par.dl_dparams.iter().zip(&joint.dl_dparams) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    println!("max |Δ dL/dθ| between variants: {max_diff:.2e}");
+    println!("\nwrote results/cnf_loss.csv");
+}

@@ -1,0 +1,188 @@
+//! End-to-end driver (Table 4 stand-in): train a graph-ODE "FEN" on a
+//! synthetic advection–diffusion field, discretize-then-optimize (exact
+//! backprop through the solver), log the loss curve, and report the MAE
+//! plus the parallel-vs-joint solver statistics at evaluation time.
+//!
+//! This is the system-proving run of DESIGN.md: teacher data generation
+//! (native adaptive solver) → training loop (fixed-step RK tape + Adam) →
+//! evaluation (parallel and joint engines on the learned dynamics).
+//!
+//! ```text
+//! cargo run --release --example fen_train [-- --steps 300]
+//! ```
+
+use rode::nn::{Adam, Parameterized, Rng64};
+use rode::prelude::*;
+use rode::problems::{FenDynamics, Mesh};
+use rode::solver::backprop::{rk_backward, rk_forward_tape};
+use std::fs;
+use std::io::Write;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let train_steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+
+    fs::create_dir_all("results").expect("mkdir results");
+    let mut rng = Rng64::new(7);
+
+    // --- mesh + teacher data --------------------------------------------------
+    let n_nodes = 24;
+    let n_feat = 1;
+    let mesh = Mesh::random_geometric(n_nodes, 0.35, &mut rng);
+    println!(
+        "mesh: {} nodes, {} directed edges",
+        mesh.n_nodes(),
+        mesh.graph.n_edges_directed()
+    );
+    let teacher = FenDynamics::teacher(&mesh, n_feat, 0.8, 0.3);
+    let dim = n_nodes * n_feat;
+
+    // Trajectories: random smooth initial fields, 10 snapshots over [0, 1].
+    let n_train = 8;
+    let n_test = 4;
+    let horizon = 1.0;
+    let snapshots = 10;
+    let make_fields = |rng: &mut Rng64, n: usize| -> BatchVec {
+        BatchVec::from_rows(
+            &(0..n)
+                .map(|_| {
+                    // Smooth-ish random field: position-correlated values.
+                    let (cx, cy) = (rng.uniform(), rng.uniform());
+                    mesh.positions
+                        .iter()
+                        .map(|p| {
+                            let d2 = (p[0] - cx).powi(2) + (p[1] - cy).powi(2);
+                            2.0 * (-4.0 * d2).exp() + 0.3 * rng.normal()
+                        })
+                        .collect()
+                })
+                .collect::<Vec<_>>(),
+        )
+    };
+    let solve_teacher = |y0: &BatchVec| -> Solution {
+        let grid = TimeGrid::linspace_shared(y0.batch(), 0.0, horizon, snapshots);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_parallel(&teacher, y0, &grid, &opts);
+        assert!(sol.all_success());
+        sol
+    };
+    let y0_train = make_fields(&mut rng, n_train);
+    let y0_test = make_fields(&mut rng, n_test);
+    let truth_train = solve_teacher(&y0_train);
+    let truth_test = solve_teacher(&y0_test);
+
+    // --- model + training -----------------------------------------------------
+    let mut model = FenDynamics::new(mesh.clone(), n_feat, 32, &mut rng);
+    let n_params = rode::nn::Parameterized::n_params(&model);
+    println!("FEN stand-in: dim {dim}, {n_params} parameters");
+    let mut params = vec![0.0; n_params];
+    model.params(&mut params);
+    let mut opt = Adam::new(n_params, 3e-3);
+
+    // Discretize-then-optimize: fixed-step RK4 tape over the horizon,
+    // loss = MSE against the teacher snapshots.
+    let steps_per_snap = 4;
+    let n_rk = steps_per_snap * (snapshots - 1);
+    let dt = horizon / n_rk as f64;
+
+    let mut logf = fs::File::create("results/fen_loss.csv").unwrap();
+    writeln!(logf, "step,train_mse").unwrap();
+    let t_start = std::time::Instant::now();
+    for step in 0..train_steps {
+        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, Method::Rk4);
+        // Loss gradient at each snapshot, accumulated by walking segments
+        // backwards: here we use the terminal-sum formulation — seed the
+        // gradient at the end and add snapshot seeds as the tape unwinds.
+        // For simplicity and exactness we instead run one tape per snapshot
+        // segment is wasteful; the standard trick: MSE over ALL snapshots
+        // equals backprop through the full tape with seeds injected at
+        // snapshot steps. rk_backward seeds only the terminal state, so we
+        // backprop per snapshot suffix and sum (cost: snapshots × backward).
+        let mut mse = 0.0;
+        let mut grad = vec![0.0; n_params];
+        let mut count: f64 = 0.0;
+        for s in 1..snapshots {
+            let step_idx = s * steps_per_snap;
+            let y_s = tape.y_step(step_idx);
+            // dL/dy at this snapshot: 2(y - target)/N
+            let mut seed = BatchVec::zeros(n_train, dim);
+            for i in 0..n_train {
+                let target = truth_train.y(i, s);
+                let got = y_s.row(i);
+                let sr = seed.row_mut(i);
+                for d in 0..dim {
+                    let diff = got[d] - target[d];
+                    mse += diff * diff;
+                    sr[d] = 2.0 * diff;
+                    count += 1.0;
+                }
+            }
+            // Backprop through the tape prefix [0, step_idx]: re-tape the
+            // prefix (cheap: share the same forward trajectory).
+            let prefix = rk_forward_tape(&model, &y0_train, 0.0, dt, step_idx, Method::Rk4);
+            let (_, dp) = rk_backward(&model, &prefix, &seed);
+            for (g, d) in grad.iter_mut().zip(&dp) {
+                *g += d / count.max(1.0);
+            }
+        }
+        mse /= count;
+        opt.step(&mut params, &grad);
+        model.set_params(&params);
+        if step % 25 == 0 || step + 1 == train_steps {
+            println!("step {step:>4}: train MSE {mse:.5}");
+        }
+        writeln!(logf, "{step},{mse}").unwrap();
+    }
+    println!(
+        "trained {train_steps} steps in {:.1}s",
+        t_start.elapsed().as_secs_f64()
+    );
+
+    // --- evaluation (the Table-4 metrics) --------------------------------------
+    let grid = TimeGrid::linspace_shared(n_test, 0.0, horizon, snapshots);
+    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let par = solve_ivp_parallel(&model, &y0_test, &grid, &opts);
+    let joint = solve_ivp_joint(&model, &y0_test, &grid, &opts);
+    assert!(par.all_success() && joint.all_success());
+
+    let mut mae = 0.0;
+    let mut n = 0.0;
+    for i in 0..n_test {
+        for s in 0..snapshots {
+            for d in 0..dim {
+                mae += (par.y(i, s)[d] - truth_test.y(i, s)[d]).abs();
+                n += 1.0;
+            }
+        }
+    }
+    mae /= n;
+    // Baseline MAE: predicting the initial field forever.
+    let mut mae0 = 0.0;
+    for i in 0..n_test {
+        for s in 0..snapshots {
+            for d in 0..dim {
+                mae0 += (y0_test.row(i)[d] - truth_test.y(i, s)[d]).abs();
+            }
+        }
+    }
+    mae0 /= n;
+
+    println!("\n=== evaluation (test set) ===");
+    println!("MAE (learned dynamics, parallel solve): {mae:.4}");
+    println!("MAE (persistence baseline):             {mae0:.4}");
+    println!(
+        "solver steps — parallel per instance: {:?}, joint shared: {}",
+        par.stats.iter().map(|s| s.n_steps).collect::<Vec<_>>(),
+        joint.stats[0].n_steps
+    );
+    assert!(
+        mae < 0.5 * mae0,
+        "training failed to beat the persistence baseline ({mae} vs {mae0})"
+    );
+    println!("\nwrote results/fen_loss.csv");
+}

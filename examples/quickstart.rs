@@ -1,0 +1,67 @@
+//! Quickstart — mirrors Listing 1 of the paper: solve a batch of Van der
+//! Pol problems and inspect per-instance status + statistics.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use rode::prelude::*;
+
+fn main() {
+    let batch_size = 5;
+    let mu = 10.0;
+
+    // y0 = torch.randn((batch_size, 2))
+    let mut rng = rode::nn::Rng64::new(42);
+    let y0 = BatchVec::from_rows(
+        &(0..batch_size)
+            .map(|_| vec![rng.normal(), rng.normal()])
+            .collect::<Vec<_>>(),
+    );
+
+    // t_eval = torch.linspace(0.0, 10.0, steps=50)
+    let t_eval = TimeGrid::linspace_shared(batch_size, 0.0, 10.0, 50);
+
+    // sol = solve_ivp(vdp, y0, t_eval, method="tsit5", args=mu)
+    let sys = rode::problems::VdP::uniform(batch_size, mu);
+    let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-5);
+    let sol = solve_ivp_parallel(&sys, &y0, &t_eval, &opts);
+
+    // print(sol.status)  # => tensor([0, 0, 0, 0, 0])
+    println!(
+        "status: {:?}",
+        sol.status.iter().map(|s| *s as u8).collect::<Vec<_>>()
+    );
+    assert!(sol.all_success());
+
+    // print(sol.stats)
+    println!("stats:");
+    println!(
+        "  n_f_evals:     {:?}",
+        sol.stats.iter().map(|s| s.n_f_evals).collect::<Vec<_>>()
+    );
+    println!(
+        "  n_steps:       {:?}",
+        sol.stats.iter().map(|s| s.n_steps).collect::<Vec<_>>()
+    );
+    println!(
+        "  n_accepted:    {:?}",
+        sol.stats.iter().map(|s| s.n_accepted).collect::<Vec<_>>()
+    );
+    println!(
+        "  n_initialized: {:?}",
+        sol.stats.iter().map(|s| s.n_initialized).collect::<Vec<_>>()
+    );
+
+    // The torchode signature: n_f_evals is equal across the batch (the
+    // dynamics are evaluated on the whole batch until everyone finishes),
+    // while n_steps/n_accepted differ per instance.
+    let f_evals: Vec<u64> = sol.stats.iter().map(|s| s.n_f_evals).collect();
+    assert!(f_evals.windows(2).all(|w| w[0] == w[1]));
+
+    println!("\nfinal states:");
+    for i in 0..batch_size {
+        let y = sol.y_final(i);
+        println!("  instance {i}: x = {:+.4}, v = {:+.4}", y[0], y[1]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Serving demo: the L3 coordinator fronting both engines.
+//!
+//! Submits a mixed synthetic workload (varying μ, eval grids, ranges) to a
+//! native-engine service and — when `artifacts/` is built — to an
+//! AOT-engine service, and prints throughput/latency/batching metrics.
+//!
+//! ```text
+//! cargo run --release --example serve [-- --requests 500]
+//! ```
+
+use rode::coordinator::{
+    AotEngine, Coordinator, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
+};
+use rode::nn::Rng64;
+use rode::prelude::*;
+use std::time::{Duration, Instant};
+
+fn workload(rng: &mut Rng64, n: usize) -> Vec<SolveRequest> {
+    (0..n)
+        .map(|_| {
+            let mu = rng.range(0.5, 12.0);
+            let n_eval = [10usize, 20][rng.below(2)];
+            let t1 = rng.range(3.0, 6.0);
+            SolveRequest {
+                id: 0,
+                problem: ProblemSpec::Vdp { mu },
+                y0: vec![rng.normal() * 1.5, rng.normal() * 0.5],
+                t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+            }
+        })
+        .collect()
+}
+
+fn drive(name: &str, coord: &Coordinator, reqs: Vec<SolveRequest>) {
+    let n = reqs.len();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = reqs.into_iter().map(|r| coord.submit(r)).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(300)) {
+            if resp.status == Status::Success {
+                ok += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("[{name}] {ok}/{n} ok in {wall:.2}s = {:.0} req/s", n as f64 / wall);
+    println!("[{name}] {}", coord.metrics().summary());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+
+    let cfg = ServiceConfig { max_batch: 32, max_wait: Duration::from_millis(2) };
+
+    // Native engine service.
+    let mut rng = Rng64::new(99);
+    let native = Coordinator::spawn(cfg.clone(), || Box::new(NativeEngine::default()));
+    drive("native", &native, workload(&mut rng, n_requests));
+    drop(native);
+
+    // AOT engine service (skipped if artifacts are missing).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rng = Rng64::new(99);
+        let aot = Coordinator::spawn(cfg, || {
+            Box::new(AotEngine::open("artifacts").expect("open artifacts"))
+        });
+        drive("aot-pjrt", &aot, workload(&mut rng, n_requests));
+    } else {
+        println!("[aot-pjrt] skipped: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,181 @@
+"""AOT lowering: JAX (L2 + L1) → HLO text → `artifacts/`.
+
+HLO *text* is the interchange format, not `.serialize()`d protos: jax ≥0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is described in `artifacts/manifest.json` (shapes, dtypes,
+outputs) so the Rust runtime can build input literals without guessing.
+
+Usage: `python -m compile.aot --out ../artifacts` (the Makefile target).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .controller import Controller
+from .model import make_mlp_solve, make_vdp_solve, make_vdp_step, mlp_init
+
+SOLVE_OUTPUTS = ["ys", "n_steps", "n_accepted", "n_f_evals", "status"]
+STEP_OUTPUTS = ["y_new", "err_norm", "k_last"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust's
+    `to_tuple` unpacking)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(out_dir: str, *, small_only: bool = False):
+    """Lower every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+
+    def emit(name, lowered, inputs, outputs, extra=None):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+            **(extra or {}),
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text")
+
+    f32 = jnp.float32
+
+    # --- full-solve VdP artifacts -------------------------------------------
+    # (paper Table 3 setup: B=256, E=200, dopri5, tol 1e-5; plus a small
+    # variant for tests and the serve example.)
+    sizes = [(8, 20)] if small_only else [(8, 20), (64, 50), (256, 200)]
+    for B, E in sizes:
+        name = f"solve_vdp_b{B}_e{E}"
+        fn = make_vdp_solve(atol=1e-5, rtol=1e-5, max_steps=5_000)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B, 2), f32),
+            jax.ShapeDtypeStruct((B,), f32),
+            jax.ShapeDtypeStruct((B, E), f32),
+        )
+        emit(
+            name,
+            lowered,
+            inputs=[_spec((B, 2)), _spec((B,)), _spec((B, E))],
+            outputs=[
+                {"name": "ys", **_spec((B, E, 2))},
+                {"name": "n_steps", **_spec((B,), "s32")},
+                {"name": "n_accepted", **_spec((B,), "s32")},
+                {"name": "n_f_evals", **_spec((B,), "s32")},
+                {"name": "status", **_spec((B,), "s32")},
+            ],
+            extra={"kind": "solve", "problem": "vdp", "batch": B, "n_eval": E},
+        )
+
+    # PID-controller variant (Appendix C ablation through the AOT path).
+    if not small_only:
+        B, E = 8, 20
+        name = f"solve_vdp_pid_b{B}_e{E}"
+        fn = make_vdp_solve(
+            atol=1e-5, rtol=1e-5, max_steps=5_000,
+            controller=Controller(pcoeff=0.2, icoeff=0.4, dcoeff=0.0),
+        )
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B, 2), f32),
+            jax.ShapeDtypeStruct((B,), f32),
+            jax.ShapeDtypeStruct((B, E), f32),
+        )
+        emit(
+            name,
+            lowered,
+            inputs=[_spec((B, 2)), _spec((B,)), _spec((B, E))],
+            outputs=[
+                {"name": "ys", **_spec((B, E, 2))},
+                {"name": "n_steps", **_spec((B,), "s32")},
+                {"name": "n_accepted", **_spec((B,), "s32")},
+                {"name": "n_f_evals", **_spec((B,), "s32")},
+                {"name": "status", **_spec((B,), "s32")},
+            ],
+            extra={"kind": "solve", "problem": "vdp", "batch": B, "n_eval": E,
+                   "controller": "pid(0.2,0.4,0)"},
+        )
+
+    # --- single-step VdP artifact (L3-driven stepping engine) ---------------
+    for B in ([8] if small_only else [8, 256]):
+        name = f"step_vdp_b{B}"
+        fn = make_vdp_step()
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B,), f32),
+            jax.ShapeDtypeStruct((B, 2), f32),
+            jax.ShapeDtypeStruct((B, 2), f32),
+            jax.ShapeDtypeStruct((B,), f32),
+        )
+        emit(
+            name,
+            lowered,
+            inputs=[_spec((B,)), _spec((B, 2)), _spec((B, 2)), _spec((B,))],
+            outputs=[
+                {"name": "y_new", **_spec((B, 2))},
+                {"name": "err_norm", **_spec((B,))},
+                {"name": "k_last", **_spec((B, 2))},
+            ],
+            extra={"kind": "step", "problem": "vdp", "batch": B},
+        )
+
+    # --- MLP-dynamics full solve (learned-model serving demo) ---------------
+    if not small_only:
+        B, D, E = 16, 4, 10
+        params = mlp_init([D + 1, 32, D], jax.random.PRNGKey(0))
+        name = f"solve_mlp_b{B}_d{D}_e{E}"
+        fn = make_mlp_solve(params, atol=1e-4, rtol=1e-4, max_steps=1_000)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B, D), f32),
+            jax.ShapeDtypeStruct((B, E), f32),
+        )
+        emit(
+            name,
+            lowered,
+            inputs=[_spec((B, D)), _spec((B, E))],
+            outputs=[
+                {"name": "ys", **_spec((B, E, D))},
+                {"name": "n_steps", **_spec((B,), "s32")},
+                {"name": "n_accepted", **_spec((B,), "s32")},
+                {"name": "n_f_evals", **_spec((B,), "s32")},
+                {"name": "status", **_spec((B,), "s32")},
+            ],
+            extra={"kind": "solve", "problem": "mlp", "batch": B, "n_eval": E,
+                   "dim": D},
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--small-only", action="store_true",
+                    help="only the quick test artifacts (CI mode)")
+    args = ap.parse_args()
+    print(f"lowering artifacts to {args.out} ...")
+    manifest = build_artifacts(args.out, small_only=args.small_only)
+    print(f"wrote {len(manifest)} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

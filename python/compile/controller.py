@@ -1,0 +1,44 @@
+"""Vectorized integral / PID step-size controller (Layer 2).
+
+Mirror of `rust/src/solver/controller.rs` — the same Söderlind/diffrax
+formulation, vectorized over the batch so every instance carries its own
+error history inside the lowered while-loop.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Controller:
+    pcoeff: float = 0.0
+    icoeff: float = 1.0
+    dcoeff: float = 0.0
+    safety: float = 0.9
+    factor_min: float = 0.2
+    factor_max: float = 10.0
+
+    def betas(self, err_order: int):
+        k = err_order + 1.0
+        return (
+            (self.pcoeff + self.icoeff + self.dcoeff) / k,
+            -(self.pcoeff + 2.0 * self.dcoeff) / k,
+            self.dcoeff / k,
+        )
+
+    def decide(self, err_norm, err_prev, err_prev2, err_order: int):
+        """Vectorized accept/factor. All inputs (B,). Returns
+        (accept (B,) bool, factor (B,))."""
+        b1, b2, b3 = self.betas(err_order)
+        finite = jnp.isfinite(err_norm)
+        accept = (err_norm <= 1.0) & finite
+        e0 = jnp.maximum(jnp.where(finite, err_norm, 1.0), 1e-10)
+        factor = self.safety * e0**-b1 * err_prev**-b2 * err_prev2**-b3
+        factor = jnp.clip(factor, self.factor_min, self.factor_max)
+        factor = jnp.where(accept, factor, jnp.minimum(factor, 1.0))
+        factor = jnp.where(finite, factor, self.factor_min)
+        return accept, factor
+
+
+INTEGRAL = Controller()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from . import ref
+from .error_norm import error_norm
+from .interp import dopri5_eval
+from .rk_combine import rk_combine, stage_accum
+
+__all__ = ["ref", "error_norm", "dopri5_eval", "rk_combine", "stage_accum"]

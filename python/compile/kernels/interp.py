@@ -1,0 +1,56 @@
+"""Pallas kernel: dense-output evaluation via Horner's rule.
+
+The paper: "fast polynomial evaluation via Horner's rule that saves half
+of the multiplications over the naive evaluation method". The dopri5
+interpolant in Hairer's rcont form is evaluated for *all* E evaluation
+points of a block in one kernel:
+
+    y(θ) = r1 + θ·(r2 + (1−θ)·(r3 + θ·(r4 + (1−θ)·r5)))
+
+(4 multiplies per point instead of the 8 a naive power-basis evaluation
+needs). The solver masks out points not inside the current step — the
+TPU-friendly replacement for torchode's boolean-tensor indexing.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interp_kernel(rcont_ref, theta_ref, o_ref):
+    rc = rcont_ref[...]  # (5, bB, D)
+    th = theta_ref[...][:, :, None]  # (bB, E, 1)
+    th1 = 1.0 - th
+    r1 = rc[0][:, None, :]
+    r2 = rc[1][:, None, :]
+    r3 = rc[2][:, None, :]
+    r4 = rc[3][:, None, :]
+    r5 = rc[4][:, None, :]
+    o_ref[...] = r1 + th * (r2 + th1 * (r3 + th * (r4 + th1 * r5)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dopri5_eval(rcont, theta, block_b=None):
+    """Evaluate the interpolant at all points.
+
+    rcont: (5, B, D); theta: (B, E). Returns (B, E, D).
+    """
+    _, bsz, d = rcont.shape
+    e = theta.shape[1]
+    if block_b is None or block_b > bsz:
+        block_b = bsz
+    assert bsz % block_b == 0
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _interp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((5, block_b, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_b, e), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, e, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, e, d), rcont.dtype),
+        interpret=True,
+    )(rcont, theta)

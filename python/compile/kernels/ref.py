@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined *here*; pytest
+asserts `kernel(x) == ref(x)` to float tolerance over hypothesis-generated
+shapes and inputs. The refs are also used directly by the solver when
+`use_pallas=False` (the L2 ablation of DESIGN.md §Perf).
+"""
+
+import jax.numpy as jnp
+
+
+def rk_combine_ref(k, y, dt, b, b_err):
+    """Fused solution/error combination.
+
+    k:     (S, B, D) stage slopes
+    y:     (B, D)    step-start state
+    dt:    (B,)      per-instance step size
+    b:     (S,)      solution weights
+    b_err: (S,)      error weights (b - b_hat)
+
+    Returns (y_new (B, D), err (B, D)).
+    """
+    acc = jnp.einsum("s,sbd->bd", b, k)
+    acc_err = jnp.einsum("s,sbd->bd", b_err, k)
+    y_new = y + dt[:, None] * acc
+    err = dt[:, None] * acc_err
+    return y_new, err
+
+
+def stage_accum_ref(k, y, dt, a_row):
+    """Stage-input accumulation `y + dt * Σ_j a_j k_j` over the first
+    `len(a_row)` stages.
+
+    k: (S, B, D), a_row: (S,) zero-padded. Returns (B, D).
+    """
+    acc = jnp.einsum("s,sbd->bd", a_row, k)
+    return y + dt[:, None] * acc
+
+
+def error_norm_ref(err, y0, y1, atol, rtol):
+    """Tolerance-scaled RMS norm per instance.
+
+    err, y0, y1: (B, D); atol, rtol: scalars. Returns (B,).
+    """
+    scale = atol + rtol * jnp.maximum(jnp.abs(y0), jnp.abs(y1))
+    r = err / scale
+    return jnp.sqrt(jnp.mean(r * r, axis=-1))
+
+
+def dopri5_coeffs_ref(k, y0, y1, dt, d):
+    """Dopri5 dense-output rcont coefficients.
+
+    k: (7, B, D), y0/y1: (B, D), dt: (B,), d: (7,) the Hairer d-weights.
+    Returns rcont (5, B, D).
+    """
+    ydiff = y1 - y0
+    bspl = dt[:, None] * k[0] - ydiff
+    r1 = y0
+    r2 = ydiff
+    r3 = bspl
+    r4 = ydiff - dt[:, None] * k[6] - bspl
+    r5 = dt[:, None] * jnp.einsum("s,sbd->bd", d, k)
+    return jnp.stack([r1, r2, r3, r4, r5])
+
+
+def dopri5_eval_ref(rcont, theta):
+    """Evaluate the dopri5 interpolant (Horner-nested form).
+
+    rcont: (5, B, D), theta: (B, E). Returns (B, E, D).
+    """
+    th = theta[:, :, None]  # (B, E, 1)
+    th1 = 1.0 - th
+    r1, r2, r3, r4, r5 = (rcont[i][:, None, :] for i in range(5))
+    return r1 + th * (r2 + th1 * (r3 + th * (r4 + th1 * r5)))
+
+
+def hermite_eval_ref(y0, f0, y1, f1, dt, theta):
+    """Cubic Hermite dense output in Horner form.
+
+    y0/f0/y1/f1: (B, D), dt: (B,), theta: (B, E). Returns (B, E, D).
+    """
+    d = y1 - y0
+    a = dt[:, None] * f0
+    b = 3.0 * d - dt[:, None] * (2.0 * f0 + f1)
+    c = -2.0 * d + dt[:, None] * (f0 + f1)
+    th = theta[:, :, None]
+    return y0[:, None, :] + th * (a[:, None, :] + th * (b[:, None, :] + th * c[:, None, :]))

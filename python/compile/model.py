@@ -1,0 +1,146 @@
+"""Layer 2 entry points: the dynamics + assembled solve/step functions
+that `aot.py` lowers to HLO artifacts.
+
+Two execution granularities are exported, matching the two PJRT engines in
+`rust/src/runtime/`:
+
+- **full-solve** (`make_vdp_solve`, `make_mlp_solve`): the entire adaptive
+  loop in one module — the torchode-JIT analogue. Rust calls it once per
+  batch.
+- **single-step** (`make_vdp_step`): one RK attempt (stages + fused
+  combine + error norm); Rust owns accept/reject and the controller — the
+  eager-engine analogue, used to measure what host-side loop control
+  costs.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import tableaus
+from .controller import Controller
+from .kernels import ref
+from .kernels.error_norm import error_norm as pallas_error_norm
+from .kernels.rk_combine import rk_combine as pallas_rk_combine
+from .solver import SolverConfig, make_solver
+
+
+def vdp_dynamics(mu):
+    """Van der Pol with per-instance damping `mu (B,)`."""
+
+    def f(t, y):
+        x, v = y[:, 0], y[:, 1]
+        return jnp.stack([v, mu * (1.0 - x * x) * v - x], axis=-1)
+
+    return f
+
+
+def mlp_init(sizes, key):
+    """Glorot-initialized MLP parameters as a flat list of (w, b)."""
+    params = []
+    for n_in, n_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        lim = (6.0 / (n_in + n_out)) ** 0.5
+        w = jax.random.uniform(sub, (n_out, n_in), jnp.float32, -lim, lim)
+        params.append((w, jnp.zeros((n_out,), jnp.float32)))
+    return params
+
+
+def mlp_dynamics(params):
+    """tanh-MLP dynamics `f(t, y) = MLP([y, t])` (CNF-style)."""
+
+    def f(t, y):
+        h = jnp.concatenate([y, t[:, None]], axis=-1)
+        for i, (w, b) in enumerate(params):
+            h = h @ w.T + b
+            if i + 1 < len(params):
+                h = jnp.tanh(h)
+        return h
+
+    return f
+
+
+def make_vdp_solve(atol=1e-5, rtol=1e-5, max_steps=10_000, method="dopri5",
+                   use_pallas=True, controller=Controller()):
+    """`(y0 (B,2), mu (B,), t_eval (B,E)) -> (ys, n_steps, n_accepted,
+    n_f_evals, status)` — the full-solve artifact."""
+
+    cfg = SolverConfig(
+        method=method,
+        atol=atol,
+        rtol=rtol,
+        max_steps=max_steps,
+        use_pallas=use_pallas,
+        controller=controller,
+    )
+
+    def solve(y0, mu, t_eval):
+        ys, stats = make_solver(vdp_dynamics(mu), cfg)(y0, t_eval)
+        return (
+            ys,
+            stats["n_steps"],
+            stats["n_accepted"],
+            stats["n_f_evals"],
+            stats["status"],
+        )
+
+    return solve
+
+
+def make_mlp_solve(params, atol=1e-5, rtol=1e-5, max_steps=1_000,
+                   method="dopri5", use_pallas=True):
+    """Full-solve artifact for MLP dynamics with baked parameters."""
+
+    cfg = SolverConfig(
+        method=method, atol=atol, rtol=rtol, max_steps=max_steps, use_pallas=use_pallas
+    )
+
+    def solve(y0, t_eval):
+        ys, stats = make_solver(mlp_dynamics(params), cfg)(y0, t_eval)
+        return (
+            ys,
+            stats["n_steps"],
+            stats["n_accepted"],
+            stats["n_f_evals"],
+            stats["status"],
+        )
+
+    return solve
+
+
+def make_vdp_step(method="dopri5", atol=1e-5, rtol=1e-5, use_pallas=True):
+    """Single RK attempt: `(dt, y, k0, mu) -> (y_new, err_norm, k_last)`.
+
+    VdP is autonomous, so `t` does not appear in the signature — XLA would
+    prune an unused parameter from the entry computation and desynchronize
+    the manifest. The FSAL cache `k0 = f(y)` comes in from the caller (Rust
+    keeps it across accepted steps); `k_last = f(y_new)` goes back out so
+    the caller can reuse it on acceptance.
+    """
+    tab = tableaus.get(method)
+    S = tab.stages
+    b_tuple = tuple(float(x) for x in tab.b)
+    berr_tuple = tuple(float(x) for x in tab.b_err)
+    a_rows = [jnp.asarray(tab.a[s, :]) for s in range(S)]
+
+    def step(dt, y, k0, mu):
+        zero_t = jnp.zeros_like(dt)
+        f = vdp_dynamics(mu)
+        ks = [k0]
+        for s in range(1, S):
+            stack = jnp.stack(ks + [jnp.zeros_like(y)] * (S - s))
+            ytmp = ref.stage_accum_ref(stack, y, dt, a_rows[s])
+            ks.append(f(zero_t, ytmp))
+        k = jnp.stack(ks)
+        if use_pallas:
+            y_new, err = pallas_rk_combine(k, y, dt, b_tuple, berr_tuple)
+            en = pallas_error_norm(err, y, y_new, atol, rtol)
+        else:
+            y_new, err = ref.rk_combine_ref(
+                k, y, dt, jnp.asarray(tab.b), jnp.asarray(tab.b_err)
+            )
+            en = ref.error_norm_ref(err, y, y_new, atol, rtol)
+        return y_new, en, k[-1]
+
+    return step

@@ -1,0 +1,238 @@
+"""Layer 2: the batched parallel ODE solver as a single JAX computation.
+
+This is torchode's solver loop re-expressed for AOT compilation: the
+entire adaptive loop — per-instance time, step size, controller history,
+accept/reject, dense output and statistics — is one `lax.while_loop`
+inside one lowered HLO module. There is **no host round trip anywhere**:
+where the PyTorch implementation works to avoid CPU↔GPU syncs, the AOT
+module makes them impossible by construction (DESIGN.md
+§Hardware-Adaptation).
+
+Static shapes throughout: batch B, state dim D, evaluation points E. The
+eval-point bookkeeping of torchode (boolean-tensor indexing) becomes a
+masked interpolation over all E points per accepted step — statically
+shaped and TPU-friendly.
+
+The hot spots call the Layer-1 Pallas kernels (`use_pallas=True`) or their
+jnp references (`use_pallas=False`, the L2 ablation).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import tableaus
+from .controller import Controller
+from .kernels import ref
+from .kernels.error_norm import error_norm as pallas_error_norm
+from .kernels.interp import dopri5_eval as pallas_dopri5_eval
+from .kernels.rk_combine import rk_combine as pallas_rk_combine
+
+STATUS_SUCCESS = 0
+STATUS_MAX_STEPS = 1
+
+
+class SolverState(NamedTuple):
+    t: jnp.ndarray  # (B,)
+    dt: jnp.ndarray  # (B,)
+    y: jnp.ndarray  # (B, D)
+    k0: jnp.ndarray  # (B, D) FSAL cache
+    finished: jnp.ndarray  # (B,) bool
+    err_prev: jnp.ndarray  # (B,)
+    err_prev2: jnp.ndarray  # (B,)
+    ys: jnp.ndarray  # (B, E, D) dense outputs
+    n_steps: jnp.ndarray  # (B,) int32
+    n_accepted: jnp.ndarray  # (B,) int32
+    n_fevals: jnp.ndarray  # (B,) int32
+    iters: jnp.ndarray  # () int32
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    method: str = "dopri5"
+    atol: float = 1e-6
+    rtol: float = 1e-5
+    max_steps: int = 10_000
+    controller: Controller = Controller()
+    use_pallas: bool = True
+
+
+def _hairer_dt0(f, t0, y0, f0, order, atol, rtol):
+    """Vectorized Hairer initial-step heuristic (one extra f eval)."""
+    scale = atol + rtol * jnp.abs(y0)
+    d0 = jnp.sqrt(jnp.mean((y0 / scale) ** 2, axis=-1))
+    d1 = jnp.sqrt(jnp.mean((f0 / scale) ** 2, axis=-1))
+    h0 = jnp.where((d0 < 1e-5) | (d1 < 1e-5), 1e-6, 0.01 * d0 / d1)
+    y1 = y0 + h0[:, None] * f0
+    f1 = f(t0 + h0, y1)
+    d2 = jnp.sqrt(jnp.mean(((f1 - f0) / scale) ** 2, axis=-1)) / h0
+    dmax = jnp.maximum(d1, d2)
+    h1 = jnp.where(
+        dmax <= 1e-15,
+        jnp.maximum(h0 * 1e-3, 1e-6),
+        (0.01 / dmax) ** (1.0 / (order + 1.0)),
+    )
+    return jnp.minimum(100.0 * h0, h1)
+
+
+def make_solver(
+    f: Callable,
+    cfg: SolverConfig,
+) -> Callable:
+    """Build `solve(y0, t_eval) -> (ys, stats)` for dynamics `f(t, y)`.
+
+    `f` maps `(t (B,), y (B, D)) -> (B, D)` — evaluated on the whole batch
+    with per-instance times, exactly like a learned model under vmap.
+
+    Returns a jit-able function with static shapes:
+      ys:     (B, E, D) dense outputs at `t_eval`
+      stats:  dict of per-instance statistics + status
+    """
+    tab = tableaus.get(cfg.method)
+    S = tab.stages
+    b_tuple = tuple(float(x) for x in tab.b)
+    berr_tuple = tuple(float(x) for x in tab.b_err)
+
+    def combine(k, y, dt):
+        if cfg.use_pallas:
+            return pallas_rk_combine(k, y, dt, b_tuple, berr_tuple)
+        return ref.rk_combine_ref(k, y, dt, jnp.asarray(tab.b), jnp.asarray(tab.b_err))
+
+    def norm(err, y0, y1):
+        if cfg.use_pallas:
+            return pallas_error_norm(err, y0, y1, cfg.atol, cfg.rtol)
+        return ref.error_norm_ref(err, y0, y1, cfg.atol, cfg.rtol)
+
+    def interp(rcont, theta):
+        if cfg.use_pallas:
+            return pallas_dopri5_eval(rcont, theta)
+        return ref.dopri5_eval_ref(rcont, theta)
+
+    use_dopri_dense = tab.dense == "dopri5"
+    d_weights = jnp.asarray(tab.d) if use_dopri_dense else None
+    a_rows = [jnp.asarray(tab.a[s, :]) for s in range(S)]
+    c_nodes = [float(c) for c in tab.c]
+
+    def solve(y0, t_eval):
+        B, D = y0.shape
+        E = t_eval.shape[1]
+        t0 = t_eval[:, 0]
+        t1 = t_eval[:, -1]
+
+        f0 = f(t0, y0)
+        dt0 = _hairer_dt0(f, t0, y0, f0, tab.order, cfg.atol, cfg.rtol)
+        dt0 = jnp.minimum(dt0, t1 - t0)
+
+        ys = jnp.zeros((B, E, D), y0.dtype)
+        ys = ys.at[:, 0, :].set(y0)
+
+        trivial = (t1 - t0) <= 0.0
+        state = SolverState(
+            t=t0,
+            dt=dt0,
+            y=y0,
+            k0=f0,
+            finished=trivial,
+            err_prev=jnp.ones((B,), y0.dtype),
+            err_prev2=jnp.ones((B,), y0.dtype),
+            ys=ys,
+            n_steps=jnp.zeros((B,), jnp.int32),
+            n_accepted=jnp.zeros((B,), jnp.int32),
+            n_fevals=jnp.full((B,), 2, jnp.int32),  # f0 + dt0 probe
+            iters=jnp.asarray(0, jnp.int32),
+        )
+
+        def cond(st: SolverState):
+            return (~jnp.all(st.finished)) & (st.iters < cfg.max_steps)
+
+        def body(st: SolverState):
+            active = ~st.finished
+            remaining = t1 - st.t
+            clamp = st.dt >= remaining
+            dt = jnp.where(clamp, remaining, st.dt)
+
+            # --- stages (k0 from the FSAL cache) --------------------------
+            ks = [st.k0]
+            for s in range(1, S):
+                ytmp = ref.stage_accum_ref(jnp.stack(ks + [jnp.zeros_like(st.y)] * (S - s)),
+                                           st.y, dt, a_rows[s])
+                ks.append(f(st.t + c_nodes[s] * dt, ytmp))
+            k = jnp.stack(ks)  # (S, B, D)
+
+            # --- fused combine + error norm (Pallas) ----------------------
+            y_new, err = combine(k, st.y, dt)
+            en = norm(err, st.y, y_new)
+
+            accept, factor = cfg.controller.decide(
+                en, st.err_prev, st.err_prev2, tab.err_order
+            )
+            accept = accept & active
+            t_new = jnp.where(clamp, t1, st.t + dt)
+
+            # --- dense output ---------------------------------------------
+            # Mask of eval points inside (t, t_new] per instance.
+            mask = (
+                (t_eval > st.t[:, None])
+                & (t_eval <= t_new[:, None])
+                & accept[:, None]
+            )
+            theta = jnp.clip(
+                (t_eval - st.t[:, None]) / jnp.maximum(dt, 1e-30)[:, None], 0.0, 1.0
+            )
+            if use_dopri_dense:
+                rcont = ref.dopri5_coeffs_ref(k, st.y, y_new, dt, d_weights)
+                interp_vals = interp(rcont, theta)
+            else:
+                f_end = k[-1] if tab.fsal else k[0]
+                interp_vals = ref.hermite_eval_ref(st.y, k[0], y_new, f_end, dt, theta)
+            ys = jnp.where(mask[:, :, None], interp_vals, st.ys)
+
+            # --- state update -----------------------------------------------
+            acc_f = accept[:, None]
+            y_next = jnp.where(acc_f, y_new, st.y)
+            t_next = jnp.where(accept, t_new, st.t)
+            k0_next = jnp.where(acc_f, k[-1] if tab.fsal else st.k0, st.k0)
+            dt_next = jnp.where(active, dt * factor, st.dt)
+            err_prev = jnp.where(accept, jnp.maximum(en, 1e-10), st.err_prev)
+            err_prev2 = jnp.where(accept, st.err_prev, st.err_prev2)
+            finished = st.finished | (accept & (t_new >= t1))
+
+            return SolverState(
+                t=t_next,
+                dt=dt_next,
+                y=y_next,
+                k0=k0_next,
+                finished=finished,
+                err_prev=err_prev,
+                err_prev2=err_prev2,
+                ys=ys,
+                n_steps=st.n_steps + active.astype(jnp.int32),
+                n_accepted=st.n_accepted + accept.astype(jnp.int32),
+                # S-1 batched stage evals per iteration (k0 cached).
+                n_fevals=st.n_fevals + jnp.asarray(S - 1, jnp.int32),
+                iters=st.iters + 1,
+            )
+
+        st = lax.while_loop(cond, body, state)
+        status = jnp.where(st.finished, STATUS_SUCCESS, STATUS_MAX_STEPS).astype(
+            jnp.int32
+        )
+        stats = {
+            "n_steps": st.n_steps,
+            "n_accepted": st.n_accepted,
+            "n_f_evals": st.n_fevals,
+            "status": status,
+        }
+        return st.ys, stats
+
+    return solve
+
+
+def solve_ivp(f, y0, t_eval, **kwargs):
+    """Convenience one-shot API mirroring torchode's `solve_ivp`."""
+    cfg = SolverConfig(**kwargs)
+    return make_solver(f, cfg)(y0, t_eval)

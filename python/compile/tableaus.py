@@ -1,0 +1,189 @@
+"""Butcher tableaus for the JAX (Layer-2) solver.
+
+Single source of truth shared with the Rust core: `python -m
+compile.tableaus out.json` dumps every tableau to JSON, and the Rust test
+`tests/tableau_cross_check.rs` asserts the static tables in
+`rust/src/solver/tableau.rs` match to 1e-15.
+"""
+
+import json
+import sys
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Tableau:
+    name: str
+    order: int
+    err_order: int
+    # Full (stages, stages) strictly-lower-triangular stage matrix.
+    a: np.ndarray
+    b: np.ndarray
+    b_err: np.ndarray  # b - b_hat; empty array if fixed-step only
+    c: np.ndarray
+    fsal: bool
+    dense: str = "hermite"  # or "dopri5"
+    d: np.ndarray = field(default_factory=lambda: np.zeros(0))
+
+    @property
+    def stages(self) -> int:
+        return len(self.b)
+
+    def a_flat(self) -> list:
+        """Strictly-lower-triangular entries, row by row (Rust layout)."""
+        out = []
+        for i in range(1, self.stages):
+            out.extend(self.a[i, :i].tolist())
+        return out
+
+
+def _tri(rows):
+    """Build a dense (s, s) matrix from ragged lower-triangular rows."""
+    s = len(rows) + 1
+    a = np.zeros((s, s))
+    for i, row in enumerate(rows, start=1):
+        a[i, : len(row)] = row
+    return a
+
+
+DOPRI5 = Tableau(
+    name="dopri5",
+    order=5,
+    err_order=4,
+    a=_tri(
+        [
+            [1 / 5],
+            [3 / 40, 9 / 40],
+            [44 / 45, -56 / 15, 32 / 9],
+            [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+            [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+            [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84],
+        ]
+    ),
+    b=np.array([35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0]),
+    b_err=np.array(
+        [
+            71 / 57600,
+            0.0,
+            -71 / 16695,
+            71 / 1920,
+            -17253 / 339200,
+            22 / 525,
+            -1 / 40,
+        ]
+    ),
+    c=np.array([0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0]),
+    fsal=True,
+    dense="dopri5",
+    d=np.array(
+        [
+            -12715105075 / 11282082432,
+            0.0,
+            87487479700 / 32700410799,
+            -10690763975 / 1880347072,
+            701980252875 / 199316789632,
+            -1453857185 / 822651844,
+            69997945 / 29380423,
+        ]
+    ),
+)
+
+TSIT5 = Tableau(
+    name="tsit5",
+    order=5,
+    err_order=4,
+    a=_tri(
+        [
+            [0.161],
+            [-0.008480655492356989, 0.335480655492357],
+            [2.8971530571054935, -6.359448489975075, 4.3622954328695815],
+            [
+                5.325864828439257,
+                -11.748883564062828,
+                7.4955393428898365,
+                -0.09249506636175525,
+            ],
+            [
+                5.86145544294642,
+                -12.92096931784711,
+                8.159367898576159,
+                -0.071584973281401,
+                -0.028269050394068383,
+            ],
+            [
+                0.09646076681806523,
+                0.01,
+                0.4798896504144996,
+                1.379008574103742,
+                -3.290069515436081,
+                2.324710524099774,
+            ],
+        ]
+    ),
+    b=np.array(
+        [
+            0.09646076681806523,
+            0.01,
+            0.4798896504144996,
+            1.379008574103742,
+            -3.290069515436081,
+            2.324710524099774,
+            0.0,
+        ]
+    ),
+    b_err=np.array(
+        [
+            -0.00178001105222577714,
+            -0.0008164344596567469,
+            0.007880878010261995,
+            -0.1447110071732629,
+            0.5823571654525552,
+            -0.45808210592918697,
+            0.015151515151515152,
+        ]
+    ),
+    c=np.array([0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0]),
+    fsal=True,
+)
+
+BOSH3 = Tableau(
+    name="bosh3",
+    order=3,
+    err_order=2,
+    a=_tri([[0.5], [0.0, 0.75], [2 / 9, 1 / 3, 4 / 9]]),
+    b=np.array([2 / 9, 1 / 3, 4 / 9, 0.0]),
+    b_err=np.array([2 / 9 - 7 / 24, 1 / 3 - 1 / 4, 4 / 9 - 1 / 3, -1 / 8]),
+    c=np.array([0.0, 0.5, 0.75, 1.0]),
+    fsal=True,
+)
+
+ALL = {t.name: t for t in (DOPRI5, TSIT5, BOSH3)}
+
+
+def get(name: str) -> Tableau:
+    return ALL[name]
+
+
+def to_json() -> str:
+    """Dump all tableaus for the Rust golden test."""
+    payload = {}
+    for name, t in ALL.items():
+        payload[name] = {
+            "order": t.order,
+            "err_order": t.err_order,
+            "stages": t.stages,
+            "a": t.a_flat(),
+            "b": t.b.tolist(),
+            "b_err": t.b_err.tolist(),
+            "c": t.c.tolist(),
+            "fsal": t.fsal,
+        }
+    return json.dumps(payload, indent=1)
+
+
+if __name__ == "__main__":
+    out = sys.argv[1] if len(sys.argv) > 1 else "/dev/stdout"
+    with open(out, "w") as f:
+        f.write(to_json())

@@ -1,0 +1,133 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles in
+`compile.kernels.ref`, swept over shapes/values with hypothesis.
+
+This is the core L1 correctness signal: the kernels lower into every AOT
+artifact, so a mismatch here is a miscompiled solver.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dopri5_eval, error_norm, ref, rk_combine, stage_accum
+
+# Keep hypothesis fast and deterministic: interpret-mode Pallas is slow to
+# trace, so we bound the example count and shapes.
+COMMON = dict(max_examples=20, deadline=None)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@st.composite
+def combine_case(draw):
+    s = draw(st.sampled_from([4, 7]))
+    b = draw(st.sampled_from([1, 2, 8]))
+    d = draw(st.sampled_from([1, 2, 16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return s, b, d, seed
+
+
+@given(combine_case())
+@settings(**COMMON)
+def test_rk_combine_matches_ref(case):
+    s, b, d, seed = case
+    rng = np.random.default_rng(seed)
+    k = _arr(rng, (s, b, d))
+    y = _arr(rng, (b, d))
+    dt = jnp.asarray(rng.uniform(1e-3, 0.5, size=(b,)), jnp.float32)
+    bw = tuple(rng.normal(size=s).tolist())
+    ew = tuple(rng.normal(size=s).tolist())
+    y_new, err = rk_combine(k, y, dt, bw, ew)
+    y_ref, e_ref = ref.rk_combine_ref(k, y, dt, jnp.asarray(bw), jnp.asarray(ew))
+    np.testing.assert_allclose(y_new, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(err, e_ref, rtol=1e-5, atol=1e-5)
+
+
+@given(combine_case())
+@settings(**COMMON)
+def test_stage_accum_matches_ref(case):
+    s, b, d, seed = case
+    rng = np.random.default_rng(seed)
+    k = _arr(rng, (s, b, d))
+    y = _arr(rng, (b, d))
+    dt = jnp.asarray(rng.uniform(1e-3, 0.5, size=(b,)), jnp.float32)
+    a_row = rng.normal(size=s)
+    a_row[rng.integers(0, s)] = 0.0  # exercise the zero-skip path
+    got = stage_accum(k, y, dt, tuple(a_row.tolist()))
+    want = ref.stage_accum_ref(k, y, dt, jnp.asarray(a_row, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 4, 16]), st.sampled_from([1, 2, 8]))
+@settings(**COMMON)
+def test_error_norm_matches_ref(seed, b, d):
+    rng = np.random.default_rng(seed)
+    err = _arr(rng, (b, d), scale=1e-4)
+    y0 = _arr(rng, (b, d))
+    y1 = _arr(rng, (b, d))
+    got = error_norm(err, y0, y1, 1e-6, 1e-5)
+    want = ref.error_norm_ref(err, y0, y1, 1e-6, 1e-5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 4]), st.sampled_from([2, 8]),
+       st.sampled_from([1, 5, 20]))
+@settings(**COMMON)
+def test_dopri5_eval_matches_ref(seed, b, d, e):
+    rng = np.random.default_rng(seed)
+    rcont = _arr(rng, (5, b, d))
+    theta = jnp.asarray(rng.uniform(0, 1, size=(b, e)), jnp.float32)
+    got = dopri5_eval(rcont, theta)
+    want = ref.dopri5_eval_ref(rcont, theta)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_error_norm_exact_value():
+    # err == scale everywhere => norm exactly 1.
+    b, d = 2, 3
+    y0 = jnp.zeros((b, d), jnp.float32)
+    err = jnp.full((b, d), 1e-6, jnp.float32)
+    n = error_norm(err, y0, y0, 1e-6, 0.0)
+    np.testing.assert_allclose(n, np.ones(b), rtol=1e-6)
+
+
+def test_rk_combine_blocked_grid():
+    # block_b smaller than B exercises the multi-block grid path.
+    rng = np.random.default_rng(7)
+    s, b, d = 7, 8, 4
+    k = _arr(rng, (s, b, d))
+    y = _arr(rng, (b, d))
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(b,)), jnp.float32)
+    bw = tuple(rng.normal(size=s).tolist())
+    ew = tuple(rng.normal(size=s).tolist())
+    full, _ = rk_combine(k, y, dt, bw, ew)
+    blocked, _ = rk_combine(k, y, dt, bw, ew, block_b=2)
+    np.testing.assert_allclose(full, blocked, rtol=1e-6)
+
+
+def test_interp_endpoints():
+    # θ=0 must return r1, θ=1 must return r1 + r2 (the step endpoints by
+    # construction of the rcont coefficients).
+    rng = np.random.default_rng(3)
+    rcont = _arr(rng, (5, 2, 3))
+    theta = jnp.asarray([[0.0, 1.0]] * 2, jnp.float32)
+    out = np.asarray(dopri5_eval(rcont, theta))
+    np.testing.assert_allclose(out[:, 0, :], rcont[0], rtol=1e-6)
+    np.testing.assert_allclose(out[:, 1, :], rcont[0] + rcont[1], rtol=1e-5, atol=1e-6)
+
+
+def test_hermite_ref_endpoints():
+    rng = np.random.default_rng(4)
+    b, d = 3, 2
+    y0 = _arr(rng, (b, d))
+    y1 = _arr(rng, (b, d))
+    f0 = _arr(rng, (b, d))
+    f1 = _arr(rng, (b, d))
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, size=(b,)), jnp.float32)
+    theta = jnp.asarray([[0.0, 1.0]] * b, jnp.float32)
+    out = np.asarray(ref.hermite_eval_ref(y0, f0, y1, f1, dt, theta))
+    np.testing.assert_allclose(out[:, 0, :], y0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out[:, 1, :], y1, rtol=1e-4, atol=1e-5)

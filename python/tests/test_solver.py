@@ -1,0 +1,163 @@
+"""Layer-2 correctness: the JAX batched solver against closed-form
+solutions and torchode's behavioral contract (per-instance state)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.controller import Controller
+from compile.model import make_vdp_step, mlp_dynamics, mlp_init, vdp_dynamics
+from compile.solver import SolverConfig, make_solver, solve_ivp
+
+
+def expdec(t, y):
+    return -y
+
+
+def grid(batch, t0, t1, e):
+    return jnp.broadcast_to(jnp.linspace(t0, t1, e), (batch, e)).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_exponential_decay(use_pallas):
+    b, e = 3, 9
+    y0 = jnp.asarray([[1.0], [2.0], [-0.5]], jnp.float32)
+    te = grid(b, 0.0, 2.0, e)
+    ys, stats = solve_ivp(expdec, y0, te, atol=1e-6, rtol=1e-6, use_pallas=use_pallas)
+    exact = np.asarray(y0)[:, None, :] * np.exp(-np.asarray(te))[:, :, None]
+    np.testing.assert_allclose(np.asarray(ys), exact, atol=5e-5)
+    assert (np.asarray(stats["status"]) == 0).all()
+
+
+@pytest.mark.parametrize("method", ["dopri5", "tsit5", "bosh3"])
+def test_methods_agree(method):
+    b, e = 2, 6
+    y0 = jnp.asarray([[1.0, 0.5], [0.3, -0.2]], jnp.float32)
+    te = grid(b, 0.0, 1.5, e)
+    ys, stats = solve_ivp(
+        expdec, y0, te, method=method, atol=1e-6, rtol=1e-6, use_pallas=False
+    )
+    exact = np.asarray(y0)[:, None, :] * np.exp(-np.asarray(te))[:, :, None]
+    np.testing.assert_allclose(np.asarray(ys), exact, atol=2e-4)
+
+
+def test_per_instance_steps_vdp():
+    """Stiffer instances take more steps — the parallel-solving signature."""
+    b, e = 4, 21
+    mu = jnp.asarray([1.0, 2.0, 5.0, 10.0], jnp.float32)
+    y0 = jnp.tile(jnp.asarray([[2.0, 0.0]], jnp.float32), (b, 1))
+    te = grid(b, 0.0, 10.0, e)
+    ys, stats = solve_ivp(vdp_dynamics(mu), y0, te, atol=1e-5, rtol=1e-5,
+                          use_pallas=False)
+    steps = np.asarray(stats["n_steps"])
+    assert (np.diff(steps) > 0).all(), steps
+    assert (np.asarray(stats["status"]) == 0).all()
+    # n_f_evals uniform across the batch (torchode Listing 1 semantics).
+    assert len(set(np.asarray(stats["n_f_evals"]).tolist())) == 1
+
+
+def test_stiff_instance_does_not_change_easy_instance():
+    """§4.1: the easy instance's answer must not depend on its batchmates."""
+    e = 11
+    y0_solo = jnp.asarray([[2.0, 0.0]], jnp.float32)
+    te1 = grid(1, 0.0, 5.0, e)
+    ys_solo, st_solo = solve_ivp(
+        vdp_dynamics(jnp.asarray([1.0])), y0_solo, te1, atol=1e-5, rtol=1e-5,
+        use_pallas=False,
+    )
+    mu = jnp.asarray([1.0, 30.0], jnp.float32)
+    y0 = jnp.asarray([[2.0, 0.0], [2.0, 0.0]], jnp.float32)
+    te2 = grid(2, 0.0, 5.0, e)
+    ys_mix, st_mix = solve_ivp(vdp_dynamics(mu), y0, te2, atol=1e-5, rtol=1e-5,
+                               use_pallas=False)
+    # Identical controller state machine => identical trajectory and steps.
+    np.testing.assert_allclose(np.asarray(ys_mix)[0], np.asarray(ys_solo)[0],
+                               rtol=1e-6, atol=1e-6)
+    assert int(st_mix["n_steps"][0]) == int(st_solo["n_steps"][0])
+
+
+def test_pallas_and_ref_paths_agree():
+    b, e = 4, 11
+    mu = jnp.asarray([1.0, 2.0, 4.0, 8.0], jnp.float32)
+    y0 = jnp.tile(jnp.asarray([[2.0, 0.0]], jnp.float32), (b, 1))
+    te = grid(b, 0.0, 5.0, e)
+    ys_a, st_a = solve_ivp(vdp_dynamics(mu), y0, te, use_pallas=True)
+    ys_b, st_b = solve_ivp(vdp_dynamics(mu), y0, te, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(ys_a), np.asarray(ys_b), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(st_a["n_steps"]),
+                                  np.asarray(st_b["n_steps"]))
+
+
+def test_max_steps_status():
+    cfg_kw = dict(atol=1e-9, rtol=1e-9, max_steps=5, use_pallas=False)
+    b, e = 1, 5
+    mu = jnp.asarray([50.0], jnp.float32)
+    y0 = jnp.asarray([[2.0, 0.0]], jnp.float32)
+    te = grid(b, 0.0, 20.0, e)
+    _, stats = solve_ivp(vdp_dynamics(mu), y0, te, **cfg_kw)
+    assert int(stats["status"][0]) == 1  # MAX_STEPS
+
+
+def test_pid_controller_changes_step_count():
+    b, e = 1, 11
+    mu = jnp.asarray([25.0], jnp.float32)
+    y0 = jnp.asarray([[2.0, 0.0]], jnp.float32)
+    te = grid(b, 0.0, 40.0, e)
+    f = vdp_dynamics(mu)
+    ys_i, st_i = solve_ivp(f, y0, te, atol=1e-5, rtol=1e-5, use_pallas=False)
+    cfg = SolverConfig(atol=1e-5, rtol=1e-5, use_pallas=False,
+                       controller=Controller(pcoeff=0.2, icoeff=0.4))
+    ys_p, st_p = make_solver(f, cfg)(y0, te)
+    assert (np.asarray(st_i["status"]) == 0).all()
+    assert (np.asarray(st_p["status"]) == 0).all()
+    # Both must solve correctly; counts differ (the App. C effect).
+    np.testing.assert_allclose(np.asarray(ys_i), np.asarray(ys_p), rtol=0.05,
+                               atol=0.05)
+    assert int(st_p["n_steps"][0]) != int(st_i["n_steps"][0])
+
+
+def test_mlp_dynamics_solve():
+    d = 3
+    params = mlp_init([d + 1, 16, d], jax.random.PRNGKey(1))
+    f = mlp_dynamics(params)
+    b, e = 2, 5
+    y0 = jnp.asarray(np.random.default_rng(0).normal(size=(b, d)), jnp.float32)
+    te = grid(b, 0.0, 1.0, e)
+    ys, stats = solve_ivp(f, y0, te, atol=1e-4, rtol=1e-4, use_pallas=False)
+    assert np.isfinite(np.asarray(ys)).all()
+    assert (np.asarray(stats["status"]) == 0).all()
+
+
+def test_single_step_matches_solver_first_step():
+    """The step artifact computes the same proposal the full solver makes."""
+    b = 4
+    mu = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    y0 = jnp.tile(jnp.asarray([[2.0, 0.0]], jnp.float32), (b, 1))
+    f = vdp_dynamics(mu)
+    t = jnp.zeros((b,), jnp.float32)
+    dt = jnp.full((b,), 0.01, jnp.float32)
+    k0 = f(t, y0)
+    step = make_vdp_step(use_pallas=False)
+    y_new, en, k_last = step(dt, y0, k0, mu)
+    # 5th-order check against a tiny-step "truth" via the full solver.
+    te = jnp.stack([jnp.zeros(b), jnp.full((b,), 0.01)], axis=1).astype(jnp.float32)
+    ys, _ = solve_ivp(f, y0, te, atol=1e-9, rtol=1e-9, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_new), np.asarray(ys)[:, -1, :],
+                               rtol=1e-4, atol=1e-6)
+    assert np.asarray(en).shape == (b,)
+    # FSAL: k_last == f(t+dt, y_new).
+    np.testing.assert_allclose(np.asarray(k_last),
+                               np.asarray(f(t + dt, y_new)), rtol=1e-5, atol=1e-6)
+
+
+def test_jit_compiles_whole_solver():
+    """The entire loop must be jit-able with zero host callbacks."""
+    b, e = 2, 5
+    y0 = jnp.ones((b, 1), jnp.float32)
+    te = grid(b, 0.0, 1.0, e)
+    fn = jax.jit(lambda y0, te: solve_ivp(expdec, y0, te, use_pallas=False))
+    ys1, st1 = fn(y0, te)
+    ys2, st2 = fn(y0, te)  # cached executable
+    np.testing.assert_array_equal(np.asarray(ys1), np.asarray(ys2))

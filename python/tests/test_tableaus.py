@@ -1,0 +1,60 @@
+"""Tableau sanity: order conditions and structural invariants (the JSON
+export consumed by the Rust golden test is also checked)."""
+
+import json
+
+import numpy as np
+
+from compile import tableaus
+
+
+def test_stage_consistency():
+    for t in tableaus.ALL.values():
+        for i in range(1, t.stages):
+            assert abs(t.a[i, :i].sum() - t.c[i]) < 1e-12, t.name
+
+
+def test_b_sums_to_one():
+    for t in tableaus.ALL.values():
+        assert abs(t.b.sum() - 1.0) < 1e-12, t.name
+
+
+def test_b_err_sums_to_zero():
+    for t in tableaus.ALL.values():
+        assert abs(t.b_err.sum()) < 1e-12, t.name
+
+
+def test_order_conditions():
+    for t in tableaus.ALL.values():
+        if t.order >= 2:
+            assert abs((t.b * t.c).sum() - 0.5) < 1e-9, t.name
+        if t.order >= 3:
+            assert abs((t.b * t.c**2).sum() - 1 / 3) < 1e-9, t.name
+            assert abs(t.b @ t.a @ t.c - 1 / 6) < 1e-9, t.name
+        if t.order >= 4:
+            assert abs((t.b * t.c**3).sum() - 0.25) < 1e-9, t.name
+
+
+def test_fsal_structure():
+    for t in tableaus.ALL.values():
+        if t.fsal:
+            np.testing.assert_allclose(t.a[-1, :-1], t.b[:-1], atol=1e-15)
+            assert t.b[-1] == 0.0
+            assert t.c[-1] == 1.0
+
+
+def test_json_roundtrip():
+    payload = json.loads(tableaus.to_json())
+    assert set(payload) == set(tableaus.ALL)
+    d5 = payload["dopri5"]
+    assert d5["stages"] == 7
+    assert len(d5["a"]) == 21
+    assert d5["fsal"] is True
+
+
+def test_a_flat_layout():
+    t = tableaus.DOPRI5
+    flat = t.a_flat()
+    # Row 2 (0-indexed) starts at offset 1 and holds [3/40, 9/40].
+    assert abs(flat[1] - 3 / 40) < 1e-15
+    assert abs(flat[2] - 9 / 40) < 1e-15

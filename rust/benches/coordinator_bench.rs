@@ -1,0 +1,75 @@
+//! Bench: the L3 coordinator — batcher throughput and end-to-end service
+//! latency across batching configurations.
+//!
+//! Run with `cargo bench --bench coordinator_bench`.
+
+use rode::bench::{time_repeats, Summary};
+use rode::coordinator::{
+    Coordinator, DynamicBatcher, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
+};
+use rode::nn::Rng64;
+use std::time::{Duration, Instant};
+
+fn req(rng: &mut Rng64, id: u64) -> SolveRequest {
+    SolveRequest {
+        id,
+        problem: ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
+        y0: vec![rng.normal(), rng.normal()],
+        t_eval: (0..20).map(|k| k as f64 * 0.25).collect(),
+    }
+}
+
+fn bench_batcher() {
+    println!("--- DynamicBatcher push throughput ---");
+    let mut rng = Rng64::new(1);
+    let reqs: Vec<SolveRequest> = (0..10_000).map(|i| req(&mut rng, i)).collect();
+    let xs = time_repeats(2, 10, || {
+        let mut b = DynamicBatcher::new(64, Duration::from_millis(1));
+        let now = Instant::now();
+        let mut flushed = 0;
+        for r in reqs.iter().cloned() {
+            if let Some(batch) = b.push(r, now) {
+                flushed += batch.requests.len();
+            }
+        }
+        std::hint::black_box(flushed);
+    });
+    let s = Summary::from_samples(&xs);
+    println!(
+        "push 10k requests: {:.3} ± {:.3} ms  ({:.0} ns/request)",
+        s.mean,
+        s.std,
+        s.mean * 1e6 / 10_000.0
+    );
+}
+
+fn bench_service() {
+    println!("--- end-to-end service (native engine, 1000 VdP requests) ---");
+    for (max_batch, wait_ms) in [(8usize, 1u64), (32, 1), (128, 2)] {
+        let coord = Coordinator::spawn(
+            ServiceConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            || Box::new(NativeEngine::default()),
+        );
+        let mut rng = Rng64::new(7);
+        let n = 1000;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n).map(|_| coord.submit(req(&mut rng, 0))).collect();
+        let mut ok = 0;
+        for rx in rxs {
+            if rx.recv_timeout(Duration::from_secs(120)).is_ok() {
+                ok += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "max_batch={max_batch:<4} wait={wait_ms}ms: {ok}/{n} in {wall:.2}s = {:>7.0} req/s | {}",
+            n as f64 / wall,
+            coord.metrics().summary()
+        );
+    }
+}
+
+fn main() {
+    bench_batcher();
+    bench_service();
+}

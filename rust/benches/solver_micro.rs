@@ -1,0 +1,146 @@
+//! Micro-benchmarks + ablations of the solver hot path:
+//!
+//! - `rk_attempt` cost across batch/dim (the per-step kernel),
+//! - error-norm and interpolation kernels,
+//! - ablations the paper calls out: FSAL reuse, Horner vs naive
+//!   polynomial evaluation, zero-coefficient skipping, and the rode
+//!   extension `eval_inactive=false`.
+//!
+//! Run with `cargo bench --bench solver_micro`.
+
+use rode::bench::{time_repeats, Summary};
+use rode::prelude::*;
+use rode::problems::VdP;
+use rode::solver::interp;
+use rode::solver::norm::{scaled_norm, NormKind};
+use rode::solver::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use rode::tensor::BatchVec;
+
+fn summary_line(name: &str, xs: &[f64], per: f64, unit: &str) {
+    let s = Summary::from_samples(xs);
+    println!(
+        "{name:<46} {:>12.3} ± {:>8.3} µs{}",
+        s.mean * 1e3 / per,
+        s.std * 1e3 / per,
+        if unit.is_empty() { String::new() } else { format!("  (per {unit})") }
+    );
+}
+
+fn bench_rk_attempt() {
+    println!("--- rk_attempt (dopri5, one batched step) ---");
+    for &(batch, dim) in &[(16usize, 2usize), (256, 2), (1024, 2), (256, 16), (64, 128)] {
+        let sys = VdP::uniform(batch, 2.0);
+        let dim_eff = 2.min(dim);
+        let _ = dim_eff;
+        // VdP has dim 2; emulate larger dims with ExponentialDecay.
+        let run = |reps: usize| -> Vec<f64> {
+            if dim == 2 {
+                let ct = CompiledTableau::new(Method::Dopri5.tableau());
+                let mut ws = RkWorkspace::new(7, batch, 2);
+                let y = BatchVec::broadcast(&[2.0, 0.0], batch);
+                let t = vec![0.0; batch];
+                let dt = vec![0.01; batch];
+                let k0 = vec![false; batch];
+                time_repeats(3, reps, || {
+                    rk_attempt(&ct, &sys, &t, &dt, &y, &mut ws, &k0, None, true);
+                })
+            } else {
+                let sys = rode::problems::ExponentialDecay::new(vec![1.0], dim);
+                let ct = CompiledTableau::new(Method::Dopri5.tableau());
+                let mut ws = RkWorkspace::new(7, batch, dim);
+                let y = BatchVec::zeros(batch, dim);
+                let t = vec![0.0; batch];
+                let dt = vec![0.01; batch];
+                let k0 = vec![false; batch];
+                time_repeats(3, reps, || {
+                    rk_attempt(&ct, &sys, &t, &dt, &y, &mut ws, &k0, None, true);
+                })
+            }
+        };
+        summary_line(&format!("rk_attempt b={batch} d={dim}"), &run(50), 1.0, "");
+    }
+}
+
+fn bench_norm_interp() {
+    println!("--- fused error norm + Horner interpolation (b=256, d=16) ---");
+    let (b, d) = (256, 16);
+    let err = vec![1e-6; b * d];
+    let y0 = vec![1.0; b * d];
+    let y1 = vec![1.1; b * d];
+    let xs = time_repeats(3, 200, || {
+        for i in 0..b {
+            std::hint::black_box(scaled_norm(
+                NormKind::Rms,
+                &err[i * d..(i + 1) * d],
+                &y0[i * d..(i + 1) * d],
+                &y1[i * d..(i + 1) * d],
+                1e-6,
+                1e-5,
+            ));
+        }
+    });
+    summary_line("scaled_norm batch", &xs, 1.0, "");
+
+    let kdata: Vec<Vec<f64>> = (0..7).map(|s| vec![0.1 * s as f64; d]).collect();
+    let k: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+    let mut coeffs = vec![0.0; interp::DOPRI5_NCOEFF * d];
+    let mut out = vec![0.0; d];
+    let xs = time_repeats(3, 200, || {
+        for i in 0..b {
+            let _ = i;
+            interp::dopri5_coeffs(0.1, &y0[..d], &y1[..d], &k, &mut coeffs);
+            for e in 0..4 {
+                interp::dopri5_eval(e as f64 / 4.0, &coeffs, &mut out);
+                std::hint::black_box(&out);
+            }
+        }
+    });
+    summary_line("dopri5 coeffs + 4 Horner evals (batch)", &xs, 1.0, "");
+}
+
+fn bench_ablations() {
+    println!("--- ablations (batch 256 VdP, one cycle, tol 1e-5) ---");
+    let batch = 256;
+    let sys = VdP::uniform(batch, 2.0);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
+    let t1 = VdP::approx_period(2.0);
+    let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
+
+    // FSAL (dopri5/tsit5) vs non-FSAL (cashkarp45) at equal order: count
+    // dynamics evaluations.
+    for m in [Method::Dopri5, Method::Tsit5, Method::CashKarp45, Method::Fehlberg45] {
+        let opts = SolveOptions::new(m).with_tols(1e-5, 1e-5).with_max_steps(100_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        println!(
+            "{:<28} steps {:>5}  f_evals {:>6}  (evals/step {:.2})",
+            format!("method {} (fsal={})", m.name(), m.tableau().fsal),
+            sol.stats[0].n_steps,
+            sol.stats[0].n_f_evals,
+            sol.stats[0].n_f_evals as f64 / sol.stats[0].n_steps as f64
+        );
+    }
+
+    // eval_inactive: torchode semantics (true) vs the rode extension.
+    let mus: Vec<f64> = (0..batch).map(|i| 0.5 + 10.0 * (i as f64 / batch as f64)).collect();
+    let sys_het = VdP::new(mus);
+    for (label, opts) in [
+        ("eval_inactive=true (torchode)", SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5)),
+        (
+            "eval_inactive=false (rode ext)",
+            SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).skip_inactive(),
+        ),
+    ] {
+        let xs = time_repeats(1, 5, || {
+            let sol = solve_ivp_parallel(&sys_het, &y0, &grid, &opts);
+            assert!(sol.all_success());
+        });
+        summary_line(label, &xs, 1.0, "");
+    }
+}
+
+fn main() {
+    bench_rk_attempt();
+    bench_norm_interp();
+    bench_ablations();
+}

@@ -1,0 +1,37 @@
+//! Bench: Table 2 (VdP) / Table 3 — loop time per engine on the paper's
+//! exact workload (256 VdP problems, μ=2, one cycle, dopri5, tol 1e-5,
+//! 200 eval points), plus the §4.1 step-ratio series.
+//!
+//! Run with `cargo bench --bench vdp_loop_time`.
+
+use rode::experiments::{sec41_steps, vdp_table3, VdpT3Config, SIM_LAUNCH_MS};
+
+fn main() {
+    println!("=== Table 3: VdP loop time (batch 256, mu=2, 200 eval pts, dopri5) ===");
+    let cfg = VdpT3Config::default();
+    let rows = vdp_table3(&cfg);
+    println!(
+        "{:<28} {:>22} {:>14} {:>7} {:>14} {:>12}",
+        "engine", "loop time (ms/step)", "total (ms)", "steps", "launches/step", "sim (ms/st)"
+    );
+    for r in &rows {
+        println!(
+            "{:<28} {:>22} {:>14.3} {:>7} {:>14.1} {:>12.3}",
+            r.engine,
+            r.loop_time_ms.format_ms(),
+            r.total_ms.mean,
+            r.steps,
+            r.launches_per_step,
+            r.launches_per_step * SIM_LAUNCH_MS,
+        );
+    }
+
+    println!("\n=== Sec 4.1: joint-batching step blow-up (mu=25) ===");
+    println!("{:>6} {:>12} {:>14} {:>7}", "batch", "joint", "parallel-max", "ratio");
+    for p in sec41_steps(25.0, 1e-5, &[1, 2, 4, 8, 16, 32, 64, 128]) {
+        println!(
+            "{:>6} {:>12} {:>14} {:>7.2}",
+            p.batch, p.joint_steps, p.parallel_max_steps, p.ratio
+        );
+    }
+}

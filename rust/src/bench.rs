@@ -1,0 +1,254 @@
+//! Self-contained benchmark harness (criterion is not available in this
+//! offline build, and the paper's *loop time* metric needs bespoke
+//! instrumentation anyway).
+//!
+//! The central metric follows Appendix A of the paper exactly:
+//!
+//! > "we measured the total time, the model time and the solver time per
+//! > step ... The solver time divided by the number of solver steps is our
+//! > main quantity of interest and we call it loop time."
+//!
+//! [`TimedSystem`] wraps any [`OdeSystem`] and accumulates the wall time
+//! spent inside the dynamics ("model time"); the harness subtracts it from
+//! the total to get solver time, then divides by steps.
+
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+/// Mean/std/min/max over repeated measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            n,
+        }
+    }
+
+    /// `mean ± std` with the paper's precision rule (first significant
+    /// digit of the std; one extra digit if it is 1).
+    pub fn format_ms(&self) -> String {
+        format!("{:.4} ± {:.4}", self.mean, self.std)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured and `reps` measured repetitions,
+/// returning the per-repetition wall times in milliseconds.
+pub fn time_repeats<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    out
+}
+
+/// Wraps a system and accumulates time spent in the dynamics — the
+/// paper's "model time".
+pub struct TimedSystem<'a> {
+    pub inner: &'a dyn OdeSystem,
+    model_time: Cell<Duration>,
+    calls: Cell<u64>,
+}
+
+impl<'a> TimedSystem<'a> {
+    pub fn new(inner: &'a dyn OdeSystem) -> Self {
+        Self { inner, model_time: Cell::new(Duration::ZERO), calls: Cell::new(0) }
+    }
+
+    /// Accumulated model time in milliseconds.
+    pub fn model_time_ms(&self) -> f64 {
+        self.model_time.get().as_secs_f64() * 1e3
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn reset(&self) {
+        self.model_time.set(Duration::ZERO);
+        self.calls.set(0);
+    }
+}
+
+impl<'a> OdeSystem for TimedSystem<'a> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn f_inst(&self, inst: usize, t: f64, y: &[f64], dy: &mut [f64]) {
+        let start = Instant::now();
+        self.inner.f_inst(inst, t, y, dy);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+        self.calls.set(self.calls.get() + 1);
+    }
+
+    fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        let start = Instant::now();
+        self.inner.f_batch(t, y, dy, active);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+        self.calls.set(self.calls.get() + 1);
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        out_p: &mut [f64],
+    ) {
+        let start = Instant::now();
+        self.inner.vjp_inst(inst, t, y, a, out_y, out_p);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+    }
+
+    fn has_vjp(&self) -> bool {
+        self.inner.has_vjp()
+    }
+}
+
+/// One solve measured the paper's way.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopTimeMeasurement {
+    /// Total wall time of the solve (ms) — the paper's "total time".
+    pub total_ms: f64,
+    /// Time inside the dynamics (ms) — "model time".
+    pub model_ms: f64,
+    /// (total − model) / steps (ms) — "loop time", the headline metric.
+    pub loop_time_ms: f64,
+    /// Steps taken (max across the batch for parallel loops, shared count
+    /// for joint loops).
+    pub steps: u64,
+}
+
+/// Measure a solve: `run` executes one full solve against `sys` and
+/// returns the step count to normalize with.
+pub fn measure_loop_time<F>(sys: &TimedSystem<'_>, mut run: F) -> LoopTimeMeasurement
+where
+    F: FnMut() -> u64,
+{
+    sys.reset();
+    let start = Instant::now();
+    let steps = run();
+    let total_ms = start.elapsed().as_secs_f64() * 1e3;
+    let model_ms = sys.model_time_ms();
+    let solver_ms = (total_ms - model_ms).max(0.0);
+    LoopTimeMeasurement {
+        total_ms,
+        model_ms,
+        loop_time_ms: if steps > 0 { solver_ms / steps as f64 } else { 0.0 },
+        steps,
+    }
+}
+
+/// Emit a markdown table of (row label, per-column summaries).
+pub fn markdown_table(title: &str, columns: &[&str], rows: &[(String, Vec<String>)]) -> String {
+    let mut s = format!("### {title}\n\n| |");
+    for c in columns {
+        s.push_str(&format!(" {c} |"));
+    }
+    s.push_str("\n|---|");
+    for _ in columns {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for (label, cells) in rows {
+        s.push_str(&format!("| {label} |"));
+        for c in cells {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::VdP;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn timed_system_accumulates() {
+        let inner = VdP::uniform(2, 1.0);
+        let timed = TimedSystem::new(&inner);
+        let y = BatchVec::broadcast(&[1.0, 0.0], 2);
+        let mut dy = BatchVec::zeros(2, 2);
+        timed.f_batch(&[0.0, 0.0], &y, &mut dy, None);
+        assert_eq!(timed.calls(), 1);
+        assert!(timed.model_time_ms() >= 0.0);
+        timed.reset();
+        assert_eq!(timed.calls(), 0);
+    }
+
+    #[test]
+    fn loop_time_subtracts_model_time() {
+        let inner = VdP::uniform(1, 1.0);
+        let timed = TimedSystem::new(&inner);
+        let m = measure_loop_time(&timed, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            10
+        });
+        assert_eq!(m.steps, 10);
+        assert!(m.total_ms >= 2.0);
+        assert!(m.loop_time_ms > 0.0);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown_table(
+            "T",
+            &["a", "b"],
+            &[("r".to_string(), vec!["1".to_string(), "2".to_string()])],
+        );
+        assert!(md.contains("| r | 1 | 2 |"));
+    }
+
+    #[test]
+    fn time_repeats_counts() {
+        let mut n = 0;
+        let xs = time_repeats(2, 5, || n += 1);
+        assert_eq!(xs.len(), 5);
+        assert_eq!(n, 7);
+    }
+}

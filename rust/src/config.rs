@@ -1,0 +1,166 @@
+//! Configuration: a small TOML-subset parser (flat `key = value` pairs,
+//! comments, strings/numbers/bools) plus the typed config structs used by
+//! the CLI and the serve example. The vendored crate set has no `toml`
+//! crate; the subset here covers everything rode's configs need.
+
+use crate::solver::Method;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// A parsed flat config file.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse `key = value` lines; `#` starts a comment; quotes optional on
+    /// strings.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue; // sections are allowed but flattened/ignored
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            values.insert(k.trim().to_string(), v);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow!("bad float for {key}: {v}")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow!("bad integer for {key}: {v}")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.get(key)
+            .map(|v| match v {
+                "true" => Ok(true),
+                "false" => Ok(false),
+                _ => Err(anyhow!("bad bool for {key}: {v}")),
+            })
+            .transpose()
+    }
+}
+
+/// Top-level service configuration (CLI flags override file values).
+#[derive(Debug, Clone)]
+pub struct RodeConfig {
+    pub method: Method,
+    pub atol: f64,
+    pub rtol: f64,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub engine: String,
+    pub artifacts_dir: String,
+}
+
+impl Default for RodeConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::Dopri5,
+            atol: 1e-6,
+            rtol: 1e-5,
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            engine: "native".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RodeConfig {
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(m) = raw.get("method") {
+            cfg.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}"))?;
+        }
+        if let Some(v) = raw.get_f64("atol")? {
+            cfg.atol = v;
+        }
+        if let Some(v) = raw.get_f64("rtol")? {
+            cfg.rtol = v;
+        }
+        if let Some(v) = raw.get_usize("max_batch")? {
+            cfg.max_batch = v;
+        }
+        if let Some(v) = raw.get_f64("max_wait_ms")? {
+            cfg.max_wait = Duration::from_secs_f64(v / 1e3);
+        }
+        if let Some(v) = raw.get("engine") {
+            cfg.engine = v.to_string();
+        }
+        if let Some(v) = raw.get("artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_raw(&RawConfig::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_toml_subset() {
+        let raw = RawConfig::parse(
+            "# service\n[service]\nmethod = \"tsit5\"\natol = 1e-7\nmax_batch = 32\nengine = aot\n",
+        )
+        .unwrap();
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.method, Method::Tsit5);
+        assert_eq!(cfg.atol, 1e-7);
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.engine, "aot");
+        // Unset keys keep defaults.
+        assert_eq!(cfg.rtol, 1e-5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let raw = RawConfig::parse("atol = banana").unwrap();
+        assert!(RodeConfig::from_raw(&raw).is_err());
+        assert!(RawConfig::parse("no equals sign here").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let raw = RawConfig::parse("\n# only comments\n\n").unwrap();
+        assert!(raw.get("anything").is_none());
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.method, Method::Dopri5);
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let raw = RawConfig::parse("flag = true").unwrap();
+        assert_eq!(raw.get_bool("flag").unwrap(), Some(true));
+        let raw = RawConfig::parse("flag = yes").unwrap();
+        assert!(raw.get_bool("flag").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Dynamic batching: group compatible requests, flush on size or deadline.
+//!
+//! The §4.1 lesson shapes the policy: batching is *free* under parallel
+//! solving (each instance keeps its own solver state), so the batcher
+//! groups aggressively by *shape* only — (problem kind, dim, n_eval) —
+//! never by stiffness or time range. A joint-batching engine would need
+//! stiffness-aware admission; the parallel engines do not.
+
+use super::request::SolveRequest;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Requests batch together iff these agree (the lowered artifacts and the
+/// native engine both need rectangular batches).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub kind: &'static str,
+    pub dim: usize,
+    pub n_eval: usize,
+}
+
+impl BucketKey {
+    pub fn of(req: &SolveRequest) -> Self {
+        Self { kind: req.problem.kind(), dim: req.dim(), n_eval: req.n_eval() }
+    }
+}
+
+/// A flushed batch ready for an engine.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: BucketKey,
+    pub requests: Vec<SolveRequest>,
+    /// Age of the oldest request at flush time.
+    pub oldest_wait: Duration,
+}
+
+struct Bucket {
+    requests: Vec<SolveRequest>,
+    oldest: Instant,
+}
+
+/// Size- and deadline-triggered batcher.
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_wait: Duration,
+    buckets: HashMap<BucketKey, Bucket>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch, max_wait, buckets: HashMap::new() }
+    }
+
+    /// Add a request; returns a full batch if the bucket reached
+    /// `max_batch`.
+    pub fn push(&mut self, req: SolveRequest, now: Instant) -> Option<Batch> {
+        let key = BucketKey::of(&req);
+        let bucket = self
+            .buckets
+            .entry(key.clone())
+            .or_insert_with(|| Bucket { requests: Vec::new(), oldest: now });
+        if bucket.requests.is_empty() {
+            bucket.oldest = now;
+        }
+        bucket.requests.push(req);
+        if bucket.requests.len() >= self.max_batch {
+            let bucket = self.buckets.remove(&key).unwrap();
+            Some(Batch {
+                key,
+                oldest_wait: now.duration_since(bucket.oldest),
+                requests: bucket.requests,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every bucket whose oldest request has waited ≥ `max_wait`.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<BucketKey> = self
+            .buckets
+            .iter()
+            .filter(|(_, b)| now.duration_since(b.oldest) >= self.max_wait)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|key| {
+                let b = self.buckets.remove(&key).unwrap();
+                Batch {
+                    key,
+                    oldest_wait: now.duration_since(b.oldest),
+                    requests: b.requests,
+                }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain(&mut self, now: Instant) -> Vec<Batch> {
+        let keys: Vec<BucketKey> = self.buckets.keys().cloned().collect();
+        keys.into_iter()
+            .map(|key| {
+                let b = self.buckets.remove(&key).unwrap();
+                Batch {
+                    key,
+                    oldest_wait: now.duration_since(b.oldest),
+                    requests: b.requests,
+                }
+            })
+            .collect()
+    }
+
+    /// Requests currently waiting.
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(|b| b.requests.len()).sum()
+    }
+
+    /// Time until the next deadline flush, if any bucket is non-empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.buckets
+            .values()
+            .map(|b| {
+                self.max_wait
+                    .saturating_sub(now.duration_since(b.oldest))
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ProblemSpec;
+
+    fn req(id: u64, kind: u8, n_eval: usize) -> SolveRequest {
+        SolveRequest {
+            id,
+            problem: match kind {
+                0 => ProblemSpec::Vdp { mu: 1.0 },
+                _ => ProblemSpec::ExpDecay { lambda: 1.0 },
+            },
+            y0: vec![1.0, 0.0],
+            t_eval: (0..n_eval).map(|k| k as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(60));
+        let t = Instant::now();
+        assert!(b.push(req(1, 0, 5), t).is_none());
+        assert!(b.push(req(2, 0, 5), t).is_none());
+        let batch = b.push(req(3, 0, 5), t).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn incompatible_shapes_do_not_mix() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        assert!(b.push(req(1, 0, 5), t).is_none());
+        assert!(b.push(req(2, 0, 6), t).is_none()); // different n_eval
+        assert!(b.push(req(3, 1, 5), t).is_none()); // different kind
+        assert_eq!(b.pending(), 3);
+        let batch = b.push(req(4, 0, 5), t).unwrap();
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(req(1, 0, 5), t0);
+        assert!(b.poll_expired(t0).is_empty());
+        let later = t0 + Duration::from_millis(11);
+        let batches = b.poll_expired(later);
+        assert_eq!(batches.len(), 1);
+        assert!(batches[0].oldest_wait >= Duration::from_millis(11));
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut b = DynamicBatcher::new(100, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push(req(1, 0, 5), t);
+        b.push(req(2, 1, 5), t);
+        let batches = b.drain(t);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(50));
+        let t0 = Instant::now();
+        assert!(b.next_deadline(t0).is_none());
+        b.push(req(1, 0, 5), t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(20)).unwrap();
+        assert!(d <= Duration::from_millis(30));
+    }
+
+    /// Property: every pushed request comes back exactly once, whatever the
+    /// interleaving of pushes and deadline polls.
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        crate::prop::check("batcher-conservation", 50, 42, |rng| {
+            let mut b = DynamicBatcher::new(1 + rng.below(5), Duration::from_millis(5));
+            let t0 = Instant::now();
+            let n = 1 + rng.below(40);
+            let mut seen = Vec::new();
+            for id in 0..n as u64 {
+                let kind = (rng.below(2)) as u8;
+                let n_eval = 3 + rng.below(3);
+                if let Some(batch) = b.push(req(id, kind, n_eval), t0) {
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+                if rng.below(4) == 0 {
+                    for batch in b.poll_expired(t0 + Duration::from_millis(10)) {
+                        seen.extend(batch.requests.iter().map(|r| r.id));
+                    }
+                }
+            }
+            for batch in b.drain(t0) {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            seen.sort_unstable();
+            let expect: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(seen, expect, "requests lost or duplicated");
+        });
+    }
+
+    /// Property: batches are always shape-homogeneous and within max size.
+    #[test]
+    fn batches_homogeneous_and_bounded() {
+        crate::prop::check("batcher-homogeneous", 50, 7, |rng| {
+            let max = 1 + rng.below(6);
+            let mut b = DynamicBatcher::new(max, Duration::from_secs(1));
+            let t = Instant::now();
+            let mut check = |batch: &Batch| {
+                assert!(batch.requests.len() <= max);
+                for r in &batch.requests {
+                    assert_eq!(BucketKey::of(r), batch.key);
+                }
+            };
+            for id in 0..60 {
+                let kind = (rng.below(2)) as u8;
+                let n_eval = 3 + rng.below(4);
+                if let Some(batch) = b.push(req(id, kind, n_eval), t) {
+                    check(&batch);
+                }
+            }
+            for batch in b.drain(t) {
+                check(&batch);
+            }
+        });
+    }
+}

@@ -1,0 +1,317 @@
+//! Solve engines: the backends a batch can be dispatched to.
+//!
+//! - [`NativeEngine`] — the Rust parallel solver (torchode re-implemented).
+//! - [`JointEngine`] — the joint baseline (torchdiffeq semantics); exists
+//!   so the service can demonstrate §4.1 end to end.
+//! - [`AotEngine`] — the PJRT full-solve artifacts (torchode-JIT): pads
+//!   the batch to the artifact's static shape, executes, slices results.
+
+use super::batcher::Batch;
+use super::request::{ProblemSpec, SolveResponse};
+use crate::problems::{ExponentialDecay, VdP};
+use crate::runtime::Runtime;
+use crate::solver::{
+    solve_ivp_joint, solve_ivp_parallel, Method, SolveOptions, Solution, Stats, Status, TimeGrid,
+};
+use crate::tensor::BatchVec;
+use anyhow::{anyhow, Result};
+
+/// A batch solver backend.
+pub trait SolveEngine {
+    fn name(&self) -> &'static str;
+    fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>>;
+}
+
+fn build_grid(batch: &Batch) -> TimeGrid {
+    TimeGrid::from_rows(
+        &batch.requests.iter().map(|r| r.t_eval.clone()).collect::<Vec<_>>(),
+    )
+}
+
+fn build_y0(batch: &Batch) -> BatchVec {
+    BatchVec::from_rows(&batch.requests.iter().map(|r| r.y0.clone()).collect::<Vec<_>>())
+}
+
+fn to_responses(batch: &Batch, sol: &Solution, engine: &'static str) -> Vec<SolveResponse> {
+    batch
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut ys = Vec::with_capacity(sol.n_eval() * sol.dim());
+            for e in 0..sol.n_eval() {
+                ys.extend_from_slice(sol.y(i, e));
+            }
+            SolveResponse {
+                id: r.id,
+                ys,
+                stats: sol.stats[i].clone(),
+                status: sol.status[i],
+                engine,
+            }
+        })
+        .collect()
+}
+
+fn solve_native(batch: &Batch, opts: &SolveOptions, joint: bool) -> Result<Solution> {
+    let y0 = build_y0(batch);
+    let grid = build_grid(batch);
+    match batch.key.kind {
+        "vdp" => {
+            let mu = batch
+                .requests
+                .iter()
+                .map(|r| match r.problem {
+                    ProblemSpec::Vdp { mu } => mu,
+                    _ => unreachable!("bucket homogeneity"),
+                })
+                .collect();
+            let sys = VdP::new(mu);
+            Ok(if joint {
+                solve_ivp_joint(&sys, &y0, &grid, opts)
+            } else {
+                solve_ivp_parallel(&sys, &y0, &grid, opts)
+            })
+        }
+        "expdecay" => {
+            let lam = batch
+                .requests
+                .iter()
+                .map(|r| match r.problem {
+                    ProblemSpec::ExpDecay { lambda } => lambda,
+                    _ => unreachable!("bucket homogeneity"),
+                })
+                .collect();
+            let sys = ExponentialDecay::new(lam, batch.key.dim);
+            Ok(if joint {
+                solve_ivp_joint(&sys, &y0, &grid, opts)
+            } else {
+                solve_ivp_parallel(&sys, &y0, &grid, opts)
+            })
+        }
+        other => Err(anyhow!("native engine has no dynamics for kind '{other}'")),
+    }
+}
+
+/// The parallel native engine (the default backend).
+pub struct NativeEngine {
+    pub opts: SolveOptions,
+}
+
+impl NativeEngine {
+    pub fn new(opts: SolveOptions) -> Self {
+        Self { opts }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new(SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5))
+    }
+}
+
+impl SolveEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native-parallel"
+    }
+
+    fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>> {
+        let sol = solve_native(batch, &self.opts, false)?;
+        Ok(to_responses(batch, &sol, self.name()))
+    }
+}
+
+/// The joint baseline engine (shared step size — torchdiffeq semantics).
+/// Requires a common integration range inside each batch; the batcher does
+/// not enforce that, so this engine rejects mixed-range batches.
+pub struct JointEngine {
+    pub opts: SolveOptions,
+}
+
+impl SolveEngine for JointEngine {
+    fn name(&self) -> &'static str {
+        "native-joint"
+    }
+
+    fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>> {
+        let t0 = batch.requests[0].t_eval[0];
+        let t1 = *batch.requests[0].t_eval.last().unwrap();
+        for r in &batch.requests {
+            if (r.t_eval[0] - t0).abs() > 1e-12
+                || (r.t_eval.last().unwrap() - t1).abs() > 1e-12
+            {
+                return Err(anyhow!("joint engine requires a shared integration range"));
+            }
+        }
+        let sol = solve_native(batch, &self.opts, true)?;
+        Ok(to_responses(batch, &sol, self.name()))
+    }
+}
+
+/// The AOT (PJRT) engine: executes the full-solve artifacts. VdP only —
+/// artifacts bake the dynamics in.
+pub struct AotEngine {
+    runtime: Runtime,
+}
+
+impl AotEngine {
+    pub fn new(runtime: Runtime) -> Self {
+        Self { runtime }
+    }
+
+    pub fn open(artifacts_dir: &str) -> Result<Self> {
+        Ok(Self { runtime: Runtime::open(artifacts_dir)? })
+    }
+}
+
+impl SolveEngine for AotEngine {
+    fn name(&self) -> &'static str {
+        "aot-pjrt"
+    }
+
+    fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>> {
+        if batch.key.kind != "vdp" {
+            return Err(anyhow!("no AOT artifact for kind '{}'", batch.key.kind));
+        }
+        let n = batch.requests.len();
+        let e_req = batch.key.n_eval;
+        let name = self
+            .runtime
+            .pick_vdp_solve(n, e_req)
+            .ok_or_else(|| anyhow!("no artifact fits batch={n}, n_eval={e_req}"))?;
+        let art = self.runtime.load(&name)?;
+        let (b_art, e_art) = (art.meta.batch, art.meta.n_eval);
+
+        // Pad the batch to the artifact's static shape: repeat the last
+        // request's data (extra rows are solved and discarded — the AOT
+        // equivalent of torchode's overhanging evaluations).
+        let mut y0 = vec![0f32; b_art * 2];
+        let mut mu = vec![0f32; b_art];
+        let mut te = vec![0f32; b_art * e_art];
+        for i in 0..b_art {
+            let r = &batch.requests[i.min(n - 1)];
+            y0[i * 2] = r.y0[0] as f32;
+            y0[i * 2 + 1] = r.y0[1] as f32;
+            mu[i] = match r.problem {
+                ProblemSpec::Vdp { mu } => mu as f32,
+                _ => unreachable!(),
+            };
+            // Pad the eval grid by linearly extending past t1 (extra points
+            // are sliced off; keeping them ascending keeps the artifact's
+            // invariants intact).
+            let t1 = *r.t_eval.last().unwrap();
+            let dt_pad = (t1 - r.t_eval[0]).max(1e-6) / e_req.max(1) as f64;
+            for e in 0..e_art {
+                te[i * e_art + e] = if e < e_req {
+                    r.t_eval[e] as f32
+                } else {
+                    (t1 + dt_pad * (e - e_req + 1) as f64) as f32
+                };
+            }
+        }
+        let out = art.run_f32(&[&y0, &mu, &te])?;
+        let (ys, n_steps, n_accepted, n_f_evals, status) =
+            (&out[0], &out[1], &out[2], &out[3], &out[4]);
+
+        Ok(batch
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut ys_i = Vec::with_capacity(e_req * 2);
+                for e in 0..e_req {
+                    let lo = (i * e_art + e) * 2;
+                    ys_i.push(ys[lo] as f64);
+                    ys_i.push(ys[lo + 1] as f64);
+                }
+                SolveResponse {
+                    id: r.id,
+                    ys: ys_i,
+                    stats: Stats {
+                        n_steps: n_steps[i] as u64,
+                        n_accepted: n_accepted[i] as u64,
+                        n_f_evals: n_f_evals[i] as u64,
+                        n_initialized: e_req as u64,
+                    },
+                    status: if status[i] == 0.0 {
+                        Status::Success
+                    } else {
+                        Status::MaxStepsReached
+                    },
+                    engine: "aot-pjrt",
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BucketKey;
+    use crate::coordinator::SolveRequest;
+    use std::time::Duration;
+
+    fn vdp_batch(mus: &[f64], n_eval: usize, t1: f64) -> Batch {
+        let requests: Vec<SolveRequest> = mus
+            .iter()
+            .enumerate()
+            .map(|(i, &mu)| SolveRequest {
+                id: i as u64,
+                problem: ProblemSpec::Vdp { mu },
+                y0: vec![2.0, 0.0],
+                t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+            })
+            .collect();
+        Batch {
+            key: BucketKey::of(&requests[0]),
+            requests,
+            oldest_wait: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn native_engine_solves_batch() {
+        let mut eng = NativeEngine::default();
+        let batch = vdp_batch(&[1.0, 5.0], 10, 5.0);
+        let rs = eng.solve(&batch).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(rs.iter().all(|r| r.status == Status::Success));
+        assert_eq!(rs[0].ys.len(), 20);
+        // Stiffer instance takes more steps.
+        assert!(rs[1].stats.n_steps > rs[0].stats.n_steps);
+        // Responses keep request ids.
+        assert_eq!(rs[0].id, 0);
+        assert_eq!(rs[1].id, 1);
+    }
+
+    #[test]
+    fn joint_engine_shares_steps() {
+        let mut eng = JointEngine { opts: SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5) };
+        let batch = vdp_batch(&[1.0, 10.0], 10, 5.0);
+        let rs = eng.solve(&batch).unwrap();
+        assert_eq!(rs[0].stats.n_steps, rs[1].stats.n_steps);
+    }
+
+    #[test]
+    fn joint_engine_rejects_mixed_ranges() {
+        let mut eng = JointEngine { opts: SolveOptions::new(Method::Dopri5) };
+        let mut batch = vdp_batch(&[1.0, 2.0], 5, 5.0);
+        for t in batch.requests[1].t_eval.iter_mut() {
+            *t += 1.0;
+        }
+        assert!(eng.solve(&batch).is_err());
+    }
+
+    #[test]
+    fn native_and_joint_agree_on_solution() {
+        let mut a = NativeEngine::default();
+        let mut b = JointEngine { opts: SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7) };
+        let batch = vdp_batch(&[2.0, 2.0], 8, 4.0);
+        let ra = a.solve(&batch).unwrap();
+        let rb = b.solve(&batch).unwrap();
+        for (x, y) in ra[0].ys.iter().zip(&rb[0].ys) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+}

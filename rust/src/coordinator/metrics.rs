@@ -1,0 +1,115 @@
+//! Service metrics: lock-free counters + coarse latency histogram,
+//! shareable across the submitter and worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds.
+const LAT_BOUNDS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000];
+
+/// Shared service metrics (all atomics; `Arc<Metrics>` in practice).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub batches_dispatched: AtomicU64,
+    pub batch_size_sum: AtomicU64,
+    pub solver_steps_sum: AtomicU64,
+    latency_buckets: [AtomicU64; 9],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = LAT_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(LAT_BOUNDS_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.requests_completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches_dispatched.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of
+    /// the bucket containing the percentile).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return LAT_BOUNDS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// One-line summary for logs and the serve example.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} batches={} mean_batch={:.1} mean_lat={:.0}us p90={}us",
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_failed.load(Ordering::Relaxed),
+            self.batches_dispatched.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(0.9),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(Duration::from_micros(50));
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_micros(50_000));
+        }
+        assert_eq!(m.latency_percentile_us(0.5), 100);
+        assert_eq!(m.latency_percentile_us(0.95), 100_000);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = Metrics::new();
+        m.batches_dispatched.store(2, Ordering::Relaxed);
+        m.batch_size_sum.store(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let m = Metrics::new();
+        m.requests_submitted.store(7, Ordering::Relaxed);
+        assert!(m.summary().contains("submitted=7"));
+    }
+}

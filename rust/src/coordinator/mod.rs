@@ -1,0 +1,14 @@
+//! Layer 3: the solver service — request router, dynamic batcher, engines
+//! and metrics. See DESIGN.md §1.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use batcher::{Batch, BucketKey, DynamicBatcher};
+pub use engine::{AotEngine, JointEngine, NativeEngine, SolveEngine};
+pub use metrics::Metrics;
+pub use request::{ProblemSpec, SolveRequest, SolveResponse};
+pub use service::{Coordinator, ServiceConfig};

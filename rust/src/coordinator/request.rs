@@ -1,0 +1,88 @@
+//! Request/response types of the solver service.
+
+use crate::solver::{Stats, Status};
+
+/// Which dynamics a request wants solved. The coordinator buckets
+/// compatible problems together; per-instance parameters (e.g. μ) ride
+/// along inside the batch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProblemSpec {
+    /// Van der Pol with damping μ.
+    Vdp { mu: f64 },
+    /// Exponential decay ẏ = −λy (any dim).
+    ExpDecay { lambda: f64 },
+}
+
+impl ProblemSpec {
+    /// Bucketing kind — requests only batch with the same kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProblemSpec::Vdp { .. } => "vdp",
+            ProblemSpec::ExpDecay { .. } => "expdecay",
+        }
+    }
+}
+
+/// One independent IVP submitted to the service.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub id: u64,
+    pub problem: ProblemSpec,
+    /// Initial state (length = problem dim).
+    pub y0: Vec<f64>,
+    /// Ascending evaluation times; integration runs over
+    /// `[t_eval[0], t_eval[last]]`.
+    pub t_eval: Vec<f64>,
+}
+
+impl SolveRequest {
+    pub fn dim(&self) -> usize {
+        self.y0.len()
+    }
+
+    pub fn n_eval(&self) -> usize {
+        self.t_eval.len()
+    }
+}
+
+/// The solved trajectory + per-instance solver metadata.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    pub id: u64,
+    /// `(n_eval, dim)` row-major.
+    pub ys: Vec<f64>,
+    pub stats: Stats,
+    pub status: Status,
+    /// Which engine produced this (diagnostics).
+    pub engine: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_distinguish_problems() {
+        assert_ne!(
+            ProblemSpec::Vdp { mu: 1.0 }.kind(),
+            ProblemSpec::ExpDecay { lambda: 1.0 }.kind()
+        );
+        // Same kind regardless of parameters (parameters batch together).
+        assert_eq!(
+            ProblemSpec::Vdp { mu: 1.0 }.kind(),
+            ProblemSpec::Vdp { mu: 99.0 }.kind()
+        );
+    }
+
+    #[test]
+    fn request_shape_accessors() {
+        let r = SolveRequest {
+            id: 1,
+            problem: ProblemSpec::Vdp { mu: 2.0 },
+            y0: vec![1.0, 0.0],
+            t_eval: vec![0.0, 0.5, 1.0],
+        };
+        assert_eq!(r.dim(), 2);
+        assert_eq!(r.n_eval(), 3);
+    }
+}

@@ -1,0 +1,260 @@
+//! The solver service: a worker thread owning an engine, fed through a
+//! channel, with dynamic batching and per-request response delivery.
+//!
+//! Threads instead of async: the vendored crate set has no tokio, and a
+//! single dedicated worker matches the execution model anyway (one PJRT
+//! client / one native solve at a time per device).
+
+use super::batcher::DynamicBatcher;
+use super::engine::SolveEngine;
+use super::metrics::Metrics;
+use super::request::{SolveRequest, SolveResponse};
+use crate::solver::{Stats, Status};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+enum Msg {
+    Solve(SolveRequest, Sender<SolveResponse>, Instant),
+    Shutdown,
+}
+
+/// Handle to a running solver service.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the worker. `make_engine` runs *inside* the worker thread so
+    /// engines holding non-`Send` resources (PJRT client) work.
+    pub fn spawn<F>(cfg: ServiceConfig, make_engine: F) -> Self
+    where
+        F: FnOnce() -> Box<dyn SolveEngine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("rode-worker".into())
+            .spawn(move || worker_loop(rx, cfg, make_engine(), worker_metrics))
+            .expect("spawn worker");
+        Self {
+            tx,
+            worker: Some(worker),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a request; the returned receiver yields the response.
+    pub fn submit(&self, mut req: SolveRequest) -> Receiver<SolveResponse> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        // A send failure means the worker is gone; the caller will see a
+        // disconnected receiver.
+        let _ = self.tx.send(Msg::Solve(req, tx, Instant::now()));
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn solve_blocking(&self, req: SolveRequest) -> Option<SolveResponse> {
+        self.submit(req).recv().ok()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    cfg: ServiceConfig,
+    mut engine: Box<dyn SolveEngine>,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+    // Response channels + submit times keyed by request id.
+    let mut waiters: std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)> =
+        std::collections::HashMap::new();
+
+    let dispatch = |batch: super::batcher::Batch,
+                        engine: &mut Box<dyn SolveEngine>,
+                        waiters: &mut std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)>| {
+        metrics.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batch_size_sum
+            .fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        match engine.solve(&batch) {
+            Ok(responses) => {
+                for resp in responses {
+                    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .solver_steps_sum
+                        .fetch_add(resp.stats.n_steps, Ordering::Relaxed);
+                    if let Some((tx, t_submit)) = waiters.remove(&resp.id) {
+                        metrics.record_latency(t_submit.elapsed());
+                        let _ = tx.send(resp);
+                    }
+                }
+            }
+            Err(e) => {
+                // Fail every request in the batch with a DtUnderflow-free
+                // explicit status; the error text goes to the log.
+                eprintln!("[rode] batch failed on {}: {e}", engine.name());
+                for r in &batch.requests {
+                    metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                    if let Some((tx, _)) = waiters.remove(&r.id) {
+                        let _ = tx.send(SolveResponse {
+                            id: r.id,
+                            ys: Vec::new(),
+                            stats: Stats::default(),
+                            status: Status::NonFinite,
+                            engine: "failed",
+                        });
+                    }
+                }
+            }
+        }
+    };
+
+    loop {
+        // Wait bounded by the next deadline flush.
+        let timeout = batcher.next_deadline(Instant::now()).unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Solve(req, resp_tx, t_submit)) => {
+                waiters.insert(req.id, (resp_tx, t_submit));
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    dispatch(batch, &mut engine, &mut waiters);
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        for batch in batcher.poll_expired(Instant::now()) {
+            dispatch(batch, &mut engine, &mut waiters);
+        }
+    }
+    // Drain remaining work before exiting.
+    for batch in batcher.drain(Instant::now()) {
+        dispatch(batch, &mut engine, &mut waiters);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::request::ProblemSpec;
+
+    fn service(max_batch: usize, wait_ms: u64) -> Coordinator {
+        Coordinator::spawn(
+            ServiceConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            || Box::new(NativeEngine::default()),
+        )
+    }
+
+    fn vdp_req(mu: f64) -> SolveRequest {
+        SolveRequest {
+            id: 0,
+            problem: ProblemSpec::Vdp { mu },
+            y0: vec![2.0, 0.0],
+            t_eval: (0..10).map(|k| k as f64 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = service(8, 1);
+        let resp = c.solve_blocking(vdp_req(2.0)).unwrap();
+        assert_eq!(resp.status, Status::Success);
+        assert_eq!(resp.ys.len(), 20);
+        assert!(resp.stats.n_steps > 0);
+    }
+
+    #[test]
+    fn many_requests_all_complete_with_batching() {
+        let c = service(4, 1);
+        let rxs: Vec<_> = (0..10).map(|i| c.submit(vdp_req(1.0 + i as f64))).collect();
+        let mut ok = 0;
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.status, Status::Success);
+            ok += 1;
+        }
+        assert_eq!(ok, 10);
+        let m = c.metrics();
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 10);
+        // max_batch 4 over 10 requests => at least 3 batches.
+        assert!(m.batches_dispatched.load(Ordering::Relaxed) >= 3);
+        assert!(m.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn heterogeneous_shapes_complete() {
+        let c = service(16, 1);
+        let mut reqs = Vec::new();
+        for i in 0..6 {
+            let mut r = vdp_req(2.0);
+            if i % 2 == 0 {
+                r.t_eval = (0..5).map(|k| k as f64 * 0.3).collect();
+            }
+            reqs.push(c.submit(r));
+        }
+        for rx in reqs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.status, Status::Success);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let c = service(1000, 60_000); // nothing flushes by itself
+        let rx = c.submit(vdp_req(1.5));
+        drop(c); // shutdown drains the batcher
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.status, Status::Success);
+    }
+
+    #[test]
+    fn per_instance_params_preserved_through_batching() {
+        // Two very different μ in one batch must give different step counts
+        // (the parallel engine keeps per-instance state).
+        let c = service(2, 1);
+        let rx1 = c.submit(vdp_req(1.0));
+        let rx2 = c.submit(vdp_req(20.0));
+        let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r2.stats.n_steps > r1.stats.n_steps);
+    }
+}

@@ -1,0 +1,209 @@
+//! Table 5: the CNF benchmark — forward and backward loop times for the
+//! adjoint variants.
+//!
+//! Paper rows → rode rows:
+//!
+//! | paper          | forward loop        | backward (adjoint)             |
+//! |----------------|---------------------|--------------------------------|
+//! | torchode       | parallel            | per-instance, size b(2f+p)     |
+//! | torchode-joint | parallel            | joint, size b·2f+p             |
+//! | torchdiffeq    | naive (joint sem.)  | joint, size b·2f+p             |
+//! | TorchDyn       | joint               | joint, size b·2f+p             |
+//!
+//! The headline effect: the per-instance backward is more than an order
+//! of magnitude slower than the joint backward because the adjoint state
+//! carries the parameter block per instance.
+
+use crate::bench::{measure_loop_time, Summary, TimedSystem};
+use crate::nn::Rng64;
+use crate::prelude::*;
+use crate::problems::CnfDynamics;
+use crate::solver::{
+    adjoint_backward_joint, adjoint_backward_parallel, AdjointOptions,
+};
+use crate::tensor::BatchVec;
+
+#[derive(Debug, Clone)]
+pub struct CnfT5Config {
+    pub batch: usize,
+    pub d: usize,
+    pub hidden: Vec<usize>,
+    pub t1: f64,
+    pub reps: usize,
+    pub warmup: usize,
+}
+
+impl Default for CnfT5Config {
+    fn default() -> Self {
+        Self { batch: 16, d: 2, hidden: vec![32, 32], t1: 1.0, reps: 5, warmup: 1 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CnfT5Row {
+    pub variant: &'static str,
+    pub fw_loop_ms: Summary,
+    pub bw_loop_ms: Summary,
+    pub fw_steps: f64,
+    pub bw_steps: f64,
+    /// Augmented backward state size (the paper's b(f+p) vs bf+p point).
+    pub bw_state_size: usize,
+}
+
+pub fn cnf_table5(cfg: &CnfT5Config) -> Vec<CnfT5Row> {
+    let mut rng = Rng64::new(3);
+    let model = CnfDynamics::new(cfg.d, &cfg.hidden, &mut rng);
+    let p = crate::problems::OdeSystem::n_params(&model);
+    let f = cfg.d + 1;
+    let b = cfg.batch;
+
+    // Data: mixture samples.
+    let mut y0 = BatchVec::zeros(b, f);
+    for i in 0..b {
+        let c = if rng.uniform() < 0.5 { -1.5 } else { 1.5 };
+        y0.row_mut(i)[0] = c + 0.4 * rng.normal();
+        y0.row_mut(i)[1] = 0.4 * rng.normal();
+    }
+    let grid = TimeGrid::linspace_shared(b, 0.0, cfg.t1, 2);
+    let fw_opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_max_steps(10_000);
+    let adj_opts = AdjointOptions::new(
+        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(50_000),
+    );
+
+    // Shared forward solve to get y1 + seed.
+    let sol = solve_ivp_parallel(&model, &y0, &grid, &fw_opts);
+    assert!(sol.all_success());
+    let mut y1 = BatchVec::zeros(b, f);
+    let mut dl = BatchVec::zeros(b, f);
+    for i in 0..b {
+        y1.row_mut(i).copy_from_slice(sol.y_final(i));
+        let row = dl.row_mut(i);
+        for d in 0..cfg.d {
+            row[d] = sol.y_final(i)[d] / b as f64;
+        }
+        row[cfg.d] = 1.0 / b as f64;
+    }
+
+    let timed = TimedSystem::new(&model);
+    let t0s = vec![0.0; b];
+    let t1s = vec![cfg.t1; b];
+
+    // Forward measurements per engine.
+    let fw = |kind: &str| -> (Summary, f64) {
+        let mut loops = Vec::new();
+        let mut steps = 0u64;
+        for rep in 0..cfg.warmup + cfg.reps {
+            let m = measure_loop_time(&timed, || match kind {
+                "parallel" => {
+                    let s = solve_ivp_parallel(&timed, &y0, &grid, &fw_opts);
+                    s.max_steps()
+                }
+                "joint" => {
+                    let s = solve_ivp_joint(&timed, &y0, &grid, &fw_opts);
+                    s.stats[0].n_steps
+                }
+                _ => {
+                    let s = solve_ivp_naive(&timed, &y0, &grid, &fw_opts);
+                    s.stats[0].n_steps
+                }
+            });
+            if rep >= cfg.warmup {
+                loops.push(m.loop_time_ms);
+                steps = m.steps;
+            }
+        }
+        (Summary::from_samples(&loops), steps as f64)
+    };
+
+    // Backward measurements per adjoint variant.
+    let bw = |joint: bool| -> (Summary, f64) {
+        let mut loops = Vec::new();
+        let mut steps = 0f64;
+        for rep in 0..cfg.warmup + cfg.reps {
+            let m = measure_loop_time(&timed, || {
+                if joint {
+                    let r = adjoint_backward_joint(&timed, &y1, &dl, 0.0, cfg.t1, &adj_opts);
+                    r.stats.iter().map(|s| s.n_steps).sum()
+                } else {
+                    let r =
+                        adjoint_backward_parallel(&timed, &y1, &dl, &t0s, &t1s, &adj_opts);
+                    r.stats.iter().map(|s| s.n_steps).max().unwrap_or(0)
+                }
+            });
+            if rep >= cfg.warmup {
+                loops.push(m.loop_time_ms);
+                steps = m.steps as f64;
+            }
+        }
+        (Summary::from_samples(&loops), steps)
+    };
+
+    let (fw_par, fw_par_steps) = fw("parallel");
+    let (fw_joint, fw_joint_steps) = fw("joint");
+    let (fw_naive, fw_naive_steps) = fw("naive");
+    let (bw_inst, bw_inst_steps) = bw(false);
+    let (bw_joint, bw_joint_steps) = bw(true);
+
+    vec![
+        CnfT5Row {
+            variant: "torchode (parallel fw, per-instance bw)",
+            fw_loop_ms: fw_par.clone(),
+            bw_loop_ms: bw_inst,
+            fw_steps: fw_par_steps,
+            bw_steps: bw_inst_steps,
+            bw_state_size: b * (2 * f + p),
+        },
+        CnfT5Row {
+            variant: "torchode-joint (parallel fw, joint bw)",
+            fw_loop_ms: fw_par,
+            bw_loop_ms: bw_joint.clone(),
+            fw_steps: fw_par_steps,
+            bw_steps: bw_joint_steps,
+            bw_state_size: b * 2 * f + p,
+        },
+        CnfT5Row {
+            variant: "torchdiffeq-like (naive fw, joint bw)",
+            fw_loop_ms: fw_naive,
+            bw_loop_ms: bw_joint.clone(),
+            fw_steps: fw_naive_steps,
+            bw_steps: bw_joint_steps,
+            bw_state_size: b * 2 * f + p,
+        },
+        CnfT5Row {
+            variant: "TorchDyn-like (joint fw, joint bw)",
+            fw_loop_ms: fw_joint,
+            bw_loop_ms: bw_joint,
+            fw_steps: fw_joint_steps,
+            bw_steps: bw_joint_steps,
+            bw_state_size: b * 2 * f + p,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnf_table5_smoke() {
+        let cfg = CnfT5Config {
+            batch: 4,
+            d: 2,
+            hidden: vec![8],
+            t1: 0.5,
+            reps: 1,
+            warmup: 0,
+        };
+        let rows = cnf_table5(&cfg);
+        assert_eq!(rows.len(), 4);
+        // The Table 5 headline: per-instance backward total time exceeds
+        // the joint backward (state size b(2f+p) vs b·2f+p).
+        let per_inst_total = rows[0].bw_loop_ms.mean * rows[0].bw_steps;
+        let joint_total = rows[1].bw_loop_ms.mean * rows[1].bw_steps;
+        assert!(
+            per_inst_total > joint_total,
+            "per-instance {per_inst_total} !> joint {joint_total}"
+        );
+        assert!(rows[0].bw_state_size > rows[1].bw_state_size);
+    }
+}

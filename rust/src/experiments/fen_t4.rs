@@ -1,0 +1,208 @@
+//! Table 4: the FEN benchmark — loop time, total/model time per step,
+//! steps and MAE for a learned graph-ODE on a mesh.
+//!
+//! Paper setup (App. A): FEN trained on the Black Sea dataset, batch 8,
+//! 10 evaluation points, dopri5, forward pass only. Our stand-in trains a
+//! graph network on a synthetic advection–diffusion field first (identical
+//! code path; see DESIGN.md §3 substitutions) and then measures the
+//! forward pass per engine.
+
+use crate::bench::{measure_loop_time, Summary, TimedSystem};
+use crate::nn::{Adam, Parameterized, Rng64};
+use crate::prelude::*;
+use crate::problems::{FenDynamics, Mesh};
+use crate::solver::backprop::{rk_backward, rk_forward_tape};
+
+#[derive(Debug, Clone)]
+pub struct FenT4Config {
+    pub batch: usize,
+    pub n_nodes: usize,
+    pub n_eval: usize,
+    pub hidden: usize,
+    pub train_steps: usize,
+    pub reps: usize,
+    pub warmup: usize,
+}
+
+impl Default for FenT4Config {
+    fn default() -> Self {
+        Self {
+            batch: 8,
+            n_nodes: 24,
+            n_eval: 10,
+            hidden: 32,
+            train_steps: 120,
+            reps: 8,
+            warmup: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FenT4Row {
+    pub engine: &'static str,
+    /// (total − model) / steps, ms — the paper's headline loop time.
+    pub loop_time_ms: Summary,
+    /// total / steps, ms.
+    pub total_per_step_ms: Summary,
+    /// model / steps, ms.
+    pub model_per_step_ms: Summary,
+    pub steps: Summary,
+    pub mae: f64,
+}
+
+/// Train the stand-in model and measure the Table-4 rows.
+pub fn fen_table4(cfg: &FenT4Config) -> Vec<FenT4Row> {
+    let mut rng = Rng64::new(5);
+    let mesh = Mesh::random_geometric(cfg.n_nodes, 0.35, &mut rng);
+    let teacher = FenDynamics::teacher(&mesh, 1, 0.8, 0.3);
+    let dim = cfg.n_nodes;
+    let horizon = 1.0;
+
+    let make_fields = |rng: &mut Rng64, n: usize| -> BatchVec {
+        BatchVec::from_rows(
+            &(0..n)
+                .map(|_| {
+                    let (cx, cy) = (rng.uniform(), rng.uniform());
+                    mesh.positions
+                        .iter()
+                        .map(|p| {
+                            let d2 = (p[0] - cx).powi(2) + (p[1] - cy).powi(2);
+                            2.0 * (-4.0 * d2).exp() + 0.3 * rng.normal()
+                        })
+                        .collect()
+                })
+                .collect::<Vec<_>>(),
+        )
+    };
+
+    // --- data + quick training (discretize-then-optimize) -------------------
+    let y0_train = make_fields(&mut rng, cfg.batch);
+    let y0_test = make_fields(&mut rng, cfg.batch);
+    let grid = TimeGrid::linspace_shared(cfg.batch, 0.0, horizon, cfg.n_eval);
+    let opts_ref = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+    let truth_train = solve_ivp_parallel(&teacher, &y0_train, &grid, &opts_ref);
+    let truth_test = solve_ivp_parallel(&teacher, &y0_test, &grid, &opts_ref);
+
+    let mut model = FenDynamics::new(mesh.clone(), 1, cfg.hidden, &mut rng);
+    let n_params = Parameterized::n_params(&model);
+    let mut params = vec![0.0; n_params];
+    model.params(&mut params);
+    let mut opt = Adam::new(n_params, 3e-3);
+    let n_rk = 12;
+    let dt = horizon / n_rk as f64;
+    for _ in 0..cfg.train_steps {
+        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, Method::Rk4);
+        let yf = tape.y_final();
+        let mut seed = BatchVec::zeros(cfg.batch, dim);
+        for i in 0..cfg.batch {
+            let target = truth_train.y(i, cfg.n_eval - 1);
+            for d in 0..dim {
+                seed.row_mut(i)[d] =
+                    2.0 * (yf.row(i)[d] - target[d]) / (cfg.batch * dim) as f64;
+            }
+        }
+        let (_, grad) = rk_backward(&model, &tape, &seed);
+        opt.step(&mut params, &grad);
+        model.set_params(&params);
+    }
+
+    // --- measurement ----------------------------------------------------------
+    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let timed = TimedSystem::new(&model);
+
+    let mae_of = |sol: &Solution| -> f64 {
+        let mut mae = 0.0;
+        let mut n = 0.0;
+        for i in 0..cfg.batch {
+            for e in 0..cfg.n_eval {
+                for d in 0..dim {
+                    mae += (sol.y(i, e)[d] - truth_test.y(i, e)[d]).abs();
+                    n += 1.0;
+                }
+            }
+        }
+        mae / n
+    };
+
+    let mut rows = Vec::new();
+    let mut run_engine = |engine: &'static str,
+                          f: &mut dyn FnMut(&TimedSystem<'_>) -> (u64, f64)| {
+        let mut loops = Vec::new();
+        let mut totals = Vec::new();
+        let mut models = Vec::new();
+        let mut steps = Vec::new();
+        let mut mae = 0.0;
+        for rep in 0..cfg.warmup + cfg.reps {
+            let mut got_steps = 0;
+            let m = measure_loop_time(&timed, || {
+                let (s, m) = f(&timed);
+                got_steps = s;
+                mae = m;
+                s
+            });
+            if rep >= cfg.warmup {
+                loops.push(m.loop_time_ms);
+                totals.push(m.total_ms / got_steps as f64);
+                models.push(m.model_ms / got_steps as f64);
+                steps.push(got_steps as f64);
+            }
+        }
+        rows.push(FenT4Row {
+            engine,
+            loop_time_ms: Summary::from_samples(&loops),
+            total_per_step_ms: Summary::from_samples(&totals),
+            model_per_step_ms: Summary::from_samples(&models),
+            steps: Summary::from_samples(&steps),
+            mae,
+        });
+    };
+
+    run_engine("naive (torchdiffeq-like)", &mut |sys| {
+        let sol = solve_ivp_naive(sys, &y0_test, &grid, &opts);
+        assert!(sol.all_success());
+        (sol.stats[0].n_steps, mae_of(&sol))
+    });
+    run_engine("joint (TorchDyn-like)", &mut |sys| {
+        let sol = solve_ivp_joint(sys, &y0_test, &grid, &opts);
+        assert!(sol.all_success());
+        (sol.stats[0].n_steps, mae_of(&sol))
+    });
+    run_engine("parallel (torchode)", &mut |sys| {
+        let sol = solve_ivp_parallel(sys, &y0_test, &grid, &opts);
+        assert!(sol.all_success());
+        (sol.max_steps(), mae_of(&sol))
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fen_table4_smoke() {
+        let cfg = FenT4Config {
+            batch: 2,
+            n_nodes: 8,
+            n_eval: 5,
+            hidden: 8,
+            train_steps: 5,
+            reps: 1,
+            warmup: 0,
+        };
+        let rows = fen_table4(&cfg);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.loop_time_ms.mean >= 0.0);
+            assert!(r.model_per_step_ms.mean > 0.0);
+            assert!(r.mae.is_finite());
+            assert!(r.steps.mean > 0.0);
+        }
+        // MAE identical problem => all engines close.
+        let maes: Vec<f64> = rows.iter().map(|r| r.mae).collect();
+        for w in maes.windows(2) {
+            assert!((w[0] - w[1]).abs() < 0.1, "{maes:?}");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! The paper-reproduction harness: one function per table/figure of the
+//! evaluation section. Shared by `rode tables` and `cargo bench`.
+//!
+//! Engine naming maps to the paper's columns (DESIGN.md §3):
+//!
+//! | paper column  | rode engine                                    |
+//! |---------------|------------------------------------------------|
+//! | torchdiffeq   | `naive` (joint semantics, per-op implementation)|
+//! | TorchDyn      | `joint` (joint semantics, fused implementation) |
+//! | torchode      | `parallel` (per-instance state, fused)          |
+//! | torchode-JIT  | `aot` (whole loop compiled via PJRT)            |
+//!
+//! Absolute times differ from the paper (CPU PJRT vs a GTX 1080 Ti); the
+//! reproduction target is the *shape*: who wins, by what factor, where the
+//! crossovers are.
+
+mod cnf_t5;
+mod fen_t4;
+mod pid_fig2;
+mod vdp_t3;
+
+pub use cnf_t5::{cnf_table5, CnfT5Config, CnfT5Row};
+pub use fen_t4::{fen_table4, FenT4Config, FenT4Row};
+pub use pid_fig2::{pid_fig2, PidFig2Config, PidFig2Point};
+pub use vdp_t3::{fused_launches_per_step, sec41_steps, vdp_table3, Sec41Point, VdpT3Config, VdpT3Row, SIM_LAUNCH_MS};
+
+use crate::bench::Summary;
+
+/// A generic measured row: label + per-metric summaries.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub metrics: Vec<(String, Summary)>,
+}
+
+/// Render rows as a markdown table (one column per metric).
+pub fn rows_to_markdown(title: &str, rows: &[Row]) -> String {
+    if rows.is_empty() {
+        return format!("### {title}\n\n(no data)\n");
+    }
+    let cols: Vec<&str> = rows[0].metrics.iter().map(|(n, _)| n.as_str()).collect();
+    let body: Vec<(String, Vec<String>)> = rows
+        .iter()
+        .map(|r| {
+            (
+                r.label.clone(),
+                r.metrics.iter().map(|(_, s)| s.format_ms()).collect(),
+            )
+        })
+        .collect();
+    crate::bench::markdown_table(title, &cols, &body)
+}

@@ -1,0 +1,90 @@
+//! Figure 2 / Appendix C: PID vs integral controller step counts over the
+//! Van der Pol damping sweep.
+
+use crate::prelude::*;
+use crate::problems::VdP;
+
+#[derive(Debug, Clone)]
+pub struct PidFig2Config {
+    pub mus: Vec<f64>,
+    pub tol: f64,
+    /// (label, pcoeff, icoeff, dcoeff) sets; defaults from diffrax docs.
+    pub pid_sets: Vec<(String, f64, f64, f64)>,
+}
+
+impl Default for PidFig2Config {
+    fn default() -> Self {
+        Self {
+            mus: (0..=25).map(|k| 2.0 * k as f64).collect(),
+            tol: 1e-5,
+            pid_sets: vec![
+                ("0.4/0.3/0".into(), 0.4, 0.3, 0.0),
+                ("0.3/0.3/0".into(), 0.3, 0.3, 0.0),
+                ("0.2/0.4/0".into(), 0.2, 0.4, 0.0),
+                ("H211PI".into(), 1.0 / 6.0, 1.0 / 6.0, 0.0),
+                ("H312PID".into(), 1.0 / 18.0, 1.0 / 9.0, 1.0 / 18.0),
+            ],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PidFig2Point {
+    pub mu: f64,
+    pub integral_steps: u64,
+    /// Steps per PID set, aligned with `cfg.pid_sets`.
+    pub pid_steps: Vec<u64>,
+}
+
+fn steps_for(mu: f64, tol: f64, controller: Controller) -> u64 {
+    let sys = VdP::uniform(1, mu);
+    let y0 = crate::tensor::BatchVec::from_rows(&[vec![2.0, 0.0]]);
+    let t1 = VdP::approx_period(mu.max(0.1));
+    let grid = TimeGrid::linspace_shared(1, 0.0, t1, 100);
+    let opts = SolveOptions::new(Method::Dopri5)
+        .with_tols(tol, tol)
+        .with_controller(controller)
+        .with_max_steps(1_000_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success(), "mu={mu}");
+    sol.stats[0].n_steps
+}
+
+pub fn pid_fig2(cfg: &PidFig2Config) -> Vec<PidFig2Point> {
+    cfg.mus
+        .iter()
+        .map(|&mu| PidFig2Point {
+            mu,
+            integral_steps: steps_for(mu, cfg.tol, Controller::integral()),
+            pid_steps: cfg
+                .pid_sets
+                .iter()
+                .map(|&(_, p, i, d)| steps_for(mu, cfg.tol, Controller::pid(p, i, d)))
+                .collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_tradeoff_shape() {
+        let cfg = PidFig2Config {
+            mus: vec![5.0, 40.0],
+            tol: 1e-5,
+            pid_sets: vec![("0.2/0.4/0".into(), 0.2, 0.4, 0.0)],
+        };
+        let pts = pid_fig2(&cfg);
+        assert_eq!(pts.len(), 2);
+        // At high stiffness the PID controller saves steps (App. C: 3–5%).
+        let hi = &pts[1];
+        assert!(
+            (hi.pid_steps[0] as f64) < hi.integral_steps as f64 * 1.02,
+            "PID should not be much worse at high mu"
+        );
+        // Step counts grow with stiffness.
+        assert!(pts[1].integral_steps > pts[0].integral_steps);
+    }
+}

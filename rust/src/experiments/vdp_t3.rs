@@ -1,0 +1,240 @@
+//! Table 2 (VdP column) / Table 3: loop time on a batch of Van der Pol
+//! problems, and the §4.1 step-count blow-up.
+//!
+//! Paper setup (App. A): batch of 256 VdP problems, one cycle, μ = 2,
+//! atol = rtol = 1e-5, 200 evenly spaced evaluation points, dopri5.
+//! "Because evaluating the dynamics is so cheap in this case ... the loop
+//! time in Table 3 mostly measures how fast the solver can drive the GPU"
+//! — model time is *included* for this benchmark, as in the paper.
+
+use crate::bench::{time_repeats, Summary};
+use crate::prelude::*;
+use crate::problems::VdP;
+use crate::runtime::Runtime;
+
+/// Configuration mirroring the paper's VdP benchmark.
+#[derive(Debug, Clone)]
+pub struct VdpT3Config {
+    pub batch: usize,
+    pub mu: f64,
+    pub n_eval: usize,
+    pub tol: f64,
+    pub reps: usize,
+    pub warmup: usize,
+    /// Artifact directory for the AOT row; `None` skips it.
+    pub artifacts: Option<String>,
+}
+
+impl Default for VdpT3Config {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            mu: 2.0,
+            n_eval: 200,
+            tol: 1e-5,
+            reps: 10,
+            warmup: 3,
+            artifacts: Some("artifacts".to_string()),
+        }
+    }
+}
+
+/// One engine row of Table 3.
+#[derive(Debug, Clone)]
+pub struct VdpT3Row {
+    pub engine: &'static str,
+    /// Per-step solver+model time, ms (the paper's Table 3 "loop time").
+    pub loop_time_ms: Summary,
+    /// Total solve wall time, ms.
+    pub total_ms: Summary,
+    pub steps: u64,
+    /// Device dispatches ("kernel launches") per solver step: measured for
+    /// the naive engine, analytic for the fused loops, amortized for AOT
+    /// (one launch per *solve*). Drives the simulated GPU column.
+    pub launches_per_step: f64,
+}
+
+/// Per-launch overhead for the simulated-GPU loop-time column, in ms. The
+/// paper's testbed (GTX 1080 Ti + Python dispatch) pays 10–40 µs per
+/// launched kernel; 20 µs is the model's midpoint (EXPERIMENTS.md §T3).
+pub const SIM_LAUNCH_MS: f64 = 0.02;
+
+/// Analytic dispatch count per step of the fused native loops: one per
+/// stage eval + one per stage accumulation + combine/err/norm + dense
+/// output (2) + state commit. `extra` adds the per-instance bookkeeping
+/// passes of the parallel loop.
+pub fn fused_launches_per_step(stages: usize, extra: f64) -> f64 {
+    2.0 * (stages as f64 - 1.0) + 6.0 + extra
+}
+
+fn phase_y0(batch: usize) -> BatchVec {
+    let mut rng = crate::nn::Rng64::new(2024);
+    BatchVec::from_rows(
+        &(0..batch)
+            .map(|_| vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)])
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Run the Table 3 benchmark. Returns one row per engine.
+pub fn vdp_table3(cfg: &VdpT3Config) -> Vec<VdpT3Row> {
+    let sys = VdP::uniform(cfg.batch, cfg.mu);
+    let y0 = phase_y0(cfg.batch);
+    let t1 = VdP::approx_period(cfg.mu);
+    let grid = TimeGrid::linspace_shared(cfg.batch, 0.0, t1, cfg.n_eval);
+    let opts = SolveOptions::new(Method::Dopri5)
+        .with_tols(cfg.tol, cfg.tol)
+        .with_max_steps(1_000_000);
+
+    let mut rows = Vec::new();
+    let mut measure = |engine: &'static str,
+                       launches: &mut dyn FnMut(u64) -> f64,
+                       f: &mut dyn FnMut() -> u64| {
+        let mut steps = 0;
+        let samples = time_repeats(cfg.warmup, cfg.reps, || {
+            steps = f();
+        });
+        let per_step: Vec<f64> = samples.iter().map(|ms| ms / steps as f64).collect();
+        rows.push(VdpT3Row {
+            engine,
+            loop_time_ms: Summary::from_samples(&per_step),
+            total_ms: Summary::from_samples(&samples),
+            steps,
+            launches_per_step: launches(steps),
+        });
+    };
+
+    let stages = Method::Dopri5.tableau().stages;
+    measure(
+        "naive (torchdiffeq-like)",
+        &mut |steps| crate::solver::naive::last_op_count() as f64 / steps as f64,
+        &mut || {
+            let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success());
+            sol.stats[0].n_steps
+        },
+    );
+    measure(
+        "joint (TorchDyn-like)",
+        &mut |_| fused_launches_per_step(stages, 0.0),
+        &mut || {
+            let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success());
+            sol.stats[0].n_steps
+        },
+    );
+    measure(
+        "parallel (torchode)",
+        &mut |_| fused_launches_per_step(stages, 2.0),
+        &mut || {
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success());
+            // Loop iterations = the max over instances (each iteration
+            // advances every unfinished instance at once, like one GPU step).
+            sol.max_steps()
+        },
+    );
+
+    if let Some(dir) = &cfg.artifacts {
+        if let Ok(mut rt) = Runtime::open(dir) {
+            if let Some(name) = rt.pick_vdp_solve(cfg.batch, cfg.n_eval) {
+                let art = rt.load(&name).expect("compile artifact");
+                let (b_art, e_art) = (art.meta.batch, art.meta.n_eval);
+                let mut y0f = vec![0f32; b_art * 2];
+                for i in 0..b_art {
+                    let r = y0.row(i % cfg.batch);
+                    y0f[i * 2] = r[0] as f32;
+                    y0f[i * 2 + 1] = r[1] as f32;
+                }
+                let muf = vec![cfg.mu as f32; b_art];
+                let tef: Vec<f32> = (0..b_art)
+                    .flat_map(|_| {
+                        (0..e_art).map(move |k| (t1 * k as f64 / (e_art - 1) as f64) as f32)
+                    })
+                    .collect();
+                measure(
+                    "aot (torchode-JIT)",
+                    // One device dispatch for the whole solve.
+                    &mut |steps| 1.0 / steps as f64,
+                    &mut || {
+                        let out = art.run_f32(&[&y0f, &muf, &tef]).expect("run artifact");
+                        out[1].iter().fold(0f32, |m, &s| m.max(s)) as u64
+                    },
+                );
+            }
+        }
+    }
+
+    rows
+}
+
+/// §4.1: steps(joint)/steps(parallel) over batch size.
+#[derive(Debug, Clone)]
+pub struct Sec41Point {
+    pub batch: usize,
+    pub joint_steps: u64,
+    pub parallel_max_steps: u64,
+    pub ratio: f64,
+}
+
+pub fn sec41_steps(mu: f64, tol: f64, batches: &[usize]) -> Vec<Sec41Point> {
+    let t1 = VdP::approx_period(mu);
+    batches
+        .iter()
+        .map(|&batch| {
+            let sys = VdP::uniform(batch, mu);
+            let y0 = phase_y0(batch);
+            let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
+            let opts = SolveOptions::new(Method::Dopri5)
+                .with_tols(tol, tol)
+                .with_max_steps(1_000_000);
+            let joint = solve_ivp_joint(&sys, &y0, &grid, &opts);
+            let par = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            assert!(joint.all_success() && par.all_success());
+            let joint_steps = joint.stats[0].n_steps;
+            let parallel_max_steps = par.stats.iter().map(|s| s.n_steps).max().unwrap();
+            Sec41Point {
+                batch,
+                joint_steps,
+                parallel_max_steps,
+                ratio: joint_steps as f64 / parallel_max_steps as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_small_run_has_expected_shape() {
+        let cfg = VdpT3Config {
+            batch: 8,
+            n_eval: 20,
+            reps: 2,
+            warmup: 0,
+            artifacts: None,
+            ..Default::default()
+        };
+        let rows = vdp_table3(&cfg);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.loop_time_ms.mean > 0.0);
+            assert!(r.steps > 0);
+        }
+        // The implementation-efficiency claim: fused joint beats the
+        // naive per-op loop per step.
+        let naive = rows[0].loop_time_ms.mean;
+        let joint = rows[1].loop_time_ms.mean;
+        assert!(joint < naive, "joint {joint} !< naive {naive}");
+    }
+
+    #[test]
+    fn sec41_ratio_grows() {
+        let pts = sec41_steps(25.0, 1e-5, &[1, 8]);
+        assert_eq!(pts.len(), 2);
+        assert!(pts[1].ratio > pts[0].ratio);
+        assert!((pts[0].ratio - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,51 @@
+//! # rode — a parallel ODE solver stack
+//!
+//! `rode` is a reproduction of *torchode: A Parallel ODE Solver for PyTorch*
+//! (Lienen & Günnemann, 2022) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3** (this crate): a Rust coordinator — request router, dynamic
+//!   batcher and solver engines — plus a complete native batched
+//!   Runge–Kutta core that tracks *per-instance* solver state (step size,
+//!   accept/reject, status, dense-output progress), the paper's central
+//!   contribution.
+//! - **Layer 2**: the same batched solver loop written in JAX
+//!   (`python/compile/solver.py`), AOT-lowered to HLO text and executed
+//!   from Rust via PJRT ([`runtime`]). This plays the role of torchode's
+//!   JIT-compiled loop.
+//! - **Layer 1**: Pallas kernels for the loop's hot spots (fused RK stage
+//!   combination, tolerance-scaled error norm, Horner dense-output
+//!   evaluation), lowered into the same HLO module.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rode::prelude::*;
+//!
+//! // A batch of 4 independent Van der Pol oscillators.
+//! let sys = rode::problems::VdP::new(vec![2.0; 4]);
+//! let y0 = BatchVec::broadcast(&[1.0, 0.0], 4);
+//! let t_eval = TimeGrid::linspace_shared(4, 0.0, 6.0, 20);
+//! let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+//! let sol = solve_ivp_parallel(&sys, &y0, &t_eval, &opts);
+//! assert!(sol.all_success());
+//! ```
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod nn;
+pub mod problems;
+pub mod prop;
+pub mod runtime;
+pub mod solver;
+pub mod tensor;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::problems::OdeSystem;
+    pub use crate::solver::{
+        solve_ivp_joint, solve_ivp_naive, solve_ivp_parallel, Controller, Method, SolveOptions,
+        Solution, Status, TimeGrid,
+    };
+    pub use crate::tensor::BatchVec;
+}

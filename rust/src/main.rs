@@ -1,0 +1,213 @@
+//! `rode` — CLI for the solver service and the paper-reproduction harness.
+//!
+//! Subcommands:
+//!   solve            one-shot native solve demo (prints Listing-1 style output)
+//!   serve            run the coordinator on a synthetic workload, print metrics
+//!   check-artifacts  compile + smoke-run every AOT artifact
+//!   tables <which>   regenerate the paper's tables/figures (see EXPERIMENTS.md)
+//!
+//! Flag parsing is hand-rolled (`--key value`); the vendored crate set has
+//! no clap.
+
+use anyhow::{anyhow, Result};
+use rode::coordinator::{Coordinator, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest};
+use rode::prelude::*;
+use rode::runtime::Runtime;
+use std::collections::HashMap;
+use std::time::Duration;
+
+mod tables;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
+    let batch = flag_usize(flags, "batch", 5);
+    let mu = flag_f64(flags, "mu", 10.0);
+    let t1 = flag_f64(flags, "t1", 10.0);
+    let n_eval = flag_usize(flags, "points", 50);
+    let method = flags
+        .get("method")
+        .map(|m| Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}")))
+        .transpose()?
+        .unwrap_or(Method::Tsit5);
+
+    // Mirrors the paper's Listing 1.
+    let sys = rode::problems::VdP::uniform(batch, mu);
+    let mut rng = rode::nn::Rng64::new(0);
+    let y0 = BatchVec::from_rows(
+        &(0..batch)
+            .map(|_| vec![rng.normal(), rng.normal()])
+            .collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
+    let opts = SolveOptions::new(method).with_tols(1e-6, 1e-5);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+
+    println!("status: {:?}", sol.status);
+    println!(
+        "n_f_evals:     {:?}",
+        sol.stats.iter().map(|s| s.n_f_evals).collect::<Vec<_>>()
+    );
+    println!(
+        "n_steps:       {:?}",
+        sol.stats.iter().map(|s| s.n_steps).collect::<Vec<_>>()
+    );
+    println!(
+        "n_accepted:    {:?}",
+        sol.stats.iter().map(|s| s.n_accepted).collect::<Vec<_>>()
+    );
+    println!(
+        "n_initialized: {:?}",
+        sol.stats.iter().map(|s| s.n_initialized).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    // Config file first (--config rode.toml), CLI flags override.
+    let mut cfg = match flags.get("config") {
+        Some(path) => rode::config::RodeConfig::load(path)?,
+        None => rode::config::RodeConfig::default(),
+    };
+    let n_requests = flag_usize(flags, "requests", 200);
+    cfg.max_batch = flag_usize(flags, "max-batch", cfg.max_batch);
+    if let Some(w) = flags.get("max-wait-ms").and_then(|v| v.parse::<f64>().ok()) {
+        cfg.max_wait = Duration::from_secs_f64(w / 1e3);
+    }
+    let engine_kind = flags.get("engine").cloned().unwrap_or(cfg.engine.clone());
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let solve_opts = rode::solver::SolveOptions::new(cfg.method).with_tols(cfg.atol, cfg.rtol);
+
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
+        move || -> Box<dyn rode::coordinator::SolveEngine> {
+            match engine_kind.as_str() {
+                "aot" => Box::new(
+                    rode::coordinator::AotEngine::open(&artifacts_dir)
+                        .expect("open AOT engine (run `make artifacts`)"),
+                ),
+                "joint" => Box::new(rode::coordinator::JointEngine { opts: solve_opts }),
+                _ => Box::new(NativeEngine::new(solve_opts)),
+            }
+        },
+    );
+
+    let mut rng = rode::nn::Rng64::new(7);
+    let mut rxs = Vec::new();
+    for _ in 0..n_requests {
+        let mu = rng.range(0.5, 15.0);
+        let n_eval = [10, 20, 50][rng.below(3)];
+        let t1 = rng.range(2.0, 10.0);
+        rxs.push(coord.submit(SolveRequest {
+            id: 0,
+            problem: ProblemSpec::Vdp { mu },
+            y0: vec![rng.normal(), rng.normal()],
+            t_eval: (0..n_eval)
+                .map(|k| t1 * k as f64 / (n_eval - 1) as f64)
+                .collect(),
+        }));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if resp.status == Status::Success {
+            ok += 1;
+        }
+    }
+    println!("{}/{} requests succeeded", ok, n_requests);
+    println!("{}", coord.metrics().summary());
+    Ok(())
+}
+
+fn cmd_check_artifacts(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    let names = rt.artifact_names();
+    for name in names {
+        let art = rt.load(&name)?;
+        // Build synthetic inputs matching the manifest and run once.
+        let mut bufs: Vec<Vec<f32>> = art
+            .meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let n: usize = spec.shape.iter().product();
+                match i {
+                    0 => vec![1.0; n],                              // y0 / state
+                    1 => vec![2.0; n],                              // mu / dt
+                    _ => (0..n).map(|k| 0.01 * k as f32).collect(), // grids
+                }
+            })
+            .collect();
+        // For solve artifacts the last input is the eval grid — make it
+        // ascending per row.
+        if art.meta.kind == "solve" {
+            let grid_idx = bufs.len() - 1;
+            let e = art.meta.n_eval;
+            let b = art.meta.batch;
+            bufs[grid_idx] = (0..b)
+                .flat_map(|_| (0..e).map(|k| k as f32 * 0.05))
+                .collect();
+        }
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let out = art.run_f32(&refs)?;
+        let finite = out[0].iter().all(|v| v.is_finite());
+        println!(
+            "  {name}: ok ({} outputs, first has {} values, finite={finite})",
+            out.len(),
+            out[0].len()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "solve" => cmd_solve(&flags),
+        "serve" => cmd_serve(&flags),
+        "check-artifacts" => cmd_check_artifacts(&flags),
+        "tables" => tables::run(&args[1.min(args.len())..], &flags),
+        _ => {
+            println!(
+                "rode — parallel ODE solver stack (torchode reproduction)\n\n\
+                 usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
+                 \n  solve            one-shot native solve (Listing 1 demo)\
+                 \n  serve            coordinator + synthetic workload\
+                 \n  check-artifacts  compile & smoke-run AOT artifacts\
+                 \n  tables <which>   regenerate paper tables/figures\
+                 \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"
+            );
+            Ok(())
+        }
+    }
+}

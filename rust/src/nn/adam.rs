@@ -1,0 +1,73 @@
+//! Adam optimizer over a flat parameter vector.
+
+/// Standard Adam (Kingma & Ba) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, lr: f64) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// One update step: `params -= lr * m̂ / (sqrt(v̂) + eps)`.
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = Σ (x - target)², gradient 2(x - target).
+        let target = [3.0, -1.0, 0.5];
+        let mut x = vec![0.0; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f64> = x.iter().zip(target.iter()).map(|(x, t)| 2.0 * (x - t)).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ti) in x.iter().zip(target.iter()) {
+            assert!((xi - ti).abs() < 1e-3, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // With bias correction, |Δx| of the first step ≈ lr regardless of
+        // gradient scale.
+        let mut x = vec![0.0];
+        let mut opt = Adam::new(1, 0.1);
+        opt.step(&mut x, &[1234.5]);
+        assert!((x[0].abs() - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,171 @@
+//! A dense layer with manual forward/backward passes.
+
+use super::{Parameterized, Rng64};
+
+/// `y = W x + b` with `W: (n_out, n_in)` row-major.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl Linear {
+    /// Glorot-uniform initialization.
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Rng64) -> Self {
+        let lim = (6.0 / (n_in + n_out) as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| rng.range(-lim, lim)).collect();
+        Self { w, b: vec![0.0; n_out], n_in, n_out }
+    }
+
+    pub fn zeros(n_in: usize, n_out: usize) -> Self {
+        Self { w: vec![0.0; n_in * n_out], b: vec![0.0; n_out], n_in, n_out }
+    }
+
+    /// `out = W x + b`.
+    #[inline]
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(out.len(), self.n_out);
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            for i in 0..self.n_in {
+                acc += row[i] * x[i];
+            }
+            out[o] = acc;
+        }
+    }
+
+    /// Given upstream gradient `dy` and the input `x` of the forward pass:
+    /// `dx += Wᵀ dy`, `dw += dy xᵀ`, `db += dy`.
+    pub fn backward(&self, x: &[f64], dy: &[f64], dx: &mut [f64], dw: &mut [f64], db: &mut [f64]) {
+        debug_assert_eq!(dw.len(), self.w.len());
+        debug_assert_eq!(db.len(), self.b.len());
+        for o in 0..self.n_out {
+            let g = dy[o];
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let drow = &mut dw[o * self.n_in..(o + 1) * self.n_in];
+            for i in 0..self.n_in {
+                dx[i] += row[i] * g;
+                drow[i] += g * x[i];
+            }
+            db[o] += g;
+        }
+    }
+
+    /// Input gradient only: `dx += Wᵀ dy` (adjoint hot path when parameter
+    /// gradients are not needed).
+    pub fn vjp_input(&self, dy: &[f64], dx: &mut [f64]) {
+        for o in 0..self.n_out {
+            let g = dy[o];
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            for i in 0..self.n_in {
+                dx[i] += row[i] * g;
+            }
+        }
+    }
+}
+
+impl Parameterized for Linear {
+    fn n_params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn params(&self, out: &mut [f64]) {
+        out[..self.w.len()].copy_from_slice(&self.w);
+        out[self.w.len()..].copy_from_slice(&self.b);
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        let nw = self.w.len();
+        self.w.copy_from_slice(&p[..nw]);
+        self.b.copy_from_slice(&p[nw..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> Linear {
+        let mut l = Linear::zeros(2, 3);
+        l.w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        l.b = vec![0.1, 0.2, 0.3];
+        l
+    }
+
+    #[test]
+    fn forward_matvec() {
+        let l = layer();
+        let mut out = [0.0; 3];
+        l.forward(&[1.0, -1.0], &mut out);
+        let expect = [1.0 - 2.0 + 0.1, 3.0 - 4.0 + 0.2, 5.0 - 6.0 + 0.3];
+        for (o, e) in out.iter().zip(expect) {
+            assert!((o - e).abs() < 1e-12, "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let l = layer();
+        let x = [0.7, -0.3];
+        let dy = [1.0, -2.0, 0.5];
+        let mut dx = [0.0; 2];
+        let mut dw = vec![0.0; 6];
+        let mut db = vec![0.0; 3];
+        l.backward(&x, &dy, &mut dx, &mut dw, &mut db);
+
+        let h = 1e-6;
+        // d(dy·y)/dx via FD
+        for i in 0..2 {
+            let mut xp = x;
+            xp[i] += h;
+            let mut xm = x;
+            xm[i] -= h;
+            let (mut yp, mut ym) = ([0.0; 3], [0.0; 3]);
+            l.forward(&xp, &mut yp);
+            l.forward(&xm, &mut ym);
+            let fd: f64 = (0..3).map(|o| dy[o] * (yp[o] - ym[o]) / (2.0 * h)).sum();
+            assert!((dx[i] - fd).abs() < 1e-8);
+        }
+        // dw, db
+        assert!((dw[0] - dy[0] * x[0]).abs() < 1e-12);
+        assert!((dw[5] - dy[2] * x[1]).abs() < 1e-12);
+        assert_eq!(db, dy.to_vec());
+    }
+
+    #[test]
+    fn vjp_input_equals_backward_dx() {
+        let l = layer();
+        let dy = [0.3, 0.9, -1.1];
+        let mut dx1 = [0.0; 2];
+        l.vjp_input(&dy, &mut dx1);
+        let mut dx2 = [0.0; 2];
+        let mut dw = vec![0.0; 6];
+        let mut db = vec![0.0; 3];
+        l.backward(&[0.0, 0.0], &dy, &mut dx2, &mut dw, &mut db);
+        assert_eq!(dx1, dx2);
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut l = layer();
+        let mut p = vec![0.0; l.n_params()];
+        l.params(&mut p);
+        assert_eq!(p.len(), 9);
+        p[0] = 42.0;
+        l.set_params(&p);
+        assert_eq!(l.w[0], 42.0);
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = Rng64::new(1);
+        let l = Linear::new(10, 10, &mut rng);
+        let lim = (6.0 / 20.0f64).sqrt();
+        assert!(l.w.iter().all(|w| w.abs() <= lim));
+        assert!(l.b.iter().all(|&b| b == 0.0));
+    }
+}

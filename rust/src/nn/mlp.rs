@@ -1,0 +1,274 @@
+//! A tanh MLP with cached forward and full manual backprop — the learned
+//! dynamics of the CNF and FEN stand-ins.
+
+use super::{Linear, Parameterized, Rng64};
+
+/// Multi-layer perceptron: linear → tanh → … → linear (no final activation).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+}
+
+/// Per-evaluation scratch holding post-activation values of every layer
+/// input (needed by backprop). Reusable across calls of the same shape.
+#[derive(Debug, Clone, Default)]
+pub struct MlpCache {
+    /// `acts[0]` is the network input, `acts[l]` the input of layer `l`.
+    pub acts: Vec<Vec<f64>>,
+    /// Pre-activation outputs of each hidden layer (for tanh').
+    pub pre: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// `sizes = [in, h1, ..., out]`.
+    pub fn new(sizes: &[usize], rng: &mut Rng64) -> Self {
+        assert!(sizes.len() >= 2);
+        let layers = sizes.windows(2).map(|w| Linear::new(w[0], w[1], rng)).collect();
+        Self { layers }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    fn ensure_cache(&self, c: &mut MlpCache) {
+        if c.acts.len() != self.layers.len() + 1 {
+            c.acts = self
+                .layers
+                .iter()
+                .map(|l| vec![0.0; l.n_in])
+                .chain(std::iter::once(vec![0.0; self.n_out()]))
+                .collect();
+            c.pre = self.layers.iter().map(|l| vec![0.0; l.n_out]).collect();
+        }
+    }
+
+    /// Forward pass, caching activations for a later [`Mlp::backward`].
+    pub fn forward_cached(&self, x: &[f64], c: &mut MlpCache, out: &mut [f64]) {
+        self.ensure_cache(c);
+        c.acts[0].copy_from_slice(x);
+        let n = self.layers.len();
+        for (l, layer) in self.layers.iter().enumerate() {
+            // Split borrow: read acts[l], write pre[l].
+            let (input, pre) = (&c.acts[l], &mut c.pre[l]);
+            layer.forward(input, pre);
+            if l + 1 < n {
+                for (a, p) in c.acts[l + 1].iter_mut().zip(c.pre[l].iter()) {
+                    *a = p.tanh();
+                }
+            } else {
+                c.acts[n].copy_from_slice(&c.pre[l]);
+            }
+        }
+        out.copy_from_slice(&c.acts[n]);
+    }
+
+    /// Forward without a cache (allocation-free if `scratch` is reused).
+    pub fn forward(&self, x: &[f64], c: &mut MlpCache, out: &mut [f64]) {
+        self.forward_cached(x, c, out);
+    }
+
+    /// Backprop from upstream gradient `dy`. Accumulates parameter
+    /// gradients into `dparams` (flat layout matching [`Parameterized`])
+    /// and the input gradient into `dx`. Requires the cache of the
+    /// matching forward pass.
+    pub fn backward(&self, c: &MlpCache, dy: &[f64], dx: &mut [f64], dparams: &mut [f64]) {
+        let n = self.layers.len();
+        let mut grad = dy.to_vec();
+        let mut offsets = Vec::with_capacity(n);
+        let mut off = 0;
+        for l in &self.layers {
+            offsets.push(off);
+            off += l.n_params();
+        }
+        debug_assert_eq!(dparams.len(), off);
+        for l in (0..n).rev() {
+            let layer = &self.layers[l];
+            let (dw, db) = {
+                let seg = &mut dparams[offsets[l]..offsets[l] + layer.n_params()];
+                let (dw, db) = seg.split_at_mut(layer.w.len());
+                (dw as *mut [f64], db as *mut [f64])
+            };
+            let mut dinput = vec![0.0; layer.n_in];
+            // SAFETY: dw/db are disjoint sub-slices of dparams.
+            unsafe {
+                layer.backward(&c.acts[l], &grad, &mut dinput, &mut *dw, &mut *db);
+            }
+            if l > 0 {
+                // Through the tanh of the previous layer: g *= 1 - tanh².
+                for (g, a) in dinput.iter_mut().zip(c.acts[l].iter()) {
+                    *g *= 1.0 - a * a; // acts[l] already holds tanh(pre)
+                }
+            }
+            grad = dinput;
+        }
+        for (o, g) in dx.iter_mut().zip(grad.iter()) {
+            *o += g;
+        }
+    }
+
+    /// Input-only VJP (no parameter gradients).
+    pub fn vjp_input(&self, c: &MlpCache, dy: &[f64], dx: &mut [f64]) {
+        let n = self.layers.len();
+        let mut grad = dy.to_vec();
+        for l in (0..n).rev() {
+            let layer = &self.layers[l];
+            let mut dinput = vec![0.0; layer.n_in];
+            layer.vjp_input(&grad, &mut dinput);
+            if l > 0 {
+                for (g, a) in dinput.iter_mut().zip(c.acts[l].iter()) {
+                    *g *= 1.0 - a * a;
+                }
+            }
+            grad = dinput;
+        }
+        for (o, g) in dx.iter_mut().zip(grad.iter()) {
+            *o += g;
+        }
+    }
+}
+
+impl Parameterized for Mlp {
+    fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    fn params(&self, out: &mut [f64]) {
+        let mut off = 0;
+        for l in &self.layers {
+            l.params(&mut out[off..off + l.n_params()]);
+            off += l.n_params();
+        }
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        let mut off = 0;
+        for l in &mut self.layers {
+            let n = l.n_params();
+            l.set_params(&p[off..off + n]);
+            off += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp() -> Mlp {
+        let mut rng = Rng64::new(5);
+        Mlp::new(&[3, 8, 2], &mut rng)
+    }
+
+    #[test]
+    fn shapes() {
+        let m = mlp();
+        assert_eq!(m.n_in(), 3);
+        assert_eq!(m.n_out(), 2);
+        assert_eq!(m.n_params(), 3 * 8 + 8 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let m = mlp();
+        let mut c = MlpCache::default();
+        let (mut a, mut b) = ([0.0; 2], [0.0; 2]);
+        m.forward_cached(&[0.1, -0.2, 0.3], &mut c, &mut a);
+        m.forward_cached(&[0.1, -0.2, 0.3], &mut c, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn backward_input_grad_matches_fd() {
+        let m = mlp();
+        let x = [0.4, -0.1, 0.9];
+        let dy = [1.0, -0.7];
+        let mut c = MlpCache::default();
+        let mut out = [0.0; 2];
+        m.forward_cached(&x, &mut c, &mut out);
+        let mut dx = [0.0; 3];
+        let mut dp = vec![0.0; m.n_params()];
+        m.backward(&c, &dy, &mut dx, &mut dp);
+
+        let h = 1e-6;
+        for i in 0..3 {
+            let (mut xp, mut xm) = (x, x);
+            xp[i] += h;
+            xm[i] -= h;
+            let (mut yp, mut ym) = ([0.0; 2], [0.0; 2]);
+            m.forward_cached(&xp, &mut c, &mut yp);
+            m.forward_cached(&xm, &mut c, &mut ym);
+            let fd: f64 = (0..2).map(|o| dy[o] * (yp[o] - ym[o]) / (2.0 * h)).sum();
+            assert!((dx[i] - fd).abs() < 1e-6, "dx[{i}]={} fd={fd}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn backward_param_grad_matches_fd() {
+        let mut m = mlp();
+        let x = [0.4, -0.1, 0.9];
+        let dy = [0.3, 1.1];
+        let mut c = MlpCache::default();
+        let mut out = [0.0; 2];
+        m.forward_cached(&x, &mut c, &mut out);
+        let mut dx = [0.0; 3];
+        let mut dp = vec![0.0; m.n_params()];
+        m.backward(&c, &dy, &mut dx, &mut dp);
+
+        let mut p = vec![0.0; m.n_params()];
+        m.params(&mut p);
+        let h = 1e-6;
+        // Spot-check a spread of parameter indices.
+        for &j in &[0usize, 5, 11, 26, 33, m.n_params() - 1] {
+            let orig = p[j];
+            p[j] = orig + h;
+            m.set_params(&p);
+            let mut yp = [0.0; 2];
+            m.forward_cached(&x, &mut c, &mut yp);
+            p[j] = orig - h;
+            m.set_params(&p);
+            let mut ym = [0.0; 2];
+            m.forward_cached(&x, &mut c, &mut ym);
+            p[j] = orig;
+            m.set_params(&p);
+            let fd: f64 = (0..2).map(|o| dy[o] * (yp[o] - ym[o]) / (2.0 * h)).sum();
+            assert!((dp[j] - fd).abs() < 1e-6, "dp[{j}]={} fd={fd}", dp[j]);
+        }
+    }
+
+    #[test]
+    fn vjp_input_agrees_with_backward() {
+        let m = mlp();
+        let x = [-0.2, 0.8, 0.1];
+        let dy = [0.5, 0.5];
+        let mut c = MlpCache::default();
+        let mut out = [0.0; 2];
+        m.forward_cached(&x, &mut c, &mut out);
+        let mut dx1 = [0.0; 3];
+        m.vjp_input(&c, &dy, &mut dx1);
+        let mut dx2 = [0.0; 3];
+        let mut dp = vec![0.0; m.n_params()];
+        m.backward(&c, &dy, &mut dx2, &mut dp);
+        for i in 0..3 {
+            assert!((dx1[i] - dx2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut m = mlp();
+        let mut p = vec![0.0; m.n_params()];
+        m.params(&mut p);
+        let p2: Vec<f64> = p.iter().map(|x| x * 2.0).collect();
+        m.set_params(&p2);
+        let mut p3 = vec![0.0; m.n_params()];
+        m.params(&mut p3);
+        for (a, b) in p2.iter().zip(p3.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+}

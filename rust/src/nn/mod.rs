@@ -1,0 +1,30 @@
+//! Minimal neural-network substrate.
+//!
+//! The paper's learning benchmarks (FEN, CNF) need *trainable* dynamics.
+//! rode cannot depend on PyTorch — in this reproduction rode *is* the
+//! framework — so this module provides exactly what the experiments need:
+//! dense layers with manual backprop, a tanh MLP, a flat-parameter view
+//! (required by the adjoint equation, whose state appends one variable per
+//! model parameter), and an Adam optimizer.
+
+mod adam;
+mod graph;
+mod linear;
+mod mlp;
+mod rng;
+
+pub use adam::Adam;
+pub use graph::GraphAgg;
+pub use linear::Linear;
+pub use mlp::{Mlp, MlpCache};
+pub use rng::Rng64;
+
+/// Anything with a flat parameter vector (used by the adjoint solver and
+/// the optimizer).
+pub trait Parameterized {
+    fn n_params(&self) -> usize;
+    /// Copy parameters into `out` (len = `n_params`).
+    fn params(&self, out: &mut [f64]);
+    /// Overwrite parameters from `p`.
+    fn set_params(&mut self, p: &[f64]);
+}

@@ -1,0 +1,305 @@
+//! FEN stand-in: learned graph dynamics on a mesh.
+//!
+//! The paper's second benchmark trains a Finite Element Network (Lienen &
+//! Günnemann, 2022) on the Black Sea dataset. That dataset is not
+//! available here, so per DESIGN.md we substitute a *synthetic
+//! advection–diffusion field on a random geometric graph* — the identical
+//! code path: a graph neural network is the ODE dynamics, the whole mesh
+//! field is one problem instance, training is discretize-then-optimize
+//! (backprop through the solver), and the metric is MAE.
+//!
+//! One instance's state is the flattened `(n_nodes, n_feat)` field, so
+//! `dim = n_nodes * n_feat`; a batch of instances is a batch of
+//! trajectories of the same mesh.
+
+use super::OdeSystem;
+use crate::nn::{GraphAgg, Mlp, MlpCache, Parameterized, Rng64};
+use std::cell::RefCell;
+
+/// A random geometric mesh with Gaussian edge weights.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub positions: Vec<[f64; 2]>,
+    pub graph: GraphAgg,
+}
+
+impl Mesh {
+    /// Sample `n` nodes uniformly in the unit square and connect pairs
+    /// within `radius`, weighting by exp(−(dist/radius)²).
+    pub fn random_geometric(n: usize, radius: f64, rng: &mut Rng64) -> Self {
+        let positions: Vec<[f64; 2]> = (0..n).map(|_| [rng.uniform(), rng.uniform()]).collect();
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = positions[i][0] - positions[j][0];
+                let dy = positions[i][1] - positions[j][1];
+                let d2 = dx * dx + dy * dy;
+                if d2 <= radius * radius {
+                    edges.push((i, j, (-d2 / (radius * radius)).exp()));
+                }
+            }
+        }
+        // Guarantee connectivity of isolated nodes to their nearest
+        // neighbor so the diffusion operator acts everywhere.
+        let mut deg = vec![0usize; n];
+        for &(i, j, _) in &edges {
+            deg[i] += 1;
+            deg[j] += 1;
+        }
+        for i in 0..n {
+            if deg[i] == 0 {
+                let mut best = usize::MAX;
+                let mut bd = f64::INFINITY;
+                for j in 0..n {
+                    if j != i {
+                        let dx = positions[i][0] - positions[j][0];
+                        let dy = positions[i][1] - positions[j][1];
+                        let d2 = dx * dx + dy * dy;
+                        if d2 < bd {
+                            bd = d2;
+                            best = j;
+                        }
+                    }
+                }
+                edges.push((i.min(best), i.max(best), 0.1));
+                deg[i] += 1;
+                deg[best] += 1;
+            }
+        }
+        let graph = GraphAgg::from_edges(n, &edges);
+        Self { positions, graph }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.positions.len()
+    }
+}
+
+/// Learned graph dynamics: per node `i`,
+/// `dx_i = MLP([x_i, Σ_j w_ij (x_j − x_i)])`, with the MLP shared across
+/// nodes and batch instances.
+pub struct FenDynamics {
+    pub mesh: Mesh,
+    pub mlp: Mlp,
+    pub n_feat: usize,
+    // Reusable scratch (RefCell: `f_inst` takes &self).
+    scratch: RefCell<FenScratch>,
+}
+
+#[derive(Default)]
+struct FenScratch {
+    agg: Vec<f64>,
+    cache: MlpCache,
+    inp: Vec<f64>,
+}
+
+impl FenDynamics {
+    /// `hidden` sizes the MLP: `[2*n_feat, hidden, n_feat]`.
+    pub fn new(mesh: Mesh, n_feat: usize, hidden: usize, rng: &mut Rng64) -> Self {
+        let mlp = Mlp::new(&[2 * n_feat, hidden, n_feat], rng);
+        Self { mesh, mlp, n_feat, scratch: RefCell::new(FenScratch::default()) }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.mesh.n_nodes()
+    }
+
+    /// The "teacher" dynamics used to generate synthetic training data:
+    /// diffusion plus a cubic saturation, `dx = κ·agg(x) − γ·x³`.
+    pub fn teacher(mesh: &Mesh, n_feat: usize, kappa: f64, gamma: f64) -> TeacherDynamics {
+        TeacherDynamics { graph: mesh.graph.clone(), n_feat, kappa, gamma, agg: RefCell::new(Vec::new()) }
+    }
+}
+
+impl OdeSystem for FenDynamics {
+    fn dim(&self) -> usize {
+        self.mesh.n_nodes() * self.n_feat
+    }
+
+    fn n_params(&self) -> usize {
+        self.mlp.n_params()
+    }
+
+    fn f_inst(&self, _inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let nf = self.n_feat;
+        let mut s = self.scratch.borrow_mut();
+        let FenScratch { agg, cache, inp } = &mut *s;
+        agg.resize(y.len(), 0.0);
+        inp.resize(2 * nf, 0.0);
+        self.mesh.graph.aggregate(y, nf, agg);
+        for i in 0..self.mesh.n_nodes() {
+            inp[..nf].copy_from_slice(&y[i * nf..(i + 1) * nf]);
+            inp[nf..].copy_from_slice(&agg[i * nf..(i + 1) * nf]);
+            self.mlp.forward_cached(inp, cache, &mut dy[i * nf..(i + 1) * nf]);
+        }
+    }
+
+    fn vjp_inst(
+        &self,
+        _inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        out_p: &mut [f64],
+    ) {
+        let nf = self.n_feat;
+        let n = self.mesh.n_nodes();
+        let mut s = self.scratch.borrow_mut();
+        let FenScratch { agg, cache, inp } = &mut *s;
+        agg.resize(y.len(), 0.0);
+        inp.resize(2 * nf, 0.0);
+        self.mesh.graph.aggregate(y, nf, agg);
+        out_y.iter_mut().for_each(|v| *v = 0.0);
+        // dL/d agg accumulated across nodes, then pushed through agg's VJP.
+        let mut dagg = vec![0.0; y.len()];
+        let mut out = vec![0.0; nf];
+        let mut dinp = vec![0.0; 2 * nf];
+        for i in 0..n {
+            inp[..nf].copy_from_slice(&y[i * nf..(i + 1) * nf]);
+            inp[nf..].copy_from_slice(&agg[i * nf..(i + 1) * nf]);
+            self.mlp.forward_cached(inp, cache, &mut out);
+            dinp.iter_mut().for_each(|v| *v = 0.0);
+            self.mlp.backward(cache, &a[i * nf..(i + 1) * nf], &mut dinp, out_p);
+            for f in 0..nf {
+                out_y[i * nf + f] += dinp[f];
+                dagg[i * nf + f] += dinp[nf + f];
+            }
+        }
+        self.mesh.graph.aggregate_vjp(&dagg, nf, out_y);
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+impl Parameterized for FenDynamics {
+    fn n_params(&self) -> usize {
+        self.mlp.n_params()
+    }
+
+    fn params(&self, out: &mut [f64]) {
+        self.mlp.params(out)
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        self.mlp.set_params(p)
+    }
+}
+
+/// Analytic teacher dynamics for synthetic data generation (see
+/// [`FenDynamics::teacher`]).
+pub struct TeacherDynamics {
+    graph: GraphAgg,
+    n_feat: usize,
+    kappa: f64,
+    gamma: f64,
+    agg: RefCell<Vec<f64>>,
+}
+
+impl OdeSystem for TeacherDynamics {
+    fn dim(&self) -> usize {
+        self.graph.n_nodes * self.n_feat
+    }
+
+    fn f_inst(&self, _inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let mut agg = self.agg.borrow_mut();
+        agg.resize(y.len(), 0.0);
+        self.graph.aggregate(y, self.n_feat, &mut agg);
+        for i in 0..y.len() {
+            dy[i] = self.kappa * agg[i] - self.gamma * y[i] * y[i] * y[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_vjp_y;
+
+    fn small_fen() -> FenDynamics {
+        let mut rng = Rng64::new(11);
+        let mesh = Mesh::random_geometric(6, 0.6, &mut rng);
+        FenDynamics::new(mesh, 2, 8, &mut rng)
+    }
+
+    #[test]
+    fn dims() {
+        let f = small_fen();
+        assert_eq!(f.dim(), 12);
+        assert!(crate::problems::OdeSystem::n_params(&f) > 0);
+    }
+
+    #[test]
+    fn mesh_every_node_connected() {
+        let mut rng = Rng64::new(3);
+        let mesh = Mesh::random_geometric(20, 0.15, &mut rng);
+        // aggregate of a linear-in-position field must be nonzero somewhere
+        // and every node must participate in at least one edge (checked by
+        // construction in random_geometric).
+        assert!(mesh.graph.n_edges_directed() >= 2 * 20 - 2);
+    }
+
+    #[test]
+    fn dynamics_deterministic() {
+        let f = small_fen();
+        let y: Vec<f64> = (0..12).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut d1 = vec![0.0; 12];
+        let mut d2 = vec![0.0; 12];
+        f.f_inst(0, 0.0, &y, &mut d1);
+        f.f_inst(0, 0.0, &y, &mut d2);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        let f = small_fen();
+        let y: Vec<f64> = (0..12).map(|i| (i as f64 * 0.61).cos() * 0.5).collect();
+        let a: Vec<f64> = (0..12).map(|i| ((i * 7 % 5) as f64 - 2.0) * 0.3).collect();
+        check_vjp_y(&f, 0, 0.0, &y, &a);
+    }
+
+    #[test]
+    fn vjp_params_matches_fd() {
+        let mut f = small_fen();
+        let y: Vec<f64> = (0..12).map(|i| (i as f64 * 0.21).sin()).collect();
+        let a: Vec<f64> = (0..12).map(|i| (i as f64 * 0.13).cos()).collect();
+        let np = crate::problems::OdeSystem::n_params(&f);
+        let mut out_y = vec![0.0; 12];
+        let mut out_p = vec![0.0; np];
+        f.vjp_inst(0, 0.0, &y, &a, &mut out_y, &mut out_p);
+        let mut p = vec![0.0; np];
+        f.params(&mut p);
+        let h = 1e-6;
+        for &j in &[0usize, np / 3, np / 2, np - 1] {
+            let orig = p[j];
+            p[j] = orig + h;
+            f.set_params(&p);
+            let mut fp = vec![0.0; 12];
+            f.f_inst(0, 0.0, &y, &mut fp);
+            p[j] = orig - h;
+            f.set_params(&p);
+            let mut fm = vec![0.0; 12];
+            f.f_inst(0, 0.0, &y, &mut fm);
+            p[j] = orig;
+            f.set_params(&p);
+            let fd: f64 = (0..12).map(|i| a[i] * (fp[i] - fm[i]) / (2.0 * h)).sum();
+            assert!((out_p[j] - fd).abs() < 1e-5, "dp[{j}]={} fd={fd}", out_p[j]);
+        }
+    }
+
+    #[test]
+    fn teacher_decays_large_values() {
+        let mut rng = Rng64::new(5);
+        let mesh = Mesh::random_geometric(5, 0.7, &mut rng);
+        let t = FenDynamics::teacher(&mesh, 1, 0.1, 0.5);
+        let y = vec![10.0; 5];
+        let mut dy = vec![0.0; 5];
+        t.f_inst(0, 0.0, &y, &mut dy);
+        // Constant field: aggregation is 0, cubic damping dominates.
+        for v in dy {
+            assert!(v < 0.0);
+        }
+    }
+}

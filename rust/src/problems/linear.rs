@@ -1,0 +1,206 @@
+//! Linear systems with closed-form solutions — the correctness anchors of
+//! the test suite (convergence-order measurements need exact references).
+
+use super::OdeSystem;
+
+/// `dy/dt = -λ y` per component, per instance: `y(t) = y0 · exp(-λ t)`.
+#[derive(Debug, Clone)]
+pub struct ExponentialDecay {
+    lambda: Vec<f64>,
+    dim: usize,
+}
+
+impl ExponentialDecay {
+    pub fn new(lambda: Vec<f64>, dim: usize) -> Self {
+        assert!(!lambda.is_empty());
+        Self { lambda, dim }
+    }
+
+    pub fn lambda(&self, inst: usize) -> f64 {
+        self.lambda[inst.min(self.lambda.len() - 1)]
+    }
+
+    /// Exact solution at time `t` from `y0` at `t0`.
+    pub fn exact(&self, inst: usize, t0: f64, y0: &[f64], t: f64, out: &mut [f64]) {
+        let s = (-self.lambda(inst) * (t - t0)).exp();
+        for i in 0..y0.len() {
+            out[i] = y0[i] * s;
+        }
+    }
+}
+
+impl OdeSystem for ExponentialDecay {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_params(&self) -> usize {
+        1
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let l = self.lambda(inst);
+        for i in 0..y.len() {
+            dy[i] = -l * y[i];
+        }
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        out_p: &mut [f64],
+    ) {
+        let l = self.lambda(inst);
+        for i in 0..y.len() {
+            out_y[i] = -l * a[i];
+        }
+        out_p[0] = -(0..y.len()).map(|i| a[i] * y[i]).sum::<f64>();
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+/// A dense constant-coefficient linear system `dy/dt = A y` (shared `A`
+/// across the batch). Used for stiffness-controlled workloads: the
+/// eigenvalues of `A` set the stiffness directly.
+#[derive(Debug, Clone)]
+pub struct LinearSystem {
+    /// Row-major `dim × dim`.
+    a: Vec<f64>,
+    dim: usize,
+}
+
+impl LinearSystem {
+    pub fn new(a: Vec<f64>, dim: usize) -> Self {
+        assert_eq!(a.len(), dim * dim);
+        Self { a, dim }
+    }
+
+    /// 2-D rotation + decay: eigenvalues `-decay ± i·omega`. Closed form
+    /// solution is a damped rotation — handy for tests.
+    pub fn damped_rotation(decay: f64, omega: f64) -> Self {
+        Self::new(vec![-decay, -omega, omega, -decay], 2)
+    }
+
+    /// Exact solution for [`LinearSystem::damped_rotation`] systems.
+    pub fn damped_rotation_exact(decay: f64, omega: f64, y0: &[f64], t: f64, out: &mut [f64]) {
+        let s = (-decay * t).exp();
+        let (c, sn) = ((omega * t).cos(), (omega * t).sin());
+        out[0] = s * (c * y0[0] - sn * y0[1]);
+        out[1] = s * (sn * y0[0] + c * y0[1]);
+    }
+}
+
+impl OdeSystem for LinearSystem {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn f_inst(&self, _inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        for r in 0..self.dim {
+            let mut acc = 0.0;
+            let row = &self.a[r * self.dim..(r + 1) * self.dim];
+            for c in 0..self.dim {
+                acc += row[c] * y[c];
+            }
+            dy[r] = acc;
+        }
+    }
+
+    fn vjp_inst(
+        &self,
+        _inst: usize,
+        _t: f64,
+        _y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        // aᵀ A: column sums weighted by a.
+        for c in 0..self.dim {
+            let mut acc = 0.0;
+            for r in 0..self.dim {
+                acc += a[r] * self.a[r * self.dim + c];
+            }
+            out_y[c] = acc;
+        }
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_vjp_y;
+
+    #[test]
+    fn decay_exact() {
+        let sys = ExponentialDecay::new(vec![2.0], 3);
+        let y0 = [1.0, -1.0, 0.5];
+        let mut out = [0.0; 3];
+        sys.exact(0, 0.0, &y0, 1.0, &mut out);
+        let e = (-2.0f64).exp();
+        for i in 0..3 {
+            assert!((out[i] - y0[i] * e).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn decay_dynamics() {
+        let sys = ExponentialDecay::new(vec![0.5, 4.0], 2);
+        let mut dy = [0.0; 2];
+        sys.f_inst(1, 0.0, &[2.0, -2.0], &mut dy);
+        assert_eq!(dy, [-8.0, 8.0]);
+    }
+
+    #[test]
+    fn rotation_matrix_layout() {
+        let sys = LinearSystem::damped_rotation(0.0, 1.0);
+        let mut dy = [0.0; 2];
+        // Pure rotation: d/dt (1, 0) = (0, 1)
+        sys.f_inst(0, 0.0, &[1.0, 0.0], &mut dy);
+        assert_eq!(dy, [0.0, 1.0]);
+    }
+
+    #[test]
+    fn rotation_exact_consistent_with_dynamics() {
+        // Numerically differentiate the exact solution, compare to f.
+        let (decay, omega) = (0.3, 2.0);
+        let sys = LinearSystem::damped_rotation(decay, omega);
+        let y0 = [1.0, 0.5];
+        let h = 1e-6;
+        let t = 0.7;
+        let (mut ya, mut yb, mut y) = ([0.0; 2], [0.0; 2], [0.0; 2]);
+        LinearSystem::damped_rotation_exact(decay, omega, &y0, t - h, &mut ya);
+        LinearSystem::damped_rotation_exact(decay, omega, &y0, t + h, &mut yb);
+        LinearSystem::damped_rotation_exact(decay, omega, &y0, t, &mut y);
+        let mut dy = [0.0; 2];
+        sys.f_inst(0, t, &y, &mut dy);
+        for i in 0..2 {
+            assert!(((yb[i] - ya[i]) / (2.0 * h) - dy[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjps_match_fd() {
+        check_vjp_y(&ExponentialDecay::new(vec![1.7], 3), 0, 0.0, &[1.0, 2.0, -0.5], &[0.3, -1.0, 0.8]);
+        check_vjp_y(
+            &LinearSystem::damped_rotation(0.4, 3.0),
+            0,
+            0.0,
+            &[0.9, -0.2],
+            &[1.1, 0.7],
+        );
+    }
+}

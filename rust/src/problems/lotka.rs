@@ -1,0 +1,103 @@
+//! Lotka–Volterra predator–prey dynamics — a classic nonstiff nonlinear
+//! benchmark with a conserved quantity we can test against.
+
+use super::OdeSystem;
+
+/// `dx/dt = αx − βxy`, `dy/dt = δxy − γy` with per-instance parameters.
+#[derive(Debug, Clone)]
+pub struct LotkaVolterra {
+    /// (α, β, δ, γ) per instance.
+    params: Vec<[f64; 4]>,
+}
+
+impl LotkaVolterra {
+    pub fn new(params: Vec<[f64; 4]>) -> Self {
+        assert!(!params.is_empty());
+        Self { params }
+    }
+
+    pub fn uniform(batch: usize, alpha: f64, beta: f64, delta: f64, gamma: f64) -> Self {
+        Self { params: vec![[alpha, beta, delta, gamma]; batch] }
+    }
+
+    fn p(&self, inst: usize) -> &[f64; 4] {
+        &self.params[inst.min(self.params.len() - 1)]
+    }
+
+    /// The conserved quantity `V = δx − γ ln x + βy − α ln y` (constant
+    /// along trajectories) — used as an invariant check in tests.
+    pub fn invariant(&self, inst: usize, y: &[f64]) -> f64 {
+        let [alpha, beta, delta, gamma] = *self.p(inst);
+        delta * y[0] - gamma * y[0].ln() + beta * y[1] - alpha * y[1].ln()
+    }
+}
+
+impl OdeSystem for LotkaVolterra {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let [alpha, beta, delta, gamma] = *self.p(inst);
+        dy[0] = alpha * y[0] - beta * y[0] * y[1];
+        dy[1] = delta * y[0] * y[1] - gamma * y[1];
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        let [alpha, beta, delta, gamma] = *self.p(inst);
+        out_y[0] = a[0] * (alpha - beta * y[1]) + a[1] * delta * y[1];
+        out_y[1] = a[0] * (-beta * y[0]) + a[1] * (delta * y[0] - gamma);
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_vjp_y;
+
+    #[test]
+    fn fixed_point_is_stationary() {
+        // Fixed point at (γ/δ, α/β).
+        let sys = LotkaVolterra::uniform(1, 1.1, 0.4, 0.1, 0.4);
+        let mut dy = [1.0; 2];
+        sys.f_inst(0, 0.0, &[4.0, 2.75], &mut dy);
+        assert!(dy[0].abs() < 1e-12 && dy[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn invariant_gradient_orthogonal_to_flow() {
+        // dV/dt = ∇V · f = 0 along trajectories.
+        let sys = LotkaVolterra::uniform(1, 1.1, 0.4, 0.1, 0.4);
+        let y = [3.0, 1.5];
+        let h = 1e-6;
+        let mut dy = [0.0; 2];
+        sys.f_inst(0, 0.0, &y, &mut dy);
+        let v0 = sys.invariant(0, &[y[0] - h * dy[0], y[1] - h * dy[1]]);
+        let v1 = sys.invariant(0, &[y[0] + h * dy[0], y[1] + h * dy[1]]);
+        assert!((v1 - v0).abs() / (2.0 * h) < 1e-6);
+    }
+
+    #[test]
+    fn vjp_matches_fd() {
+        check_vjp_y(
+            &LotkaVolterra::uniform(1, 1.1, 0.4, 0.1, 0.4),
+            0,
+            0.0,
+            &[2.0, 1.0],
+            &[0.7, -0.3],
+        );
+    }
+}

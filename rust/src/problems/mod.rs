@@ -1,0 +1,107 @@
+//! The ODE problem zoo: every dynamical system used by the paper's
+//! experiments (or our documented stand-ins for them).
+//!
+//! A system describes a *batch* of structurally identical ODEs that may
+//! differ in per-instance parameters (e.g. one damping μ per Van der Pol
+//! instance). The solver always evaluates the dynamics through
+//! [`OdeSystem::f_batch`] — one call per RK stage for the whole batch —
+//! mirroring how a learned model is evaluated on a GPU. Systems with a
+//! batched fast path (neural dynamics doing one matmul for all instances)
+//! override `f_batch`; everything else gets the row-loop default.
+
+mod cnf;
+mod fen;
+mod linear;
+mod lotka;
+mod oscillators;
+mod vdp;
+
+pub use cnf::CnfDynamics;
+pub use fen::{FenDynamics, Mesh};
+pub use linear::{ExponentialDecay, LinearSystem};
+pub use lotka::LotkaVolterra;
+pub use oscillators::{Brusselator, Pendulum};
+pub use vdp::VdP;
+
+use crate::tensor::BatchVec;
+
+/// A batch of independent ODEs `dy/dt = f(t, y)` with shared structure.
+///
+/// Not `Send + Sync` by design: systems may hold per-call scratch buffers
+/// (`RefCell`) for allocation-free evaluation. The coordinator gives each
+/// worker thread its own system instance.
+pub trait OdeSystem {
+    /// State dimension of a single instance.
+    fn dim(&self) -> usize;
+
+    /// Number of trainable parameters (0 for analytic systems).
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    /// Evaluate the dynamics of instance `inst` at time `t`.
+    fn f_inst(&self, inst: usize, t: f64, y: &[f64], dy: &mut [f64]);
+
+    /// Evaluate the whole batch, one time per instance. `active` masks the
+    /// rows that still need values; `None` means all rows. The default
+    /// loops over rows — systems with batched kernels should override.
+    fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        for i in 0..y.batch() {
+            if active.map_or(true, |m| m[i]) {
+                self.f_inst(i, t[i], y.row(i), dy.row_mut(i));
+            }
+        }
+    }
+
+    /// Vector-Jacobian products for the adjoint method:
+    /// `out_y = aᵀ ∂f/∂y` and `out_p = aᵀ ∂f/∂θ` at `(t, y)` for instance
+    /// `inst`. Required only for systems used with
+    /// [`crate::solver::adjoint`]; the default panics.
+    fn vjp_inst(
+        &self,
+        _inst: usize,
+        _t: f64,
+        _y: &[f64],
+        _a: &[f64],
+        _out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        unimplemented!("system does not provide VJPs (needed for the adjoint backward pass)")
+    }
+
+    /// Whether [`OdeSystem::vjp_inst`] is implemented.
+    fn has_vjp(&self) -> bool {
+        false
+    }
+}
+
+/// Finite-difference check utility shared by the VJP tests: compares
+/// `aᵀ ∂f/∂y` against central differences.
+#[cfg(test)]
+pub(crate) fn check_vjp_y(sys: &dyn OdeSystem, inst: usize, t: f64, y: &[f64], a: &[f64]) {
+    let d = sys.dim();
+    let p = sys.n_params();
+    let mut out_y = vec![0.0; d];
+    let mut out_p = vec![0.0; p];
+    sys.vjp_inst(inst, t, y, a, &mut out_y, &mut out_p);
+    let h = 1e-6;
+    let mut fp = vec![0.0; d];
+    let mut fm = vec![0.0; d];
+    let mut yy = y.to_vec();
+    for j in 0..d {
+        yy[j] = y[j] + h;
+        sys.f_inst(inst, t, &yy, &mut fp);
+        yy[j] = y[j] - h;
+        sys.f_inst(inst, t, &yy, &mut fm);
+        yy[j] = y[j];
+        let mut fd = 0.0;
+        for i in 0..d {
+            fd += a[i] * (fp[i] - fm[i]) / (2.0 * h);
+        }
+        assert!(
+            (out_y[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+            "vjp_y[{j}] = {} but finite diff = {fd}",
+            out_y[j]
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Additional nonlinear test systems: the mathematical pendulum and the
+//! Brusselator (a chemical oscillator whose stiffness is tunable through
+//! its `b` parameter, complementing Van der Pol for controller studies).
+
+use super::OdeSystem;
+
+/// Mathematical pendulum `θ̈ = -(g/L) sin θ` in `y = (θ, θ̇)`.
+#[derive(Debug, Clone)]
+pub struct Pendulum {
+    g_over_l: Vec<f64>,
+}
+
+impl Pendulum {
+    pub fn new(g_over_l: Vec<f64>) -> Self {
+        assert!(!g_over_l.is_empty());
+        Self { g_over_l }
+    }
+
+    pub fn uniform(batch: usize, g_over_l: f64) -> Self {
+        Self { g_over_l: vec![g_over_l; batch] }
+    }
+
+    fn w2(&self, inst: usize) -> f64 {
+        self.g_over_l[inst.min(self.g_over_l.len() - 1)]
+    }
+
+    /// Total energy (conserved): `θ̇²/2 − ω² cos θ`.
+    pub fn energy(&self, inst: usize, y: &[f64]) -> f64 {
+        0.5 * y[1] * y[1] - self.w2(inst) * y[0].cos()
+    }
+}
+
+impl OdeSystem for Pendulum {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        dy[0] = y[1];
+        dy[1] = -self.w2(inst) * y[0].sin();
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        out_y[0] = -a[1] * self.w2(inst) * y[0].cos();
+        out_y[1] = a[0];
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+/// Brusselator: `ẋ = a + x²y − (b+1)x`, `ẏ = bx − x²y`. For `b > 1 + a²`
+/// the fixed point is unstable and a limit cycle appears; large `b` makes
+/// the cycle strongly relaxational (stiff in phases), like VdP at large μ.
+#[derive(Debug, Clone)]
+pub struct Brusselator {
+    ab: Vec<[f64; 2]>,
+}
+
+impl Brusselator {
+    pub fn new(ab: Vec<[f64; 2]>) -> Self {
+        assert!(!ab.is_empty());
+        Self { ab }
+    }
+
+    pub fn uniform(batch: usize, a: f64, b: f64) -> Self {
+        Self { ab: vec![[a, b]; batch] }
+    }
+
+    fn p(&self, inst: usize) -> [f64; 2] {
+        self.ab[inst.min(self.ab.len() - 1)]
+    }
+}
+
+impl OdeSystem for Brusselator {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let [a, b] = self.p(inst);
+        let (x, z) = (y[0], y[1]);
+        dy[0] = a + x * x * z - (b + 1.0) * x;
+        dy[1] = b * x - x * x * z;
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        _t: f64,
+        y: &[f64],
+        a_vec: &[f64],
+        out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        let [_a, b] = self.p(inst);
+        let (x, z) = (y[0], y[1]);
+        // J = [[2xz - (b+1), x²], [b - 2xz, -x²]]
+        out_y[0] = a_vec[0] * (2.0 * x * z - (b + 1.0)) + a_vec[1] * (b - 2.0 * x * z);
+        out_y[1] = a_vec[0] * x * x - a_vec[1] * x * x;
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_vjp_y;
+
+    #[test]
+    fn pendulum_small_angle_is_harmonic() {
+        let sys = Pendulum::uniform(1, 4.0);
+        let mut dy = [0.0; 2];
+        let th = 1e-8;
+        sys.f_inst(0, 0.0, &[th, 0.0], &mut dy);
+        assert!((dy[1] + 4.0 * th).abs() < 1e-18);
+    }
+
+    #[test]
+    fn brusselator_fixed_point() {
+        // Fixed point at (a, b/a).
+        let sys = Brusselator::uniform(1, 1.0, 3.0);
+        let mut dy = [0.0; 2];
+        sys.f_inst(0, 0.0, &[1.0, 3.0], &mut dy);
+        assert!(dy[0].abs() < 1e-12 && dy[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn vjps_match_fd() {
+        check_vjp_y(&Pendulum::uniform(1, 2.5), 0, 0.0, &[0.8, -0.4], &[1.0, 0.3]);
+        check_vjp_y(&Brusselator::uniform(1, 1.0, 3.0), 0, 0.0, &[1.2, 2.1], &[0.5, -0.7]);
+    }
+}

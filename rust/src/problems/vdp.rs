@@ -1,0 +1,161 @@
+//! Van der Pol's oscillator — the paper's main workload (Eq. 1):
+//! `ẍ = μ(1 − x²)ẋ − x`, written as a first-order system in
+//! `y = (x, ẋ)`.
+//!
+//! The damping μ is a *per-instance* parameter: varying μ across a batch is
+//! exactly the stress test of §4.1 (the stiffest oscillator dominates the
+//! shared step size of a jointly-batched solver).
+
+use super::OdeSystem;
+
+/// A batch of Van der Pol oscillators with per-instance damping μ.
+#[derive(Debug, Clone)]
+pub struct VdP {
+    mu: Vec<f64>,
+}
+
+impl VdP {
+    pub fn new(mu: Vec<f64>) -> Self {
+        assert!(!mu.is_empty());
+        Self { mu }
+    }
+
+    /// `batch` identical oscillators with a shared μ.
+    pub fn uniform(batch: usize, mu: f64) -> Self {
+        Self { mu: vec![mu; batch] }
+    }
+
+    pub fn mu(&self, inst: usize) -> f64 {
+        self.mu[inst.min(self.mu.len() - 1)]
+    }
+
+    /// Approximate period of the limit cycle. For μ ≫ 1 the relaxation
+    /// oscillation period grows like (3 − 2 ln 2)·μ; for small μ it
+    /// approaches 2π.
+    pub fn approx_period(mu: f64) -> f64 {
+        if mu < 1.5 {
+            2.0 * std::f64::consts::PI * (1.0 + mu * mu / 16.0)
+        } else {
+            (3.0 - 2.0 * (2.0f64).ln()) * mu + 2.0 * std::f64::consts::PI / mu.sqrt()
+        }
+    }
+}
+
+impl OdeSystem for VdP {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn n_params(&self) -> usize {
+        1 // μ, for adjoint-gradient tests
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let mu = self.mu(inst);
+        let (x, v) = (y[0], y[1]);
+        dy[0] = v;
+        dy[1] = mu * (1.0 - x * x) * v - x;
+    }
+
+    fn vjp_inst(
+        &self,
+        inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        out_p: &mut [f64],
+    ) {
+        let mu = self.mu(inst);
+        let (x, v) = (y[0], y[1]);
+        // J = [[0, 1], [-2μxv - 1, μ(1 - x²)]]; out_y = aᵀ J.
+        out_y[0] = a[1] * (-2.0 * mu * x * v - 1.0);
+        out_y[1] = a[0] + a[1] * mu * (1.0 - x * x);
+        // ∂f/∂μ = (0, (1 - x²)v)
+        out_p[0] = a[1] * (1.0 - x * x) * v;
+    }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_vjp_y;
+    use crate::tensor::BatchVec;
+
+    #[test]
+    fn dynamics_at_origin_shifted() {
+        let sys = VdP::uniform(1, 2.0);
+        let mut dy = [0.0; 2];
+        sys.f_inst(0, 0.0, &[1.0, 0.0], &mut dy);
+        // x=1 => (1-x²)=0 => ẍ = -x = -1
+        assert_eq!(dy, [0.0, -1.0]);
+    }
+
+    #[test]
+    fn per_instance_mu() {
+        let sys = VdP::new(vec![0.0, 10.0]);
+        let mut dy = [0.0; 2];
+        sys.f_inst(0, 0.0, &[0.5, 1.0], &mut dy);
+        let undamped = dy[1];
+        sys.f_inst(1, 0.0, &[0.5, 1.0], &mut dy);
+        assert!((dy[1] - (undamped + 10.0 * 0.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_eval_matches_rows() {
+        let sys = VdP::new(vec![1.0, 3.0, 5.0]);
+        let y = BatchVec::from_rows(&[vec![1.0, 2.0], vec![-0.5, 0.3], vec![0.0, 1.0]]);
+        let mut dy = BatchVec::zeros(3, 2);
+        sys.f_batch(&[0.0; 3], &y, &mut dy, None);
+        for i in 0..3 {
+            let mut expect = [0.0; 2];
+            sys.f_inst(i, 0.0, y.row(i), &mut expect);
+            assert_eq!(dy.row(i), expect);
+        }
+    }
+
+    #[test]
+    fn active_mask_skips_rows() {
+        let sys = VdP::uniform(2, 1.0);
+        let y = BatchVec::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let mut dy = BatchVec::zeros(2, 2);
+        sys.f_batch(&[0.0; 2], &y, &mut dy, Some(&[false, true]));
+        assert_eq!(dy.row(0), [0.0, 0.0]); // untouched
+        assert_ne!(dy.row(1), [0.0, 0.0]);
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        let sys = VdP::uniform(1, 2.5);
+        check_vjp_y(&sys, 0, 0.0, &[0.7, -1.2], &[1.0, 0.5]);
+        check_vjp_y(&sys, 0, 0.0, &[-1.5, 0.4], &[-0.3, 2.0]);
+    }
+
+    #[test]
+    fn vjp_mu_matches_finite_differences() {
+        let y = [0.7, -1.2];
+        let a = [0.4, 1.3];
+        let h = 1e-6;
+        let mut out_y = [0.0; 2];
+        let mut out_p = [0.0; 1];
+        VdP::uniform(1, 2.5).vjp_inst(0, 0.0, &y, &a, &mut out_y, &mut out_p);
+        let mut fp = [0.0; 2];
+        let mut fm = [0.0; 2];
+        VdP::uniform(1, 2.5 + h).f_inst(0, 0.0, &y, &mut fp);
+        VdP::uniform(1, 2.5 - h).f_inst(0, 0.0, &y, &mut fm);
+        let fd = a[0] * (fp[0] - fm[0]) / (2.0 * h) + a[1] * (fp[1] - fm[1]) / (2.0 * h);
+        assert!((out_p[0] - fd).abs() < 1e-5);
+    }
+
+    #[test]
+    fn period_limits() {
+        assert!((VdP::approx_period(0.0) - 2.0 * std::f64::consts::PI).abs() < 1e-9);
+        // Large-μ relaxation oscillation: period ≈ 1.614·μ
+        assert!((VdP::approx_period(25.0) / 25.0 - 1.614).abs() < 0.1);
+    }
+}

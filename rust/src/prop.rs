@@ -1,0 +1,79 @@
+//! Tiny property-based-testing helpers (proptest is not vendored in this
+//! offline environment). A property is checked over `n` seeded random
+//! cases; failures report the seed for replay.
+
+use crate::nn::Rng64;
+
+/// Run `prop` over `n` cases derived from `base_seed`. The closure
+/// receives a fresh deterministic RNG per case; panics are augmented with
+/// the failing case index so the case can be replayed.
+pub fn check<F: Fn(&mut Rng64)>(name: &str, n: usize, base_seed: u64, prop: F) {
+    for case in 0..n {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {e:?}");
+        }
+    }
+}
+
+/// Random f64 vector with entries in [lo, hi).
+pub fn vec_in(rng: &mut Rng64, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.range(lo, hi)).collect()
+}
+
+/// Random strictly ascending time grid of `n` points starting at `t0` with
+/// gaps in `(0, max_gap]`.
+pub fn ascending_times(rng: &mut Rng64, n: usize, t0: f64, max_gap: f64) -> Vec<f64> {
+    let mut t = t0;
+    let mut out = Vec::with_capacity(n);
+    out.push(t);
+    for _ in 1..n {
+        t += rng.range(1e-3, max_gap);
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("counts", 17, 1, |_| {
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, 2, |rng| {
+            assert!(rng.uniform() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn ascending_times_ascend() {
+        let mut rng = Rng64::new(5);
+        let t = ascending_times(&mut rng, 50, -3.0, 0.7);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t[0], -3.0);
+        for w in t.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn vec_in_bounds() {
+        let mut rng = Rng64::new(6);
+        let v = vec_in(&mut rng, 100, -2.0, 2.0);
+        assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+    }
+}

@@ -1,0 +1,145 @@
+//! `artifacts/manifest.json` — artifact metadata written by
+//! `python/compile/aot.py` and consumed here to build input literals.
+
+use super::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    /// "solve" (full loop) or "step" (single RK attempt).
+    pub kind: String,
+    /// "vdp", "mlp", ...
+    pub problem: String,
+    pub batch: usize,
+    pub n_eval: usize,
+    pub dim: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+fn io_spec(j: &Json, idx: usize) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("io spec missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or(&format!("arg{idx}"))
+            .to_string(),
+        shape,
+        dtype: j.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32").to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in obj {
+            let get_str =
+                |k: &str| meta.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+            let get_n = |k: &str| meta.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let parse_specs = |k: &str| -> Result<Vec<IoSpec>> {
+                meta.get(k)
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| io_spec(s, i))
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    file: get_str("file"),
+                    kind: get_str("kind"),
+                    problem: get_str("problem"),
+                    batch: get_n("batch"),
+                    n_eval: get_n("n_eval"),
+                    dim: if get_n("dim") > 0 { get_n("dim") } else { 2 },
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Self { artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "solve_vdp_b8_e20": {
+        "file": "solve_vdp_b8_e20.hlo.txt",
+        "inputs": [
+          {"shape": [8, 2], "dtype": "f32"},
+          {"shape": [8], "dtype": "f32"},
+          {"shape": [8, 20], "dtype": "f32"}
+        ],
+        "outputs": [
+          {"name": "ys", "shape": [8, 20, 2], "dtype": "f32"},
+          {"name": "status", "shape": [8], "dtype": "s32"}
+        ],
+        "kind": "solve", "problem": "vdp", "batch": 8, "n_eval": 20
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["solve_vdp_b8_e20"];
+        assert_eq!(a.kind, "solve");
+        assert_eq!(a.batch, 8);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![8, 2]);
+        assert_eq!(a.outputs[1].dtype, "s32");
+        assert_eq!(a.outputs[0].name, "ys");
+        assert_eq!(a.dim, 2);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in m.artifacts.values() {
+                assert!(!a.inputs.is_empty());
+                assert!(!a.outputs.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! The PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them from the Rust hot path.
+//!
+//! Python never runs at request time — the HLO text is compiled by the
+//! PJRT CPU client on startup (and cached per artifact), after which the
+//! coordinator is a self-contained native binary.
+
+pub mod json;
+mod manifest;
+
+pub use manifest::{Artifact, IoSpec, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its manifest metadata.
+pub struct LoadedArtifact {
+    pub meta: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with row-major `f32` input buffers matching the manifest
+    /// input specs; returns one `Vec<f32>` per manifest output (integer
+    /// outputs are converted).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.meta.inputs) {
+            let expect: usize = spec.shape.iter().product();
+            if buf.len() != expect {
+                return Err(anyhow!(
+                    "input size mismatch for {}: {} vs {:?}",
+                    self.meta.name,
+                    buf.len(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.meta.outputs) {
+            let v: Vec<f32> = match spec.dtype.as_str() {
+                "s32" => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+                _ => lit.to_vec::<f32>()?,
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT client + compiled-executable cache, keyed by artifact name.
+///
+/// Compilation happens lazily on first use and is then reused for the
+/// lifetime of the runtime ("one compiled executable per model variant").
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<LoadedArtifact>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the CPU
+    /// PJRT client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    /// Load (compile) an artifact, cached.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<LoadedArtifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = std::rc::Rc::new(LoadedArtifact { meta, exe });
+        self.cache.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Pick the smallest full-solve VdP artifact with `batch >= n` (shape
+    /// bucketing for the coordinator).
+    pub fn pick_vdp_solve(&self, n: usize, n_eval: usize) -> Option<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|(_, a)| {
+                a.kind == "solve"
+                    && a.problem == "vdp"
+                    && a.batch >= n
+                    && a.n_eval >= n_eval
+                    && !a.name.contains("pid")
+            })
+            .min_by_key(|(_, a)| (a.batch, a.n_eval))
+            .map(|(name, _)| name.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(kind: &str, problem: &str, b: usize, e: usize) -> Artifact {
+        Artifact {
+            name: format!("{kind}_{problem}_b{b}_e{e}"),
+            file: String::new(),
+            kind: kind.into(),
+            problem: problem.into(),
+            batch: b,
+            n_eval: e,
+            dim: 2,
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn pick_prefers_smallest_fit() {
+        let mut m = Manifest::default();
+        for (b, e) in [(8, 20), (64, 50), (256, 200)] {
+            let a = fake("solve", "vdp", b, e);
+            m.artifacts.insert(a.name.clone(), a);
+        }
+        // Reimplement pick over the bare manifest (Runtime needs a client).
+        let pick = |n: usize, e: usize| {
+            m.artifacts
+                .iter()
+                .filter(|(_, a)| a.kind == "solve" && a.batch >= n && a.n_eval >= e)
+                .min_by_key(|(_, a)| (a.batch, a.n_eval))
+                .map(|(k, _)| k.clone())
+        };
+        assert_eq!(pick(5, 10).unwrap(), "solve_vdp_b8_e20");
+        assert_eq!(pick(8, 30).unwrap(), "solve_vdp_b64_e50");
+        assert_eq!(pick(100, 10).unwrap(), "solve_vdp_b256_e200");
+        assert!(pick(1000, 10).is_none());
+    }
+}

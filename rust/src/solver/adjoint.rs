@@ -1,0 +1,384 @@
+//! The adjoint backward pass (optimize-then-discretize).
+//!
+//! Given a terminal loss `L(y(t1))`, the adjoint ODE propagates
+//! `a(t) = ∂L/∂y(t)` backwards while re-solving the state and accumulating
+//! parameter gradients:
+//!
+//! ```text
+//! dy/dt = f(t, y)
+//! da/dt = −aᵀ ∂f/∂y
+//! dg/dt = −aᵀ ∂f/∂θ
+//! ```
+//!
+//! Two modes, reproducing the Table 5 comparison:
+//!
+//! - [`adjoint_backward_parallel`]: each instance solves its own augmented
+//!   ODE of size `2f + p` with independent adaptive state — torchode's
+//!   default, whose backward blows up to `b(2f+p)` total variables (the
+//!   paper reports the `b(f+p)` scaling; the extra `f` is the state
+//!   re-solve both libraries carry).
+//! - [`adjoint_backward_joint`]: the whole batch forms one augmented ODE
+//!   of size `b·2f + p` — parameter gradients are shared, the step size is
+//!   common, and the backward loop is dramatically cheaper
+//!   (torchode-joint).
+
+use super::{solve_ivp_parallel, SolveOptions, Solution, Stats, Status, TimeGrid};
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+use std::cell::RefCell;
+
+/// Options for the backward solve.
+#[derive(Debug, Clone)]
+pub struct AdjointOptions {
+    /// Solver options for the backward integration.
+    pub solve: SolveOptions,
+}
+
+impl AdjointOptions {
+    pub fn new(solve: SolveOptions) -> Self {
+        Self { solve }
+    }
+}
+
+/// Gradients produced by an adjoint backward pass.
+#[derive(Debug, Clone)]
+pub struct AdjointResult {
+    /// `∂L/∂y0`, `(batch, dim)`.
+    pub dl_dy0: BatchVec,
+    /// `∂L/∂θ`, summed over the batch.
+    pub dl_dparams: Vec<f64>,
+    /// State at `t0` recovered by the backward solve (diagnostic: compare
+    /// with the true `y0` to gauge reversal error).
+    pub y0_recovered: BatchVec,
+    /// Backward-solve statistics (per backward instance).
+    pub stats: Vec<Stats>,
+    pub status: Vec<Status>,
+}
+
+/// Augmented reverse-time system for per-instance adjoint solves.
+///
+/// State layout per instance: `[y (f), a (f), g (p)]`; reverse time
+/// `s ∈ [0, t1−t0]` maps to `t = t1 − s`.
+struct AugmentedSystem<'a> {
+    sys: &'a dyn OdeSystem,
+    f: usize,
+    p: usize,
+    t1: Vec<f64>,
+    scratch: RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl<'a> OdeSystem for AugmentedSystem<'a> {
+    fn dim(&self) -> usize {
+        2 * self.f + self.p
+    }
+
+    fn f_inst(&self, inst: usize, s: f64, z: &[f64], dz: &mut [f64]) {
+        let (f, p) = (self.f, self.p);
+        let t = self.t1[inst.min(self.t1.len() - 1)] - s;
+        let y = &z[..f];
+        let a = &z[f..2 * f];
+        let mut sc = self.scratch.borrow_mut();
+        let (fy, vy, vp) = &mut *sc;
+        fy.resize(f, 0.0);
+        vy.resize(f, 0.0);
+        vp.resize(p, 0.0);
+        self.sys.f_inst(inst, t, y, fy);
+        vy.iter_mut().for_each(|v| *v = 0.0);
+        vp.iter_mut().for_each(|v| *v = 0.0);
+        self.sys.vjp_inst(inst, t, y, a, vy, vp);
+        // ds = -dt: flip signs of the forward-time derivatives.
+        for i in 0..f {
+            dz[i] = -fy[i]; // dy/ds
+            dz[f + i] = vy[i]; // da/ds = +aᵀ∂f/∂y
+        }
+        for j in 0..p {
+            dz[2 * f + j] = vp[j]; // dg/ds = +aᵀ∂f/∂θ
+        }
+    }
+}
+
+/// Per-instance (torchode-default) adjoint backward pass.
+///
+/// `y1` is the state at `t1` (from the forward solve), `dl_dy1` the loss
+/// gradient there. Each instance integrates its own augmented system with
+/// independent adaptive state.
+pub fn adjoint_backward_parallel(
+    sys: &dyn OdeSystem,
+    y1: &BatchVec,
+    dl_dy1: &BatchVec,
+    t0: &[f64],
+    t1: &[f64],
+    opts: &AdjointOptions,
+) -> AdjointResult {
+    let batch = y1.batch();
+    let f = sys.dim();
+    let p = sys.n_params();
+    assert!(sys.has_vjp(), "adjoint requires system VJPs");
+    let aug = AugmentedSystem {
+        sys,
+        f,
+        p,
+        t1: t1.to_vec(),
+        scratch: RefCell::new((Vec::new(), Vec::new(), Vec::new())),
+    };
+    // Initial augmented state per instance: [y1, dL/dy1, 0].
+    let mut z0 = BatchVec::zeros(batch, 2 * f + p);
+    for i in 0..batch {
+        let row = z0.row_mut(i);
+        row[..f].copy_from_slice(y1.row(i));
+        row[f..2 * f].copy_from_slice(dl_dy1.row(i));
+    }
+    let grid = TimeGrid::from_rows(
+        &(0..batch).map(|i| vec![0.0, t1[i] - t0[i]]).collect::<Vec<_>>(),
+    );
+    let sol = solve_ivp_parallel(&aug, &z0, &grid, &opts.solve);
+    collect_result(&sol, batch, f, p)
+}
+
+/// Joint reverse-time system: the whole batch plus one shared parameter-
+/// gradient block as a single instance of size `b·2f + p`.
+struct JointAugmentedSystem<'a> {
+    sys: &'a dyn OdeSystem,
+    batch: usize,
+    f: usize,
+    p: usize,
+    t1: f64,
+    scratch: RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl<'a> OdeSystem for JointAugmentedSystem<'a> {
+    fn dim(&self) -> usize {
+        self.batch * 2 * self.f + self.p
+    }
+
+    fn f_inst(&self, _inst: usize, s: f64, z: &[f64], dz: &mut [f64]) {
+        let (b, f, p) = (self.batch, self.f, self.p);
+        let t = self.t1 - s;
+        let mut sc = self.scratch.borrow_mut();
+        let (fy, vy, vp) = &mut *sc;
+        fy.resize(f, 0.0);
+        vy.resize(f, 0.0);
+        vp.resize(p, 0.0);
+        let g_out = &mut dz[2 * b * f..];
+        g_out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..b {
+            let y = &z[i * f..(i + 1) * f];
+            let a = &z[(b + i) * f..(b + i + 1) * f];
+            self.sys.f_inst(i, t, y, fy);
+            vy.iter_mut().for_each(|v| *v = 0.0);
+            vp.iter_mut().for_each(|v| *v = 0.0);
+            self.sys.vjp_inst(i, t, y, a, vy, vp);
+            for d in 0..f {
+                dz[i * f + d] = -fy[d];
+                dz[(b + i) * f + d] = vy[d];
+            }
+            for j in 0..p {
+                dz[2 * b * f + j] += vp[j];
+            }
+        }
+    }
+}
+
+/// Joint (torchode-joint) adjoint backward pass: one augmented ODE of size
+/// `b·2f + p` with a shared step size and shared parameter gradients.
+/// Requires a common `[t0, t1]` across the batch.
+pub fn adjoint_backward_joint(
+    sys: &dyn OdeSystem,
+    y1: &BatchVec,
+    dl_dy1: &BatchVec,
+    t0: f64,
+    t1: f64,
+    opts: &AdjointOptions,
+) -> AdjointResult {
+    let batch = y1.batch();
+    let f = sys.dim();
+    let p = sys.n_params();
+    assert!(sys.has_vjp(), "adjoint requires system VJPs");
+    let aug = JointAugmentedSystem {
+        sys,
+        batch,
+        f,
+        p,
+        t1,
+        scratch: RefCell::new((Vec::new(), Vec::new(), Vec::new())),
+    };
+    let dim = batch * 2 * f + p;
+    let mut z0 = BatchVec::zeros(1, dim);
+    {
+        let row = z0.row_mut(0);
+        for i in 0..batch {
+            row[i * f..(i + 1) * f].copy_from_slice(y1.row(i));
+            row[(batch + i) * f..(batch + i + 1) * f].copy_from_slice(dl_dy1.row(i));
+        }
+    }
+    let grid = TimeGrid::from_rows(&[vec![0.0, t1 - t0]]);
+    let sol = solve_ivp_parallel(&aug, &z0, &grid, &opts.solve);
+
+    // Unpack the joint layout.
+    let zf = sol.y_final(0);
+    let mut y0_rec = BatchVec::zeros(batch, f);
+    let mut dl_dy0 = BatchVec::zeros(batch, f);
+    for i in 0..batch {
+        y0_rec.row_mut(i).copy_from_slice(&zf[i * f..(i + 1) * f]);
+        dl_dy0
+            .row_mut(i)
+            .copy_from_slice(&zf[(batch + i) * f..(batch + i + 1) * f]);
+    }
+    AdjointResult {
+        dl_dy0,
+        dl_dparams: zf[2 * batch * f..].to_vec(),
+        y0_recovered: y0_rec,
+        stats: sol.stats.clone(),
+        status: sol.status.clone(),
+    }
+}
+
+fn collect_result(sol: &Solution, batch: usize, f: usize, p: usize) -> AdjointResult {
+    let mut y0_rec = BatchVec::zeros(batch, f);
+    let mut dl_dy0 = BatchVec::zeros(batch, f);
+    let mut dl_dparams = vec![0.0; p];
+    for i in 0..batch {
+        let z = sol.y_final(i);
+        y0_rec.row_mut(i).copy_from_slice(&z[..f]);
+        dl_dy0.row_mut(i).copy_from_slice(&z[f..2 * f]);
+        for j in 0..p {
+            dl_dparams[j] += z[2 * f + j];
+        }
+    }
+    AdjointResult {
+        dl_dy0,
+        dl_dparams,
+        y0_recovered: y0_rec,
+        stats: sol.stats.clone(),
+        status: sol.status.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, VdP};
+    use crate::solver::{Method, SolveOptions};
+
+    fn solve_forward(
+        sys: &dyn OdeSystem,
+        y0: &BatchVec,
+        t0: f64,
+        t1: f64,
+    ) -> BatchVec {
+        let grid = TimeGrid::linspace_shared(y0.batch(), t0, t1, 2);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+        let sol = solve_ivp_parallel(sys, y0, &grid, &opts);
+        assert!(sol.all_success());
+        let mut y1 = BatchVec::zeros(y0.batch(), y0.dim());
+        for i in 0..y0.batch() {
+            y1.row_mut(i).copy_from_slice(sol.y_final(i));
+        }
+        y1
+    }
+
+    /// Analytic check: L = y(T) for ẏ = −λy has ∂L/∂y0 = e^(−λT) and
+    /// ∂L/∂λ = −T y0 e^(−λT).
+    #[test]
+    fn adjoint_exponential_analytic() {
+        let lam = 0.8;
+        let tt = 1.5;
+        let sys = ExponentialDecay::new(vec![lam], 1);
+        let y0 = BatchVec::from_rows(&[vec![2.0]]);
+        let y1 = solve_forward(&sys, &y0, 0.0, tt);
+        let dl = BatchVec::from_rows(&[vec![1.0]]);
+        let opts =
+            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+        let res = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0], &[tt], &opts);
+        assert!(res.status.iter().all(|s| *s == Status::Success));
+        let expect_dy0 = (-lam * tt).exp();
+        let expect_dlam = -tt * 2.0 * (-lam * tt).exp();
+        assert!((res.dl_dy0.row(0)[0] - expect_dy0).abs() < 1e-6);
+        assert!((res.dl_dparams[0] - expect_dlam).abs() < 1e-5);
+        // State reversal recovers y0.
+        assert!((res.y0_recovered.row(0)[0] - 2.0).abs() < 1e-6);
+    }
+
+    /// Nonlinear check against finite differences: L = x(T) of VdP w.r.t.
+    /// the initial condition and μ.
+    #[test]
+    fn adjoint_vdp_matches_fd() {
+        let mu = 1.3;
+        let tt = 2.0;
+        let y0v = [1.2, -0.4];
+        let loss = |mu: f64, y0v: [f64; 2]| -> f64 {
+            let sys = VdP::new(vec![mu]);
+            let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
+            let y1 = solve_forward(&sys, &y0, 0.0, tt);
+            y1.row(0)[0]
+        };
+        let sys = VdP::new(vec![mu]);
+        let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
+        let y1 = solve_forward(&sys, &y0, 0.0, tt);
+        let dl = BatchVec::from_rows(&[vec![1.0, 0.0]]);
+        let opts =
+            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+        let res = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0], &[tt], &opts);
+        let h = 1e-5;
+        for d in 0..2 {
+            let mut yp = y0v;
+            yp[d] += h;
+            let mut ym = y0v;
+            ym[d] -= h;
+            let fd = (loss(mu, yp) - loss(mu, ym)) / (2.0 * h);
+            assert!(
+                (res.dl_dy0.row(0)[d] - fd).abs() < 1e-4,
+                "d={d}: {} vs {fd}",
+                res.dl_dy0.row(0)[d]
+            );
+        }
+        let fd_mu = (loss(mu + h, y0v) - loss(mu - h, y0v)) / (2.0 * h);
+        assert!((res.dl_dparams[0] - fd_mu).abs() < 1e-4, "{} vs {fd_mu}", res.dl_dparams[0]);
+    }
+
+    /// Joint and parallel adjoints agree on gradients.
+    #[test]
+    fn joint_matches_parallel() {
+        let sys = VdP::new(vec![0.8, 2.0]);
+        let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![0.5, 0.7]]);
+        let tt = 1.5;
+        let y1 = solve_forward(&sys, &y0, 0.0, tt);
+        let dl = BatchVec::from_rows(&[vec![1.0, -0.5], vec![0.3, 1.0]]);
+        let opts =
+            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+        let par = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0, 0.0], &[tt, tt], &opts);
+        let joint = adjoint_backward_joint(&sys, &y1, &dl, 0.0, tt, &opts);
+        for i in 0..2 {
+            for d in 0..2 {
+                assert!(
+                    (par.dl_dy0.row(i)[d] - joint.dl_dy0.row(i)[d]).abs() < 1e-6,
+                    "i={i} d={d}"
+                );
+            }
+        }
+        assert!((par.dl_dparams[0] - joint.dl_dparams[0]).abs() < 1e-6);
+    }
+
+    /// The Table 5 size effect: the joint adjoint runs one instance of
+    /// size b·2f+p and therefore takes far fewer *total* steps than the
+    /// per-instance backward at equal tolerance.
+    #[test]
+    fn joint_backward_is_cheaper_in_total_steps() {
+        let b = 6;
+        let sys = VdP::new((0..b).map(|i| 0.5 + i as f64 * 0.5).collect());
+        let y0 = BatchVec::broadcast(&[1.5, 0.0], b);
+        let tt = 2.0;
+        let y1 = solve_forward(&sys, &y0, 0.0, tt);
+        let dl = BatchVec::broadcast(&[1.0, 0.0], b);
+        let opts =
+            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8));
+        let par = adjoint_backward_parallel(&sys, &y1, &dl, &vec![0.0; b], &vec![tt; b], &opts);
+        let joint = adjoint_backward_joint(&sys, &y1, &dl, 0.0, tt, &opts);
+        let par_total: u64 = par.stats.iter().map(|s| s.n_steps).sum();
+        let joint_total: u64 = joint.stats.iter().map(|s| s.n_steps).sum();
+        assert!(
+            joint_total < par_total,
+            "joint {joint_total} !< parallel {par_total}"
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Step-size controllers (integral and PID), per-instance.
+//!
+//! Following Söderlind (2002, 2003) and the diffrax/torchode formulation:
+//! with the tolerance-scaled error norm ε_n of the current step (accept iff
+//! ε_n ≤ 1) the next step size is
+//!
+//! ```text
+//! dt' = dt · clamp(safety · ε_n^(-β1) · ε_{n-1}^(-β2) · ε_{n-2}^(-β3))
+//! ```
+//!
+//! where the β are derived from the proportional/integral/derivative
+//! coefficients and the order `k = err_order + 1` of the embedded error
+//! estimator:
+//!
+//! ```text
+//! β1 = (P + I + D) / k,   β2 = -(P + 2D) / k,   β3 = D / k
+//! ```
+//!
+//! An integral controller is the special case P = D = 0, I = 1 — exactly
+//! what torchdiffeq and TorchDyn implement. The error history is only
+//! advanced on accepted steps; after a rejection the growth factor is
+//! additionally capped at 1.
+
+/// A step-size controller configuration (shared across the batch; the
+/// *state* is per instance, see [`ControllerState`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Controller {
+    pub pcoeff: f64,
+    pub icoeff: f64,
+    pub dcoeff: f64,
+    pub safety: f64,
+    pub factor_min: f64,
+    pub factor_max: f64,
+}
+
+impl Controller {
+    /// The classic integral controller (torchdiffeq/TorchDyn default).
+    pub fn integral() -> Self {
+        Self::pid(0.0, 1.0, 0.0)
+    }
+
+    /// A PID controller with the given proportional/integral/derivative
+    /// coefficients (diffrax convention).
+    pub fn pid(pcoeff: f64, icoeff: f64, dcoeff: f64) -> Self {
+        Self {
+            pcoeff,
+            icoeff,
+            dcoeff,
+            safety: 0.9,
+            factor_min: 0.2,
+            factor_max: 10.0,
+        }
+    }
+
+    pub fn with_safety(mut self, s: f64) -> Self {
+        self.safety = s;
+        self
+    }
+
+    pub fn with_factor_bounds(mut self, lo: f64, hi: f64) -> Self {
+        self.factor_min = lo;
+        self.factor_max = hi;
+        self
+    }
+
+    /// β exponents for error-estimator order `err_order`.
+    #[inline]
+    pub fn betas(&self, err_order: usize) -> (f64, f64, f64) {
+        let k = (err_order + 1) as f64;
+        (
+            (self.pcoeff + self.icoeff + self.dcoeff) / k,
+            -(self.pcoeff + 2.0 * self.dcoeff) / k,
+            self.dcoeff / k,
+        )
+    }
+
+    /// Decide accept/reject and the step-size factor for one instance.
+    #[inline]
+    pub fn decide(&self, err_norm: f64, err_order: usize, st: &ControllerState) -> StepDecision {
+        if !err_norm.is_finite() {
+            // Non-finite error: reject hard and shrink maximally.
+            return StepDecision { accept: false, factor: self.factor_min };
+        }
+        let accept = err_norm <= 1.0;
+        let (b1, b2, b3) = self.betas(err_order);
+        // Floor the error to avoid factor blow-up on (near-)exact steps.
+        let e0 = err_norm.max(1e-10);
+        let mut factor = self.safety * e0.powf(-b1) * st.err_prev.powf(-b2) * st.err_prev2.powf(-b3);
+        factor = factor.clamp(self.factor_min, self.factor_max);
+        if !accept {
+            factor = factor.min(1.0);
+        }
+        StepDecision { accept, factor }
+    }
+}
+
+/// Per-instance controller memory: the last two accepted (floored) error
+/// norms, initialized to 1 so the first step reduces to a pure I-step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerState {
+    pub err_prev: f64,
+    pub err_prev2: f64,
+}
+
+impl Default for ControllerState {
+    fn default() -> Self {
+        Self { err_prev: 1.0, err_prev2: 1.0 }
+    }
+}
+
+impl ControllerState {
+    /// Advance the history after an *accepted* step with error `err_norm`.
+    #[inline]
+    pub fn push(&mut self, err_norm: f64) {
+        self.err_prev2 = self.err_prev;
+        self.err_prev = err_norm.max(1e-10);
+    }
+}
+
+/// The controller's verdict for one step of one instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepDecision {
+    pub accept: bool,
+    /// Multiplier on the step size for the next attempt.
+    pub factor: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integral_matches_classic_formula() {
+        let c = Controller::integral();
+        let st = ControllerState::default();
+        // dopri5: err_order 4, k = 5 => factor = 0.9 * err^(-1/5)
+        let d = c.decide(0.5, 4, &st);
+        assert!(d.accept);
+        let expect = 0.9 * 0.5f64.powf(-0.2);
+        assert!((d.factor - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accepts_iff_err_le_one() {
+        let c = Controller::integral();
+        let st = ControllerState::default();
+        assert!(c.decide(1.0, 4, &st).accept);
+        assert!(!c.decide(1.0000001, 4, &st).accept);
+    }
+
+    #[test]
+    fn rejection_never_grows_step() {
+        let c = Controller::integral();
+        let st = ControllerState::default();
+        let d = c.decide(1.5, 4, &st);
+        assert!(!d.accept);
+        assert!(d.factor <= 1.0);
+    }
+
+    #[test]
+    fn factor_clamped() {
+        let c = Controller::integral();
+        let st = ControllerState::default();
+        // Tiny error => huge factor, clamped to factor_max.
+        let d = c.decide(1e-16, 4, &st);
+        assert_eq!(d.factor, c.factor_max);
+        // Huge error => factor_min.
+        let d = c.decide(1e12, 4, &st);
+        assert_eq!(d.factor, c.factor_min);
+    }
+
+    #[test]
+    fn pid_uses_history() {
+        let c = Controller::pid(0.3, 0.3, 0.0);
+        let mut st = ControllerState::default();
+        let f_fresh = c.decide(0.5, 4, &st).factor;
+        st.push(0.1); // previous step had small error
+        let f_hist = c.decide(0.5, 4, &st).factor;
+        // β2 < 0 for a PI controller, so a small previous error shrinks the
+        // factor relative to fresh history.
+        assert!(f_hist < f_fresh, "{f_hist} !< {f_fresh}");
+    }
+
+    #[test]
+    fn betas_integral() {
+        let c = Controller::integral();
+        let (b1, b2, b3) = c.betas(4);
+        assert!((b1 - 0.2).abs() < 1e-15);
+        assert_eq!(b2, 0.0);
+        assert_eq!(b3, 0.0);
+    }
+
+    #[test]
+    fn non_finite_error_rejects_hard() {
+        let c = Controller::integral();
+        let st = ControllerState::default();
+        let d = c.decide(f64::NAN, 4, &st);
+        assert!(!d.accept);
+        assert_eq!(d.factor, c.factor_min);
+        let d = c.decide(f64::INFINITY, 4, &st);
+        assert!(!d.accept);
+    }
+
+    #[test]
+    fn history_push_floors() {
+        let mut st = ControllerState::default();
+        st.push(0.0);
+        assert_eq!(st.err_prev, 1e-10);
+        assert_eq!(st.err_prev2, 1.0);
+    }
+}

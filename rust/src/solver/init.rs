@@ -1,0 +1,124 @@
+//! Automatic initial step-size selection (Hairer, Nørsett & Wanner,
+//! Algorithm 4.14), batched: one extra dynamics evaluation for the whole
+//! batch, per-instance results.
+
+use super::norm::{scaled_norm, NormKind};
+use super::Tolerances;
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// Per-instance initial step sizes. `f0` must hold `f(t0, y0)` and stays
+/// valid afterwards (so FSAL solvers can reuse it as their first `k[0]`).
+/// Costs one batched dynamics evaluation (written into `scratch_f`).
+pub fn initial_step_batch(
+    sys: &dyn OdeSystem,
+    t0: &[f64],
+    y0: &BatchVec,
+    f0: &BatchVec,
+    order: usize,
+    tols: &Tolerances,
+    span: &[f64],
+    scratch_y: &mut BatchVec,
+    scratch_f: &mut BatchVec,
+) -> Vec<f64> {
+    let batch = y0.batch();
+    let mut h0 = vec![0.0; batch];
+    // d0 = ||y0||, d1 = ||f0|| in the tolerance-scaled norm.
+    for i in 0..batch {
+        let (atol, rtol) = (tols.atol(i), tols.rtol(i));
+        let y = y0.row(i);
+        let f = f0.row(i);
+        let d0 = scaled_norm(NormKind::Rms, y, y, y, atol, rtol);
+        let d1 = scaled_norm(NormKind::Rms, f, y, y, atol, rtol);
+        let h = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * d0 / d1 };
+        h0[i] = h.min(span[i].abs());
+        // Explicit Euler probe state y1 = y0 + h0 f0.
+        let out = scratch_y.row_mut(i);
+        for d in 0..y.len() {
+            out[d] = y[d] + h0[i] * f[d];
+        }
+    }
+    // One batched evaluation at the probe states.
+    let t_probe: Vec<f64> = t0.iter().zip(&h0).map(|(t, h)| t + h).collect();
+    sys.f_batch(&t_probe, scratch_y, scratch_f, None);
+
+    let mut dt0 = vec![0.0; batch];
+    for i in 0..batch {
+        let (atol, rtol) = (tols.atol(i), tols.rtol(i));
+        let y = y0.row(i);
+        let f_a = f0.row(i);
+        let f_b = scratch_f.row(i);
+        // d2 = ||f1 - f0|| / h0 — an estimate of the second derivative.
+        let diff: Vec<f64> = f_a.iter().zip(f_b).map(|(a, b)| b - a).collect();
+        let d2 = scaled_norm(NormKind::Rms, &diff, y, y, atol, rtol) / h0[i];
+        let d1 = scaled_norm(NormKind::Rms, f_a, y, y, atol, rtol);
+        let dmax = d1.max(d2);
+        let h1 = if dmax <= 1e-15 {
+            (h0[i] * 1e-3).max(1e-6)
+        } else {
+            (0.01 / dmax).powf(1.0 / (order as f64 + 1.0))
+        };
+        dt0[i] = (100.0 * h0[i]).min(h1).min(span[i].abs());
+    }
+    dt0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, OdeSystem};
+
+    fn setup(lambda: Vec<f64>) -> (ExponentialDecay, BatchVec, BatchVec) {
+        let b = lambda.len();
+        let sys = ExponentialDecay::new(lambda, 1);
+        let y0 = BatchVec::from_rows(&vec![vec![1.0]; b]);
+        let mut f0 = BatchVec::zeros(b, 1);
+        let t = vec![0.0; b];
+        sys.f_batch(&t, &y0, &mut f0, None);
+        (sys, y0, f0)
+    }
+
+    #[test]
+    fn stiffer_instance_gets_smaller_dt0() {
+        let (sys, y0, f0) = setup(vec![1.0, 100.0]);
+        let tols = Tolerances::scalar(1e-6, 1e-5);
+        let mut sy = BatchVec::zeros(2, 1);
+        let mut sf = BatchVec::zeros(2, 1);
+        let dt0 = initial_step_batch(
+            &sys,
+            &[0.0, 0.0],
+            &y0,
+            &f0,
+            5,
+            &tols,
+            &[10.0, 10.0],
+            &mut sy,
+            &mut sf,
+        );
+        assert!(dt0[1] < dt0[0], "stiff: {dt0:?}");
+        assert!(dt0.iter().all(|&h| h > 0.0));
+    }
+
+    #[test]
+    fn dt0_clamped_by_span() {
+        let (sys, y0, f0) = setup(vec![1e-8]);
+        let tols = Tolerances::scalar(1e-6, 1e-5);
+        let mut sy = BatchVec::zeros(1, 1);
+        let mut sf = BatchVec::zeros(1, 1);
+        let dt0 =
+            initial_step_batch(&sys, &[0.0], &y0, &f0, 5, &tols, &[0.5], &mut sy, &mut sf);
+        assert!(dt0[0] <= 0.5);
+    }
+
+    #[test]
+    fn reasonable_magnitude_for_unit_problem() {
+        let (sys, y0, f0) = setup(vec![1.0]);
+        let tols = Tolerances::scalar(1e-6, 1e-5);
+        let mut sy = BatchVec::zeros(1, 1);
+        let mut sf = BatchVec::zeros(1, 1);
+        let dt0 =
+            initial_step_batch(&sys, &[0.0], &y0, &f0, 5, &tols, &[10.0], &mut sy, &mut sf);
+        // For ẏ = -y at tolerance ~1e-5 the heuristic lands around 1e-2..1.
+        assert!(dt0[0] > 1e-4 && dt0[0] < 2.0, "{}", dt0[0]);
+    }
+}

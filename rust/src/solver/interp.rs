@@ -1,0 +1,170 @@
+//! Dense-output interpolation between accepted steps.
+//!
+//! All polynomials are evaluated via **Horner's rule** — the paper calls
+//! this optimization out explicitly ("fast polynomial evaluation via
+//! Horner's rule that saves half of the multiplications over the naive
+//! evaluation method").
+//!
+//! Two interpolants are implemented:
+//!
+//! - [`hermite_eval`]: 3rd-order cubic Hermite from the step endpoints and
+//!   slopes. Valid for any RK method (diffrax uses the same fallback).
+//! - Dopri5's dedicated 4th-order interpolant (Hairer's `rcont` form),
+//!   split into [`dopri5_coeffs`] (once per accepted step) and
+//!   [`dopri5_eval`] (once per evaluation point).
+
+use super::tableau::DOPRI5_D;
+
+/// Cubic Hermite interpolation at normalized position `theta ∈ [0, 1]`
+/// within a step from `(y0, f0)` to `(y1, f1)` of size `dt`, written in
+/// Horner form: y(θ) = y0 + θ·(h00' + θ·(h10' + θ·h20')) per component.
+#[inline]
+pub fn hermite_eval(
+    theta: f64,
+    dt: f64,
+    y0: &[f64],
+    f0: &[f64],
+    y1: &[f64],
+    f1: &[f64],
+    out: &mut [f64],
+) {
+    // Standard cubic Hermite basis regrouped by powers of θ:
+    //   y(θ) = y0 + θ·a + θ²·b + θ³·c
+    //   a = dt·f0
+    //   b = 3Δ − dt·(2f0 + f1)
+    //   c = −2Δ + dt·(f0 + f1),   Δ = y1 − y0
+    for i in 0..out.len() {
+        let d = y1[i] - y0[i];
+        let a = dt * f0[i];
+        let b = 3.0 * d - dt * (2.0 * f0[i] + f1[i]);
+        let c = -2.0 * d + dt * (f0[i] + f1[i]);
+        out[i] = y0[i] + theta * (a + theta * (b + theta * c));
+    }
+}
+
+/// Number of `rcont` coefficient vectors for the dopri5 interpolant.
+pub const DOPRI5_NCOEFF: usize = 5;
+
+/// Compute the five dopri5 `rcont` coefficient vectors for one accepted
+/// step. `k` holds the 7 stage slopes, each of length `dim`; `coeffs` is a
+/// `5 * dim` scratch buffer filled as `[rcont1, rcont2, rcont3, rcont4,
+/// rcont5]`.
+pub fn dopri5_coeffs(dt: f64, y0: &[f64], y1: &[f64], k: &[&[f64]], coeffs: &mut [f64]) {
+    let dim = y0.len();
+    debug_assert_eq!(k.len(), 7);
+    debug_assert_eq!(coeffs.len(), DOPRI5_NCOEFF * dim);
+    let (r1, rest) = coeffs.split_at_mut(dim);
+    let (r2, rest) = rest.split_at_mut(dim);
+    let (r3, rest) = rest.split_at_mut(dim);
+    let (r4, r5) = rest.split_at_mut(dim);
+    for i in 0..dim {
+        let ydiff = y1[i] - y0[i];
+        let bspl = dt * k[0][i] - ydiff;
+        r1[i] = y0[i];
+        r2[i] = ydiff;
+        r3[i] = bspl;
+        r4[i] = ydiff - dt * k[6][i] - bspl;
+        let mut acc = 0.0;
+        for (s, d) in DOPRI5_D.iter().enumerate() {
+            if *d != 0.0 {
+                acc += d * k[s][i];
+            }
+        }
+        r5[i] = dt * acc;
+    }
+}
+
+/// Evaluate the dopri5 interpolant at `theta ∈ [0, 1]` from precomputed
+/// `rcont` coefficients (Horner-style nesting as in Hairer's CONTD5):
+/// y(θ) = r1 + θ·(r2 + (1−θ)·(r3 + θ·(r4 + (1−θ)·r5))).
+#[inline]
+pub fn dopri5_eval(theta: f64, coeffs: &[f64], out: &mut [f64]) {
+    let dim = out.len();
+    debug_assert_eq!(coeffs.len(), DOPRI5_NCOEFF * dim);
+    let theta1 = 1.0 - theta;
+    let r1 = &coeffs[0..dim];
+    let r2 = &coeffs[dim..2 * dim];
+    let r3 = &coeffs[2 * dim..3 * dim];
+    let r4 = &coeffs[3 * dim..4 * dim];
+    let r5 = &coeffs[4 * dim..5 * dim];
+    for i in 0..dim {
+        out[i] = r1[i] + theta * (r2[i] + theta1 * (r3[i] + theta * (r4[i] + theta1 * r5[i])));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hermite_matches_endpoints() {
+        let y0 = [1.0, -2.0];
+        let y1 = [3.0, 0.5];
+        let f0 = [0.3, 1.0];
+        let f1 = [-0.2, 2.0];
+        let dt = 0.7;
+        let mut out = [0.0; 2];
+        hermite_eval(0.0, dt, &y0, &f0, &y1, &f1, &mut out);
+        assert!((out[0] - y0[0]).abs() < 1e-14 && (out[1] - y0[1]).abs() < 1e-14);
+        hermite_eval(1.0, dt, &y0, &f0, &y1, &f1, &mut out);
+        assert!((out[0] - y1[0]).abs() < 1e-12 && (out[1] - y1[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hermite_matches_endpoint_slopes() {
+        // Numerical derivative of the interpolant at θ=0 must equal dt·f0.
+        let y0 = [0.5];
+        let y1 = [1.7];
+        let f0 = [2.0];
+        let f1 = [-1.0];
+        let dt = 0.25;
+        let h = 1e-6;
+        let (mut a, mut b) = ([0.0], [0.0]);
+        hermite_eval(0.0, dt, &y0, &f0, &y1, &f1, &mut a);
+        hermite_eval(h, dt, &y0, &f0, &y1, &f1, &mut b);
+        let dydtheta = (b[0] - a[0]) / h;
+        assert!((dydtheta - dt * f0[0]).abs() < 1e-4);
+        hermite_eval(1.0 - h, dt, &y0, &f0, &y1, &f1, &mut a);
+        hermite_eval(1.0, dt, &y0, &f0, &y1, &f1, &mut b);
+        let dydtheta = (b[0] - a[0]) / h;
+        assert!((dydtheta - dt * f1[0]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hermite_exact_for_cubic_in_disguise() {
+        // For a linear function the interpolant must be exact everywhere.
+        let dt = 2.0;
+        let y0 = [1.0];
+        let y1 = [5.0]; // slope 2 over dt=2
+        let f0 = [2.0];
+        let f1 = [2.0];
+        let mut out = [0.0];
+        for k in 0..=10 {
+            let th = k as f64 / 10.0;
+            hermite_eval(th, dt, &y0, &f0, &y1, &f1, &mut out);
+            assert!((out[0] - (1.0 + 4.0 * th)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dopri5_interp_endpoints() {
+        // Fabricate a plausible step; the interpolant must hit y0 at θ=0 and
+        // y1 at θ=1 regardless of k (r-coefficients are constructed so).
+        let dim = 3;
+        let y0 = [1.0, 2.0, 3.0];
+        let y1 = [1.5, 1.8, 3.3];
+        let kdata: Vec<Vec<f64>> = (0..7).map(|s| vec![0.1 * s as f64; dim]).collect();
+        let k: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+        let mut coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
+        dopri5_coeffs(0.5, &y0, &y1, &k, &mut coeffs);
+        let mut out = [0.0; 3];
+        dopri5_eval(0.0, &coeffs, &mut out);
+        for i in 0..dim {
+            assert!((out[i] - y0[i]).abs() < 1e-14);
+        }
+        dopri5_eval(1.0, &coeffs, &mut out);
+        for i in 0..dim {
+            assert!((out[i] - y1[i]).abs() < 1e-14);
+        }
+    }
+}

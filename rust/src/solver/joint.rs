@@ -1,0 +1,340 @@
+//! The joint solve loop — the torchdiffeq/TorchDyn baseline semantics.
+//!
+//! A batch of IVPs is concatenated into one problem of size `batch × dim`:
+//! a single shared time, a single shared step size, one error norm over
+//! the whole batch, and accept/reject decisions applied to everyone at
+//! once. This is exactly the setting of the paper's §4.1 — the stiffest
+//! instance dictates the common step size, and the solver takes up to 4×
+//! as many steps as the parallel loop on heterogeneous batches.
+
+use super::controller::ControllerState;
+use super::init::initial_step_batch;
+use super::interp::{self, DOPRI5_NCOEFF};
+use super::norm::{scaled_norm, NormKind};
+use super::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use super::tableau::DenseOutput;
+use super::{SolveOptions, Solution, Status, TimeGrid};
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// Solve a batch of IVPs as one concatenated problem with shared solver
+/// state. All instances must share their integration range
+/// (`grid.t0(i)`/`grid.t1(i)` equal across `i`); per-instance evaluation
+/// *points* inside the range are still allowed.
+pub fn solve_ivp_joint(
+    sys: &dyn OdeSystem,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    let dim = y0.dim();
+    assert_eq!(grid.batch(), batch);
+    let n_eval = grid.n_eval();
+    let t0 = grid.t0(0);
+    let t1 = grid.t1(0);
+    for i in 1..batch {
+        assert!(
+            (grid.t0(i) - t0).abs() < 1e-12 && (grid.t1(i) - t1).abs() < 1e-12,
+            "joint solving requires a shared integration range"
+        );
+    }
+    let tab = opts.method.tableau();
+    let ct = CompiledTableau::new(tab);
+    let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
+
+    let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut trace: Vec<(f64, f64)> = Vec::new();
+
+    let mut y = y0.clone();
+    let mut t = t0;
+    let mut ctrl = ControllerState::default();
+    let mut next_eval = vec![0usize; batch];
+    let span = t1 - t0;
+
+    let mut ws = RkWorkspace::new(tab.stages, batch, dim);
+    let mut f_start = BatchVec::zeros(batch, dim);
+    let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
+
+    for i in 0..batch {
+        sol.y_mut(i, 0).copy_from_slice(y.row(i));
+        sol.stats[i].n_initialized += 1;
+        next_eval[i] = 1;
+    }
+    if n_eval == 1 || span <= 0.0 {
+        for i in 0..batch {
+            sol.status[i] = Status::Success;
+        }
+        return sol;
+    }
+
+    let t_vec = vec![t; batch];
+    sys.f_batch(&t_vec, &y, &mut ws.k[0], None);
+    bump_fevals(&mut sol, 1);
+    f_start.copy_from(&ws.k[0]);
+
+    // Shared initial step: minimum of the per-instance heuristics — the
+    // same "stiffest member wins" effect the joint norm produces.
+    let mut dt = match (opts.fixed_dt, opts.dt0) {
+        (Some(h), _) => h,
+        (None, Some(h)) => h,
+        (None, None) => {
+            let spans = vec![span; batch];
+            let dt0 = initial_step_batch(
+                sys,
+                &t_vec,
+                &y,
+                &ws.k[0],
+                tab.order,
+                &opts.tols,
+                &spans,
+                &mut ws.ytmp,
+                &mut ws.y_new,
+            );
+            bump_fevals(&mut sol, 1);
+            dt0.into_iter().fold(f64::INFINITY, f64::min)
+        }
+    };
+
+    let min_dt = span * opts.min_dt_rel;
+    let mut k0_ready = true;
+    let mut steps = 0usize;
+    let mut done = false;
+    let mut status = Status::MaxStepsReached;
+
+    while !done {
+        steps += 1;
+        if steps > opts.max_steps {
+            status = Status::MaxStepsReached;
+            break;
+        }
+        let mut clamped = false;
+        if dt >= t1 - t {
+            dt = t1 - t;
+            clamped = true;
+        }
+
+        let dt_vec = vec![dt; batch];
+        let tv = vec![t; batch];
+        let k0r = vec![k0_ready; batch];
+        let calls = rk_attempt(&ct, sys, &tv, &dt_vec, &y, &mut ws, &k0r, None, true);
+        bump_fevals(&mut sol, calls);
+        for st in sol.stats.iter_mut() {
+            st.n_steps += 1;
+        }
+
+        if ws.y_new.flat().iter().any(|v| !v.is_finite()) {
+            status = Status::NonFinite;
+            break;
+        }
+
+        // One error norm over the concatenated state: RMS over batch × dim.
+        let (accept, factor) = if adaptive {
+            let mut acc = 0.0;
+            for i in 0..batch {
+                let (atol, rtol) = (opts.tols.atol(i), opts.tols.rtol(i));
+                let e = scaled_norm(
+                    NormKind::Rms,
+                    ws.err.row(i),
+                    y.row(i),
+                    ws.y_new.row(i),
+                    atol,
+                    rtol,
+                );
+                acc += e * e;
+            }
+            let en = (acc / batch as f64).sqrt();
+            let d = opts.controller.decide(en, tab.err_order, &ctrl);
+            if d.accept {
+                ctrl.push(en);
+            }
+            (d.accept, d.factor)
+        } else {
+            (true, 1.0)
+        };
+
+        if accept {
+            for st in sol.stats.iter_mut() {
+                st.n_accepted += 1;
+            }
+            let t_new = if clamped { t1 } else { t + dt };
+            if opts.record_trace {
+                trace.push((t, dt));
+            }
+
+            for i in 0..batch {
+                let te_row = grid.row(i);
+                let mut e = next_eval[i];
+                let mut coeffs_ready = false;
+                while e < n_eval && te_row[e] <= t_new {
+                    let theta = ((te_row[e] - t) / dt).clamp(0.0, 1.0);
+                    match tab.dense {
+                        DenseOutput::Dopri5 => {
+                            if !coeffs_ready {
+                                let krows: Vec<&[f64]> = ws.k.iter().map(|k| k.row(i)).collect();
+                                interp::dopri5_coeffs(
+                                    dt,
+                                    y.row(i),
+                                    ws.y_new.row(i),
+                                    &krows,
+                                    &mut interp_coeffs,
+                                );
+                                coeffs_ready = true;
+                            }
+                            interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
+                        }
+                        DenseOutput::Hermite => {
+                            let f_end = if tab.fsal {
+                                ws.k[tab.stages - 1].row(i)
+                            } else {
+                                f_start.row(i)
+                            };
+                            interp::hermite_eval(
+                                theta,
+                                dt,
+                                y.row(i),
+                                f_start.row(i),
+                                ws.y_new.row(i),
+                                f_end,
+                                sol.y_mut(i, e),
+                            );
+                        }
+                    }
+                    sol.stats[i].n_initialized += 1;
+                    e += 1;
+                }
+                next_eval[i] = e;
+            }
+
+            y.copy_from(&ws.y_new);
+            t = t_new;
+            if tab.fsal {
+                let (head, tail) = ws.k.split_at_mut(tab.stages - 1);
+                let (first, _) = head.split_first_mut().unwrap();
+                first.copy_from(&tail[0]);
+                f_start.copy_from(&tail[0]);
+                k0_ready = true;
+            } else {
+                k0_ready = false;
+            }
+
+            if next_eval.iter().all(|&e| e >= n_eval) {
+                status = Status::Success;
+                done = true;
+            }
+        } else {
+            k0_ready = true;
+        }
+
+        dt *= factor;
+        if adaptive && !done && dt < min_dt {
+            status = Status::DtUnderflow;
+            break;
+        }
+
+        if !done && !tab.fsal && !k0_ready {
+            let tv = vec![t; batch];
+            sys.f_batch(&tv, &y, &mut ws.k[0], None);
+            bump_fevals(&mut sol, 1);
+            f_start.copy_from(&ws.k[0]);
+            k0_ready = true;
+        }
+    }
+
+    for i in 0..batch {
+        sol.status[i] = status;
+    }
+    if opts.record_trace {
+        sol.trace = Some(vec![trace; 1].into_iter().chain((1..batch).map(|_| Vec::new())).collect());
+    }
+    sol
+}
+
+fn bump_fevals(sol: &mut Solution, n: u64) {
+    for st in sol.stats.iter_mut() {
+        st.n_f_evals += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, VdP};
+    use crate::solver::{solve_ivp_parallel, Method};
+
+    #[test]
+    fn joint_accuracy_on_homogeneous_batch() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 4);
+        let grid = TimeGrid::linspace_shared(4, 0.0, 1.0, 11);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for i in 0..4 {
+            assert!((sol.y_final(i)[0] - (-1.0f64).exp()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn joint_shares_step_count() {
+        let sys = VdP::new(vec![1.0, 20.0]);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0], vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 10.0, 20);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        assert_eq!(sol.stats[0].n_steps, sol.stats[1].n_steps);
+        assert_eq!(sol.stats[0].n_accepted, sol.stats[1].n_accepted);
+    }
+
+    /// The §4.1 effect: joint solving of a heterogeneous batch takes more
+    /// steps than the slowest member needs, parallel solving does not.
+    #[test]
+    fn joint_pays_for_heterogeneity() {
+        let mus = vec![1.0, 5.0, 10.0, 20.0];
+        let b = mus.len();
+        let sys = VdP::new(mus);
+        let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+        let grid = TimeGrid::linspace_shared(b, 0.0, 15.0, 30);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let joint = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        let par = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(joint.all_success() && par.all_success());
+        // Joint steps ≥ the hardest instance's parallel steps.
+        let max_par = par.stats.iter().map(|s| s.n_steps).max().unwrap();
+        assert!(
+            joint.stats[0].n_steps >= max_par,
+            "joint {} < max parallel {max_par}",
+            joint.stats[0].n_steps
+        );
+        // And the easy instance pays for the stiff one under joint batching.
+        assert!(joint.stats[0].n_steps > 2 * par.stats[0].n_steps);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared integration range")]
+    fn joint_rejects_heterogeneous_ranges() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 2);
+        let grid = TimeGrid::from_rows(&[vec![0.0, 1.0], vec![0.0, 2.0]]);
+        let opts = SolveOptions::new(Method::Dopri5);
+        solve_ivp_joint(&sys, &y0, &grid, &opts);
+    }
+
+    #[test]
+    fn joint_matches_parallel_on_homogeneous_batch() {
+        // With identical instances the two loops must produce near-identical
+        // trajectories (controller decisions coincide).
+        let sys = VdP::uniform(3, 2.0);
+        let y0 = BatchVec::broadcast(&[1.0, 0.0], 3);
+        let grid = TimeGrid::linspace_shared(3, 0.0, 5.0, 10);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+        let j = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        let p = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        for e in 0..10 {
+            for d in 0..2 {
+                assert!((j.y(0, e)[d] - p.y(0, e)[d]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! The naive solve loop — the implementation-efficiency baseline.
+//!
+//! Semantics are identical to [`super::solve_ivp_joint`] (shared step
+//! size, joint error norm), but the implementation deliberately mirrors
+//! the cost model of an eager, generic, op-by-op solver such as
+//! torchdiffeq: **every arithmetic operation is a separate pass over
+//! freshly allocated memory** — one "kernel launch" per op — and
+//! polynomials are evaluated naively (computing θ, θ², θ³ as separate
+//! power ops) instead of via Horner's rule. On a CPU, each pass + alloc
+//! plays the role of a GPU kernel launch; the loop-time ratio between
+//! this engine and the fused ones is the reproduction target of Table 2.
+//!
+//! Nothing here is *algorithmically* worse: steps, accepts and outputs
+//! match the joint loop to floating-point reordering.
+
+use super::controller::ControllerState;
+use super::{SolveOptions, Solution, Status, TimeGrid};
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+use std::cell::Cell;
+
+thread_local! {
+    /// "Kernel launches" of the most recent naive solve: one per op_* call
+    /// plus one per dynamics evaluation. Used by the Table 3 harness to
+    /// drive the simulated GPU launch-overhead model (EXPERIMENTS.md §T3).
+    static OP_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Launch count of the last [`solve_ivp_naive`] call on this thread.
+pub fn last_op_count() -> u64 {
+    OP_COUNT.with(|c| c.get())
+}
+
+#[inline]
+fn bump() {
+    OP_COUNT.with(|c| c.set(c.get() + 1));
+}
+
+// --- op-by-op "tensor library": every op allocates its output ---------------
+
+fn op_scale(x: &[f64], s: f64) -> Vec<f64> {
+    bump();
+    x.iter().map(|v| v * s).collect()
+}
+
+fn op_add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+fn op_sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+fn op_div(a: &[f64], b: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().zip(b).map(|(x, y)| x / y).collect()
+}
+
+fn op_abs(a: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().map(|v| v.abs()).collect()
+}
+
+fn op_max(a: &[f64], b: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().zip(b).map(|(x, y)| x.max(*y)).collect()
+}
+
+fn op_add_scalar(a: &[f64], s: f64) -> Vec<f64> {
+    bump();
+    a.iter().map(|v| v + s).collect()
+}
+
+fn op_mul(a: &[f64], b: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().zip(b).map(|(x, y)| x * y).collect()
+}
+
+fn op_square(a: &[f64]) -> Vec<f64> {
+    bump();
+    a.iter().map(|v| v * v).collect()
+}
+
+fn op_mean(a: &[f64]) -> f64 {
+    bump();
+    a.iter().sum::<f64>() / a.len() as f64
+}
+
+/// Solve with joint semantics, per-op implementation. See module docs.
+pub fn solve_ivp_naive(
+    sys: &dyn OdeSystem,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    let dim = y0.dim();
+    let n = batch * dim;
+    let n_eval = grid.n_eval();
+    let t0 = grid.t0(0);
+    let t1 = grid.t1(0);
+    for i in 1..batch {
+        assert!(
+            (grid.t0(i) - t0).abs() < 1e-12 && (grid.t1(i) - t1).abs() < 1e-12,
+            "joint solving requires a shared integration range"
+        );
+    }
+    let tab = opts.method.tableau();
+    let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
+
+    let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut y: Vec<f64> = y0.flat().to_vec();
+    let mut t = t0;
+    let mut ctrl = ControllerState::default();
+    let mut next_eval = vec![0usize; batch];
+
+    for i in 0..batch {
+        sol.y_mut(i, 0).copy_from_slice(&y[i * dim..(i + 1) * dim]);
+        sol.stats[i].n_initialized += 1;
+        next_eval[i] = 1;
+    }
+    if n_eval == 1 || t1 <= t0 {
+        for i in 0..batch {
+            sol.status[i] = Status::Success;
+        }
+        return sol;
+    }
+
+    // Helper: batched dynamics evaluation through a freshly allocated
+    // BatchVec each time (torchdiffeq-style: no buffer reuse).
+    OP_COUNT.with(|c| c.set(0));
+    let eval = |t: f64, y: &[f64], sol: &mut Solution| -> Vec<f64> {
+        bump();
+        let yb = BatchVec::from_flat(y.to_vec(), batch, dim);
+        let mut out = BatchVec::zeros(batch, dim);
+        sys.f_batch(&vec![t; batch], &yb, &mut out, None);
+        for st in sol.stats.iter_mut() {
+            st.n_f_evals += 1;
+        }
+        out.flat().to_vec()
+    };
+
+    let mut f0 = eval(t, &y, &mut sol);
+
+    // Initial dt: same heuristic as the optimized loops but written per-op.
+    let mut dt = if let Some(h) = opts.fixed_dt.or(opts.dt0) {
+        h
+    } else {
+        // d0/d1 heuristic with separate passes.
+        let scale = op_add_scalar(&op_scale(&op_abs(&y), opts.tols.rtol(0)), opts.tols.atol(0));
+        let d0 = op_mean(&op_square(&op_div(&y, &scale))).sqrt();
+        let d1 = op_mean(&op_square(&op_div(&f0, &scale))).sqrt();
+        let h0 = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * d0 / d1 };
+        let y1 = op_add(&y, &op_scale(&f0, h0));
+        let f1 = eval(t + h0, &y1, &mut sol);
+        let d2 = op_mean(&op_square(&op_div(&op_sub(&f1, &f0), &scale))).sqrt() / h0;
+        let dmax = d1.max(d2);
+        let h1 = if dmax <= 1e-15 {
+            (h0 * 1e-3).max(1e-6)
+        } else {
+            (0.01 / dmax).powf(1.0 / (tab.order as f64 + 1.0))
+        };
+        (100.0 * h0).min(h1).min(t1 - t0)
+    };
+
+    let min_dt = (t1 - t0) * opts.min_dt_rel;
+    let mut steps = 0usize;
+    let mut status = Status::MaxStepsReached;
+    let mut trace: Vec<(f64, f64)> = Vec::new();
+
+    'outer: loop {
+        steps += 1;
+        if steps > opts.max_steps {
+            break;
+        }
+        let mut clamped = false;
+        if dt >= t1 - t {
+            dt = t1 - t;
+            clamped = true;
+        }
+
+        // Stages, one op per coefficient (the torchdiffeq pattern:
+        // yi = y + dt*a1*k1 + dt*a2*k2 + ... each as separate kernels).
+        let mut k: Vec<Vec<f64>> = Vec::with_capacity(tab.stages);
+        k.push(f0.clone());
+        for s in 1..tab.stages {
+            let mut ytmp = y.clone();
+            for (j, &a) in tab.a_row(s).iter().enumerate() {
+                if a != 0.0 {
+                    ytmp = op_add(&ytmp, &op_scale(&op_scale(&k[j], a), dt));
+                }
+            }
+            k.push(eval(t + tab.c[s] * dt, &ytmp, &mut sol));
+        }
+        for st in sol.stats.iter_mut() {
+            st.n_steps += 1;
+        }
+
+        // Solution and error, one pass per weight.
+        let mut y_new = y.clone();
+        for (j, &b) in tab.b.iter().enumerate() {
+            if b != 0.0 {
+                y_new = op_add(&y_new, &op_scale(&op_scale(&k[j], b), dt));
+            }
+        }
+        let mut err = vec![0.0; n];
+        for (j, &b) in tab.b_err.iter().enumerate() {
+            if b != 0.0 {
+                err = op_add(&err, &op_scale(&op_scale(&k[j], b), dt));
+            }
+        }
+
+        if y_new.iter().any(|v| !v.is_finite()) {
+            status = Status::NonFinite;
+            break;
+        }
+
+        let (accept, factor) = if adaptive {
+            // Error norm with separate abs/max/scale/div/square/mean/sqrt
+            // passes.
+            let scale = op_add_scalar(
+                &op_scale(&op_max(&op_abs(&y), &op_abs(&y_new)), opts.tols.rtol(0)),
+                opts.tols.atol(0),
+            );
+            let en = op_mean(&op_square(&op_div(&err, &scale))).sqrt();
+            let d = opts.controller.decide(en, tab.err_order, &ctrl);
+            if d.accept {
+                ctrl.push(en);
+            }
+            (d.accept, d.factor)
+        } else {
+            (true, 1.0)
+        };
+
+        if accept {
+            for st in sol.stats.iter_mut() {
+                st.n_accepted += 1;
+            }
+            let t_new = if clamped { t1 } else { t + dt };
+            if opts.record_trace {
+                trace.push((t, dt));
+            }
+
+            // Dense output via *naive* cubic Hermite evaluation, batched per
+            // evaluation-point index (one set of whole-batch tensor ops per
+            // eval time — the torchdiffeq pattern), with powers of θ as
+            // separate ops (no Horner — that is the point).
+            let f_end = if tab.fsal { k[tab.stages - 1].clone() } else { eval_no_count(&k[0]) };
+            let e_lo = *next_eval.iter().min().unwrap();
+            for e in e_lo..n_eval {
+                // Which instances want this point now?
+                let wants: Vec<bool> = (0..batch)
+                    .map(|i| next_eval[i] <= e && grid.row(i)[e] <= t_new)
+                    .collect();
+                if !wants.iter().any(|&w| w) {
+                    break;
+                }
+                // Per-instance θ, expanded over dim (a broadcast "kernel").
+                bump();
+                let theta_full: Vec<f64> = (0..n)
+                    .map(|idx| {
+                        let i = idx / dim;
+                        ((grid.row(i)[e] - t) / dt).clamp(0.0, 1.0)
+                    })
+                    .collect();
+                let th2 = op_square(&theta_full);
+                let th3 = op_mul(&th2, &theta_full);
+                // h00 = 2θ³ − 3θ² + 1, h10 = θ³ − 2θ² + θ,
+                // h01 = −2θ³ + 3θ², h11 = θ³ − θ².
+                let h00 = op_add_scalar(&op_sub(&op_scale(&th3, 2.0), &op_scale(&th2, 3.0)), 1.0);
+                let h10 = op_add(&op_sub(&th3, &op_scale(&th2, 2.0)), &theta_full);
+                let h01 = op_add(&op_scale(&th3, -2.0), &op_scale(&th2, 3.0));
+                let h11 = op_sub(&th3, &th2);
+                let part = op_add(
+                    &op_add(&op_mul(&h00, &y), &op_scale(&op_mul(&h10, &k[0]), dt)),
+                    &op_add(&op_mul(&h01, &y_new), &op_scale(&op_mul(&h11, &f_end), dt)),
+                );
+                bump(); // masked scatter into the output buffer
+                for i in 0..batch {
+                    if wants[i] {
+                        sol.y_mut(i, e).copy_from_slice(&part[i * dim..(i + 1) * dim]);
+                        sol.stats[i].n_initialized += 1;
+                        next_eval[i] = e + 1;
+                    }
+                }
+            }
+
+            y = y_new;
+            t = t_new;
+            f0 = if tab.fsal { k[tab.stages - 1].clone() } else { eval(t, &y, &mut sol) };
+
+            if next_eval.iter().all(|&e| e >= n_eval) {
+                status = Status::Success;
+                break 'outer;
+            }
+        }
+
+        dt *= factor;
+        if adaptive && dt < min_dt {
+            status = Status::DtUnderflow;
+            break;
+        }
+    }
+
+    for i in 0..batch {
+        sol.status[i] = status;
+    }
+    if opts.record_trace {
+        let mut traces = vec![Vec::new(); batch];
+        traces[0] = trace;
+        sol.trace = Some(traces);
+    }
+    sol
+}
+
+/// Clone helper for the non-FSAL Hermite endpoint (no feval counted — the
+/// slope is stale by one step, same fallback the joint loop uses).
+fn eval_no_count(k0: &[f64]) -> Vec<f64> {
+    k0.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, VdP};
+    use crate::solver::{solve_ivp_joint, Method};
+
+    #[test]
+    fn op_count_tracks_work() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 2);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 3);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
+        let ops = last_op_count();
+        // At least ~30 ops per step (6 evals + per-coefficient passes).
+        assert!(
+            ops > 30 * sol.stats[0].n_steps,
+            "ops {ops} for {} steps",
+            sol.stats[0].n_steps
+        );
+    }
+
+    #[test]
+    fn naive_accuracy() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 3);
+        let grid = TimeGrid::linspace_shared(3, 0.0, 1.0, 5);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for i in 0..3 {
+            assert!((sol.y_final(i)[0] - (-1.0f64).exp()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn naive_matches_joint_step_counts() {
+        // Same semantics => identical accept/reject trajectory (up to FP
+        // reordering; VdP at modest tolerance keeps them in lockstep).
+        let sys = VdP::new(vec![2.0, 8.0]);
+        let y0 = BatchVec::broadcast(&[2.0, 0.0], 2);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let a = solve_ivp_naive(&sys, &y0, &grid, &opts);
+        let b = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        assert!(a.all_success() && b.all_success());
+        let (sa, sb) = (a.stats[0].n_steps as f64, b.stats[0].n_steps as f64);
+        assert!((sa - sb).abs() / sb < 0.1, "naive {sa} vs joint {sb}");
+        for d in 0..2 {
+            assert!((a.y_final(0)[d] - b.y_final(0)[d]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn naive_tsit5_works() {
+        let sys = ExponentialDecay::new(vec![2.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 1);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 3);
+        let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        assert!((sol.y_final(0)[0] - (-2.0f64).exp()).abs() < 1e-6);
+    }
+}

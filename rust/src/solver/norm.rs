@@ -1,0 +1,97 @@
+//! Tolerance-scaled error norms.
+//!
+//! The scaled error of a step from `y0` to `y1` with raw embedded error
+//! `err` is `err_i / (atol + rtol · max(|y0_i|, |y1_i|))`; a step is
+//! acceptable iff the norm of that vector is ≤ 1. The default is the RMS
+//! ("Hairer") norm; a max norm is provided as an alternative.
+
+/// Which reduction to apply to the scaled error vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    /// sqrt(mean(x²)) — the default in torchode, torchdiffeq and diffrax.
+    Rms,
+    /// max(|x|).
+    Max,
+}
+
+/// Fused scaled-norm computation for one instance: a single pass over the
+/// three input slices, no temporaries (the native analogue of the fused
+/// `error_norm` Pallas kernel).
+#[inline]
+pub fn scaled_norm(
+    kind: NormKind,
+    err: &[f64],
+    y0: &[f64],
+    y1: &[f64],
+    atol: f64,
+    rtol: f64,
+) -> f64 {
+    debug_assert_eq!(err.len(), y0.len());
+    debug_assert_eq!(err.len(), y1.len());
+    match kind {
+        NormKind::Rms => {
+            let mut acc = 0.0;
+            for i in 0..err.len() {
+                let scale = atol + rtol * y0[i].abs().max(y1[i].abs());
+                let r = err[i] / scale;
+                acc += r * r;
+            }
+            (acc / err.len() as f64).sqrt()
+        }
+        NormKind::Max => {
+            let mut m = 0.0f64;
+            for i in 0..err.len() {
+                let scale = atol + rtol * y0[i].abs().max(y1[i].abs());
+                m = m.max((err[i] / scale).abs());
+            }
+            m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_of_uniform_error() {
+        // err = scale everywhere => norm 1.
+        let y0 = [0.0, 0.0, 0.0];
+        let y1 = [0.0, 0.0, 0.0];
+        let err = [1e-6, 1e-6, 1e-6];
+        let n = scaled_norm(NormKind::Rms, &err, &y0, &y1, 1e-6, 0.0);
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rtol_uses_larger_state() {
+        let y0 = [2.0];
+        let y1 = [4.0];
+        let err = [0.4];
+        // scale = 0 + 0.1 * 4 = 0.4 => norm 1
+        let n = scaled_norm(NormKind::Rms, &err, &y0, &y1, 0.0, 0.1);
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_norm_dominates_rms() {
+        let y0 = [0.0, 0.0];
+        let y1 = [0.0, 0.0];
+        let err = [1e-6, 0.0];
+        let rms = scaled_norm(NormKind::Rms, &err, &y0, &y1, 1e-6, 0.0);
+        let mx = scaled_norm(NormKind::Max, &err, &y0, &y1, 1e-6, 0.0);
+        assert!(mx >= rms);
+        assert!((mx - 1.0).abs() < 1e-12);
+        assert!((rms - (0.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_components_scale_by_abs() {
+        let y0 = [-10.0];
+        let y1 = [1.0];
+        let err = [1.0];
+        // scale = 0 + 0.1 * 10 = 1
+        let n = scaled_norm(NormKind::Rms, &err, &y0, &y1, 0.0, 0.1);
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,502 @@
+//! The parallel solve loop — torchode's contribution.
+//!
+//! Every instance carries its own time, step size, controller history,
+//! accept/reject decision, dense-output cursor and status. The dynamics
+//! are still evaluated in one batched call per stage (with "overhanging"
+//! evaluations for already-finished instances, unless
+//! [`super::SolveOptions::eval_inactive`] is disabled), so a batch never
+//! forces instances to share a step size — the failure mode of §4.1.
+
+use super::controller::ControllerState;
+use super::init::initial_step_batch;
+use super::interp::{self, DOPRI5_NCOEFF};
+use super::norm::{scaled_norm, NormKind};
+use super::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use super::tableau::DenseOutput;
+use super::{SolveOptions, Solution, Status, TimeGrid};
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// Solve a batch of independent IVPs with fully per-instance solver state.
+///
+/// `y0` is `(batch, dim)`; `grid.row(i)` holds instance `i`'s evaluation
+/// times (ascending; integration runs over `[grid.t0(i), grid.t1(i)]`).
+pub fn solve_ivp_parallel(
+    sys: &dyn OdeSystem,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    let dim = y0.dim();
+    assert_eq!(grid.batch(), batch, "grid/initial-state batch mismatch");
+    assert_eq!(sys.dim(), dim, "system/initial-state dim mismatch");
+    let n_eval = grid.n_eval();
+    let tab = opts.method.tableau();
+    let ct = CompiledTableau::new(tab);
+    let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
+
+    let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut trace: Vec<Vec<(f64, f64)>> = if opts.record_trace {
+        vec![Vec::new(); batch]
+    } else {
+        Vec::new()
+    };
+
+    // --- per-instance state ------------------------------------------------
+    let mut y = y0.clone();
+    let mut t: Vec<f64> = (0..batch).map(|i| grid.t0(i)).collect();
+    let mut finished = vec![false; batch];
+    let mut k0_ready = vec![false; batch];
+    let mut ctrl = vec![ControllerState::default(); batch];
+    let mut next_eval = vec![0usize; batch];
+    let span: Vec<f64> = (0..batch).map(|i| grid.t1(i) - grid.t0(i)).collect();
+
+    let mut ws = RkWorkspace::new(tab.stages, batch, dim);
+    // Previous-step slopes for Hermite interpolation (f at step start).
+    let mut f_start = BatchVec::zeros(batch, dim);
+    let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
+
+    // First eval point == t0: emit y0 directly.
+    for i in 0..batch {
+        sol.y_mut(i, 0).copy_from_slice(y.row(i));
+        sol.stats[i].n_initialized += 1;
+        next_eval[i] = 1;
+        if n_eval == 1 || span[i] <= 0.0 {
+            finished[i] = true;
+            sol.status[i] = Status::Success;
+        }
+    }
+
+    // Initial slopes f(t0, y0): one batched call.
+    sys.f_batch(&t, &y, &mut ws.k[0], None);
+    for s in sol.stats.iter_mut() {
+        s.n_f_evals += 1;
+    }
+    f_start.copy_from(&ws.k[0]);
+    for r in k0_ready.iter_mut() {
+        *r = true;
+    }
+
+    // Initial step sizes.
+    let mut dt: Vec<f64> = match (opts.fixed_dt, opts.dt0) {
+        (Some(h), _) => vec![h; batch],
+        (None, Some(h)) => vec![h; batch],
+        (None, None) => {
+            let dt0 = initial_step_batch(
+                sys,
+                &t,
+                &y,
+                &ws.k[0],
+                tab.order,
+                &opts.tols,
+                &span,
+                &mut ws.ytmp,
+                &mut ws.y_new,
+            );
+            for s in sol.stats.iter_mut() {
+                s.n_f_evals += 1;
+            }
+            dt0
+        }
+    };
+
+    let min_dt: Vec<f64> = span.iter().map(|s| s.abs() * opts.min_dt_rel).collect();
+
+    // --- main loop -----------------------------------------------------------
+    // Per-iteration buffers hoisted out of the loop (§Perf: allocation-free
+    // steady state).
+    let mut clamped = vec![false; batch];
+    let mut active = vec![true; batch];
+    let mut iter = 0usize;
+    while finished.iter().any(|f| !f) {
+        iter += 1;
+        if iter > opts.max_steps {
+            for i in 0..batch {
+                if !finished[i] {
+                    sol.status[i] = Status::MaxStepsReached;
+                    finished[i] = true;
+                }
+            }
+            break;
+        }
+
+        // Clamp step to the remaining span; remember who was clamped so the
+        // final time is hit exactly.
+        for i in 0..batch {
+            clamped[i] = false;
+            active[i] = !finished[i];
+            if finished[i] {
+                continue;
+            }
+            let remaining = grid.t1(i) - t[i];
+            if dt[i] >= remaining {
+                dt[i] = remaining;
+                clamped[i] = true;
+            }
+        }
+        let calls = rk_attempt(
+            &ct,
+            sys,
+            &t,
+            &dt,
+            &y,
+            &mut ws,
+            &k0_ready,
+            Some(&active),
+            opts.eval_inactive,
+        );
+        // torchode semantics: every instance experiences every batched call.
+        for s in sol.stats.iter_mut() {
+            s.n_f_evals += calls;
+        }
+
+        for i in 0..batch {
+            if finished[i] {
+                continue;
+            }
+            sol.stats[i].n_steps += 1;
+
+            // Non-finite guard.
+            let y_new = ws.y_new.row(i);
+            if y_new.iter().any(|v| !v.is_finite()) {
+                sol.status[i] = Status::NonFinite;
+                finished[i] = true;
+                continue;
+            }
+
+            let (accept, factor) = if adaptive {
+                let en = scaled_norm(
+                    NormKind::Rms,
+                    ws.err.row(i),
+                    y.row(i),
+                    y_new,
+                    opts.tols.atol(i),
+                    opts.tols.rtol(i),
+                );
+                let d = opts.controller.decide(en, tab.err_order, &ctrl[i]);
+                if d.accept {
+                    ctrl[i].push(en);
+                }
+                (d.accept, d.factor)
+            } else {
+                (true, 1.0)
+            };
+
+            if accept {
+                sol.stats[i].n_accepted += 1;
+                let t_new = if clamped[i] { grid.t1(i) } else { t[i] + dt[i] };
+                if opts.record_trace {
+                    trace[i].push((t[i], dt[i]));
+                }
+
+                // Dense output: fill every eval point in (t, t_new].
+                let h = dt[i];
+                if next_eval[i] < n_eval {
+                    let te_row = grid.row(i);
+                    let mut e = next_eval[i];
+                    let mut coeffs_ready = false;
+                    while e < n_eval && te_row[e] <= t_new {
+                        let theta = ((te_row[e] - t[i]) / h).clamp(0.0, 1.0);
+                        match tab.dense {
+                            DenseOutput::Dopri5 => {
+                                if !coeffs_ready {
+                                    let krows: Vec<&[f64]> =
+                                        ws.k.iter().map(|k| k.row(i)).collect();
+                                    interp::dopri5_coeffs(
+                                        h,
+                                        y.row(i),
+                                        ws.y_new.row(i),
+                                        &krows,
+                                        &mut interp_coeffs,
+                                    );
+                                    coeffs_ready = true;
+                                }
+                                interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
+                            }
+                            DenseOutput::Hermite => {
+                                // f at the step end: FSAL stage if available,
+                                // else reuse the step-start slope (2nd order
+                                // fallback, only for non-FSAL fixed-step
+                                // methods).
+                                let f_end = if tab.fsal {
+                                    ws.k[tab.stages - 1].row(i)
+                                } else {
+                                    f_start.row(i)
+                                };
+                                interp::hermite_eval(
+                                    theta,
+                                    h,
+                                    y.row(i),
+                                    f_start.row(i),
+                                    ws.y_new.row(i),
+                                    f_end,
+                                    sol.y_mut(i, e),
+                                );
+                            }
+                        }
+                        sol.stats[i].n_initialized += 1;
+                        e += 1;
+                    }
+                    next_eval[i] = e;
+                }
+
+                // Commit the step.
+                y.row_mut(i).copy_from_slice(ws.y_new.row(i));
+                t[i] = t_new;
+                if tab.fsal {
+                    // k[last] is f(t_new, y_new): becomes next k[0].
+                    let (head, tail) = ws.k.split_at_mut(tab.stages - 1);
+                    let (first, _) = head.split_first_mut().unwrap();
+                    first.row_mut(i).copy_from_slice(tail[0].row(i));
+                    f_start.row_mut(i).copy_from_slice(tail[0].row(i));
+                    k0_ready[i] = true;
+                } else {
+                    k0_ready[i] = false;
+                }
+
+                if next_eval[i] >= n_eval {
+                    sol.status[i] = Status::Success;
+                    finished[i] = true;
+                }
+            } else {
+                // Rejected: same (t, y), so k[0] stays valid for any method
+                // that already computed it.
+                k0_ready[i] = true;
+            }
+
+            dt[i] *= factor;
+            if adaptive && !finished[i] && dt[i] < min_dt[i] {
+                sol.status[i] = Status::DtUnderflow;
+                finished[i] = true;
+            }
+        }
+
+        // Non-FSAL: k[0] must be re-evaluated for accepted rows; rejected
+        // rows keep the cached slope. Also refresh f_start for Hermite.
+        if !tab.fsal {
+            let cold: Vec<bool> = k0_ready.iter().map(|r| !r).collect();
+            if cold.iter().any(|&c| c) {
+                sys.f_batch(&t, &y, &mut ws.k[0], Some(&cold));
+                for s in sol.stats.iter_mut() {
+                    s.n_f_evals += 1;
+                }
+                for i in 0..batch {
+                    if cold[i] {
+                        f_start.row_mut(i).copy_from_slice(ws.k[0].row(i));
+                        k0_ready[i] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    if opts.record_trace {
+        sol.trace = Some(trace);
+    }
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, LinearSystem, LotkaVolterra, VdP};
+    use crate::solver::{Controller, Method};
+
+    #[test]
+    fn exponential_decay_accuracy() {
+        let sys = ExponentialDecay::new(vec![1.0], 2);
+        let y0 = BatchVec::from_rows(&[vec![1.0, -2.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 21);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for e in 0..21 {
+            let t = grid.row(0)[e];
+            let exact = (-t).exp();
+            assert!((sol.y(0, e)[0] - exact).abs() < 1e-6, "e={e}");
+            assert!((sol.y(0, e)[1] + 2.0 * exact).abs() < 1e-6, "e={e}");
+        }
+    }
+
+    #[test]
+    fn damped_rotation_accuracy_all_adaptive_methods() {
+        let (decay, omega) = (0.2, 3.0);
+        let sys = LinearSystem::damped_rotation(decay, omega);
+        let y0 = BatchVec::from_rows(&[vec![1.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 3.0, 7);
+        for m in [Method::Heun, Method::Bosh3, Method::Fehlberg45, Method::CashKarp45, Method::Dopri5, Method::Tsit5] {
+            let opts = SolveOptions::new(m).with_tols(1e-7, 1e-7).with_max_steps(100_000);
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success(), "{m:?}: {:?}", sol.status);
+            let mut exact = [0.0; 2];
+            LinearSystem::damped_rotation_exact(decay, omega, &[1.0, 0.0], 3.0, &mut exact);
+            let got = sol.y_final(0);
+            for d in 0..2 {
+                assert!(
+                    (got[d] - exact[d]).abs() < 1e-4,
+                    "{m:?}: {got:?} vs {exact:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_step_methods_converge() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::from_rows(&[vec![1.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
+        for (m, tol) in [(Method::Euler, 5e-3), (Method::Midpoint, 1e-4), (Method::Rk4, 1e-8)] {
+            let opts = SolveOptions::new(m).with_fixed_dt(1e-3).with_max_steps(10_000);
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success(), "{m:?}");
+            let err = (sol.y_final(0)[0] - (-1.0f64).exp()).abs();
+            assert!(err < tol, "{m:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn per_instance_integration_ranges() {
+        // Instance 0: [0, 1]; instance 1: [5, 7] — no special handling.
+        let sys = ExponentialDecay::new(vec![1.0, 0.5], 1);
+        let y0 = BatchVec::from_rows(&[vec![1.0], vec![2.0]]);
+        let grid = TimeGrid::from_rows(&[
+            (0..11).map(|k| k as f64 / 10.0).collect(),
+            (0..11).map(|k| 5.0 + 2.0 * k as f64 / 10.0).collect(),
+        ]);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        assert!((sol.y_final(0)[0] - (-1.0f64).exp()).abs() < 1e-6);
+        assert!((sol.y_final(1)[0] - 2.0 * (-0.5f64 * 2.0).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let sys = VdP::new(vec![2.0, 25.0]);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0], vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 10.0, 50);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for st in &sol.stats {
+            assert!(st.n_accepted <= st.n_steps);
+            assert_eq!(st.n_initialized, 50);
+            assert!(st.n_f_evals > st.n_steps);
+        }
+        // n_f_evals is uniform across the batch (torchode semantics).
+        assert_eq!(sol.stats[0].n_f_evals, sol.stats[1].n_f_evals);
+        // The stiff instance needs more steps.
+        assert!(sol.stats[1].n_steps > sol.stats[0].n_steps);
+    }
+
+    #[test]
+    fn dense_output_matches_tight_solve() {
+        // Solve once with 5 eval points and once with 41; shared points must
+        // agree to interpolation accuracy.
+        let sys = LotkaVolterra::uniform(1, 1.1, 0.4, 0.1, 0.4);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 1.0]]);
+        let coarse = TimeGrid::linspace_shared(1, 0.0, 8.0, 5);
+        let fine = TimeGrid::linspace_shared(1, 0.0, 8.0, 41);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-9, 1e-9);
+        let sc = solve_ivp_parallel(&sys, &y0, &coarse, &opts);
+        let sf = solve_ivp_parallel(&sys, &y0, &fine, &opts);
+        assert!(sc.all_success() && sf.all_success());
+        for e in 0..5 {
+            let yc = sc.y(0, e);
+            let yf = sf.y(0, e * 10);
+            for d in 0..2 {
+                assert!((yc[d] - yf[d]).abs() < 1e-6, "e={e} d={d}: {} vs {}", yc[d], yf[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn max_steps_reported() {
+        let sys = VdP::new(vec![1000.0]); // very stiff
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 100.0, 10);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8).with_max_steps(50);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert_eq!(sol.status[0], Status::MaxStepsReached);
+    }
+
+    #[test]
+    fn batch_of_identical_problems_identical_answers() {
+        let b = 8;
+        let sys = VdP::uniform(b, 2.0);
+        let y0 = BatchVec::broadcast(&[1.0, 0.5], b);
+        let grid = TimeGrid::linspace_shared(b, 0.0, 5.0, 10);
+        let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-6);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for i in 1..b {
+            assert_eq!(sol.stats[i], sol.stats[0]);
+            for e in 0..10 {
+                assert_eq!(sol.y(i, e), sol.y(0, e));
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_batch_isolated() {
+        // A very stiff instance must not change the easy instance's answer
+        // beyond tolerance (bitwise isolation isn't required because the
+        // controller is per-instance anyway; check solution agreement
+        // against a solo solve).
+        let easy_solo = {
+            let sys = VdP::new(vec![0.5]);
+            let y0 = BatchVec::from_rows(&[vec![1.0, 0.0]]);
+            let grid = TimeGrid::linspace_shared(1, 0.0, 5.0, 10);
+            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+            solve_ivp_parallel(&sys, &y0, &grid, &opts)
+        };
+        let mixed = {
+            let sys = VdP::new(vec![0.5, 40.0]);
+            let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
+            let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
+            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+            solve_ivp_parallel(&sys, &y0, &grid, &opts)
+        };
+        assert!(mixed.all_success());
+        // Identical per-instance state machine => identical trajectory.
+        for e in 0..10 {
+            for d in 0..2 {
+                assert_eq!(mixed.y(0, e)[d], easy_solo.y(0, e)[d]);
+            }
+        }
+        assert_eq!(mixed.stats[0].n_steps, easy_solo.stats[0].n_steps);
+    }
+
+    #[test]
+    fn trace_recorded_when_requested() {
+        let sys = VdP::new(vec![5.0]);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 10.0, 5);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_trace();
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        let trace = sol.trace.as_ref().unwrap();
+        assert_eq!(trace[0].len() as u64, sol.stats[0].n_accepted);
+        // Times strictly increasing, dts positive.
+        for w in trace[0].windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+        assert!(trace[0].iter().all(|&(_, dt)| dt > 0.0));
+    }
+
+    #[test]
+    fn convergence_order_dopri5() {
+        // Global error should scale ~dt^5 with fixed steps.
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::from_rows(&[vec![1.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
+        let mut errs = Vec::new();
+        for &h in &[0.1, 0.05] {
+            let opts = SolveOptions::new(Method::Dopri5).with_fixed_dt(h);
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            errs.push((sol.y_final(0)[0] - (-1.0f64).exp()).abs());
+        }
+        let order = (errs[0] / errs[1]).log2();
+        assert!(order > 4.5, "measured order {order}");
+    }
+}

@@ -1,0 +1,340 @@
+//! The shared RK stage kernel.
+//!
+//! One "attempt" computes all stages, the 5th-order solution and the
+//! embedded error for the whole batch with per-instance `(t, dt)`. The
+//! dynamics are evaluated **once per stage for the entire batch** — the
+//! same call pattern a GPU implementation uses, and the reason parallel
+//! solving costs almost nothing extra (torchode §3).
+//!
+//! Implementation notes mirroring the paper's optimizations:
+//!
+//! - coefficients are pre-filtered for zeros ([`CompiledTableau`]), so the
+//!   inner loops never multiply by 0 (torchode's `einsum` over a sparse b),
+//! - stage accumulation, solution update and error estimate are each one
+//!   fused pass over memory with no temporaries (`addcmul`-style),
+//! - all buffers live in a pre-allocated [`RkWorkspace`] reused across
+//!   steps ("pre-allocated buffers").
+
+use super::tableau::Tableau;
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// A tableau with zero coefficients stripped, built once per solve.
+#[derive(Debug, Clone)]
+pub struct CompiledTableau {
+    pub tab: &'static Tableau,
+    /// Per stage `s`: the nonzero `(j, a_sj)` pairs.
+    pub a_nz: Vec<Vec<(usize, f64)>>,
+    /// Nonzero `(j, b_j)` pairs.
+    pub b_nz: Vec<(usize, f64)>,
+    /// Nonzero `(j, b_err_j)` pairs.
+    pub berr_nz: Vec<(usize, f64)>,
+}
+
+impl CompiledTableau {
+    pub fn new(tab: &'static Tableau) -> Self {
+        let a_nz = (0..tab.stages)
+            .map(|s| {
+                if s == 0 {
+                    Vec::new()
+                } else {
+                    tab.a_row(s)
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &v)| v != 0.0)
+                        .map(|(j, &v)| (j, v))
+                        .collect()
+                }
+            })
+            .collect();
+        let b_nz = tab.b.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
+        let berr_nz =
+            tab.b_err.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
+        Self { tab, a_nz, b_nz, berr_nz }
+    }
+}
+
+/// Pre-allocated buffers for the RK attempt, reused across all steps of a
+/// solve.
+pub struct RkWorkspace {
+    /// Stage slopes `k[s]`, each `(batch, dim)`.
+    pub k: Vec<BatchVec>,
+    /// Stage input `y + dt Σ a k`.
+    pub ytmp: BatchVec,
+    /// Proposed solution.
+    pub y_new: BatchVec,
+    /// Raw embedded error estimate.
+    pub err: BatchVec,
+    /// Per-instance stage times.
+    pub t_stage: Vec<f64>,
+}
+
+impl RkWorkspace {
+    pub fn new(stages: usize, batch: usize, dim: usize) -> Self {
+        Self {
+            k: (0..stages).map(|_| BatchVec::zeros(batch, dim)).collect(),
+            ytmp: BatchVec::zeros(batch, dim),
+            y_new: BatchVec::zeros(batch, dim),
+            err: BatchVec::zeros(batch, dim),
+            t_stage: vec![0.0; batch],
+        }
+    }
+}
+
+/// Compute one RK attempt for the whole batch.
+///
+/// - `k0_ready[i]`: instance `i`'s `k[0]` already holds `f(t_i, y_i)`
+///   (FSAL cache, or an unchanged slope after a rejection).
+/// - `active`: rows to update; inactive rows keep `ytmp = y` so the
+///   batched dynamics evaluation still sees valid states (torchode's
+///   "overhanging" model evaluations). If `eval_inactive` is false the
+///   dynamics are told to skip inactive rows instead.
+///
+/// Returns the number of batched dynamics calls made.
+#[allow(clippy::too_many_arguments)]
+pub fn rk_attempt(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    t: &[f64],
+    dt: &[f64],
+    y: &BatchVec,
+    ws: &mut RkWorkspace,
+    k0_ready: &[bool],
+    active: Option<&[bool]>,
+    eval_inactive: bool,
+) -> u64 {
+    let tab = ct.tab;
+    let batch = y.batch();
+    let dim = y.dim();
+    let mut n_calls = 0u64;
+
+    let eval_mask = if eval_inactive { None } else { active };
+
+    // Stage 0: evaluate only where the cache is cold. We still issue one
+    // batched call if *any* row needs it (matching the GPU cost model).
+    if k0_ready.iter().any(|r| !r) {
+        // Rows with a warm cache must not be overwritten: evaluate into
+        // ytmp-backed scratch via mask trickery — simplest correct scheme:
+        // evaluate the full batch into a scratch and copy the cold rows.
+        // To avoid an extra buffer we evaluate row-wise through f_batch
+        // with an activity mask selecting the cold rows.
+        let cold: Vec<bool> = k0_ready
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| !r && eval_mask.map_or(true, |m| m[i]))
+            .collect();
+        ws.t_stage.copy_from_slice(t);
+        // Borrow juggling: evaluate into k[0] directly with the cold mask.
+        let k0 = &mut ws.k[0];
+        sys.f_batch(&ws.t_stage, y, k0, Some(&cold));
+        n_calls += 1;
+    }
+
+    // Stages 1..S.
+    for s in 1..tab.stages {
+        // ytmp = y + dt * Σ_j a_sj k_j  (one fused pass; inner loop over
+        // the nonzero coefficients only). Stage-slope rows are hoisted out
+        // of the element loop (§Perf: per-element `row()` slicing cost
+        // ~35 % of the attempt at dim 2).
+        let nz = &ct.a_nz[s];
+        for i in 0..batch {
+            let act = active.map_or(true, |m| m[i]);
+            let yrow = y.row(i);
+            if !act {
+                // Keep a valid state for the batched eval.
+                ws.ytmp.row_mut(i).copy_from_slice(yrow);
+                ws.t_stage[i] = t[i];
+                continue;
+            }
+            let h = dt[i];
+            ws.t_stage[i] = t[i] + tab.c[s] * h;
+            let out = ws.ytmp.row_mut(i);
+            match nz.len() {
+                1 => {
+                    let (j0, w0) = nz[0];
+                    let k0 = ws.k[j0].row(i);
+                    for d in 0..dim {
+                        out[d] = yrow[d] + h * w0 * k0[d];
+                    }
+                }
+                2 => {
+                    let (j0, w0) = nz[0];
+                    let (j1, w1) = nz[1];
+                    let (k0, k1) = (ws.k[j0].row(i), ws.k[j1].row(i));
+                    for d in 0..dim {
+                        out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
+                    }
+                }
+                _ => {
+                    // Hoist the row slices once per instance.
+                    let mut krows: [&[f64]; 8] = [&[]; 8];
+                    for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
+                        *slot = ws.k[j].row(i);
+                    }
+                    for d in 0..dim {
+                        let mut acc = 0.0;
+                        for (idx, &(_, w)) in nz.iter().enumerate() {
+                            acc += w * krows[idx][d];
+                        }
+                        out[d] = yrow[d] + h * acc;
+                    }
+                }
+            }
+        }
+        // One batched dynamics call for this stage.
+        let (head, tail) = ws.k.split_at_mut(s);
+        let _ = head;
+        sys.f_batch(&ws.t_stage, &ws.ytmp, &mut tail[0], eval_mask);
+        n_calls += 1;
+    }
+
+    // Solution + error in one fused pass per row, with hoisted slope rows.
+    let has_err = !ct.berr_nz.is_empty();
+    for i in 0..batch {
+        if !active.map_or(true, |m| m[i]) {
+            continue;
+        }
+        let h = dt[i];
+        let yrow = y.row(i);
+        let mut brows: [&[f64]; 8] = [&[]; 8];
+        for (slot, &(j, _)) in brows.iter_mut().zip(ct.b_nz.iter()) {
+            *slot = ws.k[j].row(i);
+        }
+        {
+            let out = ws.y_new.row_mut(i);
+            for d in 0..dim {
+                let mut acc = 0.0;
+                for (idx, &(_, w)) in ct.b_nz.iter().enumerate() {
+                    acc += w * brows[idx][d];
+                }
+                out[d] = yrow[d] + h * acc;
+            }
+        }
+        if has_err {
+            let mut erows: [&[f64]; 8] = [&[]; 8];
+            for (slot, &(j, _)) in erows.iter_mut().zip(ct.berr_nz.iter()) {
+                *slot = ws.k[j].row(i);
+            }
+            let out = ws.err.row_mut(i);
+            for d in 0..dim {
+                let mut acc = 0.0;
+                for (idx, &(_, w)) in ct.berr_nz.iter().enumerate() {
+                    acc += w * erows[idx][d];
+                }
+                out[d] = h * acc;
+            }
+        }
+    }
+
+    n_calls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{ExponentialDecay, OdeSystem};
+    use crate::solver::tableau;
+
+    /// One dopri5 step on dy/dt = -y must be 5th-order accurate.
+    #[test]
+    fn dopri5_single_step_accuracy() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let mut ws = RkWorkspace::new(7, 1, 1);
+        let y = BatchVec::from_rows(&[vec![1.0]]);
+        let dt = 0.1;
+        rk_attempt(&ct, &sys, &[0.0], &[dt], &y, &mut ws, &[false], None, true);
+        let exact = (-dt_f64(dt)).exp();
+        let got = ws.y_new.row(0)[0];
+        assert!((got - exact).abs() < 1e-9, "{got} vs {exact}");
+        // Error estimate should be small but nonzero.
+        assert!(ws.err.row(0)[0].abs() > 0.0);
+        assert!(ws.err.row(0)[0].abs() < 1e-6);
+    }
+
+    fn dt_f64(x: f64) -> f64 {
+        x
+    }
+
+    /// Halving dt must reduce the one-step error by ~2^6 for dopri5
+    /// (local error order = global order + 1).
+    #[test]
+    fn dopri5_local_order() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let mut ws = RkWorkspace::new(7, 1, 1);
+        let y = BatchVec::from_rows(&[vec![1.0]]);
+        let mut errs = Vec::new();
+        for &dt in &[0.2, 0.1] {
+            rk_attempt(&ct, &sys, &[0.0], &[dt], &y, &mut ws, &[false], None, true);
+            errs.push((ws.y_new.row(0)[0] - (-dt).exp()).abs());
+        }
+        let ratio = errs[0] / errs[1];
+        assert!(ratio > 40.0, "one-step error ratio {ratio} too small for order 5");
+    }
+
+    /// Per-instance dt: two instances stepped with different dt must land
+    /// on their own exp(-dt).
+    #[test]
+    fn per_instance_dt() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let mut ws = RkWorkspace::new(7, 2, 1);
+        let y = BatchVec::from_rows(&[vec![1.0], vec![1.0]]);
+        rk_attempt(&ct, &sys, &[0.0, 0.0], &[0.05, 0.2], &y, &mut ws, &[false, false], None, true);
+        assert!((ws.y_new.row(0)[0] - (-0.05f64).exp()).abs() < 1e-10);
+        assert!((ws.y_new.row(1)[0] - (-0.2f64).exp()).abs() < 1e-6);
+    }
+
+    /// Inactive rows are not updated.
+    #[test]
+    fn inactive_rows_untouched() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let mut ws = RkWorkspace::new(7, 2, 1);
+        ws.y_new.row_mut(0)[0] = 123.0;
+        let y = BatchVec::from_rows(&[vec![1.0], vec![1.0]]);
+        rk_attempt(
+            &ct,
+            &sys,
+            &[0.0, 0.0],
+            &[0.1, 0.1],
+            &y,
+            &mut ws,
+            &[false, false],
+            Some(&[false, true]),
+            true,
+        );
+        assert_eq!(ws.y_new.row(0)[0], 123.0);
+        assert!((ws.y_new.row(1)[0] - (-0.1f64).exp()).abs() < 1e-9);
+    }
+
+    /// FSAL reuse: priming k[0] with the exact slope and claiming
+    /// `k0_ready` must give the same result as a cold start.
+    #[test]
+    fn fsal_cache_equivalence() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let y = BatchVec::from_rows(&[vec![2.0]]);
+
+        let mut ws_cold = RkWorkspace::new(7, 1, 1);
+        rk_attempt(&ct, &sys, &[0.0], &[0.1], &y, &mut ws_cold, &[false], None, true);
+
+        let mut ws_warm = RkWorkspace::new(7, 1, 1);
+        ws_warm.k[0].row_mut(0)[0] = -2.0; // f(0, 2) = -2
+        rk_attempt(&ct, &sys, &[0.0], &[0.1], &y, &mut ws_warm, &[true], None, true);
+
+        assert!((ws_cold.y_new.row(0)[0] - ws_warm.y_new.row(0)[0]).abs() < 1e-15);
+    }
+
+    /// Compiled tableau strips zeros.
+    #[test]
+    fn compiled_tableau_sparsity() {
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        // dopri5 b has zeros at positions 1 and 6.
+        assert_eq!(ct.b_nz.len(), 5);
+        assert!(ct.b_nz.iter().all(|&(j, _)| j != 1 && j != 6));
+        // row 3 of a (stage 3) is fully dense (3 entries).
+        assert_eq!(ct.a_nz[3].len(), 3);
+    }
+}

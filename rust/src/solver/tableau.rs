@@ -1,0 +1,501 @@
+//! Butcher tableaus for explicit Runge–Kutta methods.
+//!
+//! Coefficients are stored as static data. `a` is the strictly
+//! lower-triangular stage matrix flattened row by row (row `i` has `i`
+//! entries), `b` the solution weights, `b_err` the *error* weights
+//! (`b - b̂`, so the embedded error estimate is `dt * Σ b_err[i] * k[i]`),
+//! and `c` the nodes.
+//!
+//! The same coefficients are emitted by `python/compile/tableaus.py`; the
+//! golden test `tests/tableau_cross_check.rs` keeps the two in sync.
+
+/// An explicit Runge–Kutta tableau with an optional embedded error estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct Tableau {
+    pub name: &'static str,
+    /// Number of stages (incl. the FSAL stage if present).
+    pub stages: usize,
+    /// Order of the solution polynomial.
+    pub order: usize,
+    /// Order of the embedded (error-estimating) method; 0 = fixed step only.
+    pub err_order: usize,
+    /// Strictly lower-triangular stage matrix, flattened: row i has i entries.
+    pub a: &'static [f64],
+    /// Solution weights (len = stages).
+    pub b: &'static [f64],
+    /// Error weights `b - b̂` (len = stages, empty if no embedded method).
+    pub b_err: &'static [f64],
+    /// Nodes (len = stages).
+    pub c: &'static [f64],
+    /// First-same-as-last: k[last] of an accepted step equals k[0] of the next.
+    pub fsal: bool,
+    /// Has dedicated dense-output coefficients (otherwise cubic Hermite).
+    pub dense: DenseOutput,
+}
+
+/// Which dense-output interpolant a tableau provides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseOutput {
+    /// 3rd-order cubic Hermite from (y0, f0, y1, f1) — always available.
+    Hermite,
+    /// Dopri5's dedicated 4th-order interpolant (Hairer's `rcont` scheme).
+    Dopri5,
+}
+
+impl Tableau {
+    /// `a[i][j]` for stage `i`, column `j < i`.
+    #[inline]
+    pub fn a(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j < i);
+        self.a[i * (i - 1) / 2 + j]
+    }
+
+    /// Row `i` of the stage matrix (the `i` coefficients feeding stage `i`).
+    #[inline]
+    pub fn a_row(&self, i: usize) -> &'static [f64] {
+        let lo = i * (i - 1) / 2;
+        &self.a[lo..lo + i]
+    }
+
+    /// Whether the tableau carries an embedded error estimate.
+    #[inline]
+    pub fn adaptive(&self) -> bool {
+        !self.b_err.is_empty()
+    }
+}
+
+// --- Euler (1st order, fixed step) -----------------------------------------
+pub static EULER: Tableau = Tableau {
+    name: "euler",
+    stages: 1,
+    order: 1,
+    err_order: 0,
+    a: &[],
+    b: &[1.0],
+    b_err: &[],
+    c: &[0.0],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Explicit midpoint (2nd order, fixed step) ------------------------------
+pub static MIDPOINT: Tableau = Tableau {
+    name: "midpoint",
+    stages: 2,
+    order: 2,
+    err_order: 0,
+    a: &[0.5],
+    b: &[0.0, 1.0],
+    b_err: &[],
+    c: &[0.0, 0.5],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Heun 2(1) (trapezoid with embedded Euler) ------------------------------
+pub static HEUN21: Tableau = Tableau {
+    name: "heun",
+    stages: 2,
+    order: 2,
+    err_order: 1,
+    a: &[1.0],
+    b: &[0.5, 0.5],
+    // b̂ = Euler = [1, 0]  =>  b_err = [-0.5, 0.5]
+    b_err: &[-0.5, 0.5],
+    c: &[0.0, 1.0],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Ralston 2nd order (minimal truncation error) ---------------------------
+pub static RALSTON2: Tableau = Tableau {
+    name: "ralston",
+    stages: 2,
+    order: 2,
+    err_order: 0,
+    a: &[2.0 / 3.0],
+    b: &[0.25, 0.75],
+    b_err: &[],
+    c: &[0.0, 2.0 / 3.0],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Bogacki–Shampine 3(2), FSAL --------------------------------------------
+pub static BOSH3: Tableau = Tableau {
+    name: "bosh3",
+    stages: 4,
+    order: 3,
+    err_order: 2,
+    a: &[
+        0.5, //
+        0.0,
+        0.75, //
+        2.0 / 9.0,
+        1.0 / 3.0,
+        4.0 / 9.0,
+    ],
+    b: &[2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0],
+    // b̂ = [7/24, 1/4, 1/3, 1/8]
+    b_err: &[
+        2.0 / 9.0 - 7.0 / 24.0,
+        1.0 / 3.0 - 0.25,
+        4.0 / 9.0 - 1.0 / 3.0,
+        -0.125,
+    ],
+    c: &[0.0, 0.5, 0.75, 1.0],
+    fsal: true,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Classic RK4 (fixed step) ------------------------------------------------
+pub static RK4: Tableau = Tableau {
+    name: "rk4",
+    stages: 4,
+    order: 4,
+    err_order: 0,
+    a: &[
+        0.5, //
+        0.0, 0.5, //
+        0.0, 0.0, 1.0,
+    ],
+    b: &[1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+    b_err: &[],
+    c: &[0.0, 0.5, 0.5, 1.0],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Fehlberg 4(5) ------------------------------------------------------------
+pub static FEHLBERG45: Tableau = Tableau {
+    name: "fehlberg45",
+    stages: 6,
+    order: 5,
+    err_order: 4,
+    a: &[
+        0.25, //
+        3.0 / 32.0,
+        9.0 / 32.0, //
+        1932.0 / 2197.0,
+        -7200.0 / 2197.0,
+        7296.0 / 2197.0, //
+        439.0 / 216.0,
+        -8.0,
+        3680.0 / 513.0,
+        -845.0 / 4104.0, //
+        -8.0 / 27.0,
+        2.0,
+        -3544.0 / 2565.0,
+        1859.0 / 4104.0,
+        -11.0 / 40.0,
+    ],
+    // 5th-order weights
+    b: &[
+        16.0 / 135.0,
+        0.0,
+        6656.0 / 12825.0,
+        28561.0 / 56430.0,
+        -9.0 / 50.0,
+        2.0 / 55.0,
+    ],
+    // b - b̂ with b̂ the 4th-order weights [25/216, 0, 1408/2565, 2197/4104, -1/5, 0]
+    b_err: &[
+        16.0 / 135.0 - 25.0 / 216.0,
+        0.0,
+        6656.0 / 12825.0 - 1408.0 / 2565.0,
+        28561.0 / 56430.0 - 2197.0 / 4104.0,
+        -9.0 / 50.0 + 0.2,
+        2.0 / 55.0,
+    ],
+    c: &[0.0, 0.25, 3.0 / 8.0, 12.0 / 13.0, 1.0, 0.5],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Cash–Karp 4(5) -----------------------------------------------------------
+pub static CASHKARP45: Tableau = Tableau {
+    name: "cashkarp45",
+    stages: 6,
+    order: 5,
+    err_order: 4,
+    a: &[
+        0.2, //
+        3.0 / 40.0,
+        9.0 / 40.0, //
+        0.3,
+        -0.9,
+        1.2, //
+        -11.0 / 54.0,
+        2.5,
+        -70.0 / 27.0,
+        35.0 / 27.0, //
+        1631.0 / 55296.0,
+        175.0 / 512.0,
+        575.0 / 13824.0,
+        44275.0 / 110592.0,
+        253.0 / 4096.0,
+    ],
+    b: &[
+        37.0 / 378.0,
+        0.0,
+        250.0 / 621.0,
+        125.0 / 594.0,
+        0.0,
+        512.0 / 1771.0,
+    ],
+    // b̂ = [2825/27648, 0, 18575/48384, 13525/55296, 277/14336, 1/4]
+    b_err: &[
+        37.0 / 378.0 - 2825.0 / 27648.0,
+        0.0,
+        250.0 / 621.0 - 18575.0 / 48384.0,
+        125.0 / 594.0 - 13525.0 / 55296.0,
+        -277.0 / 14336.0,
+        512.0 / 1771.0 - 0.25,
+    ],
+    c: &[0.0, 0.2, 0.3, 0.6, 1.0, 7.0 / 8.0],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+// --- Dormand–Prince 5(4), FSAL -------------------------------------------------
+pub static DOPRI5: Tableau = Tableau {
+    name: "dopri5",
+    stages: 7,
+    order: 5,
+    err_order: 4,
+    a: &[
+        0.2, //
+        3.0 / 40.0,
+        9.0 / 40.0, //
+        44.0 / 45.0,
+        -56.0 / 15.0,
+        32.0 / 9.0, //
+        19372.0 / 6561.0,
+        -25360.0 / 2187.0,
+        64448.0 / 6561.0,
+        -212.0 / 729.0, //
+        9017.0 / 3168.0,
+        -355.0 / 33.0,
+        46732.0 / 5247.0,
+        49.0 / 176.0,
+        -5103.0 / 18656.0, //
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+    ],
+    b: &[
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+        0.0,
+    ],
+    // b̂ = [5179/57600, 0, 7571/16695, 393/640, -92097/339200, 187/2100, 1/40]
+    b_err: &[
+        71.0 / 57600.0,
+        0.0,
+        -71.0 / 16695.0,
+        71.0 / 1920.0,
+        -17253.0 / 339200.0,
+        22.0 / 525.0,
+        -1.0 / 40.0,
+    ],
+    c: &[0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+    fsal: true,
+    dense: DenseOutput::Dopri5,
+};
+
+/// Dopri5 dense-output `d` coefficients (Hairer, Nørsett & Wanner, DOPRI5).
+pub static DOPRI5_D: [f64; 7] = [
+    -12715105075.0 / 11282082432.0,
+    0.0,
+    87487479700.0 / 32700410799.0,
+    -10690763975.0 / 1880347072.0,
+    701980252875.0 / 199316789632.0,
+    -1453857185.0 / 822651844.0,
+    69997945.0 / 29380423.0,
+];
+
+// --- Tsitouras 5(4), FSAL -------------------------------------------------------
+pub static TSIT5: Tableau = Tableau {
+    name: "tsit5",
+    stages: 7,
+    order: 5,
+    err_order: 4,
+    a: &[
+        0.161, //
+        -0.008480655492356989,
+        0.335480655492357, //
+        2.8971530571054935,
+        -6.359448489975075,
+        4.3622954328695815, //
+        5.325864828439257,
+        -11.748883564062828,
+        7.4955393428898365,
+        -0.09249506636175525, //
+        5.86145544294642,
+        -12.92096931784711,
+        8.159367898576159,
+        -0.071584973281401,
+        -0.028269050394068383, //
+        0.09646076681806523,
+        0.01,
+        0.4798896504144996,
+        1.379008574103742,
+        -3.290069515436081,
+        2.324710524099774,
+    ],
+    b: &[
+        0.09646076681806523,
+        0.01,
+        0.4798896504144996,
+        1.379008574103742,
+        -3.290069515436081,
+        2.324710524099774,
+        0.0,
+    ],
+    // b_err = b - b̂ (Tsitouras 2011, as used by OrdinaryDiffEq.jl/diffrax)
+    b_err: &[
+        -0.00178001105222577714,
+        -0.0008164344596567469,
+        0.007880878010261995,
+        -0.1447110071732629,
+        0.5823571654525552,
+        -0.45808210592918697,
+        0.015151515151515152,
+    ],
+    c: &[0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0],
+    fsal: true,
+    dense: DenseOutput::Hermite,
+};
+
+/// All registered tableaus, for iteration in tests and the CLI.
+pub static ALL: &[&Tableau] = &[
+    &EULER, &MIDPOINT, &HEUN21, &RALSTON2, &BOSH3, &RK4, &FEHLBERG45, &CASHKARP45, &DOPRI5, &TSIT5,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Row sums of `a` must equal the nodes `c` (stage consistency).
+    #[test]
+    fn stage_consistency() {
+        for t in ALL {
+            for i in 1..t.stages {
+                let s: f64 = t.a_row(i).iter().sum();
+                assert!(
+                    (s - t.c[i]).abs() < 1e-12,
+                    "{}: row {} sums to {} but c = {}",
+                    t.name,
+                    i,
+                    s,
+                    t.c[i]
+                );
+            }
+        }
+    }
+
+    /// Solution weights must sum to 1 (first order condition).
+    #[test]
+    fn b_sums_to_one() {
+        for t in ALL {
+            let s: f64 = t.b.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "{}: Σb = {}", t.name, s);
+        }
+    }
+
+    /// Error weights must sum to 0 (the two embedded methods agree at order 1).
+    #[test]
+    fn b_err_sums_to_zero() {
+        for t in ALL {
+            if t.adaptive() {
+                let s: f64 = t.b_err.iter().sum();
+                assert!(s.abs() < 1e-12, "{}: Σb_err = {}", t.name, s);
+            }
+        }
+    }
+
+    /// Second-order condition Σ b_i c_i = 1/2 for methods of order ≥ 2.
+    #[test]
+    fn second_order_condition() {
+        for t in ALL {
+            if t.order >= 2 {
+                let s: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c).sum();
+                assert!((s - 0.5).abs() < 1e-9, "{}: Σ b_i c_i = {}", t.name, s);
+            }
+        }
+    }
+
+    /// Third-order conditions for methods of order ≥ 3.
+    #[test]
+    fn third_order_conditions() {
+        for t in ALL {
+            if t.order >= 3 {
+                let s1: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
+                assert!((s1 - 1.0 / 3.0).abs() < 1e-9, "{}: Σ b c² = {}", t.name, s1);
+                // Σ_i b_i Σ_j a_ij c_j = 1/6
+                let mut s2 = 0.0;
+                for i in 1..t.stages {
+                    let inner: f64 = t.a_row(i).iter().zip(t.c).map(|(a, c)| a * c).sum();
+                    s2 += t.b[i] * inner;
+                }
+                assert!((s2 - 1.0 / 6.0).abs() < 1e-9, "{}: Σ b A c = {}", t.name, s2);
+            }
+        }
+    }
+
+    /// Fourth-order conditions for methods of order ≥ 4.
+    #[test]
+    fn fourth_order_conditions() {
+        for t in ALL {
+            if t.order >= 4 {
+                let s: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c * c).sum();
+                assert!((s - 0.25).abs() < 1e-9, "{}: Σ b c³ = {}", t.name, s);
+            }
+        }
+    }
+
+    /// FSAL tableaus: last stage row must equal b, last node must be 1.
+    #[test]
+    fn fsal_structure() {
+        for t in ALL {
+            if t.fsal {
+                let last = t.stages - 1;
+                assert!((t.c[last] - 1.0).abs() < 1e-12, "{}: FSAL c", t.name);
+                for (j, &a) in t.a_row(last).iter().enumerate() {
+                    assert!(
+                        (a - t.b[j]).abs() < 1e-12,
+                        "{}: FSAL row mismatch at {}",
+                        t.name,
+                        j
+                    );
+                }
+                assert_eq!(t.b[last], 0.0, "{}: FSAL b[last]", t.name);
+            }
+        }
+    }
+
+    /// Flattened `a` has the right triangular length and accessor agrees.
+    #[test]
+    fn a_indexing() {
+        for t in ALL {
+            assert_eq!(t.a.len(), t.stages * (t.stages - 1) / 2, "{}", t.name);
+            for i in 1..t.stages {
+                for j in 0..i {
+                    assert_eq!(t.a(i, j), t.a_row(i)[j], "{}", t.name);
+                }
+            }
+            assert_eq!(t.b.len(), t.stages);
+            assert_eq!(t.c.len(), t.stages);
+            if t.adaptive() {
+                assert_eq!(t.b_err.len(), t.stages);
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! `rode tables <which>` — regenerate the paper's tables and figures.
+//!
+//! Writes markdown + CSV into `results/` and prints the tables. Absolute
+//! times are testbed-specific; the comparison targets are the ratios (see
+//! EXPERIMENTS.md).
+
+use anyhow::Result;
+use rode::experiments::{
+    cnf_table5, fen_table4, pid_fig2, sec41_steps, vdp_table3, CnfT5Config, FenT4Config,
+    PidFig2Config, VdpT3Config,
+};
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+
+fn out(name: &str, content: &str) -> Result<()> {
+    fs::create_dir_all("results")?;
+    fs::write(format!("results/{name}"), content)?;
+    println!("{content}");
+    println!("→ results/{name}\n");
+    Ok(())
+}
+
+fn t3(quick: bool) -> Result<()> {
+    let cfg = VdpT3Config {
+        reps: if quick { 3 } else { 10 },
+        warmup: if quick { 1 } else { 3 },
+        ..Default::default()
+    };
+    println!(
+        "Table 2/3 — VdP loop time (batch {}, μ = {}, {} eval points, dopri5, tol 1e-5)\n",
+        cfg.batch, cfg.mu, cfg.n_eval
+    );
+    let rows = vdp_table3(&cfg);
+    let mut md = String::from(
+        "### Table 3 — VdP benchmark (loop time incl. model, ms/step)\n\n\
+         | engine | loop time (ms/step) | total (ms) | steps | launches/step | sim GPU loop (ms/step) | sim speedup vs naive |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    use rode::experiments::SIM_LAUNCH_MS;
+    let naive_sim = rows[0].launches_per_step * SIM_LAUNCH_MS;
+    for r in &rows {
+        let sim = r.launches_per_step * SIM_LAUNCH_MS;
+        let (sim_s, speedup_s) = if r.launches_per_step < 1.0 {
+            // Whole loop compiled: one dispatch per *solve* — per-step
+            // dispatch cost vanishes and compute becomes the bound.
+            ("≈0 (1/solve)".to_string(), "dispatch-free".to_string())
+        } else {
+            (format!("{sim:.3}"), format!("×{:.1}", naive_sim / sim))
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {:.1} | {} | {} |\n",
+            r.engine,
+            r.loop_time_ms.format_ms(),
+            r.total_ms.format_ms(),
+            r.steps,
+            r.launches_per_step,
+            sim_s,
+            speedup_s
+        ));
+    }
+    md.push_str(
+        "\nThe *sim GPU loop* column applies the launch-overhead cost model \
+         (20 µs per device dispatch, EXPERIMENTS.md §T3) to the measured \
+         dispatch counts — the regime the paper's GPU numbers live in; the \
+         measured CPU column shows the same engines when dispatch is free.\n",
+    );
+    out("table3.md", &md)
+}
+
+fn t4(quick: bool) -> Result<()> {
+    let cfg = FenT4Config {
+        train_steps: if quick { 30 } else { 120 },
+        reps: if quick { 3 } else { 8 },
+        ..Default::default()
+    };
+    println!(
+        "Table 4 — FEN stand-in (batch {}, {} nodes, {} eval points)\n",
+        cfg.batch, cfg.n_nodes, cfg.n_eval
+    );
+    let rows = fen_table4(&cfg);
+    let mut md = String::from(
+        "### Table 4 — FEN benchmark (forward pass)\n\n\
+         | engine | loop time (ms/step) | total/step (ms) | model/step (ms) | steps | MAE |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for r in &rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {:.1} | {:.4} |\n",
+            r.engine,
+            r.loop_time_ms.format_ms(),
+            r.total_per_step_ms.format_ms(),
+            r.model_per_step_ms.format_ms(),
+            r.steps.mean,
+            r.mae
+        ));
+    }
+    out("table4.md", &md)
+}
+
+fn t5(quick: bool) -> Result<()> {
+    let cfg = CnfT5Config {
+        reps: if quick { 2 } else { 5 },
+        warmup: if quick { 0 } else { 1 },
+        ..Default::default()
+    };
+    println!(
+        "Table 5 — CNF stand-in (batch {}, d = {}, hidden {:?})\n",
+        cfg.batch, cfg.d, cfg.hidden
+    );
+    let rows = cnf_table5(&cfg);
+    let mut md = String::from(
+        "### Table 5 — CNF benchmark (adjoint variants)\n\n\
+         | variant | fw loop (ms/step) | bw loop (ms/step) | fw steps | bw steps | bw state size |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for r in &rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {:.0} | {:.0} | {} |\n",
+            r.variant,
+            r.fw_loop_ms.format_ms(),
+            r.bw_loop_ms.format_ms(),
+            r.fw_steps,
+            r.bw_steps,
+            r.bw_state_size
+        ));
+    }
+    out("table5.md", &md)
+}
+
+fn sec41() -> Result<()> {
+    println!("§4.1 — joint-batching step blow-up (VdP μ = 25)\n");
+    let pts = sec41_steps(25.0, 1e-5, &[1, 2, 4, 8, 16, 32, 64, 128]);
+    let mut md = String::from(
+        "### §4.1 — steps(joint) vs steps(parallel), VdP μ=25\n\n\
+         | batch | joint steps | parallel max steps | ratio |\n|---|---|---|---|\n",
+    );
+    let mut csv = String::from("batch,joint_steps,parallel_max_steps,ratio\n");
+    for p in &pts {
+        md.push_str(&format!(
+            "| {} | {} | {} | ×{:.2} |\n",
+            p.batch, p.joint_steps, p.parallel_max_steps, p.ratio
+        ));
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            p.batch, p.joint_steps, p.parallel_max_steps, p.ratio
+        ));
+    }
+    fs::create_dir_all("results")?;
+    fs::write("results/sec41_steps.csv", csv)?;
+    out("sec41.md", &md)
+}
+
+fn fig2() -> Result<()> {
+    println!("Figure 2 — PID vs integral controller\n");
+    let cfg = PidFig2Config::default();
+    let pts = pid_fig2(&cfg);
+    let mut md =
+        String::from("### Figure 2 — solver steps vs integral controller\n\n| μ | integral |");
+    for (name, ..) in &cfg.pid_sets {
+        md.push_str(&format!(" {name} |"));
+    }
+    md.push_str("\n|---|---|");
+    for _ in &cfg.pid_sets {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    let mut csv = String::from("mu,integral");
+    for (name, ..) in &cfg.pid_sets {
+        csv.push_str(&format!(",{name}"));
+    }
+    csv.push('\n');
+    for p in &pts {
+        md.push_str(&format!("| {} | {} |", p.mu, p.integral_steps));
+        csv.push_str(&format!("{},{}", p.mu, p.integral_steps));
+        for s in &p.pid_steps {
+            let rel = 100.0 * (1.0 - *s as f64 / p.integral_steps as f64);
+            md.push_str(&format!(" {s} ({rel:+.1}%) |"));
+            csv.push_str(&format!(",{s}"));
+        }
+        md.push('\n');
+        csv.push('\n');
+    }
+    fs::create_dir_all("results")?;
+    fs::write("results/fig2_pid_sweep.csv", csv)?;
+    out("fig2.md", &md)
+}
+
+fn fig1() -> Result<()> {
+    println!("Figure 1 — step-size traces\n");
+    use rode::prelude::*;
+    let mu = 25.0;
+    let batch = 4;
+    let t1 = rode::problems::VdP::approx_period(mu);
+    let mut rng = rode::nn::Rng64::new(1);
+    let y0 = BatchVec::from_rows(
+        &(0..batch)
+            .map(|_| vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)])
+            .collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
+    let opts = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-5, 1e-5)
+        .with_max_steps(100_000)
+        .with_trace();
+    let sys = rode::problems::VdP::uniform(batch, mu);
+    let par = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    let joint = solve_ivp_joint(&sys, &y0, &grid, &opts);
+
+    fs::create_dir_all("results")?;
+    let mut f = fs::File::create("results/fig1_parallel.csv")?;
+    writeln!(f, "instance,t,dt")?;
+    for (i, trace) in par.trace.as_ref().unwrap().iter().enumerate() {
+        for (t, dt) in trace {
+            writeln!(f, "{i},{t},{dt}")?;
+        }
+    }
+    let mut f = fs::File::create("results/fig1_joint.csv")?;
+    writeln!(f, "instance,t,dt")?;
+    for (t, dt) in &joint.trace.as_ref().unwrap()[0] {
+        writeln!(f, "shared,{t},{dt}")?;
+    }
+    let md = format!(
+        "### Figure 1 — VdP step sizes (μ=25, one cycle)\n\n\
+         parallel steps per instance: {:?}\n\n\
+         joint (shared) steps: {} — the joint trace follows the minimum of\n\
+         the individual step sizes; CSV traces in results/fig1_*.csv\n",
+        par.stats.iter().map(|s| s.n_steps).collect::<Vec<_>>(),
+        joint.stats[0].n_steps
+    );
+    out("fig1.md", &md)
+}
+
+pub fn run(args: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let which = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = flags.contains_key("quick");
+    match which {
+        "t3" => t3(quick),
+        "t4" => t4(quick),
+        "t5" => t5(quick),
+        "sec41" => sec41(),
+        "fig1" => fig1(),
+        "fig2" => fig2(),
+        "all" => {
+            t3(quick)?;
+            t4(quick)?;
+            t5(quick)?;
+            sec41()?;
+            fig1()?;
+            fig2()
+        }
+        other => anyhow::bail!("unknown table '{other}' (t3|t4|t5|sec41|fig1|fig2|all)"),
+    }
+}

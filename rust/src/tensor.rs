@@ -1,0 +1,163 @@
+//! Minimal batched dense storage used throughout the native solver.
+//!
+//! The solver state is a `(batch, dim)` matrix of `f64`. We deliberately do
+//! not pull in a tensor library: the native engine's entire point (mirroring
+//! torchode's "minimize the number of kernels launched") is that the hot
+//! loop is a handful of fused, allocation-free passes over flat memory.
+
+/// A `(batch, dim)` row-major matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchVec {
+    data: Vec<f64>,
+    batch: usize,
+    dim: usize,
+}
+
+impl BatchVec {
+    /// Zero-filled `(batch, dim)` matrix.
+    pub fn zeros(batch: usize, dim: usize) -> Self {
+        Self { data: vec![0.0; batch * dim], batch, dim }
+    }
+
+    /// Build from a flat row-major buffer. Panics if `data.len() != batch*dim`.
+    pub fn from_flat(data: Vec<f64>, batch: usize, dim: usize) -> Self {
+        assert_eq!(data.len(), batch * dim, "flat buffer size mismatch");
+        Self { data, batch, dim }
+    }
+
+    /// Build from per-instance rows; all rows must share a length.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty(), "need at least one row");
+        let dim = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { data, batch: rows.len(), dim }
+    }
+
+    /// Broadcast a single state to `batch` identical rows.
+    pub fn broadcast(row: &[f64], batch: usize) -> Self {
+        let mut data = Vec::with_capacity(batch * row.len());
+        for _ in 0..batch {
+            data.extend_from_slice(row);
+        }
+        Self { data, batch, dim: row.len() }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The whole buffer, row-major.
+    #[inline]
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy another matrix of identical shape into `self` (no allocation).
+    pub fn copy_from(&mut self, other: &BatchVec) {
+        debug_assert_eq!(self.batch, other.batch);
+        debug_assert_eq!(self.dim, other.dim);
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f64) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Max absolute element (useful in tests).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Elementwise `out = a + s * b` over flat slices (single fused pass —
+/// the native analogue of torchode's `addcmul` usage).
+#[inline]
+pub fn axpy(out: &mut [f64], a: &[f64], s: f64, b: &[f64]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + s * b[i];
+    }
+}
+
+/// In-place `y += s * x`.
+#[inline]
+pub fn axpy_inplace(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += s * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip() {
+        let m = BatchVec::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.batch(), 2);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.flat(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn broadcast_repeats_rows() {
+        let m = BatchVec::broadcast(&[5.0, 6.0], 3);
+        for i in 0..3 {
+            assert_eq!(m.row(i), &[5.0, 6.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        BatchVec::from_rows(&[vec![1.0], vec![2.0, 3.0]]);
+    }
+
+    #[test]
+    fn axpy_fused() {
+        let a = [1.0, 2.0];
+        let b = [10.0, 20.0];
+        let mut out = [0.0; 2];
+        axpy(&mut out, &a, 0.5, &b);
+        assert_eq!(out, [6.0, 12.0]);
+        let mut y = [1.0, 1.0];
+        axpy_inplace(&mut y, 2.0, &b);
+        assert_eq!(y, [21.0, 41.0]);
+    }
+
+    #[test]
+    fn max_abs_works() {
+        let m = BatchVec::from_rows(&[vec![-3.0, 2.0]]);
+        assert_eq!(m.max_abs(), 3.0);
+    }
+}

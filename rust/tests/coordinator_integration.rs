@@ -1,0 +1,128 @@
+//! Cross-module integration: the coordinator running each engine on the
+//! same workload must return consistent results; AOT and native engines
+//! must agree numerically.
+
+use rode::coordinator::{
+    AotEngine, Coordinator, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
+};
+use rode::prelude::*;
+use std::time::Duration;
+
+fn vdp_req(id: u64, mu: f64, n_eval: usize, t1: f64) -> SolveRequest {
+    SolveRequest {
+        id,
+        problem: ProblemSpec::Vdp { mu },
+        y0: vec![2.0, 0.0],
+        t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+    }
+}
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_str().unwrap().to_string())
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn aot_engine_through_coordinator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        move || Box::new(AotEngine::open(&dir).expect("open AOT engine")),
+    );
+    let rxs: Vec<_> = (0..8)
+        .map(|i| coord.submit(vdp_req(0, 1.0 + i as f64, 20, 5.0)))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.status, Status::Success, "engine={}", resp.engine);
+        assert_eq!(resp.engine, "aot-pjrt");
+        assert_eq!(resp.ys.len(), 40);
+        assert!(resp.ys.iter().all(|v| v.is_finite()));
+        assert!(resp.stats.n_steps > 0);
+    }
+}
+
+#[test]
+fn aot_and_native_engines_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let native = Coordinator::spawn(
+        ServiceConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        || Box::new(NativeEngine::default()),
+    );
+    let aot = Coordinator::spawn(
+        ServiceConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        move || Box::new(AotEngine::open(&dir).expect("open AOT engine")),
+    );
+    let reqs: Vec<SolveRequest> =
+        (0..4).map(|i| vdp_req(0, 1.0 + 2.0 * i as f64, 20, 5.0)).collect();
+    let r_native: Vec<_> = reqs
+        .iter()
+        .map(|r| native.solve_blocking(r.clone()).expect("native"))
+        .collect();
+    let r_aot: Vec<_> =
+        reqs.iter().map(|r| aot.solve_blocking(r.clone()).expect("aot")).collect();
+    for (n, a) in r_native.iter().zip(&r_aot) {
+        assert_eq!(n.status, Status::Success);
+        assert_eq!(a.status, Status::Success);
+        let max_diff = n
+            .ys
+            .iter()
+            .zip(&a.ys)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff < 5e-3, "native vs AOT max diff {max_diff}");
+    }
+}
+
+#[test]
+fn aot_engine_pads_partial_batches() {
+    // 3 requests against a b=8 artifact: padding must not corrupt results.
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: 3, max_wait: Duration::from_millis(1) },
+        move || Box::new(AotEngine::open(&dir).expect("open")),
+    );
+    let rxs: Vec<_> = (0..3).map(|i| coord.submit(vdp_req(0, 2.0 + i as f64, 20, 4.0))).collect();
+    let mut trajectories = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.status, Status::Success);
+        assert!(resp.stats.n_steps > 0);
+        trajectories.push(resp.ys);
+    }
+    // Different μ ⇒ different trajectories (padding must not smear the
+    // last row over real requests).
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            let max_diff = trajectories[i]
+                .iter()
+                .zip(&trajectories[j])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(max_diff > 1e-3, "instances {i} and {j} identical");
+        }
+    }
+}
+
+#[test]
+fn throughput_counters_track_work() {
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
+        || Box::new(NativeEngine::default()),
+    );
+    let rxs: Vec<_> = (0..32).map(|i| coord.submit(vdp_req(0, 1.0 + (i % 4) as f64, 10, 3.0))).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let m = coord.metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 32);
+    assert!(m.batches_dispatched.load(Ordering::Relaxed) <= 32);
+    assert!(m.mean_batch_size() >= 1.0);
+    assert!(m.solver_steps_sum.load(Ordering::Relaxed) > 0);
+}

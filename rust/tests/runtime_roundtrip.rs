@@ -1,0 +1,142 @@
+//! End-to-end AOT path: `make artifacts` output → PJRT compile → execute →
+//! numerics match the native Rust solver on the same problems.
+//!
+//! These tests skip (pass trivially) when `artifacts/` has not been built,
+//! so `cargo test` stays green pre-`make artifacts`; `make test` always
+//! builds artifacts first.
+
+use rode::prelude::*;
+use rode::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn solve_artifact_matches_native_solver() {
+    let Some(mut rt) = runtime() else { return };
+    let art = rt.load("solve_vdp_b8_e20").expect("load artifact");
+    let (b, e) = (8, 20);
+    let mus: Vec<f64> = (0..b).map(|i| 1.0 + i as f64).collect();
+    let t1 = 5.0;
+
+    // AOT solve (f32).
+    let mut y0 = vec![0f32; b * 2];
+    for i in 0..b {
+        y0[i * 2] = 2.0;
+    }
+    let mu32: Vec<f32> = mus.iter().map(|&m| m as f32).collect();
+    let te: Vec<f32> = (0..b)
+        .flat_map(|_| (0..e).map(|k| (t1 * k as f64 / (e - 1) as f64) as f32))
+        .collect();
+    let out = art.run_f32(&[&y0, &mu32, &te]).expect("run");
+    let ys = &out[0];
+    let status = &out[4];
+    assert!(status.iter().all(|&s| s == 0.0), "AOT statuses: {status:?}");
+
+    // Native solve (f64) at the same tolerances.
+    let sys = rode::problems::VdP::new(mus);
+    let y0n = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, t1, e);
+    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let sol = solve_ivp_parallel(&sys, &y0n, &grid, &opts);
+    assert!(sol.all_success());
+
+    // Trajectories agree to solver tolerance (f32 AOT vs f64 native, both
+    // at atol=rtol=1e-5; VdP trajectories are O(1), so 5e-3 is generous
+    // but catches any structural disagreement).
+    let mut max_diff = 0f64;
+    for i in 0..b {
+        for ev in 0..e {
+            for d in 0..2 {
+                let a = ys[(i * e + ev) * 2 + d] as f64;
+                let n = sol.y(i, ev)[d];
+                max_diff = max_diff.max((a - n).abs());
+            }
+        }
+    }
+    assert!(max_diff < 5e-3, "AOT vs native max diff {max_diff}");
+}
+
+#[test]
+fn step_artifact_agrees_with_native_step() {
+    let Some(mut rt) = runtime() else { return };
+    let art = rt.load("step_vdp_b8").expect("load");
+    let b = 8;
+    let mu = 2.0f64;
+
+    // Native single attempt.
+    let sys = rode::problems::VdP::uniform(b, mu);
+    let ct = rode::solver::step::CompiledTableau::new(Method::Dopri5.tableau());
+    let mut ws = rode::solver::step::RkWorkspace::new(7, b, 2);
+    let y = BatchVec::broadcast(&[2.0, 0.0], b);
+    let t = vec![0.0; b];
+    let dt = vec![0.01; b];
+    let k0_ready = vec![false; b];
+    rode::solver::step::rk_attempt(&ct, &sys, &t, &dt, &y, &mut ws, &k0_ready, None, true);
+
+    // AOT attempt with the same k0.
+    let dt32 = vec![0.01f32; b];
+    let y32: Vec<f32> = y.flat().iter().map(|&v| v as f32).collect();
+    let k032: Vec<f32> = ws.k[0].flat().iter().map(|&v| v as f32).collect();
+    let mu32 = vec![mu as f32; b];
+    let out = art.run_f32(&[&dt32, &y32, &k032, &mu32]).expect("run");
+    let y_new = &out[0];
+    for i in 0..b {
+        for d in 0..2 {
+            let a = y_new[i * 2 + d] as f64;
+            let n = ws.y_new.row(i)[d];
+            assert!((a - n).abs() < 1e-5, "i={i} d={d}: {a} vs {n}");
+        }
+    }
+    // Error norms match to f32 precision.
+    let en_native = rode::solver::norm::scaled_norm(
+        rode::solver::norm::NormKind::Rms,
+        ws.err.row(0),
+        y.row(0),
+        ws.y_new.row(0),
+        1e-5,
+        1e-5,
+    );
+    assert!((out[1][0] as f64 - en_native).abs() < 1e-3 * (1.0 + en_native));
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut rt) = runtime() else { return };
+    let t0 = std::time::Instant::now();
+    let _a = rt.load("solve_vdp_b8_e20").expect("load");
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _b = rt.load("solve_vdp_b8_e20").expect("load cached");
+    let warm = t1.elapsed();
+    assert!(warm < cold / 10, "cache miss? cold={cold:?} warm={warm:?}");
+}
+
+#[test]
+fn per_instance_steps_visible_through_aot() {
+    // The stiff instance takes more steps *inside* the compiled module —
+    // per-instance state survives AOT lowering.
+    let Some(mut rt) = runtime() else { return };
+    let art = rt.load("solve_vdp_b8_e20").expect("load");
+    let (b, e) = (8, 20);
+    let mut y0 = vec![0f32; b * 2];
+    for i in 0..b {
+        y0[i * 2] = 2.0;
+    }
+    let mu32: Vec<f32> = (0..b).map(|i| 1.0 + 3.0 * i as f32).collect();
+    let te: Vec<f32> = (0..b)
+        .flat_map(|_| (0..e).map(|k| 8.0 * k as f32 / (e - 1) as f32))
+        .collect();
+    let out = art.run_f32(&[&y0, &mu32, &te]).expect("run");
+    let n_steps = &out[1];
+    assert!(
+        n_steps[b - 1] > n_steps[0],
+        "stiff instance should take more steps: {n_steps:?}"
+    );
+}

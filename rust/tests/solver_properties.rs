@@ -1,0 +1,214 @@
+//! Property-based integration tests over the solver invariants, using the
+//! in-crate `rode::prop` harness (seeded, replayable cases).
+
+use rode::prelude::*;
+use rode::prop;
+use rode::tensor::BatchVec;
+
+/// Every adaptive method must hit the exact solution of a random linear
+/// 2-D system within tolerance, for random initial conditions and spans.
+#[test]
+fn prop_adaptive_methods_solve_linear_systems() {
+    prop::check("linear-accuracy", 25, 101, |rng| {
+        let decay = rng.range(0.0, 1.5);
+        let omega = rng.range(0.5, 4.0);
+        let sys = rode::problems::LinearSystem::damped_rotation(decay, omega);
+        let y0v = [rng.range(-2.0, 2.0), rng.range(-2.0, 2.0)];
+        let t1 = rng.range(0.5, 4.0);
+        let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, t1, 5);
+        let m = [Method::Bosh3, Method::Dopri5, Method::Tsit5, Method::CashKarp45]
+            [rng.below(4)];
+        let opts = SolveOptions::new(m).with_tols(1e-8, 1e-8).with_max_steps(100_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success(), "{m:?} {decay} {omega}");
+        let mut exact = [0.0; 2];
+        rode::problems::LinearSystem::damped_rotation_exact(decay, omega, &y0v, t1, &mut exact);
+        for d in 0..2 {
+            assert!(
+                (sol.y_final(0)[d] - exact[d]).abs() < 1e-5 * (1.0 + exact[d].abs()),
+                "{m:?}: {} vs {}",
+                sol.y_final(0)[d],
+                exact[d]
+            );
+        }
+    });
+}
+
+/// Instance isolation: an instance's trajectory and step count must be
+/// bit-identical whatever batch it is embedded in (the torchode
+/// guarantee that §4.1 is about).
+#[test]
+fn prop_instance_isolation_under_batching() {
+    prop::check("instance-isolation", 15, 202, |rng| {
+        let mu = rng.range(0.5, 8.0);
+        let y0v = vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)];
+        let t1 = rng.range(2.0, 6.0);
+        let n_eval = 3 + rng.below(8);
+
+        let solo = {
+            let sys = rode::problems::VdP::new(vec![mu]);
+            let y0 = BatchVec::from_rows(&[y0v.clone()]);
+            let grid = TimeGrid::linspace_shared(1, 0.0, t1, n_eval);
+            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+            solve_ivp_parallel(&sys, &y0, &grid, &opts)
+        };
+
+        // Embed among 1..6 random companions.
+        let extra = 1 + rng.below(5);
+        let mut mus = vec![mu];
+        let mut rows = vec![y0v.clone()];
+        for _ in 0..extra {
+            mus.push(rng.range(0.5, 40.0));
+            rows.push(vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)]);
+        }
+        let sys = rode::problems::VdP::new(mus);
+        let y0 = BatchVec::from_rows(&rows);
+        let grid = TimeGrid::linspace_shared(1 + extra, 0.0, t1, n_eval);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let mixed = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+
+        assert_eq!(mixed.status[0], solo.status[0]);
+        assert_eq!(mixed.stats[0].n_steps, solo.stats[0].n_steps);
+        assert_eq!(mixed.stats[0].n_accepted, solo.stats[0].n_accepted);
+        for e in 0..n_eval {
+            for d in 0..2 {
+                assert_eq!(mixed.y(0, e)[d], solo.y(0, e)[d], "e={e} d={d}");
+            }
+        }
+    });
+}
+
+/// Stats invariants: accepted ≤ steps, n_initialized == n_eval on
+/// success, f_evals uniform across the batch, and the dense outputs
+/// contain no NaNs for successful instances.
+#[test]
+fn prop_stats_invariants() {
+    prop::check("stats-invariants", 20, 303, |rng| {
+        let batch = 1 + rng.below(6);
+        let mus: Vec<f64> = (0..batch).map(|_| rng.range(0.3, 12.0)).collect();
+        let sys = rode::problems::VdP::new(mus);
+        let y0 = BatchVec::from_rows(
+            &(0..batch)
+                .map(|_| vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)])
+                .collect::<Vec<_>>(),
+        );
+        let n_eval = 2 + rng.below(20);
+        let grid = TimeGrid::linspace_shared(batch, 0.0, rng.range(1.0, 8.0), n_eval);
+        let m = [Method::Dopri5, Method::Tsit5, Method::Bosh3][rng.below(3)];
+        let opts = SolveOptions::new(m).with_tols(1e-5, 1e-5).with_max_steps(100_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        let f0 = sol.stats[0].n_f_evals;
+        for i in 0..batch {
+            let st = &sol.stats[i];
+            assert!(st.n_accepted <= st.n_steps);
+            assert_eq!(st.n_f_evals, f0, "f_evals must be uniform");
+            if sol.status[i] == Status::Success {
+                assert_eq!(st.n_initialized as usize, n_eval);
+                for e in 0..n_eval {
+                    assert!(sol.y(i, e).iter().all(|v| v.is_finite()), "i={i} e={e}");
+                }
+            }
+        }
+    });
+}
+
+/// Dense output consistency: every interpolated point of a successful
+/// solve must agree with an independent solve that puts an eval point
+/// exactly there (within interpolation order of the tolerance).
+#[test]
+fn prop_dense_output_consistency() {
+    prop::check("dense-output", 10, 404, |rng| {
+        let lam = rng.range(0.2, 3.0);
+        let sys = rode::problems::ExponentialDecay::new(vec![lam], 2);
+        let y0 = BatchVec::from_rows(&[vec![rng.range(0.5, 2.0), rng.range(-2.0, -0.5)]]);
+        let t1 = rng.range(1.0, 4.0);
+        let n_eval = 4 + rng.below(12);
+        let grid = TimeGrid::linspace_shared(1, 0.0, t1, n_eval);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        for e in 0..n_eval {
+            let t = grid.row(0)[e];
+            let scale = (-lam * t).exp();
+            for d in 0..2 {
+                let exact = y0.row(0)[d] * scale;
+                assert!(
+                    (sol.y(0, e)[d] - exact).abs() < 1e-5 * (1.0 + exact.abs()),
+                    "e={e}: {} vs {exact}",
+                    sol.y(0, e)[d]
+                );
+            }
+        }
+    });
+}
+
+/// Joint and naive engines implement the same semantics: equal step
+/// counts (±10 %) and matching trajectories on random batches.
+#[test]
+fn prop_joint_naive_equivalence() {
+    prop::check("joint-naive", 10, 505, |rng| {
+        let batch = 1 + rng.below(4);
+        let mus: Vec<f64> = (0..batch).map(|_| rng.range(0.5, 6.0)).collect();
+        let sys = rode::problems::VdP::new(mus);
+        let y0 = BatchVec::broadcast(&[rng.range(0.5, 2.0), 0.0], batch);
+        let grid = TimeGrid::linspace_shared(batch, 0.0, rng.range(2.0, 5.0), 6);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let a = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        let b = solve_ivp_naive(&sys, &y0, &grid, &opts);
+        assert!(a.all_success() && b.all_success());
+        let (sa, sb) = (a.stats[0].n_steps as f64, b.stats[0].n_steps as f64);
+        assert!((sa - sb).abs() <= 0.1 * sa.max(sb) + 1.0, "steps {sa} vs {sb}");
+        for i in 0..batch {
+            for d in 0..2 {
+                assert!(
+                    (a.y_final(i)[d] - b.y_final(i)[d]).abs() < 1e-3,
+                    "i={i} d={d}"
+                );
+            }
+        }
+    });
+}
+
+/// Adjoint gradients match finite differences for random VdP problems.
+#[test]
+fn prop_adjoint_gradients_match_fd() {
+    prop::check("adjoint-fd", 6, 606, |rng| {
+        let mu = rng.range(0.3, 2.0);
+        let tt = rng.range(0.5, 2.0);
+        let y0v = [rng.range(-1.5, 1.5), rng.range(-1.0, 1.0)];
+        let run = |mu: f64, y0v: [f64; 2]| -> f64 {
+            let sys = rode::problems::VdP::new(vec![mu]);
+            let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
+            let grid = TimeGrid::linspace_shared(1, 0.0, tt, 2);
+            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            sol.y_final(0)[0]
+        };
+        let sys = rode::problems::VdP::new(vec![mu]);
+        let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, tt, 2);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        let mut y1 = BatchVec::zeros(1, 2);
+        y1.row_mut(0).copy_from_slice(sol.y_final(0));
+        let dl = BatchVec::from_rows(&[vec![1.0, 0.0]]);
+        let res = rode::solver::adjoint_backward_parallel(
+            &sys,
+            &y1,
+            &dl,
+            &[0.0],
+            &[tt],
+            &rode::solver::AdjointOptions::new(
+                SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10),
+            ),
+        );
+        let h = 1e-5;
+        let fd_mu = (run(mu + h, y0v) - run(mu - h, y0v)) / (2.0 * h);
+        assert!(
+            (res.dl_dparams[0] - fd_mu).abs() < 2e-4 * (1.0 + fd_mu.abs()),
+            "mu-grad {} vs fd {fd_mu}",
+            res.dl_dparams[0]
+        );
+    });
+}

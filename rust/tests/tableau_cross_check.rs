@@ -1,0 +1,58 @@
+//! Golden test: the Rust tableaus and the Python tableaus are the same
+//! numbers. `make artifacts` dumps `artifacts/tableaus.json` from
+//! `python/compile/tableaus.py`; this test compares every coefficient.
+
+use rode::runtime::json::Json;
+use rode::solver::Method;
+
+fn load() -> Option<Json> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tableaus.json");
+    if !p.exists() {
+        eprintln!("skipping: tableaus.json not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap())
+}
+
+fn check_method(j: &Json, m: Method) {
+    let tab = m.tableau();
+    let jt = j.get(tab.name).unwrap_or_else(|| panic!("{} missing from JSON", tab.name));
+    assert_eq!(jt.get("stages").unwrap().as_usize(), Some(tab.stages), "{}", tab.name);
+    assert_eq!(jt.get("order").unwrap().as_usize(), Some(tab.order), "{}", tab.name);
+    assert_eq!(
+        jt.get("err_order").unwrap().as_usize(),
+        Some(tab.err_order),
+        "{}",
+        tab.name
+    );
+    let cmp = |key: &str, rust: &[f64]| {
+        let py: Vec<f64> = jt
+            .get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(py.len(), rust.len(), "{}.{key} length", tab.name);
+        for (i, (p, r)) in py.iter().zip(rust).enumerate() {
+            assert!(
+                (p - r).abs() <= 1e-15 * (1.0 + r.abs()),
+                "{}.{key}[{i}]: python {p} vs rust {r}",
+                tab.name
+            );
+        }
+    };
+    cmp("a", tab.a);
+    cmp("b", tab.b);
+    cmp("b_err", tab.b_err);
+    cmp("c", tab.c);
+}
+
+#[test]
+fn python_and_rust_tableaus_agree() {
+    let Some(j) = load() else { return };
+    for m in [Method::Dopri5, Method::Tsit5, Method::Bosh3] {
+        check_method(&j, m);
+    }
+}

@@ -80,8 +80,9 @@ fn main() {
     let mut opt = Adam::new(n_params, 2e-3);
 
     let batch_size = 32;
-    let adj_opts =
-        AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(5_000));
+    let adj_opts = AdjointOptions::new(
+        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(5_000),
+    );
 
     let mut logf = fs::File::create("results/cnf_loss.csv").unwrap();
     writeln!(logf, "step,nll_per_dim").unwrap();

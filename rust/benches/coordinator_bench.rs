@@ -3,11 +3,14 @@
 //!
 //! Run with `cargo bench --bench coordinator_bench`.
 
-use rode::bench::{time_repeats, Summary};
+use rode::bench::{threads_sweep, time_repeats, Summary};
 use rode::coordinator::{
     Coordinator, DynamicBatcher, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
 };
+use rode::exec::solve_ivp_parallel_pooled;
 use rode::nn::Rng64;
+use rode::solver::{Method, SolveOptions, TimeGrid};
+use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
 fn req(rng: &mut Rng64, id: u64) -> SolveRequest {
@@ -69,7 +72,47 @@ fn bench_service() {
     }
 }
 
+/// Threads sweep of the sharded parallel solve: a heterogeneous VdP
+/// batch (mixed stiffness, the workload the batcher actually produces)
+/// solved end to end per worker count. Results are bitwise-identical
+/// across counts; only the wall time changes.
+fn bench_threads_sweep() {
+    println!("--- sharded parallel solve: threads sweep (heterogeneous VdP, dopri5, tol 1e-5) ---");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("(available cores: {cores})");
+    for &batch in &[64usize, 256] {
+        let mut rng = Rng64::new(11);
+        let mus: Vec<f64> = (0..batch).map(|_| rng.range(0.5, 15.0)).collect();
+        let sys = rode::problems::VdP::new(mus);
+        let y0 = BatchVec::from_rows(
+            &(0..batch)
+                .map(|_| vec![rng.range(-2.0, 2.0), rng.range(-1.0, 1.0)])
+                .collect::<Vec<_>>(),
+        );
+        let grid = TimeGrid::linspace_shared(batch, 0.0, 10.0, 20);
+        let rows = threads_sweep(&[1, 2, 4, 8], 1, 5, |threads| {
+            let opts = SolveOptions::new(Method::Dopri5)
+                .with_tols(1e-5, 1e-5)
+                .with_max_steps(1_000_000)
+                .with_threads(threads);
+            let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success());
+            std::hint::black_box(sol.ys_flat()[0]);
+        });
+        let serial = rows[0].1.mean;
+        for (threads, s) in &rows {
+            println!(
+                "batch={batch:<4} threads={threads:<2} {:>8.2} ± {:>5.2} ms   speedup x{:.2}",
+                s.mean,
+                s.std,
+                serial / s.mean
+            );
+        }
+    }
+}
+
 fn main() {
     bench_batcher();
     bench_service();
+    bench_threads_sweep();
 }

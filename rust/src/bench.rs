@@ -68,6 +68,26 @@ pub fn time_repeats<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64
     out
 }
 
+/// Measure `run` once per worker-thread count — the exec layer's
+/// threads-sweep harness. Returns one `(threads, Summary)` row per entry
+/// of `counts`; `run` receives the thread count and performs one full
+/// solve (e.g. through `exec::solve_ivp_parallel_pooled` with
+/// `SolveOptions::with_threads`).
+pub fn threads_sweep<F: FnMut(usize)>(
+    counts: &[usize],
+    warmup: usize,
+    reps: usize,
+    mut run: F,
+) -> Vec<(usize, Summary)> {
+    counts
+        .iter()
+        .map(|&n| {
+            let xs = time_repeats(warmup, reps, || run(n));
+            (n, Summary::from_samples(&xs))
+        })
+        .collect()
+}
+
 /// Wraps a system and accumulates time spent in the dynamics — the
 /// paper's "model time".
 pub struct TimedSystem<'a> {
@@ -108,6 +128,21 @@ impl<'a> OdeSystem for TimedSystem<'a> {
     fn f_inst(&self, inst: usize, t: f64, y: &[f64], dy: &mut [f64]) {
         let start = Instant::now();
         self.inner.f_inst(inst, t, y, dy);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+        self.calls.set(self.calls.get() + 1);
+    }
+
+    fn f_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+        active: Option<&[bool]>,
+    ) {
+        let start = Instant::now();
+        self.inner.f_rows(offset, n, t, y, dy, active);
         self.model_time.set(self.model_time.get() + start.elapsed());
         self.calls.set(self.calls.get() + 1);
     }
@@ -242,6 +277,16 @@ mod tests {
             &[("r".to_string(), vec!["1".to_string(), "2".to_string()])],
         );
         assert!(md.contains("| r | 1 | 2 |"));
+    }
+
+    #[test]
+    fn threads_sweep_shape() {
+        let mut seen = Vec::new();
+        let rows = threads_sweep(&[1, 2], 0, 3, |n| seen.push(n));
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].0, rows[1].0), (1, 2));
+        assert_eq!(seen, vec![1, 1, 1, 2, 2, 2]);
+        assert_eq!(rows[0].1.n, 3);
     }
 
     #[test]

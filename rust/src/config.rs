@@ -64,6 +64,44 @@ impl RawConfig {
     }
 }
 
+/// How a solve loop uses CPU workers (the exec layer's knob).
+///
+/// `threads == 1` is the serial reference path; `threads == 0` requests
+/// one worker per available core; any other value pins the worker count.
+/// Sharded execution is bitwise-identical to serial execution — see
+/// [`crate::exec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPolicy {
+    pub threads: usize,
+}
+
+impl Default for ExecPolicy {
+    fn default() -> Self {
+        Self { threads: 1 }
+    }
+}
+
+impl ExecPolicy {
+    /// The serial reference path (no worker pool).
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// A fixed worker count; `0` means one worker per available core.
+    pub fn threads(n: usize) -> Self {
+        Self { threads: n }
+    }
+
+    /// Resolve `threads == 0` against the machine.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
 /// Top-level service configuration (CLI flags override file values).
 #[derive(Debug, Clone)]
 pub struct RodeConfig {
@@ -74,6 +112,8 @@ pub struct RodeConfig {
     pub max_wait: Duration,
     pub engine: String,
     pub artifacts_dir: String,
+    /// Worker threads for the native solve loops (0 = one per core).
+    pub threads: usize,
 }
 
 impl Default for RodeConfig {
@@ -86,6 +126,7 @@ impl Default for RodeConfig {
             max_wait: Duration::from_millis(2),
             engine: "native".to_string(),
             artifacts_dir: "artifacts".to_string(),
+            threads: 1,
         }
     }
 }
@@ -113,6 +154,9 @@ impl RodeConfig {
         }
         if let Some(v) = raw.get("artifacts_dir") {
             cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = raw.get_usize("threads")? {
+            cfg.threads = v;
         }
         Ok(cfg)
     }
@@ -154,6 +198,25 @@ mod tests {
         assert!(raw.get("anything").is_none());
         let cfg = RodeConfig::from_raw(&raw).unwrap();
         assert_eq!(cfg.method, Method::Dopri5);
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let raw = RawConfig::parse("threads = 4").unwrap();
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.threads, 4);
+        // Default is the serial path.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.threads, 1);
+    }
+
+    #[test]
+    fn exec_policy_resolution() {
+        assert_eq!(ExecPolicy::default().threads, 1);
+        assert_eq!(ExecPolicy::serial().effective_threads(), 1);
+        assert_eq!(ExecPolicy::threads(3).effective_threads(), 3);
+        // 0 = auto: at least one worker, whatever the machine.
+        assert!(ExecPolicy::threads(0).effective_threads() >= 1);
     }
 
     #[test]

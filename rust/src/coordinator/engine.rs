@@ -8,11 +8,10 @@
 
 use super::batcher::Batch;
 use super::request::{ProblemSpec, SolveResponse};
+use crate::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
 use crate::problems::{ExponentialDecay, VdP};
 use crate::runtime::Runtime;
-use crate::solver::{
-    solve_ivp_joint, solve_ivp_parallel, Method, SolveOptions, Solution, Stats, Status, TimeGrid,
-};
+use crate::solver::{Method, SolveOptions, Solution, Stats, Status, TimeGrid};
 use crate::tensor::BatchVec;
 use anyhow::{anyhow, Result};
 
@@ -68,9 +67,9 @@ fn solve_native(batch: &Batch, opts: &SolveOptions, joint: bool) -> Result<Solut
                 .collect();
             let sys = VdP::new(mu);
             Ok(if joint {
-                solve_ivp_joint(&sys, &y0, &grid, opts)
+                solve_ivp_joint_pooled(&sys, &y0, &grid, opts)
             } else {
-                solve_ivp_parallel(&sys, &y0, &grid, opts)
+                solve_ivp_parallel_pooled(&sys, &y0, &grid, opts)
             })
         }
         "expdecay" => {
@@ -84,9 +83,9 @@ fn solve_native(batch: &Batch, opts: &SolveOptions, joint: bool) -> Result<Solut
                 .collect();
             let sys = ExponentialDecay::new(lam, batch.key.dim);
             Ok(if joint {
-                solve_ivp_joint(&sys, &y0, &grid, opts)
+                solve_ivp_joint_pooled(&sys, &y0, &grid, opts)
             } else {
-                solve_ivp_parallel(&sys, &y0, &grid, opts)
+                solve_ivp_parallel_pooled(&sys, &y0, &grid, opts)
             })
         }
         other => Err(anyhow!("native engine has no dynamics for kind '{other}'")),
@@ -283,6 +282,22 @@ mod tests {
         // Responses keep request ids.
         assert_eq!(rs[0].id, 0);
         assert_eq!(rs[1].id, 1);
+    }
+
+    #[test]
+    fn native_engine_sharded_matches_serial() {
+        let batch = vdp_batch(&[1.0, 5.0, 0.7, 12.0], 10, 5.0);
+        let mut serial = NativeEngine::default();
+        let mut sharded = NativeEngine::new(
+            SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_threads(2),
+        );
+        let rs = serial.solve(&batch).unwrap();
+        let rp = sharded.solve(&batch).unwrap();
+        for (a, b) in rs.iter().zip(&rp) {
+            assert_eq!(a.status, b.status);
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(a.ys, b.ys);
+        }
     }
 
     #[test]

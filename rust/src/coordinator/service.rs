@@ -96,6 +96,9 @@ impl Drop for Coordinator {
     }
 }
 
+/// Response channels + submit times keyed by request id.
+type Waiters = std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)>;
+
 fn worker_loop(
     rx: Receiver<Msg>,
     cfg: ServiceConfig,
@@ -103,13 +106,11 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
-    // Response channels + submit times keyed by request id.
-    let mut waiters: std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)> =
-        std::collections::HashMap::new();
+    let mut waiters: Waiters = Waiters::new();
 
     let dispatch = |batch: super::batcher::Batch,
-                        engine: &mut Box<dyn SolveEngine>,
-                        waiters: &mut std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)>| {
+                    engine: &mut Box<dyn SolveEngine>,
+                    waiters: &mut Waiters| {
         metrics.batches_dispatched.fetch_add(1, Ordering::Relaxed);
         metrics
             .batch_size_sum

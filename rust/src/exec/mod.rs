@@ -1,0 +1,375 @@
+//! The exec layer: batch sharding across a CPU worker pool.
+//!
+//! torchode's core claim is that per-instance solver state is almost
+//! free because the dynamics are evaluated in one batched call per
+//! stage. On CPU that batched call is a row loop — and because every
+//! row's state machine is independent, the loop is embarrassingly
+//! shardable. This module splits a batched solve into contiguous row
+//! shards, runs them on a dependency-free scoped-thread pool
+//! ([`ScopedPool`]) and deterministically merges the results:
+//!
+//! - [`solve_ivp_parallel_pooled`] runs each shard's **full per-instance
+//!   state machine** on its own worker (the shards share nothing), then
+//!   merges the per-shard [`Solution`] buffers, `Stats`, traces and
+//!   `Status` back into one result.
+//! - [`solve_ivp_joint_pooled`] shards only the **row-update passes**
+//!   (stage accumulation, dynamics evaluation, solution/error
+//!   combination) of each step; the joint loop's shared controller
+//!   reduction stays on the coordinator thread.
+//!
+//! Both paths are **bitwise-identical** to their serial counterparts:
+//! the shard workers execute the same per-row code over the same values
+//! (see [`crate::solver::step::rk_attempt_rows`]), and the only
+//! cross-row quantity — torchode's uniform `n_f_evals` accounting — is
+//! reconstructed exactly from per-shard call ledgers in
+//! [`merge_sharded`].
+//!
+//! Sharded entry points require `S: OdeSystem + Sync` (the system is
+//! shared read-only across workers); systems with `RefCell` scratch
+//! (CNF/FEN) keep using the serial `solve_ivp_*` functions.
+
+pub mod pool;
+
+pub use pool::ScopedPool;
+
+use crate::problems::OdeSystem;
+use crate::solver::init::initial_step_batch;
+use crate::solver::parallel::{solve_ivp_parallel_core, CallLedger};
+use crate::solver::step::{
+    attempt_call_count, rk_attempt_rows, CompiledTableau, RkRows, RkWorkspace, StageExec,
+};
+use crate::solver::{
+    joint, solve_ivp_joint, solve_ivp_parallel, SolveOptions, Solution, TimeGrid, Tolerances,
+};
+use crate::tensor::BatchVec;
+
+/// A system view that maps local shard rows onto the global instance
+/// range `[offset, offset + rows)` of the wrapped system.
+struct OffsetSystem<'a, S: OdeSystem + ?Sized> {
+    inner: &'a S,
+    offset: usize,
+}
+
+impl<S: OdeSystem + ?Sized> OdeSystem for OffsetSystem<'_, S> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn f_inst(&self, inst: usize, t: f64, y: &[f64], dy: &mut [f64]) {
+        self.inner.f_inst(self.offset + inst, t, y, dy)
+    }
+
+    fn f_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+        active: Option<&[bool]>,
+    ) {
+        self.inner.f_rows(self.offset + offset, n, t, y, dy, active)
+    }
+
+    fn f_batch(
+        &self,
+        t: &[f64],
+        y: &BatchVec,
+        dy: &mut BatchVec,
+        active: Option<&[bool]>,
+    ) {
+        self.inner.f_rows(self.offset, y.batch(), t, y.flat(), dy.flat_mut(), active)
+    }
+}
+
+/// Contiguous near-equal row shards: `min(shards, batch)` ranges whose
+/// first `batch % n` members carry one extra row. An oversubscribed pool
+/// (threads > batch) simply produces one shard per row.
+pub(crate) fn shard_bounds(batch: usize, shards: usize) -> Vec<(usize, usize)> {
+    let n = shards.max(1).min(batch.max(1));
+    let base = batch / n;
+    let rem = batch % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, batch);
+    out
+}
+
+/// Split a flat buffer into consecutive chunks of the given sizes.
+fn split_chunks<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let (chunk, rest) = s.split_at_mut(n);
+        out.push(chunk);
+        s = rest;
+    }
+    out
+}
+
+/// [`crate::solver::solve_ivp_parallel`] sharded across
+/// `opts.exec.effective_threads()` workers: each shard runs the full
+/// per-instance state machine on its own worker; results are bitwise
+/// identical to the serial path (including `Stats` — see
+/// [`merge_sharded`]). Falls back to the serial loop for one thread or a
+/// one-row batch.
+pub fn solve_ivp_parallel_pooled<S: OdeSystem + Sync>(
+    sys: &S,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    opts.tols.validate(batch);
+    let bounds = shard_bounds(batch, opts.exec.effective_threads());
+    if bounds.len() <= 1 {
+        return solve_ivp_parallel(sys, y0, grid, opts);
+    }
+    let pool = ScopedPool::new(bounds.len());
+    let jobs: Vec<_> = bounds
+        .iter()
+        .map(|&(lo, hi)| {
+            let y0_shard = y0.rows_range(lo, hi);
+            let grid_shard = grid.rows_range(lo, hi);
+            let opts_shard = opts.shard_rows(lo, hi);
+            move || {
+                let view = OffsetSystem { inner: sys, offset: lo };
+                solve_ivp_parallel_core(&view, &y0_shard, &grid_shard, &opts_shard)
+            }
+        })
+        .collect();
+    let results = pool.scatter(jobs);
+    merge_sharded(&bounds, &results, batch, grid.n_eval(), y0.dim(), opts.record_trace)
+}
+
+/// Merge per-shard solutions back into one batch-shaped [`Solution`].
+///
+/// `ys`, `status`, `n_steps`, `n_accepted`, `n_initialized` and traces
+/// are purely per-row and copy over directly. `n_f_evals` is torchode's
+/// uniform "the whole batch experiences every batched call" count: the
+/// global loop would have made, at iteration `n`, the *maximum* of the
+/// per-shard call counts at `n` (all shards pay the `stages - 1` stage
+/// calls; the non-FSAL refresh fires iff any shard had an accepted row),
+/// so the merged count is `base + Σ_n max_shards per_iter[n]` — exactly
+/// the serial loop's number.
+fn merge_sharded(
+    bounds: &[(usize, usize)],
+    results: &[(Solution, CallLedger)],
+    batch: usize,
+    n_eval: usize,
+    dim: usize,
+    record_trace: bool,
+) -> Solution {
+    let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut trace: Option<Vec<Vec<(f64, f64)>>> =
+        if record_trace { Some(vec![Vec::new(); batch]) } else { None };
+
+    for (&(lo, _hi), (shard, _)) in bounds.iter().zip(results) {
+        for r in 0..shard.batch() {
+            let i = lo + r;
+            for e in 0..n_eval {
+                sol.y_mut(i, e).copy_from_slice(shard.y(r, e));
+            }
+            sol.status[i] = shard.status[r];
+            sol.stats[i] = shard.stats[r].clone();
+            if let (Some(tr), Some(st)) = (trace.as_mut(), shard.trace.as_ref()) {
+                tr[i] = st[r].clone();
+            }
+        }
+    }
+
+    let base = results.first().map_or(0, |(_, l)| l.base);
+    debug_assert!(
+        results.iter().all(|(_, l)| l.base == base),
+        "shards disagree on pre-loop calls"
+    );
+    let max_iters = results.iter().map(|(_, l)| l.per_iter.len()).max().unwrap_or(0);
+    let mut total = base;
+    for n in 0..max_iters {
+        total += results
+            .iter()
+            .filter_map(|(_, l)| l.per_iter.get(n).copied())
+            .max()
+            .unwrap_or(0);
+    }
+    for st in sol.stats.iter_mut() {
+        st.n_f_evals = total;
+    }
+
+    sol.trace = trace;
+    sol
+}
+
+/// [`crate::solver::solve_ivp_joint`] with the row-update passes of every
+/// step sharded across `opts.exec.effective_threads()` workers. The
+/// shared step-size controller, error-norm reduction and dense-output
+/// bookkeeping stay on the coordinator thread; results are bitwise
+/// identical to the serial joint loop.
+pub fn solve_ivp_joint_pooled<S: OdeSystem + Sync>(
+    sys: &S,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    opts.tols.validate(batch);
+    let bounds = shard_bounds(batch, opts.exec.effective_threads());
+    if bounds.len() <= 1 {
+        return solve_ivp_joint(sys, y0, grid, opts);
+    }
+    let pool = ScopedPool::new(bounds.len());
+    let exec = PooledExec { sys, pool, bounds };
+    joint::joint_core(&exec, y0, grid, opts)
+}
+
+/// The pooled [`StageExec`]: shards each batched pass over row ranges.
+struct PooledExec<'a, S: OdeSystem + Sync> {
+    sys: &'a S,
+    pool: ScopedPool,
+    bounds: Vec<(usize, usize)>,
+}
+
+impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
+    fn dim(&self) -> usize {
+        self.sys.dim()
+    }
+
+    fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        let dim = y.dim();
+        let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
+        let dy_chunks = split_chunks(dy.flat_mut(), &sizes);
+        let sys = self.sys;
+        let y_flat = y.flat();
+        let jobs: Vec<_> = self
+            .bounds
+            .iter()
+            .zip(dy_chunks)
+            .map(|(&(lo, hi), chunk)| {
+                let t_s = &t[lo..hi];
+                let y_s = &y_flat[lo * dim..hi * dim];
+                let act_s = active.map(|m| &m[lo..hi]);
+                move || sys.f_rows(lo, hi - lo, t_s, y_s, chunk, act_s)
+            })
+            .collect();
+        self.pool.scatter(jobs);
+    }
+
+    fn attempt(
+        &self,
+        ct: &CompiledTableau,
+        t: &[f64],
+        dt: &[f64],
+        y: &BatchVec,
+        ws: &mut RkWorkspace,
+        k0_ready: &[bool],
+        active: Option<&[bool]>,
+        eval_inactive: bool,
+    ) -> u64 {
+        let dim = y.dim();
+        let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
+        let row_sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+
+        // Disjoint row-range views of every workspace buffer.
+        let mut k_chunks: Vec<std::vec::IntoIter<&mut [f64]>> = ws
+            .k
+            .iter_mut()
+            .map(|k| split_chunks(k.flat_mut(), &sizes).into_iter())
+            .collect();
+        let mut ytmp_it = split_chunks(ws.ytmp.flat_mut(), &sizes).into_iter();
+        let mut y_new_it = split_chunks(ws.y_new.flat_mut(), &sizes).into_iter();
+        let mut err_it = split_chunks(ws.err.flat_mut(), &sizes).into_iter();
+        let mut ts_it = split_chunks(&mut ws.t_stage[..], &row_sizes).into_iter();
+
+        let mut shards: Vec<RkRows<'_>> = Vec::with_capacity(self.bounds.len());
+        for &(lo, hi) in &self.bounds {
+            shards.push(RkRows {
+                offset: lo,
+                rows: hi - lo,
+                dim,
+                k: k_chunks.iter_mut().map(|it| it.next().unwrap()).collect(),
+                ytmp: ytmp_it.next().unwrap(),
+                y_new: y_new_it.next().unwrap(),
+                err: err_it.next().unwrap(),
+                t_stage: ts_it.next().unwrap(),
+            });
+        }
+
+        let sys = self.sys;
+        let y_flat = y.flat();
+        let jobs: Vec<_> = shards
+            .into_iter()
+            .map(|mut rr| {
+                let (lo, rows) = (rr.offset, rr.rows);
+                let t_s = &t[lo..lo + rows];
+                let dt_s = &dt[lo..lo + rows];
+                let y_s = &y_flat[lo * dim..(lo + rows) * dim];
+                let k0_s = &k0_ready[lo..lo + rows];
+                let act_s = active.map(|m| &m[lo..lo + rows]);
+                move || {
+                    rk_attempt_rows(ct, sys, t_s, dt_s, y_s, &mut rr, k0_s, act_s, eval_inactive)
+                }
+            })
+            .collect();
+        self.pool.scatter(jobs);
+
+        // One *semantic* batched call per stage, however many shards
+        // physically carried it (torchode accounting).
+        attempt_call_count(ct, k0_ready)
+    }
+
+    fn initial_step(
+        &self,
+        t0: &[f64],
+        y0: &BatchVec,
+        f0: &BatchVec,
+        order: usize,
+        tols: &Tolerances,
+        span: &[f64],
+        scratch_y: &mut BatchVec,
+        scratch_f: &mut BatchVec,
+    ) -> Vec<f64> {
+        // One-time cost; runs serially (and bitwise-identically).
+        initial_step_batch(self.sys, t0, y0, f0, order, tols, span, scratch_y, scratch_f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_cover_contiguously() {
+        for (batch, shards) in [(10, 3), (4, 4), (3, 8), (64, 4), (1, 2), (7, 1)] {
+            let b = shard_bounds(batch, shards);
+            assert!(b.len() <= shards.max(1));
+            assert!(b.len() <= batch);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, batch);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            // Near-equal: sizes differ by at most one row.
+            let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn split_chunks_partitions() {
+        let mut data = [0u8; 10];
+        let chunks = split_chunks(&mut data, &[3, 0, 7]);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 3);
+        assert_eq!(chunks[1].len(), 0);
+        assert_eq!(chunks[2].len(), 7);
+    }
+}

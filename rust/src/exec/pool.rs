@@ -1,0 +1,99 @@
+//! A dependency-free scoped-thread worker pool.
+//!
+//! The vendored crate set has no rayon/crossbeam, and the solve loops
+//! need workers that can borrow non-`'static` data (the system, shard
+//! views of a workspace), so the pool is built on `std::thread::scope`:
+//! every [`ScopedPool::scatter`] call fans a set of jobs out over fresh
+//! scoped threads and joins them before returning. The coordinator
+//! thread runs the first job itself, so `n` jobs cost `n - 1` spawns —
+//! for the batch-sharded solves that is one spawn per worker per *solve*
+//! (the parallel loop) or per *step* (the joint loop's row-update
+//! passes), both far below the work they carry at the batch sizes the
+//! pool is built for.
+
+/// A worker pool of a fixed size; see the module docs for the execution
+/// model.
+#[derive(Debug, Clone)]
+pub struct ScopedPool {
+    threads: usize,
+}
+
+impl ScopedPool {
+    /// A pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` concurrently and return their results in job order.
+    /// Callers size `jobs` to at most [`ScopedPool::threads`] (one shard
+    /// per worker); a serial pool or a single job short-circuits to the
+    /// calling thread. A panicking job propagates its panic.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        if self.threads <= 1 || jobs.len() <= 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let mut rest = jobs.into_iter();
+        let first = rest.next().expect("scatter over at least one job");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rest.map(|job| s.spawn(job)).collect();
+            let mut out = Vec::with_capacity(handles.len() + 1);
+            out.push(first());
+            for h in handles {
+                out.push(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_preserves_job_order() {
+        let pool = ScopedPool::new(4);
+        let jobs: Vec<_> = (0..7).map(|i| move || i * 10).collect();
+        assert_eq!(pool.scatter(jobs), vec![0, 10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ScopedPool::new(1);
+        let tid = std::thread::current().id();
+        let jobs: Vec<_> = (0..3).map(|_| move || std::thread::current().id()).collect();
+        assert!(pool.scatter(jobs).into_iter().all(|t| t == tid));
+    }
+
+    #[test]
+    fn workers_can_borrow_caller_data() {
+        let data: Vec<u64> = (0..100).collect();
+        let pool = ScopedPool::new(3);
+        let slices: Vec<&[u64]> = data.chunks(34).collect();
+        let jobs: Vec<_> = slices
+            .into_iter()
+            .map(|chunk| move || chunk.iter().sum::<u64>())
+            .collect();
+        let total: u64 = pool.scatter(jobs).into_iter().sum();
+        assert_eq!(total, 99 * 100 / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates() {
+        let pool = ScopedPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+        ];
+        pool.scatter(jobs);
+    }
+}

@@ -22,7 +22,10 @@ mod vdp_t3;
 pub use cnf_t5::{cnf_table5, CnfT5Config, CnfT5Row};
 pub use fen_t4::{fen_table4, FenT4Config, FenT4Row};
 pub use pid_fig2::{pid_fig2, PidFig2Config, PidFig2Point};
-pub use vdp_t3::{fused_launches_per_step, sec41_steps, vdp_table3, Sec41Point, VdpT3Config, VdpT3Row, SIM_LAUNCH_MS};
+pub use vdp_t3::{
+    fused_launches_per_step, sec41_steps, vdp_table3, Sec41Point, VdpT3Config, VdpT3Row,
+    SIM_LAUNCH_MS,
+};
 
 use crate::bench::Summary;
 

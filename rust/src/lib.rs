@@ -32,6 +32,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod experiments;
 pub mod nn;
 pub mod problems;
@@ -42,6 +43,8 @@ pub mod tensor;
 
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
+    pub use crate::config::ExecPolicy;
+    pub use crate::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
     pub use crate::problems::OdeSystem;
     pub use crate::solver::{
         solve_ivp_joint, solve_ivp_naive, solve_ivp_parallel, Controller, Method, SolveOptions,

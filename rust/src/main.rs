@@ -50,6 +50,7 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let mu = flag_f64(flags, "mu", 10.0);
     let t1 = flag_f64(flags, "t1", 10.0);
     let n_eval = flag_usize(flags, "points", 50);
+    let threads = flag_usize(flags, "threads", 1);
     let method = flags
         .get("method")
         .map(|m| Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}")))
@@ -65,8 +66,8 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             .collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
-    let opts = SolveOptions::new(method).with_tols(1e-6, 1e-5);
-    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    let opts = SolveOptions::new(method).with_tols(1e-6, 1e-5).with_threads(threads);
+    let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 
     println!("status: {:?}", sol.status);
     println!(
@@ -96,12 +97,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let n_requests = flag_usize(flags, "requests", 200);
     cfg.max_batch = flag_usize(flags, "max-batch", cfg.max_batch);
+    cfg.threads = flag_usize(flags, "threads", cfg.threads);
     if let Some(w) = flags.get("max-wait-ms").and_then(|v| v.parse::<f64>().ok()) {
         cfg.max_wait = Duration::from_secs_f64(w / 1e3);
     }
     let engine_kind = flags.get("engine").cloned().unwrap_or(cfg.engine.clone());
     let artifacts_dir = cfg.artifacts_dir.clone();
-    let solve_opts = rode::solver::SolveOptions::new(cfg.method).with_tols(cfg.atol, cfg.rtol);
+    let solve_opts = rode::solver::SolveOptions::new(cfg.method)
+        .with_tols(cfg.atol, cfg.rtol)
+        .with_threads(cfg.threads);
 
     let coord = Coordinator::spawn(
         ServiceConfig { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
@@ -202,7 +206,8 @@ fn main() -> Result<()> {
                 "rode — parallel ODE solver stack (torchode reproduction)\n\n\
                  usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
-                 \n  serve            coordinator + synthetic workload\
+                 \n                   (--threads N shards the batch over N workers; 0 = all cores)\
+                 \n  serve            coordinator + synthetic workload (also honors --threads)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\
                  \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"

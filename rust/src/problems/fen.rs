@@ -107,7 +107,13 @@ impl FenDynamics {
     /// The "teacher" dynamics used to generate synthetic training data:
     /// diffusion plus a cubic saturation, `dx = κ·agg(x) − γ·x³`.
     pub fn teacher(mesh: &Mesh, n_feat: usize, kappa: f64, gamma: f64) -> TeacherDynamics {
-        TeacherDynamics { graph: mesh.graph.clone(), n_feat, kappa, gamma, agg: RefCell::new(Vec::new()) }
+        TeacherDynamics {
+            graph: mesh.graph.clone(),
+            n_feat,
+            kappa,
+            gamma,
+            agg: RefCell::new(Vec::new()),
+        }
     }
 }
 

@@ -194,7 +194,13 @@ mod tests {
 
     #[test]
     fn vjps_match_fd() {
-        check_vjp_y(&ExponentialDecay::new(vec![1.7], 3), 0, 0.0, &[1.0, 2.0, -0.5], &[0.3, -1.0, 0.8]);
+        check_vjp_y(
+            &ExponentialDecay::new(vec![1.7], 3),
+            0,
+            0.0,
+            &[1.0, 2.0, -0.5],
+            &[0.3, -1.0, 0.8],
+        );
         check_vjp_y(
             &LinearSystem::damped_rotation(0.4, 3.0),
             0,

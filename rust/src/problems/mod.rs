@@ -42,15 +42,42 @@ pub trait OdeSystem {
     /// Evaluate the dynamics of instance `inst` at time `t`.
     fn f_inst(&self, inst: usize, t: f64, y: &[f64], dy: &mut [f64]);
 
-    /// Evaluate the whole batch, one time per instance. `active` masks the
-    /// rows that still need values; `None` means all rows. The default
-    /// loops over rows — systems with batched kernels should override.
-    fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
-        for i in 0..y.batch() {
-            if active.map_or(true, |m| m[i]) {
-                self.f_inst(i, t[i], y.row(i), dy.row_mut(i));
+    /// Evaluate the contiguous instance range `[offset, offset + n)` into
+    /// flat row-major slices. `t`, `y`, `dy` and `active` are indexed
+    /// *locally* (`t[r]` belongs to instance `offset + r`); only `active`
+    /// rows may be written. This is the primitive the sharded executor
+    /// ([`crate::exec`]) drives — [`OdeSystem::f_batch`] is the
+    /// whole-batch special case. Systems with batched kernels should
+    /// override this method (not `f_batch`) and must keep rows
+    /// independent, so a sharded solve stays bitwise-identical to a
+    /// serial one.
+    fn f_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+        active: Option<&[bool]>,
+    ) {
+        let dim = self.dim();
+        for r in 0..n {
+            if active.map_or(true, |m| m[r]) {
+                self.f_inst(
+                    offset + r,
+                    t[r],
+                    &y[r * dim..(r + 1) * dim],
+                    &mut dy[r * dim..(r + 1) * dim],
+                );
             }
         }
+    }
+
+    /// Evaluate the whole batch, one time per instance. `active` masks the
+    /// rows that still need values; `None` means all rows. Delegates to
+    /// [`OdeSystem::f_rows`] over the full row range.
+    fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        self.f_rows(0, y.batch(), t, y.flat(), dy.flat_mut(), active);
     }
 
     /// Vector-Jacobian products for the adjoint method:

@@ -7,6 +7,7 @@
 
 pub mod json;
 mod manifest;
+mod xla;
 
 pub use manifest::{Artifact, IoSpec, Manifest};
 

@@ -85,7 +85,8 @@ impl Controller {
         let (b1, b2, b3) = self.betas(err_order);
         // Floor the error to avoid factor blow-up on (near-)exact steps.
         let e0 = err_norm.max(1e-10);
-        let mut factor = self.safety * e0.powf(-b1) * st.err_prev.powf(-b2) * st.err_prev2.powf(-b3);
+        let mut factor =
+            self.safety * e0.powf(-b1) * st.err_prev.powf(-b2) * st.err_prev2.powf(-b3);
         factor = factor.clamp(self.factor_min, self.factor_max);
         if !accept {
             factor = factor.min(1.0);

@@ -6,12 +6,17 @@
 //! once. This is exactly the setting of the paper's §4.1 — the stiffest
 //! instance dictates the common step size, and the solver takes up to 4×
 //! as many steps as the parallel loop on heterogeneous batches.
+//!
+//! The loop body is written against the [`StageExec`] executor so the
+//! row-update passes (stage accumulation, dynamics evaluation, solution
+//! and error combination) can be sharded across a worker pool by
+//! [`crate::exec::solve_ivp_joint_pooled`], while the shared controller
+//! reduction below stays on the coordinator thread.
 
 use super::controller::ControllerState;
-use super::init::initial_step_batch;
 use super::interp::{self, DOPRI5_NCOEFF};
 use super::norm::{scaled_norm, NormKind};
-use super::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use super::step::{CompiledTableau, InlineExec, RkWorkspace, StageExec};
 use super::tableau::DenseOutput;
 use super::{SolveOptions, Solution, Status, TimeGrid};
 use crate::problems::OdeSystem;
@@ -27,9 +32,21 @@ pub fn solve_ivp_joint(
     grid: &TimeGrid,
     opts: &SolveOptions,
 ) -> Solution {
+    joint_core(&InlineExec { sys }, y0, grid, opts)
+}
+
+/// The joint loop over an executor (serial or pooled).
+pub(crate) fn joint_core(
+    exec: &dyn StageExec,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
     let batch = y0.batch();
     let dim = y0.dim();
     assert_eq!(grid.batch(), batch);
+    assert_eq!(exec.dim(), dim, "system/initial-state dim mismatch");
+    opts.tols.validate(batch);
     let n_eval = grid.n_eval();
     let t0 = grid.t0(0);
     let t1 = grid.t1(0);
@@ -69,7 +86,7 @@ pub fn solve_ivp_joint(
     }
 
     let t_vec = vec![t; batch];
-    sys.f_batch(&t_vec, &y, &mut ws.k[0], None);
+    exec.eval(&t_vec, &y, &mut ws.k[0], None);
     bump_fevals(&mut sol, 1);
     f_start.copy_from(&ws.k[0]);
 
@@ -80,8 +97,7 @@ pub fn solve_ivp_joint(
         (None, Some(h)) => h,
         (None, None) => {
             let spans = vec![span; batch];
-            let dt0 = initial_step_batch(
-                sys,
+            let dt0 = exec.initial_step(
                 &t_vec,
                 &y,
                 &ws.k[0],
@@ -117,7 +133,7 @@ pub fn solve_ivp_joint(
         let dt_vec = vec![dt; batch];
         let tv = vec![t; batch];
         let k0r = vec![k0_ready; batch];
-        let calls = rk_attempt(&ct, sys, &tv, &dt_vec, &y, &mut ws, &k0r, None, true);
+        let calls = exec.attempt(&ct, &tv, &dt_vec, &y, &mut ws, &k0r, None, true);
         bump_fevals(&mut sol, calls);
         for st in sol.stats.iter_mut() {
             st.n_steps += 1;
@@ -129,6 +145,8 @@ pub fn solve_ivp_joint(
         }
 
         // One error norm over the concatenated state: RMS over batch × dim.
+        // This shared reduction is the joint loop's defining coupling and
+        // always runs on the coordinator thread.
         let (accept, factor) = if adaptive {
             let mut acc = 0.0;
             for i in 0..batch {
@@ -162,6 +180,15 @@ pub fn solve_ivp_joint(
                 trace.push((t, dt));
             }
 
+            // Non-FSAL: evaluate the true end slope f(t_new, y_new) before
+            // dense output (the stale-Hermite fix); it doubles as the k[0]
+            // refresh for the next iteration.
+            if !tab.fsal {
+                let tnv = vec![t_new; batch];
+                exec.eval(&tnv, &ws.y_new, &mut ws.k[0], None);
+                bump_fevals(&mut sol, 1);
+            }
+
             for i in 0..batch {
                 let te_row = grid.row(i);
                 let mut e = next_eval[i];
@@ -184,10 +211,12 @@ pub fn solve_ivp_joint(
                             interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
                         }
                         DenseOutput::Hermite => {
+                            // FSAL stage or the refreshed k[0] (both hold
+                            // f(t_new, y_new)).
                             let f_end = if tab.fsal {
                                 ws.k[tab.stages - 1].row(i)
                             } else {
-                                f_start.row(i)
+                                ws.k[0].row(i)
                             };
                             interp::hermite_eval(
                                 theta,
@@ -213,10 +242,11 @@ pub fn solve_ivp_joint(
                 let (first, _) = head.split_first_mut().unwrap();
                 first.copy_from(&tail[0]);
                 f_start.copy_from(&tail[0]);
-                k0_ready = true;
             } else {
-                k0_ready = false;
+                // k[0] already holds f(t_new, y_new) from the refresh.
+                f_start.copy_from(&ws.k[0]);
             }
+            k0_ready = true;
 
             if next_eval.iter().all(|&e| e >= n_eval) {
                 status = Status::Success;
@@ -231,21 +261,14 @@ pub fn solve_ivp_joint(
             status = Status::DtUnderflow;
             break;
         }
-
-        if !done && !tab.fsal && !k0_ready {
-            let tv = vec![t; batch];
-            sys.f_batch(&tv, &y, &mut ws.k[0], None);
-            bump_fevals(&mut sol, 1);
-            f_start.copy_from(&ws.k[0]);
-            k0_ready = true;
-        }
     }
 
     for i in 0..batch {
         sol.status[i] = status;
     }
     if opts.record_trace {
-        sol.trace = Some(vec![trace; 1].into_iter().chain((1..batch).map(|_| Vec::new())).collect());
+        let tail = (1..batch).map(|_| Vec::new());
+        sol.trace = Some(vec![trace; 1].into_iter().chain(tail).collect());
     }
     sol
 }
@@ -336,5 +359,23 @@ mod tests {
                 assert!((j.y(0, e)[d] - p.y(0, e)[d]).abs() < 1e-5);
             }
         }
+    }
+
+    /// Non-FSAL Hermite dense output through the joint loop also uses the
+    /// true end slope (the same fix as in the parallel loop).
+    #[test]
+    fn joint_hermite_dense_output_uses_end_slope() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 2);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 41);
+        let opts = SolveOptions::new(Method::Rk4).with_fixed_dt(0.1).with_max_steps(1_000);
+        let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        let mut max_err = 0.0f64;
+        for e in 0..41 {
+            let t = grid.row(0)[e];
+            max_err = max_err.max((sol.y(0, e)[0] - (-t).exp()).abs());
+        }
+        assert!(max_err < 1e-5, "dense-output error {max_err} (stale end slope?)");
     }
 }

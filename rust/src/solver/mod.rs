@@ -37,6 +37,7 @@ pub use naive::solve_ivp_naive;
 pub use parallel::solve_ivp_parallel;
 pub use tableau::{DenseOutput, Tableau};
 
+pub use crate::config::ExecPolicy;
 use crate::tensor::BatchVec;
 
 /// Explicit Runge–Kutta method selector.
@@ -163,6 +164,12 @@ impl TimeGrid {
     pub fn t1(&self, i: usize) -> f64 {
         *self.t.row(i).last().unwrap()
     }
+
+    /// Copy of the contiguous instance range `[lo, hi)` — the shard
+    /// boundary of the exec layer.
+    pub fn rows_range(&self, lo: usize, hi: usize) -> TimeGrid {
+        TimeGrid { t: self.t.rows_range(lo, hi) }
+    }
 }
 
 /// Tolerances, broadcastable per instance (torchode: "even parameters such
@@ -192,6 +199,28 @@ impl Tolerances {
     pub fn rtol(&self, i: usize) -> f64 {
         self.rtol[i.min(self.rtol.len() - 1)]
     }
+
+    /// Check the broadcast contract at solve entry: tolerances are either
+    /// one scalar or exactly one entry per instance. Anything else would
+    /// silently reuse the last entry through the clamped accessors above.
+    pub fn validate(&self, batch: usize) {
+        assert!(
+            self.atol.len() == 1 || self.atol.len() == batch,
+            "atol must have 1 or batch (= {batch}) entries, got {}",
+            self.atol.len()
+        );
+        assert!(
+            self.rtol.len() == 1 || self.rtol.len() == batch,
+            "rtol must have 1 or batch (= {batch}) entries, got {}",
+            self.rtol.len()
+        );
+    }
+
+    /// Tolerances of the instance range `[lo, hi)` (scalars broadcast).
+    pub(crate) fn shard_rows(&self, lo: usize, hi: usize) -> Tolerances {
+        let slice = |v: &Vec<f64>| if v.len() == 1 { v.clone() } else { v[lo..hi].to_vec() };
+        Tolerances { atol: slice(&self.atol), rtol: slice(&self.rtol) }
+    }
 }
 
 /// Options shared by all solve loops.
@@ -215,6 +244,12 @@ pub struct SolveOptions {
     /// ... until all problems in the batch have been solved", App. B);
     /// `false` is a rode extension that skips finished rows on CPU.
     pub eval_inactive: bool,
+    /// Worker-pool policy for the sharded entry points
+    /// ([`crate::exec::solve_ivp_parallel_pooled`] /
+    /// [`crate::exec::solve_ivp_joint_pooled`]); the plain `solve_ivp_*`
+    /// functions always run serially (a `&dyn OdeSystem` cannot be shared
+    /// across threads).
+    pub exec: ExecPolicy,
 }
 
 impl SolveOptions {
@@ -229,6 +264,7 @@ impl SolveOptions {
             fixed_dt: None,
             record_trace: false,
             eval_inactive: true,
+            exec: ExecPolicy::default(),
         }
     }
 
@@ -265,6 +301,23 @@ impl SolveOptions {
     pub fn skip_inactive(mut self) -> Self {
         self.eval_inactive = false;
         self
+    }
+
+    /// Shard the batched solve across `n` CPU workers (0 = one per core)
+    /// when run through the pooled entry points in [`crate::exec`].
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.exec = ExecPolicy::threads(n);
+        self
+    }
+
+    /// Options for the instance range `[lo, hi)` of a sharded solve:
+    /// per-instance tolerances are sliced and the shard itself runs
+    /// serially.
+    pub(crate) fn shard_rows(&self, lo: usize, hi: usize) -> SolveOptions {
+        let mut o = self.clone();
+        o.tols = self.tols.shard_rows(lo, hi);
+        o.exec = ExecPolicy::serial();
+        o
     }
 }
 
@@ -416,6 +469,34 @@ mod tests {
         assert_eq!(t.atol(7), 1e-6);
         let t = Tolerances::per_instance(vec![1e-6, 1e-8], vec![1e-3, 1e-5]);
         assert_eq!(t.rtol(1), 1e-5);
+    }
+
+    #[test]
+    fn tolerance_validation_accepts_scalar_and_per_instance() {
+        Tolerances::scalar(1e-6, 1e-3).validate(7);
+        Tolerances::per_instance(vec![1e-6; 4], vec![1e-3; 4]).validate(4);
+        let sharded =
+            Tolerances::per_instance(vec![1.0, 2.0, 3.0, 4.0], vec![0.1; 4]).shard_rows(1, 3);
+        assert_eq!(sharded.atol(0), 2.0);
+        assert_eq!(sharded.atol(1), 3.0);
+        // Scalars broadcast through sharding.
+        let sharded = Tolerances::scalar(1e-6, 1e-3).shard_rows(2, 5);
+        assert_eq!(sharded.rtol(2), 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "atol")]
+    fn tolerance_validation_rejects_wrong_length() {
+        Tolerances::per_instance(vec![1e-6; 2], vec![1e-3; 2]).validate(3);
+    }
+
+    #[test]
+    fn timegrid_rows_range() {
+        let g = TimeGrid::from_rows(&[vec![0.0, 1.0], vec![2.0, 3.0], vec![4.0, 5.0]]);
+        let s = g.rows_range(1, 3);
+        assert_eq!(s.batch(), 2);
+        assert_eq!(s.t0(0), 2.0);
+        assert_eq!(s.t1(1), 5.0);
     }
 
     #[test]

@@ -97,6 +97,7 @@ pub fn solve_ivp_naive(
 ) -> Solution {
     let batch = y0.batch();
     let dim = y0.dim();
+    opts.tols.validate(batch);
     let n = batch * dim;
     let n_eval = grid.n_eval();
     let t0 = grid.t0(0);
@@ -316,7 +317,10 @@ pub fn solve_ivp_naive(
 }
 
 /// Clone helper for the non-FSAL Hermite endpoint (no feval counted — the
-/// slope is stale by one step, same fallback the joint loop uses).
+/// slope is stale by one step). The fused loops evaluate the true end
+/// slope since the stale-Hermite fix; the naive loop deliberately keeps
+/// the torchdiffeq-era shortcut because it only ever benchmarks FSAL
+/// methods, whose endpoint slope is the last stage anyway.
 fn eval_no_count(k0: &[f64]) -> Vec<f64> {
     k0.to_vec()
 }

@@ -6,6 +6,13 @@
 //! evaluations for already-finished instances, unless
 //! [`super::SolveOptions::eval_inactive`] is disabled), so a batch never
 //! forces instances to share a step size — the failure mode of §4.1.
+//!
+//! The loop is written so that the per-row state machine depends only on
+//! that row's data: [`crate::exec::solve_ivp_parallel_pooled`] runs this
+//! exact code over contiguous row shards on a worker pool and merges the
+//! results bitwise-identically. The [`CallLedger`] records the batched
+//! dynamics calls per loop iteration so the merge can reconstruct
+//! torchode's uniform `n_f_evals` accounting across shards.
 
 use super::controller::ControllerState;
 use super::init::initial_step_batch;
@@ -17,6 +24,19 @@ use super::{SolveOptions, Solution, Status, TimeGrid};
 use crate::problems::OdeSystem;
 use crate::tensor::BatchVec;
 
+/// Batched-call ledger of one (shard-)solve: `n_f_evals` is uniform
+/// across a torchode batch ("every instance experiences every call"), so
+/// when a batch is split into shards the merged count is
+/// `base + Σ_iter max over shards` — the calls the *global* loop would
+/// have made. See `crate::exec::merge_sharded`.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct CallLedger {
+    /// Calls made before the main loop (initial slopes, dt0 heuristic).
+    pub base: u64,
+    /// Batched calls made during each main-loop iteration.
+    pub per_iter: Vec<u64>,
+}
+
 /// Solve a batch of independent IVPs with fully per-instance solver state.
 ///
 /// `y0` is `(batch, dim)`; `grid.row(i)` holds instance `i`'s evaluation
@@ -27,16 +47,30 @@ pub fn solve_ivp_parallel(
     grid: &TimeGrid,
     opts: &SolveOptions,
 ) -> Solution {
+    solve_ivp_parallel_core(sys, y0, grid, opts).0
+}
+
+/// The loop body shared by the serial entry point and the exec layer's
+/// shard workers (which call it on row-range views with an offset
+/// system).
+pub(crate) fn solve_ivp_parallel_core(
+    sys: &dyn OdeSystem,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> (Solution, CallLedger) {
     let batch = y0.batch();
     let dim = y0.dim();
     assert_eq!(grid.batch(), batch, "grid/initial-state batch mismatch");
     assert_eq!(sys.dim(), dim, "system/initial-state dim mismatch");
+    opts.tols.validate(batch);
     let n_eval = grid.n_eval();
     let tab = opts.method.tableau();
     let ct = CompiledTableau::new(tab);
     let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
 
     let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut ledger = CallLedger::default();
     let mut trace: Vec<Vec<(f64, f64)>> = if opts.record_trace {
         vec![Vec::new(); batch]
     } else {
@@ -73,6 +107,7 @@ pub fn solve_ivp_parallel(
     for s in sol.stats.iter_mut() {
         s.n_f_evals += 1;
     }
+    ledger.base += 1;
     f_start.copy_from(&ws.k[0]);
     for r in k0_ready.iter_mut() {
         *r = true;
@@ -97,6 +132,7 @@ pub fn solve_ivp_parallel(
             for s in sol.stats.iter_mut() {
                 s.n_f_evals += 1;
             }
+            ledger.base += 1;
             dt0
         }
     };
@@ -108,6 +144,9 @@ pub fn solve_ivp_parallel(
     // steady state).
     let mut clamped = vec![false; batch];
     let mut active = vec![true; batch];
+    let mut accepted = vec![false; batch];
+    let mut factor = vec![1.0f64; batch];
+    let mut t_new = vec![0.0f64; batch];
     let mut iter = 0usize;
     while finished.iter().any(|f| !f) {
         iter += 1;
@@ -135,7 +174,7 @@ pub fn solve_ivp_parallel(
                 clamped[i] = true;
             }
         }
-        let calls = rk_attempt(
+        let mut calls = rk_attempt(
             &ct,
             sys,
             &t,
@@ -146,18 +185,20 @@ pub fn solve_ivp_parallel(
             Some(&active),
             opts.eval_inactive,
         );
-        // torchode semantics: every instance experiences every batched call.
+        // torchode semantics: every instance experiences every batched call
+        // (the refresh below credits its own call separately).
         for s in sol.stats.iter_mut() {
             s.n_f_evals += calls;
         }
 
+        // Pass 1: non-finite guards and controller decisions.
         for i in 0..batch {
+            accepted[i] = false;
             if finished[i] {
                 continue;
             }
             sol.stats[i].n_steps += 1;
 
-            // Non-finite guard.
             let y_new = ws.y_new.row(i);
             if y_new.iter().any(|v| !v.is_finite()) {
                 sol.status[i] = Status::NonFinite;
@@ -165,7 +206,7 @@ pub fn solve_ivp_parallel(
                 continue;
             }
 
-            let (accept, factor) = if adaptive {
+            let (accept, fac) = if adaptive {
                 let en = scaled_norm(
                     NormKind::Rms,
                     ws.err.row(i),
@@ -182,10 +223,37 @@ pub fn solve_ivp_parallel(
             } else {
                 (true, 1.0)
             };
-
+            accepted[i] = accept;
+            factor[i] = fac;
             if accept {
+                t_new[i] = if clamped[i] { grid.t1(i) } else { t[i] + dt[i] };
+            }
+        }
+
+        // Non-FSAL: evaluate the true end slope f(t_new, y_new) for the
+        // accepted rows *before* dense output, so Hermite interpolation
+        // uses the step-end derivative (3rd order) instead of the stale
+        // step-start slope — this is also the cold-row k[0] refresh for
+        // the next iteration, so it costs no extra call.
+        if !tab.fsal && accepted.iter().any(|&a| a) {
+            for i in 0..batch {
+                ws.t_stage[i] = if accepted[i] { t_new[i] } else { t[i] };
+            }
+            sys.f_batch(&ws.t_stage, &ws.y_new, &mut ws.k[0], Some(&accepted));
+            for s in sol.stats.iter_mut() {
+                s.n_f_evals += 1;
+            }
+            calls += 1;
+        }
+
+        // Pass 2: dense output, state commit, step-size update.
+        for i in 0..batch {
+            if finished[i] {
+                continue;
+            }
+            if accepted[i] {
                 sol.stats[i].n_accepted += 1;
-                let t_new = if clamped[i] { grid.t1(i) } else { t[i] + dt[i] };
+                let tn = t_new[i];
                 if opts.record_trace {
                     trace[i].push((t[i], dt[i]));
                 }
@@ -196,7 +264,7 @@ pub fn solve_ivp_parallel(
                     let te_row = grid.row(i);
                     let mut e = next_eval[i];
                     let mut coeffs_ready = false;
-                    while e < n_eval && te_row[e] <= t_new {
+                    while e < n_eval && te_row[e] <= tn {
                         let theta = ((te_row[e] - t[i]) / h).clamp(0.0, 1.0);
                         match tab.dense {
                             DenseOutput::Dopri5 => {
@@ -215,14 +283,13 @@ pub fn solve_ivp_parallel(
                                 interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
                             }
                             DenseOutput::Hermite => {
-                                // f at the step end: FSAL stage if available,
-                                // else reuse the step-start slope (2nd order
-                                // fallback, only for non-FSAL fixed-step
-                                // methods).
+                                // f at the step end: the FSAL stage, or the
+                                // refreshed k[0] = f(t_new, y_new) computed
+                                // above for non-FSAL methods.
                                 let f_end = if tab.fsal {
                                     ws.k[tab.stages - 1].row(i)
                                 } else {
-                                    f_start.row(i)
+                                    ws.k[0].row(i)
                                 };
                                 interp::hermite_eval(
                                     theta,
@@ -243,17 +310,18 @@ pub fn solve_ivp_parallel(
 
                 // Commit the step.
                 y.row_mut(i).copy_from_slice(ws.y_new.row(i));
-                t[i] = t_new;
+                t[i] = tn;
                 if tab.fsal {
                     // k[last] is f(t_new, y_new): becomes next k[0].
                     let (head, tail) = ws.k.split_at_mut(tab.stages - 1);
                     let (first, _) = head.split_first_mut().unwrap();
                     first.row_mut(i).copy_from_slice(tail[0].row(i));
                     f_start.row_mut(i).copy_from_slice(tail[0].row(i));
-                    k0_ready[i] = true;
                 } else {
-                    k0_ready[i] = false;
+                    // k[0] already holds f(t_new, y_new) from the refresh.
+                    f_start.row_mut(i).copy_from_slice(ws.k[0].row(i));
                 }
+                k0_ready[i] = true;
 
                 if next_eval[i] >= n_eval {
                     sol.status[i] = Status::Success;
@@ -265,43 +333,27 @@ pub fn solve_ivp_parallel(
                 k0_ready[i] = true;
             }
 
-            dt[i] *= factor;
+            dt[i] *= factor[i];
             if adaptive && !finished[i] && dt[i] < min_dt[i] {
                 sol.status[i] = Status::DtUnderflow;
                 finished[i] = true;
             }
         }
 
-        // Non-FSAL: k[0] must be re-evaluated for accepted rows; rejected
-        // rows keep the cached slope. Also refresh f_start for Hermite.
-        if !tab.fsal {
-            let cold: Vec<bool> = k0_ready.iter().map(|r| !r).collect();
-            if cold.iter().any(|&c| c) {
-                sys.f_batch(&t, &y, &mut ws.k[0], Some(&cold));
-                for s in sol.stats.iter_mut() {
-                    s.n_f_evals += 1;
-                }
-                for i in 0..batch {
-                    if cold[i] {
-                        f_start.row_mut(i).copy_from_slice(ws.k[0].row(i));
-                        k0_ready[i] = true;
-                    }
-                }
-            }
-        }
+        ledger.per_iter.push(calls);
     }
 
     if opts.record_trace {
         sol.trace = Some(trace);
     }
-    sol
+    (sol, ledger)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, LinearSystem, LotkaVolterra, VdP};
-    use crate::solver::{Controller, Method};
+    use crate::solver::Method;
 
     #[test]
     fn exponential_decay_accuracy() {
@@ -325,7 +377,14 @@ mod tests {
         let sys = LinearSystem::damped_rotation(decay, omega);
         let y0 = BatchVec::from_rows(&[vec![1.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 3.0, 7);
-        for m in [Method::Heun, Method::Bosh3, Method::Fehlberg45, Method::CashKarp45, Method::Dopri5, Method::Tsit5] {
+        for m in [
+            Method::Heun,
+            Method::Bosh3,
+            Method::Fehlberg45,
+            Method::CashKarp45,
+            Method::Dopri5,
+            Method::Tsit5,
+        ] {
             let opts = SolveOptions::new(m).with_tols(1e-7, 1e-7).with_max_steps(100_000);
             let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
             assert!(sol.all_success(), "{m:?}: {:?}", sol.status);
@@ -409,6 +468,26 @@ mod tests {
                 assert!((yc[d] - yf[d]).abs() < 1e-6, "e={e} d={d}: {} vs {}", yc[d], yf[d]);
             }
         }
+    }
+
+    /// Non-FSAL Hermite dense output must use the true end slope
+    /// f(t_new, y_new): with the stale step-start slope (the old bug) the
+    /// mid-step error of rk4 at dt = 0.1 is ~1e-3; with the fix it is the
+    /// cubic-Hermite O(h^4) bound, orders of magnitude below.
+    #[test]
+    fn hermite_dense_output_uses_end_slope() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::from_rows(&[vec![1.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 41);
+        let opts = SolveOptions::new(Method::Rk4).with_fixed_dt(0.1).with_max_steps(1_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success());
+        let mut max_err = 0.0f64;
+        for e in 0..41 {
+            let t = grid.row(0)[e];
+            max_err = max_err.max((sol.y(0, e)[0] - (-t).exp()).abs());
+        }
+        assert!(max_err < 1e-5, "dense-output error {max_err} (stale end slope?)");
     }
 
     #[test]
@@ -498,5 +577,34 @@ mod tests {
         }
         let order = (errs[0] / errs[1]).log2();
         assert!(order > 4.5, "measured order {order}");
+    }
+
+    /// The ledger records the loop's call pattern: FSAL adaptive methods
+    /// make stages-1 calls per iteration; non-FSAL methods add the
+    /// end-slope refresh on iterations with an accepted row.
+    #[test]
+    fn call_ledger_matches_stats() {
+        let sys = VdP::new(vec![2.0]);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(1, 0.0, 5.0, 10);
+        for m in [Method::Dopri5, Method::Fehlberg45] {
+            let opts = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+            let (sol, ledger) = solve_ivp_parallel_core(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success());
+            let total: u64 = ledger.base + ledger.per_iter.iter().sum::<u64>();
+            assert_eq!(total, sol.stats[0].n_f_evals, "{m:?}");
+            assert_eq!(ledger.per_iter.len() as u64, sol.stats[0].n_steps, "{m:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "atol")]
+    fn rejects_mismatched_tolerance_vector() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let y0 = BatchVec::broadcast(&[1.0], 3);
+        let grid = TimeGrid::linspace_shared(3, 0.0, 1.0, 3);
+        let mut opts = SolveOptions::new(Method::Dopri5);
+        opts.tols = crate::solver::Tolerances::per_instance(vec![1e-6; 2], vec![1e-6; 2]);
+        solve_ivp_parallel(&sys, &y0, &grid, &opts);
     }
 }

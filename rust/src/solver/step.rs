@@ -14,10 +14,24 @@
 //!   fused pass over memory with no temporaries (`addcmul`-style),
 //! - all buffers live in a pre-allocated [`RkWorkspace`] reused across
 //!   steps ("pre-allocated buffers").
+//!
+//! The kernel is written against contiguous **row ranges**
+//! ([`rk_attempt_rows`] over an [`RkRows`] view): [`rk_attempt`] is the
+//! whole-batch case, and the exec layer ([`crate::exec`]) drives the same
+//! code over disjoint shards of the workspace from a worker pool — which
+//! is what makes sharded and serial solves bitwise-identical.
 
+use super::init::initial_step_batch;
 use super::tableau::Tableau;
+use super::Tolerances;
 use crate::problems::OdeSystem;
 use crate::tensor::BatchVec;
+
+/// Upper bound on tableau stages supported by the stack-allocated
+/// row-slice hoists in the stage kernel. Sized to admit high-order
+/// methods (Dopri8: 13 stages, Verner 9(8): 16); [`CompiledTableau::new`]
+/// rejects anything larger instead of silently iterating empty slices.
+pub const MAX_STAGES: usize = 16;
 
 /// A tableau with zero coefficients stripped, built once per solve.
 #[derive(Debug, Clone)]
@@ -33,6 +47,13 @@ pub struct CompiledTableau {
 
 impl CompiledTableau {
     pub fn new(tab: &'static Tableau) -> Self {
+        assert!(
+            tab.stages <= MAX_STAGES,
+            "tableau '{}' has {} stages but the stage kernel supports at most {MAX_STAGES} \
+             (raise MAX_STAGES in solver/step.rs)",
+            tab.name,
+            tab.stages
+        );
         let a_nz = (0..tab.stages)
             .map(|s| {
                 if s == 0 {
@@ -47,7 +68,8 @@ impl CompiledTableau {
                 }
             })
             .collect();
-        let b_nz = tab.b.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
+        let b_nz =
+            tab.b.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
         let berr_nz =
             tab.b_err.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
         Self { tab, a_nz, b_nz, berr_nz }
@@ -81,16 +103,171 @@ impl RkWorkspace {
     }
 }
 
-/// Compute one RK attempt for the whole batch.
+/// A mutable row-range view of an [`RkWorkspace`]: the unit of work one
+/// pool worker owns during a sharded attempt. `offset` maps local row `r`
+/// to global instance `offset + r` for [`OdeSystem::f_rows`].
+pub(crate) struct RkRows<'a> {
+    pub offset: usize,
+    pub rows: usize,
+    pub dim: usize,
+    /// Per stage: this range's rows of `k[s]`, flat `rows * dim`.
+    pub k: Vec<&'a mut [f64]>,
+    pub ytmp: &'a mut [f64],
+    pub y_new: &'a mut [f64],
+    pub err: &'a mut [f64],
+    pub t_stage: &'a mut [f64],
+}
+
+/// Compute one RK attempt for a contiguous row range.
 ///
-/// - `k0_ready[i]`: instance `i`'s `k[0]` already holds `f(t_i, y_i)`
-///   (FSAL cache, or an unchanged slope after a rejection).
+/// `t`, `dt`, `y` (flat `rows * dim`), `k0_ready` and `active` are local
+/// slices aligned with the view. Semantics per row match the historical
+/// whole-batch kernel exactly:
+///
+/// - `k0_ready[r]`: row `r`'s `k[0]` already holds `f(t_r, y_r)` (FSAL
+///   cache, or an unchanged slope after a rejection).
 /// - `active`: rows to update; inactive rows keep `ytmp = y` so the
 ///   batched dynamics evaluation still sees valid states (torchode's
 ///   "overhanging" model evaluations). If `eval_inactive` is false the
 ///   dynamics are told to skip inactive rows instead.
-///
-/// Returns the number of batched dynamics calls made.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rk_attempt_rows(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    t: &[f64],
+    dt: &[f64],
+    y: &[f64],
+    rr: &mut RkRows<'_>,
+    k0_ready: &[bool],
+    active: Option<&[bool]>,
+    eval_inactive: bool,
+) {
+    let tab = ct.tab;
+    let rows = rr.rows;
+    let dim = rr.dim;
+    let eval_mask = if eval_inactive { None } else { active };
+
+    // Stage 0: evaluate only where the cache is cold, leaving warm rows
+    // untouched (the mask contract of `f_rows`).
+    let cold: Vec<bool> = k0_ready
+        .iter()
+        .enumerate()
+        .map(|(r, &ready)| !ready && eval_mask.map_or(true, |m| m[r]))
+        .collect();
+    if cold.iter().any(|&c| c) {
+        rr.t_stage.copy_from_slice(t);
+        sys.f_rows(rr.offset, rows, &rr.t_stage[..], y, &mut rr.k[0][..], Some(&cold));
+    }
+
+    // Stages 1..S.
+    for s in 1..tab.stages {
+        // ytmp = y + dt * Σ_j a_sj k_j  (one fused pass; inner loop over
+        // the nonzero coefficients only). Stage-slope rows are hoisted out
+        // of the element loop (§Perf: per-element `row()` slicing cost
+        // ~35 % of the attempt at dim 2).
+        let nz = &ct.a_nz[s];
+        let (kprev, krest) = rr.k.split_at_mut(s);
+        for r in 0..rows {
+            let act = active.map_or(true, |m| m[r]);
+            let yrow = &y[r * dim..(r + 1) * dim];
+            if !act {
+                // Keep a valid state for the batched eval.
+                rr.ytmp[r * dim..(r + 1) * dim].copy_from_slice(yrow);
+                rr.t_stage[r] = t[r];
+                continue;
+            }
+            let h = dt[r];
+            rr.t_stage[r] = t[r] + tab.c[s] * h;
+            let out = &mut rr.ytmp[r * dim..(r + 1) * dim];
+            match nz.len() {
+                1 => {
+                    let (j0, w0) = nz[0];
+                    let k0 = &kprev[j0][r * dim..(r + 1) * dim];
+                    for d in 0..dim {
+                        out[d] = yrow[d] + h * w0 * k0[d];
+                    }
+                }
+                2 => {
+                    let (j0, w0) = nz[0];
+                    let (j1, w1) = nz[1];
+                    let k0 = &kprev[j0][r * dim..(r + 1) * dim];
+                    let k1 = &kprev[j1][r * dim..(r + 1) * dim];
+                    for d in 0..dim {
+                        out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
+                    }
+                }
+                _ => {
+                    // Hoist the row slices once per instance.
+                    let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                    for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
+                        *slot = &kprev[j][r * dim..(r + 1) * dim];
+                    }
+                    for d in 0..dim {
+                        let mut acc = 0.0;
+                        for (idx, &(_, w)) in nz.iter().enumerate() {
+                            acc += w * krows[idx][d];
+                        }
+                        out[d] = yrow[d] + h * acc;
+                    }
+                }
+            }
+        }
+        // One batched dynamics call for this stage (this range's rows).
+        sys.f_rows(rr.offset, rows, &rr.t_stage[..], &rr.ytmp[..], &mut krest[0][..], eval_mask);
+    }
+
+    // Solution + error in one fused pass per row, with hoisted slope rows.
+    let has_err = !ct.berr_nz.is_empty();
+    for r in 0..rows {
+        if !active.map_or(true, |m| m[r]) {
+            continue;
+        }
+        let h = dt[r];
+        let yrow = &y[r * dim..(r + 1) * dim];
+        let mut brows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (slot, &(j, _)) in brows.iter_mut().zip(ct.b_nz.iter()) {
+            *slot = &rr.k[j][r * dim..(r + 1) * dim];
+        }
+        {
+            let out = &mut rr.y_new[r * dim..(r + 1) * dim];
+            for d in 0..dim {
+                let mut acc = 0.0;
+                for (idx, &(_, w)) in ct.b_nz.iter().enumerate() {
+                    acc += w * brows[idx][d];
+                }
+                out[d] = yrow[d] + h * acc;
+            }
+        }
+        if has_err {
+            let mut erows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+            for (slot, &(j, _)) in erows.iter_mut().zip(ct.berr_nz.iter()) {
+                *slot = &rr.k[j][r * dim..(r + 1) * dim];
+            }
+            let out = &mut rr.err[r * dim..(r + 1) * dim];
+            for d in 0..dim {
+                let mut acc = 0.0;
+                for (idx, &(_, w)) in ct.berr_nz.iter().enumerate() {
+                    acc += w * erows[idx][d];
+                }
+                out[d] = h * acc;
+            }
+        }
+    }
+}
+
+/// Number of batched dynamics calls an attempt performs: one per stage
+/// after the first, plus the stage-0 refresh iff any row's cache is cold.
+/// Kept separate from the kernel so a sharded attempt (one physical call
+/// per shard per stage) still counts one *semantic* batched call per
+/// stage, matching torchode's accounting.
+pub(crate) fn attempt_call_count(ct: &CompiledTableau, k0_ready: &[bool]) -> u64 {
+    let stage0 = k0_ready.iter().any(|r| !r);
+    u64::from(stage0) + (ct.tab.stages as u64 - 1)
+}
+
+/// Compute one RK attempt for the whole batch. See [`rk_attempt_rows`]
+/// for the per-row semantics. Returns the number of batched dynamics
+/// calls made.
 #[allow(clippy::too_many_arguments)]
 pub fn rk_attempt(
     ct: &CompiledTableau,
@@ -103,137 +280,111 @@ pub fn rk_attempt(
     active: Option<&[bool]>,
     eval_inactive: bool,
 ) -> u64 {
-    let tab = ct.tab;
     let batch = y.batch();
     let dim = y.dim();
-    let mut n_calls = 0u64;
+    let mut rr = RkRows {
+        offset: 0,
+        rows: batch,
+        dim,
+        k: ws.k.iter_mut().map(|k| k.flat_mut()).collect(),
+        ytmp: ws.ytmp.flat_mut(),
+        y_new: ws.y_new.flat_mut(),
+        err: ws.err.flat_mut(),
+        t_stage: &mut ws.t_stage[..],
+    };
+    rk_attempt_rows(ct, sys, t, dt, y.flat(), &mut rr, k0_ready, active, eval_inactive);
+    attempt_call_count(ct, k0_ready)
+}
 
-    let eval_mask = if eval_inactive { None } else { active };
+/// Executes the batched pieces of the joint solve loop. [`InlineExec`]
+/// runs them on the calling thread; `crate::exec::PooledExec` shards the
+/// row-update passes across a scoped worker pool while the loop's shared
+/// controller reduction stays on the coordinator. Implementations must be
+/// bitwise row-equivalent to the inline path.
+pub(crate) trait StageExec {
+    /// State dimension of the underlying system.
+    fn dim(&self) -> usize;
 
-    // Stage 0: evaluate only where the cache is cold. We still issue one
-    // batched call if *any* row needs it (matching the GPU cost model).
-    if k0_ready.iter().any(|r| !r) {
-        // Rows with a warm cache must not be overwritten: evaluate into
-        // ytmp-backed scratch via mask trickery — simplest correct scheme:
-        // evaluate the full batch into a scratch and copy the cold rows.
-        // To avoid an extra buffer we evaluate row-wise through f_batch
-        // with an activity mask selecting the cold rows.
-        let cold: Vec<bool> = k0_ready
-            .iter()
-            .enumerate()
-            .map(|(i, &r)| !r && eval_mask.map_or(true, |m| m[i]))
-            .collect();
-        ws.t_stage.copy_from_slice(t);
-        // Borrow juggling: evaluate into k[0] directly with the cold mask.
-        let k0 = &mut ws.k[0];
-        sys.f_batch(&ws.t_stage, y, k0, Some(&cold));
-        n_calls += 1;
+    /// One batched dynamics evaluation (initial slopes, non-FSAL refresh).
+    fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>);
+
+    /// One full RK attempt over the batch; returns the batched-call count.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt(
+        &self,
+        ct: &CompiledTableau,
+        t: &[f64],
+        dt: &[f64],
+        y: &BatchVec,
+        ws: &mut RkWorkspace,
+        k0_ready: &[bool],
+        active: Option<&[bool]>,
+        eval_inactive: bool,
+    ) -> u64;
+
+    /// The initial step-size heuristic (costs one extra batched eval).
+    #[allow(clippy::too_many_arguments)]
+    fn initial_step(
+        &self,
+        t0: &[f64],
+        y0: &BatchVec,
+        f0: &BatchVec,
+        order: usize,
+        tols: &Tolerances,
+        span: &[f64],
+        scratch_y: &mut BatchVec,
+        scratch_f: &mut BatchVec,
+    ) -> Vec<f64>;
+}
+
+/// The serial [`StageExec`]: everything on the calling thread.
+pub(crate) struct InlineExec<'a> {
+    pub sys: &'a dyn OdeSystem,
+}
+
+impl StageExec for InlineExec<'_> {
+    fn dim(&self) -> usize {
+        self.sys.dim()
     }
 
-    // Stages 1..S.
-    for s in 1..tab.stages {
-        // ytmp = y + dt * Σ_j a_sj k_j  (one fused pass; inner loop over
-        // the nonzero coefficients only). Stage-slope rows are hoisted out
-        // of the element loop (§Perf: per-element `row()` slicing cost
-        // ~35 % of the attempt at dim 2).
-        let nz = &ct.a_nz[s];
-        for i in 0..batch {
-            let act = active.map_or(true, |m| m[i]);
-            let yrow = y.row(i);
-            if !act {
-                // Keep a valid state for the batched eval.
-                ws.ytmp.row_mut(i).copy_from_slice(yrow);
-                ws.t_stage[i] = t[i];
-                continue;
-            }
-            let h = dt[i];
-            ws.t_stage[i] = t[i] + tab.c[s] * h;
-            let out = ws.ytmp.row_mut(i);
-            match nz.len() {
-                1 => {
-                    let (j0, w0) = nz[0];
-                    let k0 = ws.k[j0].row(i);
-                    for d in 0..dim {
-                        out[d] = yrow[d] + h * w0 * k0[d];
-                    }
-                }
-                2 => {
-                    let (j0, w0) = nz[0];
-                    let (j1, w1) = nz[1];
-                    let (k0, k1) = (ws.k[j0].row(i), ws.k[j1].row(i));
-                    for d in 0..dim {
-                        out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
-                    }
-                }
-                _ => {
-                    // Hoist the row slices once per instance.
-                    let mut krows: [&[f64]; 8] = [&[]; 8];
-                    for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
-                        *slot = ws.k[j].row(i);
-                    }
-                    for d in 0..dim {
-                        let mut acc = 0.0;
-                        for (idx, &(_, w)) in nz.iter().enumerate() {
-                            acc += w * krows[idx][d];
-                        }
-                        out[d] = yrow[d] + h * acc;
-                    }
-                }
-            }
-        }
-        // One batched dynamics call for this stage.
-        let (head, tail) = ws.k.split_at_mut(s);
-        let _ = head;
-        sys.f_batch(&ws.t_stage, &ws.ytmp, &mut tail[0], eval_mask);
-        n_calls += 1;
+    fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        self.sys.f_batch(t, y, dy, active);
     }
 
-    // Solution + error in one fused pass per row, with hoisted slope rows.
-    let has_err = !ct.berr_nz.is_empty();
-    for i in 0..batch {
-        if !active.map_or(true, |m| m[i]) {
-            continue;
-        }
-        let h = dt[i];
-        let yrow = y.row(i);
-        let mut brows: [&[f64]; 8] = [&[]; 8];
-        for (slot, &(j, _)) in brows.iter_mut().zip(ct.b_nz.iter()) {
-            *slot = ws.k[j].row(i);
-        }
-        {
-            let out = ws.y_new.row_mut(i);
-            for d in 0..dim {
-                let mut acc = 0.0;
-                for (idx, &(_, w)) in ct.b_nz.iter().enumerate() {
-                    acc += w * brows[idx][d];
-                }
-                out[d] = yrow[d] + h * acc;
-            }
-        }
-        if has_err {
-            let mut erows: [&[f64]; 8] = [&[]; 8];
-            for (slot, &(j, _)) in erows.iter_mut().zip(ct.berr_nz.iter()) {
-                *slot = ws.k[j].row(i);
-            }
-            let out = ws.err.row_mut(i);
-            for d in 0..dim {
-                let mut acc = 0.0;
-                for (idx, &(_, w)) in ct.berr_nz.iter().enumerate() {
-                    acc += w * erows[idx][d];
-                }
-                out[d] = h * acc;
-            }
-        }
+    fn attempt(
+        &self,
+        ct: &CompiledTableau,
+        t: &[f64],
+        dt: &[f64],
+        y: &BatchVec,
+        ws: &mut RkWorkspace,
+        k0_ready: &[bool],
+        active: Option<&[bool]>,
+        eval_inactive: bool,
+    ) -> u64 {
+        rk_attempt(ct, self.sys, t, dt, y, ws, k0_ready, active, eval_inactive)
     }
 
-    n_calls
+    fn initial_step(
+        &self,
+        t0: &[f64],
+        y0: &BatchVec,
+        f0: &BatchVec,
+        order: usize,
+        tols: &Tolerances,
+        span: &[f64],
+        scratch_y: &mut BatchVec,
+        scratch_f: &mut BatchVec,
+    ) -> Vec<f64> {
+        initial_step_batch(self.sys, t0, y0, f0, order, tols, span, scratch_y, scratch_f)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, OdeSystem};
-    use crate::solver::tableau;
+    use crate::solver::tableau::{self, DenseOutput};
 
     /// One dopri5 step on dy/dt = -y must be 5th-order accurate.
     #[test]
@@ -336,5 +487,92 @@ mod tests {
         assert!(ct.b_nz.iter().all(|&(j, _)| j != 1 && j != 6));
         // row 3 of a (stage 3) is fully dense (3 entries).
         assert_eq!(ct.a_nz[3].len(), 3);
+    }
+
+    /// Every registered tableau fits the stage-kernel bound, and call
+    /// counting matches the stage structure.
+    #[test]
+    fn all_tableaus_within_stage_bound() {
+        for t in tableau::ALL {
+            assert!(t.stages <= MAX_STAGES, "{}", t.name);
+        }
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        assert_eq!(attempt_call_count(&ct, &[true, true]), 6);
+        assert_eq!(attempt_call_count(&ct, &[true, false]), 7);
+    }
+
+    /// A tableau beyond the bound is rejected loudly instead of silently
+    /// corrupting stage accumulation (the old fixed `[&[f64]; 8]` bug).
+    #[test]
+    #[should_panic(expected = "stages")]
+    fn compiled_tableau_rejects_too_many_stages() {
+        let stages = MAX_STAGES + 1;
+        let a: &'static [f64] = Box::leak(vec![0.0; stages * (stages - 1) / 2].into_boxed_slice());
+        let b: &'static [f64] = Box::leak(vec![0.0; stages].into_boxed_slice());
+        let c: &'static [f64] = Box::leak(vec![0.0; stages].into_boxed_slice());
+        let tab: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "too-big",
+            stages,
+            order: 1,
+            err_order: 0,
+            a,
+            b,
+            b_err: &[],
+            c,
+            fsal: false,
+            dense: DenseOutput::Hermite,
+        }));
+        CompiledTableau::new(tab);
+    }
+
+    /// A >8-nonzero stage row accumulates every slope (regression test for
+    /// the silent 8-slot cap): a 10-stage method whose last stage sums 9
+    /// previous slopes of f ≡ 1 must produce ytmp = y + dt·Σa.
+    #[test]
+    fn wide_stage_rows_accumulate_fully() {
+        struct Constant;
+        impl OdeSystem for Constant {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn f_inst(&self, _i: usize, _t: f64, _y: &[f64], dy: &mut [f64]) {
+                dy[0] = 1.0;
+            }
+        }
+        let stages = 10;
+        let mut a = Vec::new();
+        for s in 1..stages {
+            // Dense row: every coefficient 0.1.
+            a.extend(vec![0.1; s]);
+        }
+        let mut b = vec![0.0; stages];
+        b[stages - 1] = 1.0;
+        let mut c = vec![0.0; stages];
+        for (s, ci) in c.iter_mut().enumerate() {
+            *ci = 0.1 * s as f64;
+        }
+        let tab: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "wide",
+            stages,
+            order: 1,
+            err_order: 0,
+            a: Box::leak(a.into_boxed_slice()),
+            b: Box::leak(b.into_boxed_slice()),
+            b_err: &[],
+            c: Box::leak(c.into_boxed_slice()),
+            fsal: false,
+            dense: DenseOutput::Hermite,
+        }));
+        let ct = CompiledTableau::new(tab);
+        assert_eq!(ct.a_nz[stages - 1].len(), 9, "needs > 8 nonzero slots");
+        let sys = Constant;
+        let mut ws = RkWorkspace::new(stages, 1, 1);
+        let y = BatchVec::from_rows(&[vec![0.0]]);
+        rk_attempt(&ct, &sys, &[0.0], &[1.0], &y, &mut ws, &[false], None, true);
+        // Last stage input: y + dt · Σ_j 0.1 · k_j = 0.9 (all k = 1); the
+        // solution is y + dt · b_last · k_last = 1.0.
+        assert!((ws.y_new.row(0)[0] - 1.0).abs() < 1e-15);
+        // And the stage input actually saw all 9 slopes.
+        assert!((ws.ytmp.row(0)[0] - 0.9).abs() < 1e-15);
     }
 }

@@ -77,6 +77,17 @@ impl BatchVec {
         &mut self.data
     }
 
+    /// Copy of the contiguous row range `[lo, hi)` as its own matrix —
+    /// the shard boundary of the exec layer.
+    pub fn rows_range(&self, lo: usize, hi: usize) -> BatchVec {
+        assert!(
+            lo <= hi && hi <= self.batch,
+            "row range {lo}..{hi} out of bounds for batch {}",
+            self.batch
+        );
+        BatchVec::from_flat(self.data[lo * self.dim..hi * self.dim].to_vec(), hi - lo, self.dim)
+    }
+
     /// Copy another matrix of identical shape into `self` (no allocation).
     pub fn copy_from(&mut self, other: &BatchVec) {
         debug_assert_eq!(self.batch, other.batch);

@@ -115,7 +115,8 @@ fn throughput_counters_track_work() {
         ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
         || Box::new(NativeEngine::default()),
     );
-    let rxs: Vec<_> = (0..32).map(|i| coord.submit(vdp_req(0, 1.0 + (i % 4) as f64, 10, 3.0))).collect();
+    let rxs: Vec<_> =
+        (0..32).map(|i| coord.submit(vdp_req(0, 1.0 + (i % 4) as f64, 10, 3.0))).collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");
     }

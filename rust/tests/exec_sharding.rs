@@ -1,0 +1,200 @@
+//! The exec layer's contract: a sharded solve is **bitwise-identical** to
+//! the serial reference path — `ys`, `Stats` (including the merged
+//! `n_f_evals` accounting), `Status` and traces — for homogeneous and
+//! heterogeneous batches, FSAL and non-FSAL methods, adaptive and fixed
+//! step, and an oversubscribed pool.
+
+use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
+use rode::prelude::*;
+use rode::problems::VdP;
+use rode::solver::Tolerances;
+use rode::tensor::BatchVec;
+
+/// Full bitwise equality of two solutions (NaN-safe via bit comparison).
+fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.stats, b.stats, "{label}: stats");
+    let (fa, fb) = (a.ys_flat(), b.ys_flat());
+    assert_eq!(fa.len(), fb.len(), "{label}: ys length");
+    for (idx, (x, y)) in fa.iter().zip(fb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: ys[{idx}] {x} vs {y}");
+    }
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+}
+
+fn het_vdp(batch: usize) -> (VdP, BatchVec, TimeGrid) {
+    // Mixed stiffness: shard boundaries fall between very different
+    // workloads, so shards finish after very different iteration counts.
+    let mus: Vec<f64> = (0..batch)
+        .map(|i| [0.5, 40.0, 2.0, 7.0, 0.8, 25.0, 4.0, 12.0][i % 8])
+        .collect();
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::from_rows(
+        &(0..batch)
+            .map(|i| vec![1.0 + 0.1 * (i % 5) as f64, 0.1 * (i % 3) as f64])
+            .collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 5.0, 10);
+    (sys, y0, grid)
+}
+
+/// The `heterogeneous_batch_isolated` scenario, sharded: stiff + easy
+/// VdP instances split across 2..=batch workers must reproduce the
+/// serial solve bitwise.
+#[test]
+fn heterogeneous_batch_sharded_bitwise() {
+    let (sys, y0, grid) = het_vdp(6);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-7, 1e-7)
+        .with_max_steps(200_000)
+        .with_trace();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(serial.all_success());
+    for threads in [2, 3, 4, 6] {
+        let opts = base.clone().with_threads(threads);
+        let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+        assert_bitwise(&serial, &sharded, &format!("threads={threads}"));
+    }
+}
+
+/// The `batch_of_identical_problems_identical_answers` scenario, sharded.
+#[test]
+fn identical_problems_sharded_bitwise() {
+    let b = 8;
+    let sys = VdP::uniform(b, 2.0);
+    let y0 = BatchVec::broadcast(&[1.0, 0.5], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, 5.0, 10);
+    let base = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-6);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(4));
+    assert!(sharded.all_success());
+    assert_bitwise(&serial, &sharded, "identical-batch");
+    // And the torchode invariants survive the merge.
+    for i in 1..b {
+        assert_eq!(sharded.stats[i], sharded.stats[0]);
+        for e in 0..10 {
+            assert_eq!(sharded.y(i, e), sharded.y(0, e));
+        }
+    }
+}
+
+/// Non-FSAL methods exercise the refresh entry of the call ledger: the
+/// merged `n_f_evals` must still match the serial loop exactly even when
+/// shards run for very different iteration counts.
+#[test]
+fn non_fsal_methods_sharded_bitwise() {
+    // Mild heterogeneity: low-order methods (Heun) stay fast in debug
+    // builds while shards still finish after different iteration counts.
+    let sys = VdP::new(vec![0.5, 8.0, 2.0, 5.0, 0.8]);
+    let y0 = BatchVec::from_rows(
+        &(0..5).map(|i| vec![1.0 + 0.1 * i as f64, 0.0]).collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(5, 0.0, 4.0, 9);
+    for m in [Method::Fehlberg45, Method::Heun, Method::CashKarp45] {
+        let base = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+        let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+        let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(3));
+        assert_bitwise(&serial, &sharded, &format!("{m:?}"));
+    }
+}
+
+/// Fixed-step methods (non-adaptive, non-FSAL) shard too.
+#[test]
+fn fixed_step_sharded_bitwise() {
+    let (sys, y0, grid) = het_vdp(4);
+    let base = SolveOptions::new(Method::Rk4).with_fixed_dt(1e-3).with_max_steps(10_000);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(2));
+    assert_bitwise(&serial, &sharded, "rk4-fixed");
+}
+
+/// An oversubscribed pool (threads > batch) degrades to one shard per
+/// row and stays safe and bitwise-correct.
+#[test]
+fn oversubscribed_pool_is_safe() {
+    let (sys, y0, grid) = het_vdp(3);
+    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(16));
+    assert_bitwise(&serial, &sharded, "oversubscribed");
+    // threads = 0 resolves to the core count; still bitwise.
+    let auto = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(0));
+    assert_bitwise(&serial, &auto, "auto-threads");
+}
+
+/// Failing instances merge faithfully: a max-steps-limited stiff row
+/// reports the same status/stats/NaN pattern under sharding.
+#[test]
+fn failure_status_merges_bitwise() {
+    let sys = VdP::new(vec![0.5, 1000.0]);
+    let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
+    let grid = TimeGrid::linspace_shared(2, 0.0, 50.0, 10);
+    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8).with_max_steps(60);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert_eq!(serial.status[1], Status::MaxStepsReached);
+    let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(2));
+    assert_bitwise(&serial, &sharded, "max-steps");
+}
+
+/// Per-instance tolerance vectors are sliced per shard and still produce
+/// the serial result bitwise.
+#[test]
+fn per_instance_tolerances_shard_correctly() {
+    let (sys, y0, grid) = het_vdp(6);
+    let mut base = SolveOptions::new(Method::Dopri5).with_max_steps(400_000);
+    base.tols = Tolerances::per_instance(
+        vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
+        vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
+    );
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    for threads in [2, 4] {
+        let opts = base.clone().with_threads(threads);
+        let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+        assert_bitwise(&serial, &sharded, &format!("per-instance tols, threads={threads}"));
+    }
+}
+
+/// A wrong-length tolerance vector is rejected at the pooled entry too.
+#[test]
+#[should_panic(expected = "atol")]
+fn pooled_rejects_mismatched_tolerances() {
+    let (sys, y0, grid) = het_vdp(4);
+    let mut opts = SolveOptions::new(Method::Dopri5).with_threads(2);
+    opts.tols = Tolerances::per_instance(vec![1e-6; 3], vec![1e-6; 3]);
+    solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+}
+
+/// The joint loop with sharded row-update passes matches the serial
+/// joint loop bitwise (the shared controller stays on the coordinator).
+#[test]
+fn joint_pooled_matches_serial_bitwise() {
+    let mus = vec![1.0, 5.0, 10.0, 20.0, 2.0];
+    let b = mus.len();
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, 10.0, 20);
+    for m in [Method::Dopri5, Method::Fehlberg45] {
+        let base =
+            SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000).with_trace();
+        let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+        assert!(serial.all_success());
+        for threads in [2, 3, 8] {
+            let opts = base.clone().with_threads(threads);
+            let sharded = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&serial, &sharded, &format!("joint {m:?} threads={threads}"));
+        }
+    }
+}
+
+/// Sharding composes with the rode `eval_inactive = false` extension.
+#[test]
+fn skip_inactive_sharded_bitwise() {
+    let (sys, y0, grid) = het_vdp(6);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(100_000)
+        .skip_inactive();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(3));
+    assert_bitwise(&serial, &sharded, "skip-inactive");
+}

@@ -1,15 +1,23 @@
 //! Bench: the L3 coordinator — batcher throughput and end-to-end service
-//! latency across batching configurations.
+//! latency across batching configurations — plus the solver's straggler
+//! perf smoke.
 //!
-//! Run with `cargo bench --bench coordinator_bench`.
+//! Run with `cargo bench --bench coordinator_bench`, or pass section
+//! names to run a subset (`batcher`, `service`, `threads`, `straggler`),
+//! e.g. `cargo bench --bench coordinator_bench -- straggler`. The
+//! straggler section writes machine-readable `BENCH_solver.json` so CI
+//! can track the perf trajectory per PR.
 
-use rode::bench::{threads_sweep, time_repeats, Summary};
+use rode::bench::{
+    straggler_workload, threads_sweep, time_repeats, write_bench_json, BenchRecord, Summary,
+};
 use rode::coordinator::{
     Coordinator, DynamicBatcher, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
 };
 use rode::exec::solve_ivp_parallel_pooled;
 use rode::nn::Rng64;
-use rode::solver::{Method, SolveOptions, TimeGrid};
+use rode::solver::reference::solve_ivp_parallel_reference;
+use rode::solver::{solve_ivp_parallel, Method, SolveOptions, TimeGrid};
 use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
@@ -111,8 +119,81 @@ fn bench_threads_sweep() {
     }
 }
 
+/// The straggler perf smoke (ISSUE 2 acceptance): batch 256, one stiff
+/// VdP row plus 255 easy rows, `eval_inactive = false`. Measures the
+/// frozen pre-active-set loop (the "current main" baseline), the
+/// active-set loop, and the active-set loop with compaction, and writes
+/// `BENCH_solver.json`.
+fn bench_straggler() {
+    println!("--- straggler batch (1 stiff VdP + 255 easy, dopri5, eval_inactive=false) ---");
+    let batch = 256;
+    let (sys, y0, grid) = straggler_workload(batch, 60.0, 0.5, 12.0, 20);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(1_000_000)
+        .skip_inactive();
+
+    let mut records = Vec::new();
+    let mut measure = |name: &str, threshold: f64, run: &mut dyn FnMut()| -> f64 {
+        let xs = time_repeats(1, 5, run);
+        let s = Summary::from_samples(&xs);
+        println!("{name:<22} {:>9.2} ± {:>6.2} ms", s.mean, s.std);
+        records.push(
+            BenchRecord::new(name, &s)
+                .field("batch", batch as f64)
+                .field("threshold", threshold)
+                .field("eval_inactive", 0.0),
+        );
+        s.mean
+    };
+
+    let opts_ref = base.clone();
+    let t_ref = measure("masked-reference", 0.0, &mut || {
+        let sol = solve_ivp_parallel_reference(&sys, &y0, &grid, &opts_ref);
+        assert!(sol.all_success());
+        std::hint::black_box(sol.ys_flat()[0]);
+    });
+    let opts_act = base.clone();
+    let t_act = measure("active-set", 0.0, &mut || {
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts_act);
+        assert!(sol.all_success());
+        std::hint::black_box(sol.ys_flat()[0]);
+    });
+    let opts_cmp = base.clone().with_compaction(0.5);
+    let t_cmp = measure("active-set+compact0.5", 0.5, &mut || {
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts_cmp);
+        assert!(sol.all_success());
+        std::hint::black_box(sol.ys_flat()[0]);
+    });
+
+    for r in records.iter_mut() {
+        let speedup = t_ref / r.mean_ms;
+        r.fields.push(("speedup_vs_reference".to_string(), speedup));
+    }
+    println!(
+        "speedup vs masked reference: active-set x{:.2}, +compaction x{:.2}",
+        t_ref / t_act,
+        t_ref / t_cmp
+    );
+    match write_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => println!("wrote BENCH_solver.json ({} records)", records.len()),
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 fn main() {
-    bench_batcher();
-    bench_service();
-    bench_threads_sweep();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name || a == "all");
+    if want("batcher") {
+        bench_batcher();
+    }
+    if want("service") {
+        bench_service();
+    }
+    if want("threads") {
+        bench_threads_sweep();
+    }
+    if want("straggler") {
+        bench_straggler();
+    }
 }

@@ -147,6 +147,21 @@ impl<'a> OdeSystem for TimedSystem<'a> {
         self.calls.set(self.calls.get() + 1);
     }
 
+    fn f_rows_indexed(
+        &self,
+        offset: usize,
+        inst: &[usize],
+        rows: &[usize],
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+    ) {
+        let start = Instant::now();
+        self.inner.f_rows_indexed(offset, inst, rows, t, y, dy);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+        self.calls.set(self.calls.get() + 1);
+    }
+
     fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
         let start = Instant::now();
         self.inner.f_batch(t, y, dy, active);
@@ -205,6 +220,80 @@ where
         loop_time_ms: if steps > 0 { solver_ms / steps as f64 } else { 0.0 },
         steps,
     }
+}
+
+/// The straggler workload of the active-set/compaction benchmark (and
+/// the §4.1 regime): one stiff Van der Pol row at index 0 plus
+/// `batch - 1` easy rows that finish long before it. Once the easy rows
+/// are done, a solver that still sweeps the full batch pays
+/// O(batch · dim · stages) per step for one live row.
+pub fn straggler_workload(
+    batch: usize,
+    stiff_mu: f64,
+    easy_mu: f64,
+    t1: f64,
+    n_eval: usize,
+) -> (crate::problems::VdP, BatchVec, crate::solver::TimeGrid) {
+    assert!(batch >= 1);
+    let mut mus = vec![easy_mu; batch];
+    mus[0] = stiff_mu;
+    let sys = crate::problems::VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
+    let grid = crate::solver::TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
+    (sys, y0, grid)
+}
+
+/// One machine-readable benchmark record for `BENCH_solver.json`.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    /// Free-form numeric facts (batch size, threshold, speedup, ...).
+    pub fields: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    pub fn new(name: &str, s: &Summary) -> Self {
+        Self { name: name.to_string(), mean_ms: s.mean, std_ms: s.std, fields: Vec::new() }
+    }
+
+    pub fn field(mut self, key: &str, value: f64) -> Self {
+        self.fields.push((key.to_string(), value));
+        self
+    }
+}
+
+/// Write benchmark records as a JSON array (hand-rolled: the vendored
+/// crate set has no serde). Non-finite values are emitted as `null` to
+/// keep the file parseable.
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    fn num(v: f64) -> String {
+        if v.is_finite() {
+            v.to_string()
+        } else {
+            "null".to_string()
+        }
+    }
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"mean_ms\": {}, \"std_ms\": {}",
+            r.name,
+            num(r.mean_ms),
+            num(r.std_ms)
+        ));
+        for (k, v) in &r.fields {
+            s.push_str(&format!(", \"{k}\": {}", num(*v)));
+        }
+        s.push('}');
+        if i + 1 < records.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
 }
 
 /// Emit a markdown table of (row label, per-column summaries).
@@ -295,5 +384,36 @@ mod tests {
         let xs = time_repeats(2, 5, || n += 1);
         assert_eq!(xs.len(), 5);
         assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn straggler_workload_shape() {
+        let (sys, y0, grid) = straggler_workload(8, 50.0, 0.5, 10.0, 20);
+        assert_eq!(sys.mu(0), 50.0);
+        assert_eq!(sys.mu(7), 0.5);
+        assert_eq!(y0.batch(), 8);
+        assert_eq!(grid.n_eval(), 20);
+        assert_eq!(grid.t1(3), 10.0);
+    }
+
+    #[test]
+    fn bench_json_is_valid_shape() {
+        let s = Summary::from_samples(&[1.0, 2.0]);
+        let recs = vec![
+            BenchRecord::new("a", &s).field("batch", 256.0).field("speedup", 2.5),
+            BenchRecord::new("b", &s),
+        ];
+        let dir = std::env::temp_dir().join("rode_bench_json_test.json");
+        let path = dir.to_str().unwrap();
+        write_bench_json(path, &recs).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(text.starts_with("[\n"));
+        assert!(text.contains("\"name\": \"a\""));
+        assert!(text.contains("\"batch\": 256"));
+        assert!(text.contains("\"speedup\": 2.5"));
+        assert!(text.trim_end().ends_with(']'));
+        // Exactly one comma between the two records.
+        assert_eq!(text.matches("},").count(), 1);
     }
 }

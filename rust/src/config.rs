@@ -114,6 +114,9 @@ pub struct RodeConfig {
     pub artifacts_dir: String,
     /// Worker threads for the native solve loops (0 = one per core).
     pub threads: usize,
+    /// Active-set compaction threshold for the parallel solve loops
+    /// (`0.0` disables; see `SolveOptions::compact_threshold`).
+    pub compact_threshold: f64,
 }
 
 impl Default for RodeConfig {
@@ -127,6 +130,7 @@ impl Default for RodeConfig {
             engine: "native".to_string(),
             artifacts_dir: "artifacts".to_string(),
             threads: 1,
+            compact_threshold: 0.0,
         }
     }
 }
@@ -157,6 +161,13 @@ impl RodeConfig {
         }
         if let Some(v) = raw.get_usize("threads")? {
             cfg.threads = v;
+        }
+        if let Some(v) = raw.get_f64("compact_threshold")? {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "compact_threshold must be in [0, 1], got {v}"
+            );
+            cfg.compact_threshold = v;
         }
         Ok(cfg)
     }
@@ -208,6 +219,19 @@ mod tests {
         // Default is the serial path.
         let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
         assert_eq!(cfg.threads, 1);
+    }
+
+    #[test]
+    fn compact_threshold_key_parses_and_validates() {
+        let cfg =
+            RodeConfig::from_raw(&RawConfig::parse("compact_threshold = 0.25").unwrap()).unwrap();
+        assert_eq!(cfg.compact_threshold, 0.25);
+        // Default: compaction off.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.compact_threshold, 0.0);
+        // Out-of-range values are rejected, not clamped.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("compact_threshold = 1.5").unwrap())
+            .is_err());
     }
 
     #[test]

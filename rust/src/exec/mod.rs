@@ -24,6 +24,21 @@
 //! reconstructed exactly from per-shard call ledgers in
 //! [`merge_sharded`].
 //!
+//! ## Interaction with the active set and compaction
+//!
+//! Each parallel-shard worker runs the full active-set loop of
+//! [`crate::solver::parallel`] on its row range, including state
+//! compaction when `SolveOptions::compact_threshold` is set: a shard
+//! whose stragglers are all that remain packs its own state
+//! independently, and the [`OffsetSystem`] wrapper composes the shard
+//! base offset with the loop's slot → row map
+//! ([`crate::problems::OdeSystem::f_rows_indexed`]). Compaction changes
+//! neither per-row values nor the per-iteration semantic call counts the
+//! ledgers record, so the merged result — including `n_f_evals` — stays
+//! bitwise-identical to the serial loop whatever the threshold. The same
+//! holds for `eval_inactive = false`: skipped rows simply never appear
+//! in a worker's index lists.
+//!
 //! Sharded entry points require `S: OdeSystem + Sync` (the system is
 //! shared read-only across workers); systems with `RefCell` scratch
 //! (CNF/FEN) keep using the serial `solve_ivp_*` functions.
@@ -73,6 +88,20 @@ impl<S: OdeSystem + ?Sized> OdeSystem for OffsetSystem<'_, S> {
         active: Option<&[bool]>,
     ) {
         self.inner.f_rows(self.offset + offset, n, t, y, dy, active)
+    }
+
+    fn f_rows_indexed(
+        &self,
+        offset: usize,
+        inst: &[usize],
+        rows: &[usize],
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+    ) {
+        // The shard's slot → row map composes with the shard base offset,
+        // so the active-set loop works unchanged inside a shard worker.
+        self.inner.f_rows_indexed(self.offset + offset, inst, rows, t, y, dy)
     }
 
     fn f_batch(
@@ -287,6 +316,7 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
         let mut y_new_it = split_chunks(ws.y_new.flat_mut(), &sizes).into_iter();
         let mut err_it = split_chunks(ws.err.flat_mut(), &sizes).into_iter();
         let mut ts_it = split_chunks(&mut ws.t_stage[..], &row_sizes).into_iter();
+        let mut cold_it = split_chunks(&mut ws.cold[..], &row_sizes).into_iter();
 
         let mut shards: Vec<RkRows<'_>> = Vec::with_capacity(self.bounds.len());
         for &(lo, hi) in &self.bounds {
@@ -294,11 +324,14 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
                 offset: lo,
                 rows: hi - lo,
                 dim,
-                k: k_chunks.iter_mut().map(|it| it.next().unwrap()).collect(),
+                k: std::array::from_fn(|s| {
+                    k_chunks.get_mut(s).map_or_else(Default::default, |it| it.next().unwrap())
+                }),
                 ytmp: ytmp_it.next().unwrap(),
                 y_new: y_new_it.next().unwrap(),
                 err: err_it.next().unwrap(),
                 t_stage: ts_it.next().unwrap(),
+                cold: cold_it.next().unwrap(),
             });
         }
 

@@ -51,6 +51,11 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let t1 = flag_f64(flags, "t1", 10.0);
     let n_eval = flag_usize(flags, "points", 50);
     let threads = flag_usize(flags, "threads", 1);
+    let compact = flag_f64(flags, "compact-threshold", 0.0);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&compact),
+        "--compact-threshold must be in [0, 1], got {compact}"
+    );
     let method = flags
         .get("method")
         .map(|m| Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}")))
@@ -66,7 +71,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             .collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
-    let opts = SolveOptions::new(method).with_tols(1e-6, 1e-5).with_threads(threads);
+    let opts = SolveOptions::new(method)
+        .with_tols(1e-6, 1e-5)
+        .with_threads(threads)
+        .with_compaction(compact);
     let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 
     println!("status: {:?}", sol.status);
@@ -98,6 +106,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let n_requests = flag_usize(flags, "requests", 200);
     cfg.max_batch = flag_usize(flags, "max-batch", cfg.max_batch);
     cfg.threads = flag_usize(flags, "threads", cfg.threads);
+    cfg.compact_threshold = flag_f64(flags, "compact-threshold", cfg.compact_threshold);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.compact_threshold),
+        "--compact-threshold must be in [0, 1], got {}",
+        cfg.compact_threshold
+    );
     if let Some(w) = flags.get("max-wait-ms").and_then(|v| v.parse::<f64>().ok()) {
         cfg.max_wait = Duration::from_secs_f64(w / 1e3);
     }
@@ -105,7 +119,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let artifacts_dir = cfg.artifacts_dir.clone();
     let solve_opts = rode::solver::SolveOptions::new(cfg.method)
         .with_tols(cfg.atol, cfg.rtol)
-        .with_threads(cfg.threads);
+        .with_threads(cfg.threads)
+        .with_compaction(cfg.compact_threshold);
 
     let coord = Coordinator::spawn(
         ServiceConfig { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
@@ -206,8 +221,11 @@ fn main() -> Result<()> {
                 "rode — parallel ODE solver stack (torchode reproduction)\n\n\
                  usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
-                 \n                   (--threads N shards the batch over N workers; 0 = all cores)\
-                 \n  serve            coordinator + synthetic workload (also honors --threads)\
+                 \n                   (--threads N shards the batch over N workers; 0 = all cores;\
+                 \n                    --compact-threshold F packs solver state once the live\
+                 \n                    fraction drops below F, 0 = off)\
+                 \n  serve            coordinator + synthetic workload (also honors --threads\
+                 \n                   and --compact-threshold)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\
                  \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"

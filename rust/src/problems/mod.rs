@@ -73,6 +73,38 @@ pub trait OdeSystem {
         }
     }
 
+    /// Evaluate a subset of the rows of a packed `(n, dim)` buffer through
+    /// an explicit slot → instance map: for each local row `r` in `rows`,
+    /// `dy[r] = f(offset + inst[r], t[r], y[r])`. Rows not listed are
+    /// untouched and cost **zero** per-row work — this is the eval
+    /// primitive of the active-set parallel loop
+    /// ([`crate::solver::parallel`]): with `eval_inactive = false` the
+    /// finished rows are skipped outright, and after state compaction the
+    /// live rows are dense in the buffers but map to non-contiguous
+    /// instances. Systems that override [`OdeSystem::f_rows`] with a
+    /// batched kernel should override this too, and must keep per-row
+    /// results bitwise-identical to `f_inst` so compacted, masked and
+    /// serial solves all agree.
+    fn f_rows_indexed(
+        &self,
+        offset: usize,
+        inst: &[usize],
+        rows: &[usize],
+        t: &[f64],
+        y: &[f64],
+        dy: &mut [f64],
+    ) {
+        let dim = self.dim();
+        for &r in rows {
+            self.f_inst(
+                offset + inst[r],
+                t[r],
+                &y[r * dim..(r + 1) * dim],
+                &mut dy[r * dim..(r + 1) * dim],
+            );
+        }
+    }
+
     /// Evaluate the whole batch, one time per instance. `active` masks the
     /// rows that still need values; `None` means all rows. Delegates to
     /// [`OdeSystem::f_rows`] over the full row range.

@@ -1,0 +1,224 @@
+//! The packed active set driving the parallel solve loop.
+//!
+//! torchode tracks every instance's progress separately; the natural CPU
+//! realization is an incrementally-maintained **index list of unfinished
+//! rows** instead of a `Vec<bool>` mask scanned in every pass. The
+//! [`ActiveSet`] owns two pieces of bookkeeping:
+//!
+//! - `live`: the *slots* (positions in the solver's state buffers) that
+//!   still hold an unfinished instance, ascending. Every per-row pass of
+//!   the loop iterates this list, so a finished row costs zero work.
+//! - `inst`: the slot → original-row map. It is the identity until the
+//!   first [`ActiveSet::compact_with`]; afterwards slot `r` of the state
+//!   buffers belongs to original row `inst[r]`, which is how solution
+//!   buffers, grids and per-instance tolerances keep their original
+//!   indexing while the hot state is packed densely.
+//!
+//! **Compaction** gathers the live rows into a dense prefix of the state
+//! buffers (callers supply the gather as a closure over `(dst, src)` slot
+//! pairs; `dst <= src` always holds because `live` is ascending, so
+//! in-place `copy_within` gathers are safe). Compacting never changes any
+//! live row's values — only where they are stored — so trajectories are
+//! bitwise-identical with compaction on or off.
+
+/// Packed index bookkeeping for a batched solve. See the module docs.
+#[derive(Debug, Clone)]
+pub struct ActiveSet {
+    /// Live slots, ascending.
+    live: Vec<usize>,
+    /// Slot → original row. Identity until the first compaction.
+    inst: Vec<usize>,
+    /// All materialized slots (`0..slots`), kept as a list so callers can
+    /// drive index-list evals over every still-materialized row
+    /// (torchode's "overhanging" evaluations under `eval_inactive`).
+    all: Vec<usize>,
+    /// Number of materialized slots: the meaningful prefix of the state
+    /// buffers. Equals the original batch until the first compaction.
+    slots: usize,
+    compacted: bool,
+}
+
+impl ActiveSet {
+    /// All `batch` rows live, slots in original order.
+    pub fn new(batch: usize) -> Self {
+        Self {
+            live: (0..batch).collect(),
+            inst: (0..batch).collect(),
+            all: (0..batch).collect(),
+            slots: batch,
+            compacted: false,
+        }
+    }
+
+    /// The live slots, ascending.
+    #[inline]
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Every materialized slot (`0..slots()` as a list).
+    #[inline]
+    pub fn all_slots(&self) -> &[usize] {
+        &self.all
+    }
+
+    /// The slot → original-row map (length [`ActiveSet::slots`]).
+    #[inline]
+    pub fn inst_map(&self) -> &[usize] {
+        &self.inst
+    }
+
+    /// Original row stored in `slot`.
+    #[inline]
+    pub fn inst(&self, slot: usize) -> usize {
+        self.inst[slot]
+    }
+
+    /// Number of materialized slots.
+    #[inline]
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Number of live rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Whether any compaction has happened (`inst` is no longer the
+    /// identity).
+    #[inline]
+    pub fn is_compacted(&self) -> bool {
+        self.compacted
+    }
+
+    /// Drop finished slots from the live list (`finished` is indexed by
+    /// slot). O(live), allocation-free.
+    pub fn retain(&mut self, finished: &[bool]) {
+        self.live.retain(|&r| !finished[r]);
+    }
+
+    /// Whether the live fraction has dropped below `threshold` (and there
+    /// is anything to compact). `threshold = 0` disables compaction;
+    /// `threshold = 1` compacts as soon as any row finishes.
+    pub fn should_compact(&self, threshold: f64) -> bool {
+        threshold > 0.0
+            && self.live.len() < self.slots
+            && (self.live.len() as f64) < threshold * self.slots as f64
+    }
+
+    /// Gather the live rows into the dense prefix `0..len()`. `gather` is
+    /// called once per moved row with `(dst, src)` slot indices,
+    /// `dst <= src`, ascending in `dst`; the caller moves every piece of
+    /// per-slot solver state accordingly. Allocation-free.
+    pub fn compact_with(&mut self, mut gather: impl FnMut(usize, usize)) {
+        let n = self.live.len();
+        for dst in 0..n {
+            let src = self.live[dst];
+            if src != dst {
+                gather(dst, src);
+                self.inst[dst] = self.inst[src];
+            }
+        }
+        self.inst.truncate(n);
+        self.all.truncate(n);
+        self.slots = n;
+        self.live.clear();
+        self.live.extend(0..n);
+        self.compacted = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_as_identity() {
+        let a = ActiveSet::new(4);
+        assert_eq!(a.live(), &[0, 1, 2, 3]);
+        assert_eq!(a.inst_map(), &[0, 1, 2, 3]);
+        assert_eq!(a.all_slots(), &[0, 1, 2, 3]);
+        assert_eq!(a.slots(), 4);
+        assert!(!a.is_compacted());
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn retain_drops_finished_slots() {
+        let mut a = ActiveSet::new(5);
+        a.retain(&[false, true, false, true, false]);
+        assert_eq!(a.live(), &[0, 2, 4]);
+        // Materialized slots are unchanged until compaction.
+        assert_eq!(a.slots(), 5);
+        assert_eq!(a.all_slots(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        let mut a = ActiveSet::new(4);
+        assert!(!a.should_compact(0.5), "nothing finished yet");
+        a.retain(&[false, true, true, false]);
+        assert!(!a.should_compact(0.0), "0 disables compaction");
+        assert!(!a.should_compact(0.5), "live fraction is exactly 0.5");
+        assert!(a.should_compact(0.51));
+        assert!(a.should_compact(1.0));
+    }
+
+    #[test]
+    fn compaction_gathers_into_prefix() {
+        let mut a = ActiveSet::new(6);
+        let mut state: Vec<i32> = vec![10, 11, 12, 13, 14, 15];
+        a.retain(&[true, false, true, true, false, false]);
+        assert_eq!(a.live(), &[1, 4, 5]);
+        let mut moves = Vec::new();
+        a.compact_with(|dst, src| {
+            state[dst] = state[src];
+            moves.push((dst, src));
+        });
+        assert_eq!(moves, vec![(0, 1), (1, 4), (2, 5)]);
+        assert_eq!(&state[..3], &[11, 14, 15]);
+        assert_eq!(a.live(), &[0, 1, 2]);
+        assert_eq!(a.inst_map(), &[1, 4, 5]);
+        assert_eq!(a.all_slots(), &[0, 1, 2]);
+        assert_eq!(a.slots(), 3);
+        assert!(a.is_compacted());
+    }
+
+    #[test]
+    fn second_compaction_composes_the_maps() {
+        let mut a = ActiveSet::new(6);
+        a.retain(&[true, false, true, false, false, true]);
+        a.compact_with(|_, _| {}); // inst = [1, 3, 4]
+        a.retain(&[false, true, false]);
+        a.compact_with(|_, _| {});
+        assert_eq!(a.inst_map(), &[1, 4]);
+        assert_eq!(a.slots(), 2);
+    }
+
+    #[test]
+    fn gather_never_moves_backwards() {
+        // dst <= src is the contract that makes in-place copy_within
+        // gathers safe.
+        let mut a = ActiveSet::new(32);
+        let finished: Vec<bool> = (0..32).map(|i| i % 3 == 0).collect();
+        a.retain(&finished);
+        a.compact_with(|dst, src| assert!(dst <= src));
+    }
+
+    #[test]
+    fn compacting_everything_away_is_safe() {
+        let mut a = ActiveSet::new(3);
+        a.retain(&[true, true, true]);
+        assert!(a.is_empty());
+        a.compact_with(|_, _| panic!("no rows to gather"));
+        assert_eq!(a.slots(), 0);
+        assert!(a.live().is_empty());
+    }
+}

@@ -12,11 +12,19 @@
 //! and error combination) can be sharded across a worker pool by
 //! [`crate::exec::solve_ivp_joint_pooled`], while the shared controller
 //! reduction below stays on the coordinator thread.
+//!
+//! Because every row shares one time and step size, the only per-row
+//! progress in this loop is the dense-output cursor; a packed `pending`
+//! index list (the joint loop's active set) keeps rows whose cursors are
+//! exhausted out of the dense-output pass and turns the all-done check
+//! into `pending.is_empty()`. All per-step buffers are hoisted out of the
+//! loop, so the steady state performs zero heap allocations through the
+//! inline executor (`tests/alloc_regression.rs`).
 
 use super::controller::ControllerState;
 use super::interp::{self, DOPRI5_NCOEFF};
 use super::norm::{scaled_norm, NormKind};
-use super::step::{CompiledTableau, InlineExec, RkWorkspace, StageExec};
+use super::step::{CompiledTableau, InlineExec, RkWorkspace, StageExec, MAX_STAGES};
 use super::tableau::DenseOutput;
 use super::{SolveOptions, Solution, Status, TimeGrid};
 use crate::problems::OdeSystem;
@@ -85,9 +93,9 @@ pub(crate) fn joint_core(
         return sol;
     }
 
-    let t_vec = vec![t; batch];
+    let mut t_vec = vec![t; batch];
     exec.eval(&t_vec, &y, &mut ws.k[0], None);
-    bump_fevals(&mut sol, 1);
+    let mut fevals: u64 = 1;
     f_start.copy_from(&ws.k[0]);
 
     // Shared initial step: minimum of the per-instance heuristics — the
@@ -107,7 +115,7 @@ pub(crate) fn joint_core(
                 &mut ws.ytmp,
                 &mut ws.y_new,
             );
-            bump_fevals(&mut sol, 1);
+            fevals += 1;
             dt0.into_iter().fold(f64::INFINITY, f64::min)
         }
     };
@@ -117,6 +125,15 @@ pub(crate) fn joint_core(
     let mut steps = 0usize;
     let mut done = false;
     let mut status = Status::MaxStepsReached;
+
+    // The joint loop's active set: rows whose dense-output cursor still
+    // has eval points to fill. Shared (t, dt) means this is the only
+    // per-row progress to track.
+    let mut pending: Vec<usize> = (0..batch).collect();
+    // Per-step buffers hoisted out of the loop (zero-allocation steady
+    // state; the shared scalars are broadcast by `fill`, not `vec!`).
+    let mut dt_vec = vec![0.0f64; batch];
+    let mut k0r = vec![true; batch];
 
     while !done {
         steps += 1;
@@ -130,11 +147,11 @@ pub(crate) fn joint_core(
             clamped = true;
         }
 
-        let dt_vec = vec![dt; batch];
-        let tv = vec![t; batch];
-        let k0r = vec![k0_ready; batch];
-        let calls = exec.attempt(&ct, &tv, &dt_vec, &y, &mut ws, &k0r, None, true);
-        bump_fevals(&mut sol, calls);
+        dt_vec.fill(dt);
+        t_vec.fill(t);
+        k0r.fill(k0_ready);
+        let calls = exec.attempt(&ct, &t_vec, &dt_vec, &y, &mut ws, &k0r, None, true);
+        fevals += calls;
         for st in sol.stats.iter_mut() {
             st.n_steps += 1;
         }
@@ -184,12 +201,14 @@ pub(crate) fn joint_core(
             // dense output (the stale-Hermite fix); it doubles as the k[0]
             // refresh for the next iteration.
             if !tab.fsal {
-                let tnv = vec![t_new; batch];
-                exec.eval(&tnv, &ws.y_new, &mut ws.k[0], None);
-                bump_fevals(&mut sol, 1);
+                t_vec.fill(t_new);
+                exec.eval(&t_vec, &ws.y_new, &mut ws.k[0], None);
+                fevals += 1;
             }
 
-            for i in 0..batch {
+            // Dense output: only rows with unfilled eval points (the
+            // packed `pending` list) are visited at all.
+            for &i in &pending {
                 let te_row = grid.row(i);
                 let mut e = next_eval[i];
                 let mut coeffs_ready = false;
@@ -198,12 +217,15 @@ pub(crate) fn joint_core(
                     match tab.dense {
                         DenseOutput::Dopri5 => {
                             if !coeffs_ready {
-                                let krows: Vec<&[f64]> = ws.k.iter().map(|k| k.row(i)).collect();
+                                let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                                for (slot, k) in krows.iter_mut().zip(ws.k.iter()) {
+                                    *slot = k.row(i);
+                                }
                                 interp::dopri5_coeffs(
                                     dt,
                                     y.row(i),
                                     ws.y_new.row(i),
-                                    &krows,
+                                    &krows[..tab.stages],
                                     &mut interp_coeffs,
                                 );
                                 coeffs_ready = true;
@@ -234,6 +256,7 @@ pub(crate) fn joint_core(
                 }
                 next_eval[i] = e;
             }
+            pending.retain(|&i| next_eval[i] < n_eval);
 
             y.copy_from(&ws.y_new);
             t = t_new;
@@ -248,7 +271,7 @@ pub(crate) fn joint_core(
             }
             k0_ready = true;
 
-            if next_eval.iter().all(|&e| e >= n_eval) {
+            if pending.is_empty() {
                 status = Status::Success;
                 done = true;
             }
@@ -263,6 +286,10 @@ pub(crate) fn joint_core(
         }
     }
 
+    // torchode semantics: every instance experiences every batched call.
+    for st in sol.stats.iter_mut() {
+        st.n_f_evals += fevals;
+    }
     for i in 0..batch {
         sol.status[i] = status;
     }
@@ -271,12 +298,6 @@ pub(crate) fn joint_core(
         sol.trace = Some(vec![trace; 1].into_iter().chain(tail).collect());
     }
     sol
-}
-
-fn bump_fevals(sol: &mut Solution, n: u64) {
-    for st in sol.stats.iter_mut() {
-        st.n_f_evals += n;
-    }
 }
 
 #[cfg(test)]

@@ -18,6 +18,7 @@
 //!   of an eager GPU solver. Used as the implementation-efficiency baseline
 //!   in the loop-time benchmarks.
 
+pub mod active;
 pub mod adjoint;
 pub mod backprop;
 pub mod controller;
@@ -27,9 +28,11 @@ pub mod joint;
 pub mod naive;
 pub mod norm;
 pub mod parallel;
+pub mod reference;
 pub mod step;
 pub mod tableau;
 
+pub use active::ActiveSet;
 pub use adjoint::{adjoint_backward_joint, adjoint_backward_parallel, AdjointOptions, AdjointResult};
 pub use controller::{Controller, ControllerState, StepDecision};
 pub use joint::solve_ivp_joint;
@@ -242,8 +245,19 @@ pub struct SolveOptions {
     /// Evaluate the dynamics on already-finished instances too. `true`
     /// mirrors torchode exactly (the model "will continue to be evaluated
     /// ... until all problems in the batch have been solved", App. B);
-    /// `false` is a rode extension that skips finished rows on CPU.
+    /// `false` is a rode extension that skips finished rows on CPU — with
+    /// the active-set loop a finished row then costs literally zero
+    /// per-row work.
     pub eval_inactive: bool,
+    /// Active-set compaction threshold for the parallel loop: when the
+    /// fraction of unfinished rows drops below this value, the per-row
+    /// solver state is gathered into a dense prefix so the stage passes
+    /// stay cache-dense on straggler-heavy batches. `0.0` (the default)
+    /// disables compaction; `1.0` compacts as soon as any row finishes.
+    /// Trajectories, stats and statuses are bitwise-identical either
+    /// way; under `eval_inactive = true` compacted-away rows stop
+    /// receiving torchode's overhanging (discarded) model evaluations.
+    pub compact_threshold: f64,
     /// Worker-pool policy for the sharded entry points
     /// ([`crate::exec::solve_ivp_parallel_pooled`] /
     /// [`crate::exec::solve_ivp_joint_pooled`]); the plain `solve_ivp_*`
@@ -264,6 +278,7 @@ impl SolveOptions {
             fixed_dt: None,
             record_trace: false,
             eval_inactive: true,
+            compact_threshold: 0.0,
             exec: ExecPolicy::default(),
         }
     }
@@ -300,6 +315,18 @@ impl SolveOptions {
 
     pub fn skip_inactive(mut self) -> Self {
         self.eval_inactive = false;
+        self
+    }
+
+    /// Enable active-set state compaction at the given live-fraction
+    /// threshold (see [`SolveOptions::compact_threshold`]). `frac` must
+    /// lie in `[0, 1]`; `0` disables compaction.
+    pub fn with_compaction(mut self, frac: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&frac),
+            "compaction threshold must be a live fraction in [0, 1], got {frac}"
+        );
+        self.compact_threshold = frac;
         self
     }
 
@@ -497,6 +524,23 @@ mod tests {
         assert_eq!(s.batch(), 2);
         assert_eq!(s.t0(0), 2.0);
         assert_eq!(s.t1(1), 5.0);
+    }
+
+    #[test]
+    fn compaction_threshold_builder() {
+        let o = SolveOptions::new(Method::Dopri5);
+        assert_eq!(o.compact_threshold, 0.0, "compaction is opt-in");
+        let o = o.with_compaction(0.4);
+        assert_eq!(o.compact_threshold, 0.4);
+        // Shard options inherit the threshold (each shard compacts its
+        // own state independently).
+        assert_eq!(o.shard_rows(0, 1).compact_threshold, 0.4);
+    }
+
+    #[test]
+    #[should_panic(expected = "compaction threshold")]
+    fn compaction_threshold_rejects_out_of_range() {
+        SolveOptions::new(Method::Dopri5).with_compaction(1.5);
     }
 
     #[test]

@@ -17,6 +17,14 @@ pub enum NormKind {
 /// Fused scaled-norm computation for one instance: a single pass over the
 /// three input slices, no temporaries (the native analogue of the fused
 /// `error_norm` Pallas kernel).
+///
+/// The scale is floored at [`f64::MIN_POSITIVE`]: with `atol = 0` and a
+/// zero state the raw scale is 0, and an *exact* step (`err = 0`) would
+/// otherwise produce `0/0 = NaN`, which the controller treats as a hard
+/// rejection and rides into `DtUnderflow`. With the floor an exact step
+/// on a zero state scores 0 and accepts; any genuine error over a zero
+/// scale still scores astronomically and rejects. The floor is exact for
+/// every normal scale, so results elsewhere are bitwise-unchanged.
 #[inline]
 pub fn scaled_norm(
     kind: NormKind,
@@ -32,7 +40,7 @@ pub fn scaled_norm(
         NormKind::Rms => {
             let mut acc = 0.0;
             for i in 0..err.len() {
-                let scale = atol + rtol * y0[i].abs().max(y1[i].abs());
+                let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
                 let r = err[i] / scale;
                 acc += r * r;
             }
@@ -41,7 +49,7 @@ pub fn scaled_norm(
         NormKind::Max => {
             let mut m = 0.0f64;
             for i in 0..err.len() {
-                let scale = atol + rtol * y0[i].abs().max(y1[i].abs());
+                let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
                 m = m.max((err[i] / scale).abs());
             }
             m
@@ -83,6 +91,22 @@ mod tests {
         assert!(mx >= rms);
         assert!((mx - 1.0).abs() < 1e-12);
         assert!((rms - (0.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    /// The 0/0 regression: an exact step (`err = 0`) on a zero state with
+    /// `atol = 0` must score 0 (accept), not NaN (reject-hard).
+    #[test]
+    fn zero_error_zero_scale_is_zero_not_nan() {
+        let y0 = [0.0, 0.0];
+        let y1 = [0.0, 0.0];
+        let err = [0.0, 0.0];
+        for kind in [NormKind::Rms, NormKind::Max] {
+            let n = scaled_norm(kind, &err, &y0, &y1, 0.0, 1e-6);
+            assert_eq!(n, 0.0, "{kind:?}");
+        }
+        // A genuine error over a zero scale still rejects decisively.
+        let n = scaled_norm(NormKind::Rms, &[1e-3, 0.0], &y0, &y1, 0.0, 1e-6);
+        assert!(n > 1.0);
     }
 
     #[test]

@@ -7,6 +7,34 @@
 //! [`super::SolveOptions::eval_inactive`] is disabled), so a batch never
 //! forces instances to share a step size — the failure mode of §4.1.
 //!
+//! ## Active set and compaction
+//!
+//! The loop is organized around a packed [`ActiveSet`]: an incrementally
+//! maintained index list of unfinished rows. The clamp, controller,
+//! dense-output and commit passes iterate only the live indices, and the
+//! stage kernel ([`rk_attempt_active`]) evaluates the dynamics through
+//! [`OdeSystem::f_rows_indexed`], so with `eval_inactive = false` a
+//! finished row costs **zero** per-row work — no mask checks, no
+//! keep-alive copies, no overhanging model evaluations. With
+//! `eval_inactive = true` (torchode's exact semantics) finished rows keep
+//! receiving the overhanging evaluations for as long as they stay
+//! materialized.
+//!
+//! When the live fraction drops below
+//! [`super::SolveOptions::compact_threshold`], the per-row solver state
+//! (y, k\[..\], ytmp/y_new/err, t, dt, controller history, dense-output
+//! cursors) is **compacted** into a dense prefix via in-place gathers so
+//! the stage passes stay cache-dense; the [`ActiveSet`]'s slot → row map
+//! keeps solution buffers, grids and tolerances on their original
+//! indexing. Compaction moves state without changing any live row's
+//! values, so trajectories, stats and statuses are bitwise-identical with
+//! compaction on or off (`tests/compaction.rs` asserts this against the
+//! frozen pre-active-set loop in [`super::reference`]). Its one semantic
+//! effect: under `eval_inactive = true`, compacted-away rows stop
+//! receiving overhanging evaluations (their results were discarded
+//! anyway, and `n_f_evals` counts semantic batched calls, which are
+//! unchanged).
+//!
 //! The loop is written so that the per-row state machine depends only on
 //! that row's data: [`crate::exec::solve_ivp_parallel_pooled`] runs this
 //! exact code over contiguous row shards on a worker pool and merges the
@@ -14,11 +42,12 @@
 //! dynamics calls per loop iteration so the merge can reconstruct
 //! torchode's uniform `n_f_evals` accounting across shards.
 
+use super::active::ActiveSet;
 use super::controller::ControllerState;
 use super::init::initial_step_batch;
 use super::interp::{self, DOPRI5_NCOEFF};
 use super::norm::{scaled_norm, NormKind};
-use super::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use super::step::{rk_attempt_active, CompiledTableau, RkWorkspace, MAX_STAGES};
 use super::tableau::DenseOutput;
 use super::{SolveOptions, Solution, Status, TimeGrid};
 use crate::problems::OdeSystem;
@@ -37,6 +66,12 @@ pub(crate) struct CallLedger {
     pub per_iter: Vec<u64>,
 }
 
+/// Upper bound on the up-front `per_iter` reservation: enough that any
+/// realistic solve records its ledger without a mid-loop reallocation
+/// (the zero-allocation steady state), without committing megabytes when
+/// `max_steps` is set astronomically.
+const LEDGER_RESERVE: usize = 65_536;
+
 /// Solve a batch of independent IVPs with fully per-instance solver state.
 ///
 /// `y0` is `(batch, dim)`; `grid.row(i)` holds instance `i`'s evaluation
@@ -52,7 +87,9 @@ pub fn solve_ivp_parallel(
 
 /// The loop body shared by the serial entry point and the exec layer's
 /// shard workers (which call it on row-range views with an offset
-/// system).
+/// system). Within this function "row" means a row of the view it was
+/// handed; after compaction the state buffers are indexed by *slot* and
+/// the [`ActiveSet`] maps slots back to rows.
 pub(crate) fn solve_ivp_parallel_core(
     sys: &dyn OdeSystem,
     y0: &BatchVec,
@@ -71,13 +108,14 @@ pub(crate) fn solve_ivp_parallel_core(
 
     let mut sol = Solution::new_buffer(batch, n_eval, dim);
     let mut ledger = CallLedger::default();
+    ledger.per_iter.reserve(opts.max_steps.min(LEDGER_RESERVE));
     let mut trace: Vec<Vec<(f64, f64)>> = if opts.record_trace {
         vec![Vec::new(); batch]
     } else {
         Vec::new()
     };
 
-    // --- per-instance state ------------------------------------------------
+    // --- per-slot state (slot == row until the first compaction) ----------
     let mut y = y0.clone();
     let mut t: Vec<f64> = (0..batch).map(|i| grid.t0(i)).collect();
     let mut finished = vec![false; batch];
@@ -104,9 +142,7 @@ pub(crate) fn solve_ivp_parallel_core(
 
     // Initial slopes f(t0, y0): one batched call.
     sys.f_batch(&t, &y, &mut ws.k[0], None);
-    for s in sol.stats.iter_mut() {
-        s.n_f_evals += 1;
-    }
+    let mut n_f_evals: u64 = 1;
     ledger.base += 1;
     f_start.copy_from(&ws.k[0]);
     for r in k0_ready.iter_mut() {
@@ -129,104 +165,96 @@ pub(crate) fn solve_ivp_parallel_core(
                 &mut ws.ytmp,
                 &mut ws.y_new,
             );
-            for s in sol.stats.iter_mut() {
-                s.n_f_evals += 1;
-            }
+            n_f_evals += 1;
             ledger.base += 1;
             dt0
         }
     };
 
-    let min_dt: Vec<f64> = span.iter().map(|s| s.abs() * opts.min_dt_rel).collect();
+    let mut min_dt: Vec<f64> = span.iter().map(|s| s.abs() * opts.min_dt_rel).collect();
 
-    // --- main loop -----------------------------------------------------------
-    // Per-iteration buffers hoisted out of the loop (§Perf: allocation-free
-    // steady state).
+    let mut act = ActiveSet::new(batch);
+    act.retain(&finished);
+
+    // --- main loop ---------------------------------------------------------
+    // Per-iteration buffers hoisted out of the loop; together with the
+    // workspace scratch this makes the steady state allocation-free
+    // (`tests/alloc_regression.rs`).
     let mut clamped = vec![false; batch];
-    let mut active = vec![true; batch];
     let mut accepted = vec![false; batch];
     let mut factor = vec![1.0f64; batch];
     let mut t_new = vec![0.0f64; batch];
+    let mut accepted_slots: Vec<usize> = Vec::with_capacity(batch);
     let mut iter = 0usize;
-    while finished.iter().any(|f| !f) {
+    while !act.is_empty() {
         iter += 1;
         if iter > opts.max_steps {
-            for i in 0..batch {
-                if !finished[i] {
-                    sol.status[i] = Status::MaxStepsReached;
-                    finished[i] = true;
-                }
+            for &r in act.live() {
+                sol.status[act.inst(r)] = Status::MaxStepsReached;
+                finished[r] = true;
             }
             break;
         }
 
         // Clamp step to the remaining span; remember who was clamped so the
         // final time is hit exactly.
-        for i in 0..batch {
-            clamped[i] = false;
-            active[i] = !finished[i];
-            if finished[i] {
-                continue;
-            }
-            let remaining = grid.t1(i) - t[i];
-            if dt[i] >= remaining {
-                dt[i] = remaining;
-                clamped[i] = true;
+        for &r in act.live() {
+            clamped[r] = false;
+            let remaining = grid.t1(act.inst(r)) - t[r];
+            if dt[r] >= remaining {
+                dt[r] = remaining;
+                clamped[r] = true;
             }
         }
-        let mut calls = rk_attempt(
+        let mut calls = rk_attempt_active(
             &ct,
             sys,
+            &act,
+            &finished,
             &t,
             &dt,
             &y,
             &mut ws,
             &k0_ready,
-            Some(&active),
             opts.eval_inactive,
         );
-        // torchode semantics: every instance experiences every batched call
-        // (the refresh below credits its own call separately).
-        for s in sol.stats.iter_mut() {
-            s.n_f_evals += calls;
-        }
 
         // Pass 1: non-finite guards and controller decisions.
-        for i in 0..batch {
-            accepted[i] = false;
-            if finished[i] {
-                continue;
-            }
-            sol.stats[i].n_steps += 1;
+        accepted_slots.clear();
+        for &r in act.live() {
+            accepted[r] = false;
+            let g = act.inst(r);
+            sol.stats[g].n_steps += 1;
 
-            let y_new = ws.y_new.row(i);
+            let y_new = ws.y_new.row(r);
             if y_new.iter().any(|v| !v.is_finite()) {
-                sol.status[i] = Status::NonFinite;
-                finished[i] = true;
+                sol.status[g] = Status::NonFinite;
+                finished[r] = true;
                 continue;
             }
 
             let (accept, fac) = if adaptive {
                 let en = scaled_norm(
                     NormKind::Rms,
-                    ws.err.row(i),
-                    y.row(i),
+                    ws.err.row(r),
+                    y.row(r),
                     y_new,
-                    opts.tols.atol(i),
-                    opts.tols.rtol(i),
+                    opts.tols.atol(g),
+                    opts.tols.rtol(g),
                 );
-                let d = opts.controller.decide(en, tab.err_order, &ctrl[i]);
+                let d = opts.controller.decide(en, tab.err_order, &ctrl[r]);
                 if d.accept {
-                    ctrl[i].push(en);
+                    ctrl[r].push(en);
                 }
                 (d.accept, d.factor)
             } else {
                 (true, 1.0)
             };
-            accepted[i] = accept;
-            factor[i] = fac;
+            accepted[r] = accept;
+            factor[r] = fac;
             if accept {
-                t_new[i] = if clamped[i] { grid.t1(i) } else { t[i] + dt[i] };
+                t_new[r] = if clamped[r] { grid.t1(g) } else { t[r] + dt[r] };
+                accepted_slots.push(r);
             }
         }
 
@@ -235,118 +263,196 @@ pub(crate) fn solve_ivp_parallel_core(
         // uses the step-end derivative (3rd order) instead of the stale
         // step-start slope — this is also the cold-row k[0] refresh for
         // the next iteration, so it costs no extra call.
-        if !tab.fsal && accepted.iter().any(|&a| a) {
-            for i in 0..batch {
-                ws.t_stage[i] = if accepted[i] { t_new[i] } else { t[i] };
+        if !tab.fsal && !accepted_slots.is_empty() {
+            for &r in &accepted_slots {
+                ws.t_stage[r] = t_new[r];
             }
-            sys.f_batch(&ws.t_stage, &ws.y_new, &mut ws.k[0], Some(&accepted));
-            for s in sol.stats.iter_mut() {
-                s.n_f_evals += 1;
-            }
+            sys.f_rows_indexed(
+                0,
+                act.inst_map(),
+                &accepted_slots,
+                &ws.t_stage,
+                ws.y_new.flat(),
+                ws.k[0].flat_mut(),
+            );
             calls += 1;
         }
 
         // Pass 2: dense output, state commit, step-size update.
-        for i in 0..batch {
-            if finished[i] {
-                continue;
+        for &r in act.live() {
+            if finished[r] {
+                continue; // went non-finite in pass 1
             }
-            if accepted[i] {
-                sol.stats[i].n_accepted += 1;
-                let tn = t_new[i];
+            let g = act.inst(r);
+            if accepted[r] {
+                sol.stats[g].n_accepted += 1;
+                let tn = t_new[r];
                 if opts.record_trace {
-                    trace[i].push((t[i], dt[i]));
+                    trace[g].push((t[r], dt[r]));
                 }
 
                 // Dense output: fill every eval point in (t, t_new].
-                let h = dt[i];
-                if next_eval[i] < n_eval {
-                    let te_row = grid.row(i);
-                    let mut e = next_eval[i];
+                let h = dt[r];
+                if next_eval[r] < n_eval {
+                    let te_row = grid.row(g);
+                    let mut e = next_eval[r];
                     let mut coeffs_ready = false;
                     while e < n_eval && te_row[e] <= tn {
-                        let theta = ((te_row[e] - t[i]) / h).clamp(0.0, 1.0);
+                        let theta = ((te_row[e] - t[r]) / h).clamp(0.0, 1.0);
                         match tab.dense {
                             DenseOutput::Dopri5 => {
                                 if !coeffs_ready {
-                                    let krows: Vec<&[f64]> =
-                                        ws.k.iter().map(|k| k.row(i)).collect();
+                                    let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                                    for (slot, k) in krows.iter_mut().zip(ws.k.iter()) {
+                                        *slot = k.row(r);
+                                    }
                                     interp::dopri5_coeffs(
                                         h,
-                                        y.row(i),
-                                        ws.y_new.row(i),
-                                        &krows,
+                                        y.row(r),
+                                        ws.y_new.row(r),
+                                        &krows[..tab.stages],
                                         &mut interp_coeffs,
                                     );
                                     coeffs_ready = true;
                                 }
-                                interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
+                                interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(g, e));
                             }
                             DenseOutput::Hermite => {
                                 // f at the step end: the FSAL stage, or the
                                 // refreshed k[0] = f(t_new, y_new) computed
                                 // above for non-FSAL methods.
                                 let f_end = if tab.fsal {
-                                    ws.k[tab.stages - 1].row(i)
+                                    ws.k[tab.stages - 1].row(r)
                                 } else {
-                                    ws.k[0].row(i)
+                                    ws.k[0].row(r)
                                 };
                                 interp::hermite_eval(
                                     theta,
                                     h,
-                                    y.row(i),
-                                    f_start.row(i),
-                                    ws.y_new.row(i),
+                                    y.row(r),
+                                    f_start.row(r),
+                                    ws.y_new.row(r),
                                     f_end,
-                                    sol.y_mut(i, e),
+                                    sol.y_mut(g, e),
                                 );
                             }
                         }
-                        sol.stats[i].n_initialized += 1;
+                        sol.stats[g].n_initialized += 1;
                         e += 1;
                     }
-                    next_eval[i] = e;
+                    next_eval[r] = e;
                 }
 
                 // Commit the step.
-                y.row_mut(i).copy_from_slice(ws.y_new.row(i));
-                t[i] = tn;
+                y.row_mut(r).copy_from_slice(ws.y_new.row(r));
+                t[r] = tn;
                 if tab.fsal {
                     // k[last] is f(t_new, y_new): becomes next k[0].
                     let (head, tail) = ws.k.split_at_mut(tab.stages - 1);
                     let (first, _) = head.split_first_mut().unwrap();
-                    first.row_mut(i).copy_from_slice(tail[0].row(i));
-                    f_start.row_mut(i).copy_from_slice(tail[0].row(i));
+                    first.row_mut(r).copy_from_slice(tail[0].row(r));
+                    f_start.row_mut(r).copy_from_slice(tail[0].row(r));
                 } else {
                     // k[0] already holds f(t_new, y_new) from the refresh.
-                    f_start.row_mut(i).copy_from_slice(ws.k[0].row(i));
+                    f_start.row_mut(r).copy_from_slice(ws.k[0].row(r));
                 }
-                k0_ready[i] = true;
+                k0_ready[r] = true;
 
-                if next_eval[i] >= n_eval {
-                    sol.status[i] = Status::Success;
-                    finished[i] = true;
+                if next_eval[r] >= n_eval {
+                    sol.status[g] = Status::Success;
+                    finished[r] = true;
                 }
             } else {
                 // Rejected: same (t, y), so k[0] stays valid for any method
                 // that already computed it.
-                k0_ready[i] = true;
+                k0_ready[r] = true;
             }
 
-            dt[i] *= factor[i];
-            if adaptive && !finished[i] && dt[i] < min_dt[i] {
-                sol.status[i] = Status::DtUnderflow;
-                finished[i] = true;
+            // Rows that finished this iteration keep their dt and
+            // controller state frozen: a dead slot's bookkeeping must
+            // never change once it can be compacted away.
+            if !finished[r] {
+                dt[r] *= factor[r];
+                if adaptive && dt[r] < min_dt[r] {
+                    sol.status[g] = Status::DtUnderflow;
+                    finished[r] = true;
+                }
             }
         }
 
         ledger.per_iter.push(calls);
+        n_f_evals += calls;
+
+        // Retire finished slots; compact the state once the live fraction
+        // drops below the configured threshold.
+        act.retain(&finished);
+        if act.should_compact(opts.compact_threshold) {
+            compact_state(
+                &mut act,
+                dim,
+                &mut y,
+                &mut f_start,
+                &mut ws,
+                &mut t,
+                &mut dt,
+                &mut min_dt,
+                &mut k0_ready,
+                &mut finished,
+                &mut ctrl,
+                &mut next_eval,
+            );
+        }
+    }
+
+    // torchode semantics: every instance experiences every batched call.
+    for s in sol.stats.iter_mut() {
+        s.n_f_evals += n_f_evals;
     }
 
     if opts.record_trace {
         sol.trace = Some(trace);
     }
     (sol, ledger)
+}
+
+/// Gather every piece of per-slot solver state into the dense prefix the
+/// [`ActiveSet`] prescribes. Pure in-place row moves (`dst <= src`), no
+/// allocation, no value changes — only storage locations change.
+#[allow(clippy::too_many_arguments)]
+fn compact_state(
+    act: &mut ActiveSet,
+    dim: usize,
+    y: &mut BatchVec,
+    f_start: &mut BatchVec,
+    ws: &mut RkWorkspace,
+    t: &mut [f64],
+    dt: &mut [f64],
+    min_dt: &mut [f64],
+    k0_ready: &mut [bool],
+    finished: &mut [bool],
+    ctrl: &mut [ControllerState],
+    next_eval: &mut [usize],
+) {
+    act.compact_with(|dst, src| {
+        let move_rows = |b: &mut BatchVec| {
+            b.flat_mut().copy_within(src * dim..(src + 1) * dim, dst * dim);
+        };
+        move_rows(y);
+        move_rows(f_start);
+        for k in ws.k.iter_mut() {
+            move_rows(k);
+        }
+        move_rows(&mut ws.ytmp);
+        move_rows(&mut ws.y_new);
+        move_rows(&mut ws.err);
+        t[dst] = t[src];
+        dt[dst] = dt[src];
+        min_dt[dst] = min_dt[src];
+        k0_ready[dst] = k0_ready[src];
+        finished[dst] = finished[src];
+        ctrl[dst] = ctrl[src];
+        next_eval[dst] = next_eval[src];
+    });
 }
 
 #[cfg(test)]
@@ -595,6 +701,22 @@ mod tests {
             assert_eq!(total, sol.stats[0].n_f_evals, "{m:?}");
             assert_eq!(ledger.per_iter.len() as u64, sol.stats[0].n_steps, "{m:?}");
         }
+    }
+
+    /// The ledger (and therefore the pooled merge's `n_f_evals`) is
+    /// unchanged by compaction: calls are counted per semantic batched
+    /// call, not per materialized row.
+    #[test]
+    fn call_ledger_invariant_under_compaction() {
+        let sys = VdP::new(vec![0.5, 30.0, 1.0]);
+        let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0], vec![1.5, 0.2]]);
+        let grid = TimeGrid::linspace_shared(3, 0.0, 5.0, 8);
+        let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let (_, plain) = solve_ivp_parallel_core(&sys, &y0, &grid, &base);
+        let compacting = base.with_compaction(1.0).skip_inactive();
+        let (_, packed) = solve_ivp_parallel_core(&sys, &y0, &grid, &compacting);
+        assert_eq!(plain.base, packed.base);
+        assert_eq!(plain.per_iter, packed.per_iter);
     }
 
     #[test]

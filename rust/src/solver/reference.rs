@@ -1,0 +1,318 @@
+//! The frozen pre-active-set parallel loop, kept verbatim as a **bitwise
+//! reference** and benchmark baseline.
+//!
+//! This is the mask-based implementation the active-set loop in
+//! [`super::parallel`] replaced: every pass sweeps the full batch and
+//! checks a `finished` flag per row, the stage kernel receives a
+//! `Vec<bool>` activity mask, and finished rows keep paying O(dim)
+//! keep-alive work per stage. It exists so that
+//!
+//! - `tests/compaction.rs` can assert that the active-set loop (with and
+//!   without compaction, serial and pooled) reproduces this loop
+//!   **bitwise** — solutions, stats, statuses and traces — across the
+//!   whole method matrix, and
+//! - the straggler benchmark (`benches/coordinator_bench.rs`) can report
+//!   the active-set speedup against the real predecessor instead of a
+//!   synthetic stand-in, recorded in `BENCH_solver.json`.
+//!
+//! Do not "improve" this module; its value is that it does not change.
+
+use super::controller::ControllerState;
+use super::init::initial_step_batch;
+use super::interp::{self, DOPRI5_NCOEFF};
+use super::norm::{scaled_norm, NormKind};
+use super::step::{rk_attempt, CompiledTableau, RkWorkspace};
+use super::tableau::DenseOutput;
+use super::{SolveOptions, Solution, Status, TimeGrid};
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// The historical mask-based parallel loop. Ignores
+/// [`SolveOptions::compact_threshold`] (it predates compaction); honors
+/// everything else, including `eval_inactive`.
+pub fn solve_ivp_parallel_reference(
+    sys: &dyn OdeSystem,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+) -> Solution {
+    let batch = y0.batch();
+    let dim = y0.dim();
+    assert_eq!(grid.batch(), batch, "grid/initial-state batch mismatch");
+    assert_eq!(sys.dim(), dim, "system/initial-state dim mismatch");
+    opts.tols.validate(batch);
+    let n_eval = grid.n_eval();
+    let tab = opts.method.tableau();
+    let ct = CompiledTableau::new(tab);
+    let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
+
+    let mut sol = Solution::new_buffer(batch, n_eval, dim);
+    let mut trace: Vec<Vec<(f64, f64)>> = if opts.record_trace {
+        vec![Vec::new(); batch]
+    } else {
+        Vec::new()
+    };
+
+    let mut y = y0.clone();
+    let mut t: Vec<f64> = (0..batch).map(|i| grid.t0(i)).collect();
+    let mut finished = vec![false; batch];
+    let mut k0_ready = vec![false; batch];
+    let mut ctrl = vec![ControllerState::default(); batch];
+    let mut next_eval = vec![0usize; batch];
+    let span: Vec<f64> = (0..batch).map(|i| grid.t1(i) - grid.t0(i)).collect();
+
+    let mut ws = RkWorkspace::new(tab.stages, batch, dim);
+    let mut f_start = BatchVec::zeros(batch, dim);
+    let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
+
+    for i in 0..batch {
+        sol.y_mut(i, 0).copy_from_slice(y.row(i));
+        sol.stats[i].n_initialized += 1;
+        next_eval[i] = 1;
+        if n_eval == 1 || span[i] <= 0.0 {
+            finished[i] = true;
+            sol.status[i] = Status::Success;
+        }
+    }
+
+    sys.f_batch(&t, &y, &mut ws.k[0], None);
+    for s in sol.stats.iter_mut() {
+        s.n_f_evals += 1;
+    }
+    f_start.copy_from(&ws.k[0]);
+    for r in k0_ready.iter_mut() {
+        *r = true;
+    }
+
+    let mut dt: Vec<f64> = match (opts.fixed_dt, opts.dt0) {
+        (Some(h), _) => vec![h; batch],
+        (None, Some(h)) => vec![h; batch],
+        (None, None) => {
+            let dt0 = initial_step_batch(
+                sys,
+                &t,
+                &y,
+                &ws.k[0],
+                tab.order,
+                &opts.tols,
+                &span,
+                &mut ws.ytmp,
+                &mut ws.y_new,
+            );
+            for s in sol.stats.iter_mut() {
+                s.n_f_evals += 1;
+            }
+            dt0
+        }
+    };
+
+    let min_dt: Vec<f64> = span.iter().map(|s| s.abs() * opts.min_dt_rel).collect();
+
+    let mut clamped = vec![false; batch];
+    let mut active = vec![true; batch];
+    let mut accepted = vec![false; batch];
+    let mut factor = vec![1.0f64; batch];
+    let mut t_new = vec![0.0f64; batch];
+    let mut iter = 0usize;
+    while finished.iter().any(|f| !f) {
+        iter += 1;
+        if iter > opts.max_steps {
+            for i in 0..batch {
+                if !finished[i] {
+                    sol.status[i] = Status::MaxStepsReached;
+                    finished[i] = true;
+                }
+            }
+            break;
+        }
+
+        for i in 0..batch {
+            clamped[i] = false;
+            active[i] = !finished[i];
+            if finished[i] {
+                continue;
+            }
+            let remaining = grid.t1(i) - t[i];
+            if dt[i] >= remaining {
+                dt[i] = remaining;
+                clamped[i] = true;
+            }
+        }
+        let calls = rk_attempt(
+            &ct,
+            sys,
+            &t,
+            &dt,
+            &y,
+            &mut ws,
+            &k0_ready,
+            Some(&active),
+            opts.eval_inactive,
+        );
+        for s in sol.stats.iter_mut() {
+            s.n_f_evals += calls;
+        }
+
+        for i in 0..batch {
+            accepted[i] = false;
+            if finished[i] {
+                continue;
+            }
+            sol.stats[i].n_steps += 1;
+
+            let y_new = ws.y_new.row(i);
+            if y_new.iter().any(|v| !v.is_finite()) {
+                sol.status[i] = Status::NonFinite;
+                finished[i] = true;
+                continue;
+            }
+
+            let (accept, fac) = if adaptive {
+                let en = scaled_norm(
+                    NormKind::Rms,
+                    ws.err.row(i),
+                    y.row(i),
+                    y_new,
+                    opts.tols.atol(i),
+                    opts.tols.rtol(i),
+                );
+                let d = opts.controller.decide(en, tab.err_order, &ctrl[i]);
+                if d.accept {
+                    ctrl[i].push(en);
+                }
+                (d.accept, d.factor)
+            } else {
+                (true, 1.0)
+            };
+            accepted[i] = accept;
+            factor[i] = fac;
+            if accept {
+                t_new[i] = if clamped[i] { grid.t1(i) } else { t[i] + dt[i] };
+            }
+        }
+
+        if !tab.fsal && accepted.iter().any(|&a| a) {
+            for i in 0..batch {
+                ws.t_stage[i] = if accepted[i] { t_new[i] } else { t[i] };
+            }
+            sys.f_batch(&ws.t_stage, &ws.y_new, &mut ws.k[0], Some(&accepted));
+            for s in sol.stats.iter_mut() {
+                s.n_f_evals += 1;
+            }
+        }
+
+        for i in 0..batch {
+            if finished[i] {
+                continue;
+            }
+            if accepted[i] {
+                sol.stats[i].n_accepted += 1;
+                let tn = t_new[i];
+                if opts.record_trace {
+                    trace[i].push((t[i], dt[i]));
+                }
+
+                let h = dt[i];
+                if next_eval[i] < n_eval {
+                    let te_row = grid.row(i);
+                    let mut e = next_eval[i];
+                    let mut coeffs_ready = false;
+                    while e < n_eval && te_row[e] <= tn {
+                        let theta = ((te_row[e] - t[i]) / h).clamp(0.0, 1.0);
+                        match tab.dense {
+                            DenseOutput::Dopri5 => {
+                                if !coeffs_ready {
+                                    let krows: Vec<&[f64]> =
+                                        ws.k.iter().map(|k| k.row(i)).collect();
+                                    interp::dopri5_coeffs(
+                                        h,
+                                        y.row(i),
+                                        ws.y_new.row(i),
+                                        &krows,
+                                        &mut interp_coeffs,
+                                    );
+                                    coeffs_ready = true;
+                                }
+                                interp::dopri5_eval(theta, &interp_coeffs, sol.y_mut(i, e));
+                            }
+                            DenseOutput::Hermite => {
+                                let f_end = if tab.fsal {
+                                    ws.k[tab.stages - 1].row(i)
+                                } else {
+                                    ws.k[0].row(i)
+                                };
+                                interp::hermite_eval(
+                                    theta,
+                                    h,
+                                    y.row(i),
+                                    f_start.row(i),
+                                    ws.y_new.row(i),
+                                    f_end,
+                                    sol.y_mut(i, e),
+                                );
+                            }
+                        }
+                        sol.stats[i].n_initialized += 1;
+                        e += 1;
+                    }
+                    next_eval[i] = e;
+                }
+
+                y.row_mut(i).copy_from_slice(ws.y_new.row(i));
+                t[i] = tn;
+                if tab.fsal {
+                    let (head, tail) = ws.k.split_at_mut(tab.stages - 1);
+                    let (first, _) = head.split_first_mut().unwrap();
+                    first.row_mut(i).copy_from_slice(tail[0].row(i));
+                    f_start.row_mut(i).copy_from_slice(tail[0].row(i));
+                } else {
+                    f_start.row_mut(i).copy_from_slice(ws.k[0].row(i));
+                }
+                k0_ready[i] = true;
+
+                if next_eval[i] >= n_eval {
+                    sol.status[i] = Status::Success;
+                    finished[i] = true;
+                }
+            } else {
+                k0_ready[i] = true;
+            }
+
+            dt[i] *= factor[i];
+            if adaptive && !finished[i] && dt[i] < min_dt[i] {
+                sol.status[i] = Status::DtUnderflow;
+                finished[i] = true;
+            }
+        }
+    }
+
+    if opts.record_trace {
+        sol.trace = Some(trace);
+    }
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::VdP;
+    use crate::solver::{solve_ivp_parallel, Method};
+
+    /// The reference loop still is what it claims to be: identical to the
+    /// active-set loop on a mixed batch (the heavyweight matrix lives in
+    /// `tests/compaction.rs`).
+    #[test]
+    fn reference_matches_active_set_loop() {
+        let sys = VdP::new(vec![0.5, 12.0]);
+        let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
+        let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
+        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let a = solve_ivp_parallel_reference(&sys, &y0, &grid, &opts);
+        let b = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert_eq!(a.status, b.status);
+        assert_eq!(a.stats, b.stats);
+        for (x, z) in a.ys_flat().iter().zip(b.ys_flat()) {
+            assert_eq!(x.to_bits(), z.to_bits());
+        }
+    }
+}

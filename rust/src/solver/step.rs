@@ -21,6 +21,7 @@
 //! code over disjoint shards of the workspace from a worker pool — which
 //! is what makes sharded and serial solves bitwise-identical.
 
+use super::active::ActiveSet;
 use super::init::initial_step_batch;
 use super::tableau::Tableau;
 use super::Tolerances;
@@ -77,7 +78,9 @@ impl CompiledTableau {
 }
 
 /// Pre-allocated buffers for the RK attempt, reused across all steps of a
-/// solve.
+/// solve. Everything the kernel touches per attempt lives here, so the
+/// steady state of a solve performs **zero heap allocations** (enforced
+/// by `tests/alloc_regression.rs`).
 pub struct RkWorkspace {
     /// Stage slopes `k[s]`, each `(batch, dim)`.
     pub k: Vec<BatchVec>,
@@ -89,6 +92,10 @@ pub struct RkWorkspace {
     pub err: BatchVec,
     /// Per-instance stage times.
     pub t_stage: Vec<f64>,
+    /// Scratch: rows whose `k[0]` cache needs refreshing this attempt.
+    pub cold: Vec<bool>,
+    /// Scratch index list (cold-row gathers in the indexed kernel).
+    pub idx: Vec<usize>,
 }
 
 impl RkWorkspace {
@@ -99,6 +106,8 @@ impl RkWorkspace {
             y_new: BatchVec::zeros(batch, dim),
             err: BatchVec::zeros(batch, dim),
             t_stage: vec![0.0; batch],
+            cold: vec![false; batch],
+            idx: Vec::with_capacity(batch),
         }
     }
 }
@@ -110,12 +119,95 @@ pub(crate) struct RkRows<'a> {
     pub offset: usize,
     pub rows: usize,
     pub dim: usize,
-    /// Per stage: this range's rows of `k[s]`, flat `rows * dim`.
-    pub k: Vec<&'a mut [f64]>,
+    /// Per stage: this range's rows of `k[s]`, flat `rows * dim`. Fixed
+    /// capacity so building a view never allocates; only the first
+    /// `tableau.stages` entries are populated, the rest are empty slices.
+    pub k: [&'a mut [f64]; MAX_STAGES],
     pub ytmp: &'a mut [f64],
     pub y_new: &'a mut [f64],
     pub err: &'a mut [f64],
     pub t_stage: &'a mut [f64],
+    pub cold: &'a mut [bool],
+}
+
+/// One row of the fused stage accumulation `out = y + h · Σ_j a_sj k_j`
+/// (nonzero coefficients only, slope rows hoisted once per instance —
+/// §Perf: per-element `row()` slicing cost ~35 % of the attempt at
+/// dim 2). Shared by the masked ([`rk_attempt_rows`]) and active-set
+/// ([`rk_attempt_active`]) kernels so their per-row arithmetic is
+/// *structurally* bitwise-identical — the contract `tests/compaction.rs`
+/// and the pooled merge depend on.
+#[inline(always)]
+fn accumulate_stage_row(
+    nz: &[(usize, f64)],
+    kprev: &[&mut [f64]],
+    r: usize,
+    dim: usize,
+    h: f64,
+    yrow: &[f64],
+    out: &mut [f64],
+) {
+    match nz.len() {
+        1 => {
+            let (j0, w0) = nz[0];
+            let k0 = &kprev[j0][r * dim..(r + 1) * dim];
+            for d in 0..dim {
+                out[d] = yrow[d] + h * w0 * k0[d];
+            }
+        }
+        2 => {
+            let (j0, w0) = nz[0];
+            let (j1, w1) = nz[1];
+            let k0 = &kprev[j0][r * dim..(r + 1) * dim];
+            let k1 = &kprev[j1][r * dim..(r + 1) * dim];
+            for d in 0..dim {
+                out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
+            }
+        }
+        _ => {
+            let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+            for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
+                *slot = &kprev[j][r * dim..(r + 1) * dim];
+            }
+            for d in 0..dim {
+                let mut acc = 0.0;
+                for (idx, &(_, w)) in nz.iter().enumerate() {
+                    acc += w * krows[idx][d];
+                }
+                out[d] = yrow[d] + h * acc;
+            }
+        }
+    }
+}
+
+/// One row of the solution/error combination `out = base + h · Σ_j w_j k_j`
+/// over the nonzero weights: `base = y` for the solution, absent for the
+/// raw error estimate. Shared by both kernels (see
+/// [`accumulate_stage_row`]).
+#[inline(always)]
+fn combine_row(
+    wnz: &[(usize, f64)],
+    k: &[&mut [f64]],
+    r: usize,
+    dim: usize,
+    h: f64,
+    base: Option<&[f64]>,
+    out: &mut [f64],
+) {
+    let mut rows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+    for (slot, &(j, _)) in rows.iter_mut().zip(wnz.iter()) {
+        *slot = &k[j][r * dim..(r + 1) * dim];
+    }
+    for d in 0..dim {
+        let mut acc = 0.0;
+        for (idx, &(_, w)) in wnz.iter().enumerate() {
+            acc += w * rows[idx][d];
+        }
+        out[d] = match base {
+            Some(y) => y[d] + h * acc,
+            None => h * acc,
+        };
+    }
 }
 
 /// Compute one RK attempt for a contiguous row range.
@@ -148,23 +240,21 @@ pub(crate) fn rk_attempt_rows(
     let eval_mask = if eval_inactive { None } else { active };
 
     // Stage 0: evaluate only where the cache is cold, leaving warm rows
-    // untouched (the mask contract of `f_rows`).
-    let cold: Vec<bool> = k0_ready
-        .iter()
-        .enumerate()
-        .map(|(r, &ready)| !ready && eval_mask.map_or(true, |m| m[r]))
-        .collect();
-    if cold.iter().any(|&c| c) {
+    // untouched (the mask contract of `f_rows`). The mask lives in the
+    // workspace view — no per-attempt allocation.
+    let mut any_cold = false;
+    for (r, &ready) in k0_ready.iter().enumerate() {
+        let c = !ready && eval_mask.map_or(true, |m| m[r]);
+        rr.cold[r] = c;
+        any_cold |= c;
+    }
+    if any_cold {
         rr.t_stage.copy_from_slice(t);
-        sys.f_rows(rr.offset, rows, &rr.t_stage[..], y, &mut rr.k[0][..], Some(&cold));
+        sys.f_rows(rr.offset, rows, &rr.t_stage[..], y, &mut rr.k[0][..], Some(&rr.cold[..]));
     }
 
-    // Stages 1..S.
+    // Stages 1..S: ytmp = y + dt * Σ_j a_sj k_j, one fused pass per row.
     for s in 1..tab.stages {
-        // ytmp = y + dt * Σ_j a_sj k_j  (one fused pass; inner loop over
-        // the nonzero coefficients only). Stage-slope rows are hoisted out
-        // of the element loop (§Perf: per-element `row()` slicing cost
-        // ~35 % of the attempt at dim 2).
         let nz = &ct.a_nz[s];
         let (kprev, krest) = rr.k.split_at_mut(s);
         for r in 0..rows {
@@ -179,38 +269,7 @@ pub(crate) fn rk_attempt_rows(
             let h = dt[r];
             rr.t_stage[r] = t[r] + tab.c[s] * h;
             let out = &mut rr.ytmp[r * dim..(r + 1) * dim];
-            match nz.len() {
-                1 => {
-                    let (j0, w0) = nz[0];
-                    let k0 = &kprev[j0][r * dim..(r + 1) * dim];
-                    for d in 0..dim {
-                        out[d] = yrow[d] + h * w0 * k0[d];
-                    }
-                }
-                2 => {
-                    let (j0, w0) = nz[0];
-                    let (j1, w1) = nz[1];
-                    let k0 = &kprev[j0][r * dim..(r + 1) * dim];
-                    let k1 = &kprev[j1][r * dim..(r + 1) * dim];
-                    for d in 0..dim {
-                        out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
-                    }
-                }
-                _ => {
-                    // Hoist the row slices once per instance.
-                    let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
-                    for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
-                        *slot = &kprev[j][r * dim..(r + 1) * dim];
-                    }
-                    for d in 0..dim {
-                        let mut acc = 0.0;
-                        for (idx, &(_, w)) in nz.iter().enumerate() {
-                            acc += w * krows[idx][d];
-                        }
-                        out[d] = yrow[d] + h * acc;
-                    }
-                }
-            }
+            accumulate_stage_row(nz, kprev, r, dim, h, yrow, out);
         }
         // One batched dynamics call for this stage (this range's rows).
         sys.f_rows(rr.offset, rows, &rr.t_stage[..], &rr.ytmp[..], &mut krest[0][..], eval_mask);
@@ -224,33 +283,11 @@ pub(crate) fn rk_attempt_rows(
         }
         let h = dt[r];
         let yrow = &y[r * dim..(r + 1) * dim];
-        let mut brows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
-        for (slot, &(j, _)) in brows.iter_mut().zip(ct.b_nz.iter()) {
-            *slot = &rr.k[j][r * dim..(r + 1) * dim];
-        }
-        {
-            let out = &mut rr.y_new[r * dim..(r + 1) * dim];
-            for d in 0..dim {
-                let mut acc = 0.0;
-                for (idx, &(_, w)) in ct.b_nz.iter().enumerate() {
-                    acc += w * brows[idx][d];
-                }
-                out[d] = yrow[d] + h * acc;
-            }
-        }
+        let out = &mut rr.y_new[r * dim..(r + 1) * dim];
+        combine_row(&ct.b_nz, &rr.k, r, dim, h, Some(yrow), out);
         if has_err {
-            let mut erows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
-            for (slot, &(j, _)) in erows.iter_mut().zip(ct.berr_nz.iter()) {
-                *slot = &rr.k[j][r * dim..(r + 1) * dim];
-            }
             let out = &mut rr.err[r * dim..(r + 1) * dim];
-            for d in 0..dim {
-                let mut acc = 0.0;
-                for (idx, &(_, w)) in ct.berr_nz.iter().enumerate() {
-                    acc += w * erows[idx][d];
-                }
-                out[d] = h * acc;
-            }
+            combine_row(&ct.berr_nz, &rr.k, r, dim, h, None, out);
         }
     }
 }
@@ -282,18 +319,125 @@ pub fn rk_attempt(
 ) -> u64 {
     let batch = y.batch();
     let dim = y.dim();
+    let mut k_it = ws.k.iter_mut();
     let mut rr = RkRows {
         offset: 0,
         rows: batch,
         dim,
-        k: ws.k.iter_mut().map(|k| k.flat_mut()).collect(),
+        k: std::array::from_fn(|_| k_it.next().map_or_else(Default::default, |k| k.flat_mut())),
         ytmp: ws.ytmp.flat_mut(),
         y_new: ws.y_new.flat_mut(),
         err: ws.err.flat_mut(),
         t_stage: &mut ws.t_stage[..],
+        cold: &mut ws.cold[..],
     };
     rk_attempt_rows(ct, sys, t, dt, y.flat(), &mut rr, k0_ready, active, eval_inactive);
     attempt_call_count(ct, k0_ready)
+}
+
+/// One RK attempt driven by the packed [`ActiveSet`]: stage accumulation
+/// and the solution/error combination iterate **only the live slots**,
+/// and the dynamics are evaluated through [`OdeSystem::f_rows_indexed`]
+/// so a finished row costs literally zero per-row work when
+/// `eval_inactive` is false. With `eval_inactive = true` every still
+/// *materialized* slot keeps receiving torchode's overhanging model
+/// evaluation (with the `ytmp = y` keep-alive); compaction retires slots
+/// outright, which is the only point where the two modes' dynamics-call
+/// row sets diverge — per-row results and the semantic batched-call
+/// count (the return value) are identical either way.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rk_attempt_active(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    act: &ActiveSet,
+    finished: &[bool],
+    t: &[f64],
+    dt: &[f64],
+    y: &BatchVec,
+    ws: &mut RkWorkspace,
+    k0_ready: &[bool],
+    eval_inactive: bool,
+) -> u64 {
+    let tab = ct.tab;
+    let dim = y.dim();
+    let y_flat = y.flat();
+    let live = act.live();
+    let inst = act.inst_map();
+    let eval_rows: &[usize] = if eval_inactive { act.all_slots() } else { live };
+
+    // Stage 0: refresh cold slope caches among the rows the eval covers.
+    // In the solve loops `k[0]` is always warm (FSAL hand-off or the
+    // non-FSAL end-slope refresh), so this effectively never fires.
+    let mut any_cold = false;
+    for &r in eval_rows {
+        let c = !k0_ready[r];
+        ws.cold[r] = c;
+        any_cold |= c;
+    }
+    let mut calls = tab.stages as u64 - 1;
+    if any_cold {
+        ws.idx.clear();
+        for &r in eval_rows {
+            if ws.cold[r] {
+                ws.idx.push(r);
+            }
+        }
+        for &r in &ws.idx {
+            ws.t_stage[r] = t[r];
+        }
+        sys.f_rows_indexed(0, inst, &ws.idx, &ws.t_stage, y_flat, ws.k[0].flat_mut());
+        calls += 1;
+    }
+
+    // Keep-alive for finished-but-materialized slots: the overhanging
+    // evaluations below must see a valid (t, y). Their state never
+    // changes between stages, so one copy per attempt suffices.
+    if eval_inactive {
+        for &r in act.all_slots() {
+            if finished[r] {
+                ws.ytmp.row_mut(r).copy_from_slice(&y_flat[r * dim..(r + 1) * dim]);
+                ws.t_stage[r] = t[r];
+            }
+        }
+    }
+
+    let ytmp = ws.ytmp.flat_mut();
+    let t_stage = &mut ws.t_stage[..];
+    let mut k_it = ws.k.iter_mut();
+    let mut k_bufs: [&mut [f64]; MAX_STAGES] =
+        std::array::from_fn(|_| k_it.next().map_or_else(Default::default, |k| k.flat_mut()));
+
+    // Stages 1..S over the live slots only. The per-row arithmetic is the
+    // shared `accumulate_stage_row`, so bitwise identity with the masked
+    // kernel is structural, not by convention.
+    for s in 1..tab.stages {
+        let nz = &ct.a_nz[s];
+        let (kprev, krest) = k_bufs.split_at_mut(s);
+        for &r in live {
+            let h = dt[r];
+            let yrow = &y_flat[r * dim..(r + 1) * dim];
+            t_stage[r] = t[r] + tab.c[s] * h;
+            let out = &mut ytmp[r * dim..(r + 1) * dim];
+            accumulate_stage_row(nz, kprev, r, dim, h, yrow, out);
+        }
+        sys.f_rows_indexed(0, inst, eval_rows, t_stage, ytmp, &mut krest[0][..]);
+    }
+
+    // Solution + error for the live slots, one fused pass per row.
+    let y_new = ws.y_new.flat_mut();
+    let err = ws.err.flat_mut();
+    let has_err = !ct.berr_nz.is_empty();
+    for &r in live {
+        let h = dt[r];
+        let yrow = &y_flat[r * dim..(r + 1) * dim];
+        let out = &mut y_new[r * dim..(r + 1) * dim];
+        combine_row(&ct.b_nz, &k_bufs, r, dim, h, Some(yrow), out);
+        if has_err {
+            let out = &mut err[r * dim..(r + 1) * dim];
+            combine_row(&ct.berr_nz, &k_bufs, r, dim, h, None, out);
+        }
+    }
+    calls
 }
 
 /// Executes the batched pieces of the joint solve loop. [`InlineExec`]

@@ -1,0 +1,164 @@
+//! Zero-allocation steady state, enforced.
+//!
+//! A counting global allocator wraps `System`; the test solves the same
+//! problem over a short and a long time span (same batch, same number of
+//! eval points, same `max_steps`, several times more solver steps) and
+//! asserts the **allocation counts are identical**. Setup cost (solution
+//! buffers, workspace, ledger reservation) is the same for both, so any
+//! difference can only come from per-step allocations — which the
+//! active-set loop, the stage kernel (`rk_attempt`/`rk_attempt_active`)
+//! and the joint loop must not perform.
+//!
+//! This file holds exactly one `#[test]` so no concurrent test can touch
+//! the global counter mid-measurement.
+
+use rode::prelude::*;
+use rode::problems::VdP;
+use rode::tensor::BatchVec;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_during(f: impl FnOnce()) -> usize {
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    ALLOCS.load(Ordering::SeqCst) - before
+}
+
+/// Mixed-stiffness batch so rows finish at different times and compaction
+/// fires mid-solve.
+fn workload(t1: f64) -> (VdP, BatchVec, TimeGrid) {
+    let mus = vec![0.5, 4.0, 1.0, 8.0, 2.0, 0.8, 6.0, 1.5];
+    let b = mus.len();
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, t1, 6);
+    (sys, y0, grid)
+}
+
+fn parallel_steps(t1: f64, opts: &SolveOptions) -> (usize, u64) {
+    let (sys, y0, grid) = workload(t1);
+    let mut steps = 0;
+    let n = allocs_during(|| {
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, opts);
+        assert!(sol.all_success());
+        steps = sol.max_steps();
+        std::hint::black_box(sol.ys_flat()[0]);
+    });
+    (n, steps)
+}
+
+fn joint_steps(t1: f64, opts: &SolveOptions) -> (usize, u64) {
+    let (sys, y0, grid) = workload(t1);
+    let mut steps = 0;
+    let n = allocs_during(|| {
+        let sol = solve_ivp_joint(&sys, &y0, &grid, opts);
+        assert!(sol.all_success());
+        steps = sol.max_steps();
+        std::hint::black_box(sol.ys_flat()[0]);
+    });
+    (n, steps)
+}
+
+type Case = (&'static str, Box<dyn Fn(f64) -> (usize, u64)>);
+
+/// Allocation counts must not scale with step count, for the parallel
+/// active-set loop (with compaction enabled, both eval modes) and the
+/// joint loop. Retried a few times to ride out test-harness noise on the
+/// process-global counter; a genuine per-step allocation fails every
+/// attempt.
+#[test]
+fn steady_state_allocates_nothing() {
+    let cases: Vec<Case> = vec![
+        (
+            "parallel skip_inactive+compact",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Dopri5)
+                    .with_tols(1e-6, 1e-6)
+                    .with_max_steps(20_000)
+                    .skip_inactive()
+                    .with_compaction(0.5);
+                parallel_steps(t1, &opts)
+            }),
+        ),
+        (
+            "parallel overhang evals",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Dopri5)
+                    .with_tols(1e-6, 1e-6)
+                    .with_max_steps(20_000);
+                parallel_steps(t1, &opts)
+            }),
+        ),
+        (
+            "parallel non-FSAL",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Fehlberg45)
+                    .with_tols(1e-6, 1e-6)
+                    .with_max_steps(20_000)
+                    .skip_inactive()
+                    .with_compaction(1.0);
+                parallel_steps(t1, &opts)
+            }),
+        ),
+        (
+            "joint",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Dopri5)
+                    .with_tols(1e-6, 1e-6)
+                    .with_max_steps(20_000);
+                joint_steps(t1, &opts)
+            }),
+        ),
+    ];
+
+    for (label, run) in &cases {
+        // Warm up (first call may fault in allocator internals).
+        run(3.0);
+        let mut outcome = None;
+        for _ in 0..3 {
+            let (short_allocs, short_steps) = run(3.0);
+            let (long_allocs, long_steps) = run(15.0);
+            assert!(
+                long_steps > short_steps,
+                "{label}: long solve must take more steps ({long_steps} vs {short_steps})"
+            );
+            outcome = Some((short_allocs, long_allocs));
+            if short_allocs == long_allocs {
+                break;
+            }
+        }
+        let (short_allocs, long_allocs) = outcome.unwrap();
+        assert_eq!(
+            short_allocs, long_allocs,
+            "{label}: allocations scale with step count — the steady state is not allocation-free"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! The active-set / compaction contract: for every method shape (FSAL,
+//! non-FSAL, fixed-step, per-instance tolerances), with and without
+//! overhanging evaluations, at every compaction threshold, and through
+//! the pooled exec paths, the solve is **bitwise-identical** — solutions,
+//! stats (including `n_f_evals`), statuses and traces — to the frozen
+//! mask-based reference loop (`rode::solver::reference`).
+
+use rode::bench::straggler_workload;
+use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
+use rode::prelude::*;
+use rode::solver::reference::solve_ivp_parallel_reference;
+use rode::solver::Tolerances;
+use rode::tensor::BatchVec;
+
+/// Full bitwise equality of two solutions (NaN-safe via bit comparison).
+fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.stats, b.stats, "{label}: stats");
+    let (fa, fb) = (a.ys_flat(), b.ys_flat());
+    assert_eq!(fa.len(), fb.len(), "{label}: ys length");
+    for (idx, (x, y)) in fa.iter().zip(fb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: ys[{idx}] {x} vs {y}");
+    }
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+}
+
+/// The straggler batch: one stiff VdP row + easy rows that finish early,
+/// so compaction actually fires at every nonzero threshold.
+fn workload(batch: usize) -> (rode::problems::VdP, BatchVec, TimeGrid) {
+    straggler_workload(batch, 40.0, 0.5, 5.0, 10)
+}
+
+/// FSAL (dopri5 dense) and non-FSAL (Hermite dense) adaptive methods,
+/// both eval modes, thresholds from "never" to "eagerly": all bitwise
+/// equal to the reference loop.
+#[test]
+fn active_set_matches_reference_across_methods_and_thresholds() {
+    let (sys, y0, grid) = workload(12);
+    for m in [Method::Dopri5, Method::Tsit5, Method::Fehlberg45] {
+        let base = SolveOptions::new(m)
+            .with_tols(1e-6, 1e-6)
+            .with_max_steps(1_000_000)
+            .with_trace();
+        for eval_inactive in [true, false] {
+            let mut opts = base.clone();
+            opts.eval_inactive = eval_inactive;
+            let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &opts);
+            assert!(reference.all_success(), "{m:?}");
+            for threshold in [0.0, 0.3, 0.75, 1.0] {
+                let copts = opts.clone().with_compaction(threshold);
+                let got = solve_ivp_parallel(&sys, &y0, &grid, &copts);
+                assert_bitwise(
+                    &reference,
+                    &got,
+                    &format!("{m:?} eval_inactive={eval_inactive} threshold={threshold}"),
+                );
+            }
+        }
+    }
+}
+
+/// Fixed-step methods drive the non-adaptive path (no controller, no
+/// rejections) through compaction.
+#[test]
+fn fixed_step_matches_reference_under_compaction() {
+    let (sys, y0, grid) = workload(6);
+    let base = SolveOptions::new(Method::Rk4).with_fixed_dt(1e-3).with_max_steps(20_000);
+    let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+    let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_compaction(1.0));
+    assert_bitwise(&reference, &got, "rk4 fixed-step");
+}
+
+/// Per-instance tolerance vectors index by *original row*; compaction
+/// must keep routing each packed slot to its own tolerances.
+#[test]
+fn per_instance_tolerances_survive_compaction() {
+    let (sys, y0, grid) = workload(6);
+    let mut base = SolveOptions::new(Method::Dopri5).with_max_steps(1_000_000);
+    base.tols = Tolerances::per_instance(
+        vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
+        vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
+    );
+    let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+    for threshold in [0.5, 1.0] {
+        let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_compaction(threshold));
+        assert_bitwise(&reference, &got, &format!("per-instance tols, threshold={threshold}"));
+    }
+}
+
+/// Rows that fail (max-steps) stay bitwise-faithful while their easy
+/// batchmates are compacted away around them.
+#[test]
+fn failing_straggler_matches_reference_under_compaction() {
+    // Easy rows (µ = 0.5, tol 1e-6) finish within ~200 steps, so
+    // compaction actually fires before the stiff row hits the cap.
+    let (sys, y0, grid) = straggler_workload(5, 1000.0, 0.5, 10.0, 8);
+    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(400);
+    let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+    assert_eq!(reference.status[0], Status::MaxStepsReached);
+    let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_compaction(1.0));
+    assert_bitwise(&reference, &got, "max-steps straggler");
+}
+
+/// The pooled parallel path: every shard runs the active-set loop (with
+/// compaction) independently; the merged result must still equal the
+/// serial reference bitwise, including the uniform `n_f_evals`.
+#[test]
+fn pooled_parallel_with_compaction_matches_reference() {
+    let (sys, y0, grid) = workload(12);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(1_000_000)
+        .with_trace()
+        .skip_inactive();
+    let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+    for threads in [2, 3, 4] {
+        let opts = base.clone().with_threads(threads).with_compaction(0.5);
+        let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+        assert_bitwise(&reference, &got, &format!("pooled threads={threads}"));
+    }
+}
+
+/// The joint pooled path is untouched by compaction (one shared state),
+/// but its loop internals changed (hoisted buffers, pending-cursor active
+/// set) — it must still match the serial joint loop bitwise.
+#[test]
+fn joint_pooled_still_matches_serial_bitwise() {
+    let mus = vec![1.0, 6.0, 2.0, 12.0];
+    let b = mus.len();
+    let sys = rode::problems::VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, 8.0, 15);
+    for m in [Method::Dopri5, Method::Fehlberg45] {
+        let base = SolveOptions::new(m)
+            .with_tols(1e-6, 1e-6)
+            .with_max_steps(1_000_000)
+            .with_trace()
+            .with_compaction(0.5); // must be a no-op for joint solving
+        let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+        assert!(serial.all_success());
+        for threads in [2, 4] {
+            let opts = base.clone().with_threads(threads);
+            let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&serial, &got, &format!("joint {m:?} threads={threads}"));
+        }
+    }
+}
+
+/// The `scaled_norm` 0/0 fix end to end: a zero state with `atol = 0`
+/// takes exact steps (`err = 0`) and must accept them instead of
+/// reject-hard riding into `DtUnderflow`.
+#[test]
+fn zero_state_with_zero_atol_succeeds() {
+    let sys = rode::problems::ExponentialDecay::new(vec![1.0, 1.0], 1);
+    let y0 = BatchVec::from_rows(&[vec![0.0], vec![0.0]]);
+    let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 5);
+    let mut opts = SolveOptions::new(Method::Dopri5).with_max_steps(10_000);
+    opts.tols = Tolerances::per_instance(vec![0.0, 0.0], vec![1e-6, 1e-6]);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success(), "{:?}", sol.status);
+    for e in 0..5 {
+        assert_eq!(sol.y(0, e)[0], 0.0);
+    }
+}

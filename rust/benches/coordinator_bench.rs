@@ -17,7 +17,7 @@ use rode::coordinator::{
 use rode::exec::solve_ivp_parallel_pooled;
 use rode::nn::Rng64;
 use rode::solver::reference::solve_ivp_parallel_reference;
-use rode::solver::{solve_ivp_parallel, Method, SolveOptions, TimeGrid};
+use rode::solver::{solve_ivp_parallel, Method, PoolKind, SolveOptions, TimeGrid};
 use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
@@ -119,11 +119,15 @@ fn bench_threads_sweep() {
     }
 }
 
-/// The straggler perf smoke (ISSUE 2 acceptance): batch 256, one stiff
-/// VdP row plus 255 easy rows, `eval_inactive = false`. Measures the
-/// frozen pre-active-set loop (the "current main" baseline), the
-/// active-set loop, and the active-set loop with compaction, and writes
-/// `BENCH_solver.json`.
+/// The straggler perf smoke: batch 256, one stiff VdP row plus 255 easy
+/// rows, `eval_inactive = false`. Measures the frozen pre-active-set
+/// loop (the "current main" baseline), the active-set loop, the
+/// active-set loop with compaction, and — the pool comparison — the
+/// scoped contiguous-shard pool against the persistent work-stealing
+/// pool at 4 threads, and writes everything into `BENCH_solver.json`.
+/// The scoped pool piles the stiff row plus 63 easy rows onto one
+/// worker; the stealing pool isolates it at steal-chunk granularity
+/// while the easy chunks migrate to idle workers.
 fn bench_straggler() {
     println!("--- straggler batch (1 stiff VdP + 255 easy, dopri5, eval_inactive=false) ---");
     let batch = 256;
@@ -175,6 +179,62 @@ fn bench_straggler() {
         t_ref / t_act,
         t_ref / t_cmp
     );
+
+    // Pool comparison at 4 threads, under torchode's exact semantics
+    // (eval_inactive = true): finished rows keep receiving overhanging
+    // evaluations while materialized, so the scoped shard that owns the
+    // stiff row pays for all 64 of its rows for the whole solve, while
+    // the stealing pool confines that cost to the stiff row's 8-row
+    // chunk and migrates every other chunk to idle workers. Both pooled
+    // runs must agree with the serial solve bitwise.
+    println!("--- straggler pools (same batch, 4 threads, eval_inactive=true) ---");
+    let pool_base =
+        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &pool_base);
+    let mut measure_pool = |name: &str, opts: &SolveOptions| -> f64 {
+        let mut stats = None;
+        let xs = time_repeats(1, 5, || {
+            let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, opts);
+            assert!(sol.all_success());
+            for (a, b) in sol.ys_flat().iter().zip(serial.ys_flat()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}: pooled result drifted");
+            }
+            stats = Some(sol.exec_stats);
+            std::hint::black_box(sol.ys_flat()[0]);
+        });
+        let s = Summary::from_samples(&xs);
+        let es = stats.unwrap();
+        println!(
+            "{name:<22} {:>9.2} ± {:>6.2} ms   (pool={} shards={} steals={})",
+            s.mean,
+            s.std,
+            es.pool_kind.name(),
+            es.shards,
+            es.steal_count
+        );
+        records.push(
+            BenchRecord::new(name, &s)
+                .field("batch", batch as f64)
+                .field("threads", 4.0)
+                .field("eval_inactive", 1.0)
+                .field("shards", es.shards as f64)
+                .field("steal_count", es.steal_count as f64),
+        );
+        s.mean
+    };
+    let opts_scoped = pool_base.clone().with_threads(4).with_pool(PoolKind::Scoped);
+    let t_scoped = measure_pool("pool-scoped-4t", &opts_scoped);
+    let opts_steal = pool_base
+        .clone()
+        .with_threads(4)
+        .with_pool(PoolKind::Persistent)
+        .with_steal_chunk(8);
+    let t_steal = measure_pool("pool-stealing-4t", &opts_steal);
+    println!("persistent+stealing vs scoped shards: x{:.2}", t_scoped / t_steal);
+    let n = records.len();
+    records[n - 1].fields.push(("speedup_vs_scoped".to_string(), t_scoped / t_steal));
+    records[n - 2].fields.push(("speedup_vs_scoped".to_string(), 1.0));
+
     match write_bench_json("BENCH_solver.json", &records) {
         Ok(()) => println!("wrote BENCH_solver.json ({} records)", records.len()),
         Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),

@@ -33,26 +33,31 @@ impl RawConfig {
         Ok(Self { values })
     }
 
+    /// Parse the file at `path` (see [`RawConfig::parse`]).
     pub fn load(path: &str) -> Result<Self> {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// The raw string value of `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// `key` parsed as a float; `Err` on a present-but-unparsable value.
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.get(key)
             .map(|v| v.parse().map_err(|_| anyhow!("bad float for {key}: {v}")))
             .transpose()
     }
 
+    /// `key` parsed as an unsigned integer; `Err` on a bad value.
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.get(key)
             .map(|v| v.parse().map_err(|_| anyhow!("bad integer for {key}: {v}")))
             .transpose()
     }
 
+    /// `key` parsed as `true`/`false`; `Err` on any other value.
     pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
         self.get(key)
             .map(|v| match v {
@@ -64,32 +69,92 @@ impl RawConfig {
     }
 }
 
+/// Which worker-pool implementation carries a sharded solve.
+///
+/// All kinds are **bitwise-identical** in their results (see
+/// [`crate::exec`]); they differ only in scheduling:
+///
+/// - [`PoolKind::Serial`] forces the single-threaded reference path
+///   regardless of the thread count — useful to pin down a baseline.
+/// - [`PoolKind::Scoped`] fans contiguous near-equal row shards out over
+///   freshly spawned scoped threads on every scatter (one shard per
+///   worker, static assignment).
+/// - [`PoolKind::Persistent`] parks a long-lived worker pool between
+///   passes and schedules smaller row chunks through work-stealing
+///   deques, so straggler-heavy batches rebalance dynamically instead of
+///   serializing on the shard that owns the stiff rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Single-threaded execution on the calling thread.
+    Serial,
+    /// Scoped threads, spawned per scatter, contiguous static shards.
+    Scoped,
+    /// Long-lived parked workers with work-stealing chunk queues.
+    Persistent,
+}
+
+impl PoolKind {
+    /// Parse a pool kind as used on the CLI (`--pool`) and in configs
+    /// (`pool` key): `serial`, `scoped` or `persistent`.
+    pub fn parse(s: &str) -> Option<PoolKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "serial" => PoolKind::Serial,
+            "scoped" => PoolKind::Scoped,
+            "persistent" => PoolKind::Persistent,
+            _ => return None,
+        })
+    }
+
+    /// The CLI/config spelling of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolKind::Serial => "serial",
+            PoolKind::Scoped => "scoped",
+            PoolKind::Persistent => "persistent",
+        }
+    }
+}
+
 /// How a solve loop uses CPU workers (the exec layer's knob).
 ///
 /// `threads == 1` is the serial reference path; `threads == 0` requests
 /// one worker per available core; any other value pins the worker count.
-/// Sharded execution is bitwise-identical to serial execution — see
+/// `pool` selects the worker-pool implementation ([`PoolKind`]) and
+/// `steal_chunk` the work-stealing chunk granularity in rows (`0` picks
+/// a heuristic; ignored by the scoped pool). Sharded execution is
+/// bitwise-identical to serial execution for every combination — see
 /// [`crate::exec`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecPolicy {
+    /// Worker count (`0` = one per available core, `1` = serial).
     pub threads: usize,
+    /// Worker-pool implementation.
+    pub pool: PoolKind,
+    /// Rows per work-stealing chunk (`0` = heuristic; persistent only).
+    pub steal_chunk: usize,
 }
 
 impl Default for ExecPolicy {
     fn default() -> Self {
-        Self { threads: 1 }
+        Self { threads: 1, pool: PoolKind::Scoped, steal_chunk: 0 }
     }
 }
 
 impl ExecPolicy {
     /// The serial reference path (no worker pool).
     pub fn serial() -> Self {
-        Self { threads: 1 }
+        Self { threads: 1, ..Self::default() }
     }
 
-    /// A fixed worker count; `0` means one worker per available core.
+    /// A fixed worker count on the scoped pool; `0` means one worker per
+    /// available core.
     pub fn threads(n: usize) -> Self {
-        Self { threads: n }
+        Self { threads: n, ..Self::default() }
+    }
+
+    /// A fixed worker count on the persistent work-stealing pool.
+    pub fn persistent(n: usize) -> Self {
+        Self { threads: n, pool: PoolKind::Persistent, steal_chunk: 0 }
     }
 
     /// Resolve `threads == 0` against the machine.
@@ -100,20 +165,45 @@ impl ExecPolicy {
             self.threads
         }
     }
+
+    /// Resolve the work-stealing chunk size against a batch: an explicit
+    /// `steal_chunk` is used as-is; `0` aims for ~4 chunks per worker so
+    /// the queues have enough slack to rebalance stragglers. Always at
+    /// least 1. The choice never affects results, only scheduling.
+    pub fn effective_steal_chunk(&self, batch: usize) -> usize {
+        if self.steal_chunk > 0 {
+            self.steal_chunk
+        } else {
+            (batch / (4 * self.effective_threads().max(1))).max(1)
+        }
+    }
 }
 
 /// Top-level service configuration (CLI flags override file values).
 #[derive(Debug, Clone)]
 pub struct RodeConfig {
+    /// Runge–Kutta method (`method` key; e.g. `dopri5`, `tsit5`).
     pub method: Method,
+    /// Absolute tolerance (`atol` key).
     pub atol: f64,
+    /// Relative tolerance (`rtol` key).
     pub rtol: f64,
+    /// Dynamic-batcher flush size (`max_batch` key).
     pub max_batch: usize,
+    /// Dynamic-batcher flush deadline (`max_wait_ms` key).
     pub max_wait: Duration,
+    /// Solve engine: `native`, `joint` or `aot` (`engine` key).
     pub engine: String,
+    /// Directory holding the AOT artifacts (`artifacts_dir` key).
     pub artifacts_dir: String,
     /// Worker threads for the native solve loops (0 = one per core).
     pub threads: usize,
+    /// Worker-pool implementation (`pool` key:
+    /// `serial` | `scoped` | `persistent`).
+    pub pool: PoolKind,
+    /// Rows per work-stealing chunk (`steal_chunk` key; 0 = heuristic,
+    /// only meaningful with `pool = persistent`).
+    pub steal_chunk: usize,
     /// Active-set compaction threshold for the parallel solve loops
     /// (`0.0` disables; see `SolveOptions::compact_threshold`).
     pub compact_threshold: f64,
@@ -130,12 +220,17 @@ impl Default for RodeConfig {
             engine: "native".to_string(),
             artifacts_dir: "artifacts".to_string(),
             threads: 1,
+            pool: PoolKind::Scoped,
+            steal_chunk: 0,
             compact_threshold: 0.0,
         }
     }
 }
 
 impl RodeConfig {
+    /// Build a config from parsed key/value pairs, validating every
+    /// recognized key; unknown keys are ignored, unset keys keep their
+    /// defaults.
     pub fn from_raw(raw: &RawConfig) -> Result<Self> {
         let mut cfg = Self::default();
         if let Some(m) = raw.get("method") {
@@ -162,6 +257,13 @@ impl RodeConfig {
         if let Some(v) = raw.get_usize("threads")? {
             cfg.threads = v;
         }
+        if let Some(v) = raw.get("pool") {
+            cfg.pool = PoolKind::parse(v)
+                .ok_or_else(|| anyhow!("unknown pool kind {v} (serial|scoped|persistent)"))?;
+        }
+        if let Some(v) = raw.get_usize("steal_chunk")? {
+            cfg.steal_chunk = v;
+        }
         if let Some(v) = raw.get_f64("compact_threshold")? {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&v),
@@ -172,6 +274,7 @@ impl RodeConfig {
         Ok(cfg)
     }
 
+    /// Load and validate the config file at `path`.
     pub fn load(path: &str) -> Result<Self> {
         Self::from_raw(&RawConfig::load(path)?)
     }
@@ -237,10 +340,48 @@ mod tests {
     #[test]
     fn exec_policy_resolution() {
         assert_eq!(ExecPolicy::default().threads, 1);
+        assert_eq!(ExecPolicy::default().pool, PoolKind::Scoped);
         assert_eq!(ExecPolicy::serial().effective_threads(), 1);
         assert_eq!(ExecPolicy::threads(3).effective_threads(), 3);
+        assert_eq!(ExecPolicy::persistent(4).pool, PoolKind::Persistent);
         // 0 = auto: at least one worker, whatever the machine.
         assert!(ExecPolicy::threads(0).effective_threads() >= 1);
+    }
+
+    #[test]
+    fn steal_chunk_resolution() {
+        // Explicit chunk sizes are used as-is.
+        let mut p = ExecPolicy::persistent(4);
+        p.steal_chunk = 7;
+        assert_eq!(p.effective_steal_chunk(256), 7);
+        // The heuristic aims for ~4 chunks per worker and never yields 0.
+        let p = ExecPolicy::persistent(4);
+        assert_eq!(p.effective_steal_chunk(256), 16);
+        assert_eq!(p.effective_steal_chunk(3), 1);
+        assert_eq!(ExecPolicy::persistent(1).effective_steal_chunk(0), 1);
+    }
+
+    #[test]
+    fn pool_kind_parse_roundtrip() {
+        for k in [PoolKind::Serial, PoolKind::Scoped, PoolKind::Persistent] {
+            assert_eq!(PoolKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PoolKind::parse("Persistent"), Some(PoolKind::Persistent));
+        assert_eq!(PoolKind::parse("rayon"), None);
+    }
+
+    #[test]
+    fn pool_keys_parse_and_validate() {
+        let raw = RawConfig::parse("pool = persistent\nsteal_chunk = 8").unwrap();
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.pool, PoolKind::Persistent);
+        assert_eq!(cfg.steal_chunk, 8);
+        // Defaults: scoped pool, heuristic chunking.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.pool, PoolKind::Scoped);
+        assert_eq!(cfg.steal_chunk, 0);
+        // Unknown kinds are rejected, not defaulted.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("pool = rayon").unwrap()).is_err());
     }
 
     #[test]

@@ -1,36 +1,75 @@
-//! The exec layer: batch sharding across a CPU worker pool.
+//! The exec layer: batch sharding across CPU worker pools.
 //!
 //! torchode's core claim is that per-instance solver state is almost
 //! free because the dynamics are evaluated in one batched call per
 //! stage. On CPU that batched call is a row loop — and because every
 //! row's state machine is independent, the loop is embarrassingly
 //! shardable. This module splits a batched solve into contiguous row
-//! shards, runs them on a dependency-free scoped-thread pool
-//! ([`ScopedPool`]) and deterministically merges the results:
+//! ranges, runs them on a dependency-free worker pool and
+//! deterministically merges the results:
 //!
-//! - [`solve_ivp_parallel_pooled`] runs each shard's **full per-instance
-//!   state machine** on its own worker (the shards share nothing), then
-//!   merges the per-shard [`Solution`] buffers, `Stats`, traces and
+//! - [`solve_ivp_parallel_pooled`] runs each range's **full per-instance
+//!   state machine** on its own worker (the ranges share nothing), then
+//!   merges the per-range [`Solution`] buffers, `Stats`, traces and
 //!   `Status` back into one result.
 //! - [`solve_ivp_joint_pooled`] shards only the **row-update passes**
 //!   (stage accumulation, dynamics evaluation, solution/error
 //!   combination) of each step; the joint loop's shared controller
-//!   reduction stays on the coordinator thread.
+//!   reduction stays on the coordinator thread. The fused error-norm
+//!   partials ride along with the sharded passes on the persistent pool
+//!   (whose workers are already parked and cheap to wake) and run
+//!   inline on the coordinator under the scoped pool, where a thread
+//!   spawn per step would cost more than the fill.
 //!
-//! Both paths are **bitwise-identical** to their serial counterparts:
-//! the shard workers execute the same per-row code over the same values
-//! (see [`crate::solver::step::rk_attempt_rows`]), and the only
-//! cross-row quantity — torchode's uniform `n_f_evals` accounting — is
-//! reconstructed exactly from per-shard call ledgers in
-//! [`merge_sharded`].
+//! ## Pool kinds
+//!
+//! Two pool implementations carry the shards, selected by
+//! [`crate::config::PoolKind`] on `SolveOptions::exec`:
+//!
+//! - **Scoped** ([`ScopedPool`]): one contiguous near-equal shard per
+//!   worker ([`shard_bounds`]), fanned out over freshly spawned scoped
+//!   threads on every scatter. Static assignment — a shard that owns the
+//!   batch's stiff rows keeps its worker busy long after the others went
+//!   idle.
+//! - **Persistent** ([`PersistentPool`] + [`steal`]): workers are spawned
+//!   once per solve and parked between passes, so the joint loop's
+//!   several-passes-per-step fan-out stops paying thread spawn/join
+//!   cost. The batch is cut into many small chunks
+//!   (`ExecPolicy::steal_chunk` rows each) scheduled through per-worker
+//!   work-stealing deques: each worker drains its own chunk block, then
+//!   steals the back half of the most-loaded peer's deque, so
+//!   straggler-heavy batches rebalance dynamically at chunk granularity.
+//!
+//! Which pool ran (and how much stealing happened) is recorded in
+//! [`Solution::exec_stats`] — including the quiet degradations to the
+//! serial path (`threads = 1`, one-row batches, `PoolKind::Serial`).
+//!
+//! ## Determinism
+//!
+//! Every combination of pool kind, thread count and steal-chunk size is
+//! **bitwise-identical** to the serial path — `ys`, `Stats`, `Status`
+//! and traces (`tests/pool_determinism.rs`). The contract rests on three
+//! invariants, not on scheduling:
+//!
+//! 1. A row's state machine depends only on that row's data, so *which*
+//!    worker computes a row (and when) cannot change its values.
+//! 2. Every output lands in a slot keyed by row index or chunk id, and
+//!    every reduction over per-chunk or per-row partials runs on the
+//!    coordinator **in index order, never arrival order** (see
+//!    [`merge_sharded`] and the fused joint norm in
+//!    [`crate::solver::joint`]).
+//! 3. The only cross-row quantity — torchode's uniform `n_f_evals`
+//!    accounting — is reconstructed from per-range call ledgers in
+//!    [`merge_sharded`], whose per-iteration max is invariant to how the
+//!    batch was partitioned.
 //!
 //! ## Interaction with the active set and compaction
 //!
-//! Each parallel-shard worker runs the full active-set loop of
+//! Each parallel-range worker runs the full active-set loop of
 //! [`crate::solver::parallel`] on its row range, including state
-//! compaction when `SolveOptions::compact_threshold` is set: a shard
+//! compaction when `SolveOptions::compact_threshold` is set: a range
 //! whose stragglers are all that remain packs its own state
-//! independently, and the [`OffsetSystem`] wrapper composes the shard
+//! independently, and the [`OffsetSystem`] wrapper composes the range
 //! base offset with the loop's slot → row map
 //! ([`crate::problems::OdeSystem::f_rows_indexed`]). Compaction changes
 //! neither per-row values nor the per-iteration semantic call counts the
@@ -44,19 +83,25 @@
 //! (CNF/FEN) keep using the serial `solve_ivp_*` functions.
 
 pub mod pool;
+pub(crate) mod steal;
 
-pub use pool::ScopedPool;
+pub use pool::{PersistentPool, ScopedPool};
 
+use crate::config::PoolKind;
 use crate::problems::OdeSystem;
 use crate::solver::init::initial_step_batch;
+use crate::solver::norm::scaled_sumsq_rows;
 use crate::solver::parallel::{solve_ivp_parallel_core, CallLedger};
 use crate::solver::step::{
     attempt_call_count, rk_attempt_rows, CompiledTableau, RkRows, RkWorkspace, StageExec,
 };
 use crate::solver::{
-    joint, solve_ivp_joint, solve_ivp_parallel, SolveOptions, Solution, TimeGrid, Tolerances,
+    joint, solve_ivp_joint, solve_ivp_parallel, ExecStats, SolveOptions, Solution, TimeGrid,
+    Tolerances,
 };
 use crate::tensor::BatchVec;
+use std::sync::Mutex;
+use steal::{chunk_bounds, ChunkQueues};
 
 /// A system view that maps local shard rows onto the global instance
 /// range `[offset, offset + rows)` of the wrapped system.
@@ -144,12 +189,56 @@ fn split_chunks<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> 
     out
 }
 
+/// Disjoint per-range [`RkRows`] views of a workspace, one per entry of
+/// `bounds` — the unit of work a pool worker owns during a sharded
+/// attempt. Shared by the scoped and work-stealing executors so both
+/// drive the identical per-row kernel over identical views.
+fn workspace_views<'w>(
+    ws: &'w mut RkWorkspace,
+    bounds: &[(usize, usize)],
+    dim: usize,
+) -> Vec<RkRows<'w>> {
+    let sizes: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
+    let row_sizes: Vec<usize> = bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+
+    let mut k_chunks: Vec<std::vec::IntoIter<&mut [f64]>> = ws
+        .k
+        .iter_mut()
+        .map(|k| split_chunks(k.flat_mut(), &sizes).into_iter())
+        .collect();
+    let mut ytmp_it = split_chunks(ws.ytmp.flat_mut(), &sizes).into_iter();
+    let mut y_new_it = split_chunks(ws.y_new.flat_mut(), &sizes).into_iter();
+    let mut err_it = split_chunks(ws.err.flat_mut(), &sizes).into_iter();
+    let mut ts_it = split_chunks(&mut ws.t_stage[..], &row_sizes).into_iter();
+    let mut cold_it = split_chunks(&mut ws.cold[..], &row_sizes).into_iter();
+
+    let mut views: Vec<RkRows<'w>> = Vec::with_capacity(bounds.len());
+    for &(lo, hi) in bounds {
+        views.push(RkRows {
+            offset: lo,
+            rows: hi - lo,
+            dim,
+            k: std::array::from_fn(|s| {
+                k_chunks.get_mut(s).map_or_else(Default::default, |it| it.next().unwrap())
+            }),
+            ytmp: ytmp_it.next().unwrap(),
+            y_new: y_new_it.next().unwrap(),
+            err: err_it.next().unwrap(),
+            t_stage: ts_it.next().unwrap(),
+            cold: cold_it.next().unwrap(),
+        });
+    }
+    views
+}
+
 /// [`crate::solver::solve_ivp_parallel`] sharded across
-/// `opts.exec.effective_threads()` workers: each shard runs the full
-/// per-instance state machine on its own worker; results are bitwise
-/// identical to the serial path (including `Stats` — see
-/// [`merge_sharded`]). Falls back to the serial loop for one thread or a
-/// one-row batch.
+/// `opts.exec.effective_threads()` workers on the pool kind selected by
+/// `opts.exec.pool`: each row range runs the full per-instance state
+/// machine on a worker; results are bitwise identical to the serial path
+/// (including `Stats` — see [`merge_sharded`]) for every pool kind,
+/// thread count and steal-chunk size. Falls back to the serial loop for
+/// one thread, a one-row batch or [`PoolKind::Serial`]; the path taken
+/// is recorded in [`Solution::exec_stats`].
 pub fn solve_ivp_parallel_pooled<S: OdeSystem + Sync>(
     sys: &S,
     y0: &BatchVec,
@@ -158,10 +247,28 @@ pub fn solve_ivp_parallel_pooled<S: OdeSystem + Sync>(
 ) -> Solution {
     let batch = y0.batch();
     opts.tols.validate(batch);
-    let bounds = shard_bounds(batch, opts.exec.effective_threads());
-    if bounds.len() <= 1 {
+    let threads = opts.exec.effective_threads();
+    if threads <= 1 || batch <= 1 || opts.exec.pool == PoolKind::Serial {
         return solve_ivp_parallel(sys, y0, grid, opts);
     }
+    match opts.exec.pool {
+        PoolKind::Scoped => parallel_scoped(sys, y0, grid, opts, threads),
+        PoolKind::Persistent => parallel_stealing(sys, y0, grid, opts, threads),
+        PoolKind::Serial => unreachable!("serial handled above"),
+    }
+}
+
+/// The scoped path: one contiguous shard per worker, one scoped-thread
+/// scatter for the whole solve.
+fn parallel_scoped<S: OdeSystem + Sync>(
+    sys: &S,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+    threads: usize,
+) -> Solution {
+    let batch = y0.batch();
+    let bounds = shard_bounds(batch, threads);
     let pool = ScopedPool::new(bounds.len());
     let jobs: Vec<_> = bounds
         .iter()
@@ -176,19 +283,74 @@ pub fn solve_ivp_parallel_pooled<S: OdeSystem + Sync>(
         })
         .collect();
     let results = pool.scatter(jobs);
-    merge_sharded(&bounds, &results, batch, grid.n_eval(), y0.dim(), opts.record_trace)
+    let mut sol =
+        merge_sharded(&bounds, &results, batch, grid.n_eval(), y0.dim(), opts.record_trace);
+    sol.exec_stats = ExecStats {
+        pool_kind: PoolKind::Scoped,
+        threads: bounds.len(),
+        shards: bounds.len(),
+        steal_count: 0,
+    };
+    sol
 }
 
-/// Merge per-shard solutions back into one batch-shaped [`Solution`].
+/// The persistent path: the batch is cut into steal-chunks, each chunk's
+/// full sub-solve is claimed dynamically from the work-stealing queues,
+/// and each result lands in its chunk-indexed slot — so the merge below
+/// sees results in chunk order no matter which worker produced them.
+fn parallel_stealing<S: OdeSystem + Sync>(
+    sys: &S,
+    y0: &BatchVec,
+    grid: &TimeGrid,
+    opts: &SolveOptions,
+    threads: usize,
+) -> Solution {
+    let batch = y0.batch();
+    let bounds = chunk_bounds(batch, opts.exec.effective_steal_chunk(batch));
+    let threads = threads.min(bounds.len());
+    let pool = PersistentPool::new(threads);
+    let queues = ChunkQueues::new(threads, bounds.len());
+    let slots: Vec<Mutex<Option<(Solution, CallLedger)>>> =
+        (0..bounds.len()).map(|_| Mutex::new(None)).collect();
+    pool.run(&|w| {
+        while let Some(c) = queues.pop(w) {
+            let (lo, hi) = bounds[c];
+            let y0_shard = y0.rows_range(lo, hi);
+            let grid_shard = grid.rows_range(lo, hi);
+            let opts_shard = opts.shard_rows(lo, hi);
+            let view = OffsetSystem { inner: sys, offset: lo };
+            let r = solve_ivp_parallel_core(&view, &y0_shard, &grid_shard, &opts_shard);
+            *slots[c].lock().unwrap() = Some(r);
+        }
+    });
+    let results: Vec<(Solution, CallLedger)> = slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every chunk produces a result"))
+        .collect();
+    let mut sol =
+        merge_sharded(&bounds, &results, batch, grid.n_eval(), y0.dim(), opts.record_trace);
+    sol.exec_stats = ExecStats {
+        pool_kind: PoolKind::Persistent,
+        threads,
+        shards: bounds.len(),
+        steal_count: queues.steals(),
+    };
+    sol
+}
+
+/// Merge per-range solutions back into one batch-shaped [`Solution`].
 ///
 /// `ys`, `status`, `n_steps`, `n_accepted`, `n_initialized` and traces
 /// are purely per-row and copy over directly. `n_f_evals` is torchode's
 /// uniform "the whole batch experiences every batched call" count: the
 /// global loop would have made, at iteration `n`, the *maximum* of the
-/// per-shard call counts at `n` (all shards pay the `stages - 1` stage
-/// calls; the non-FSAL refresh fires iff any shard had an accepted row),
-/// so the merged count is `base + Σ_n max_shards per_iter[n]` — exactly
-/// the serial loop's number.
+/// per-range call counts at `n` (all ranges pay the `stages - 1` stage
+/// calls; the non-FSAL refresh fires iff any range had an accepted row
+/// — a per-row property, so the max is invariant to the partition), so
+/// the merged count is `base + Σ_n max_ranges per_iter[n]` — exactly the
+/// serial loop's number, whether the ranges came from [`shard_bounds`]
+/// or [`chunk_bounds`]. Ranges are always iterated in index order, so
+/// the merge itself is scheduling-independent.
 fn merge_sharded(
     bounds: &[(usize, usize)],
     results: &[(Solution, CallLedger)],
@@ -238,10 +400,12 @@ fn merge_sharded(
 }
 
 /// [`crate::solver::solve_ivp_joint`] with the row-update passes of every
-/// step sharded across `opts.exec.effective_threads()` workers. The
-/// shared step-size controller, error-norm reduction and dense-output
-/// bookkeeping stay on the coordinator thread; results are bitwise
-/// identical to the serial joint loop.
+/// step sharded across `opts.exec.effective_threads()` workers on the
+/// selected pool kind. The shared step-size controller and the scalar
+/// error-norm reduction stay on the coordinator thread (the per-row norm
+/// partials are fused into the sharded error pass); results are bitwise
+/// identical to the serial joint loop for every pool kind, thread count
+/// and steal-chunk size.
 pub fn solve_ivp_joint_pooled<S: OdeSystem + Sync>(
     sys: &S,
     y0: &BatchVec,
@@ -250,16 +414,48 @@ pub fn solve_ivp_joint_pooled<S: OdeSystem + Sync>(
 ) -> Solution {
     let batch = y0.batch();
     opts.tols.validate(batch);
-    let bounds = shard_bounds(batch, opts.exec.effective_threads());
-    if bounds.len() <= 1 {
+    let threads = opts.exec.effective_threads();
+    if threads <= 1 || batch <= 1 || opts.exec.pool == PoolKind::Serial {
         return solve_ivp_joint(sys, y0, grid, opts);
     }
-    let pool = ScopedPool::new(bounds.len());
-    let exec = PooledExec { sys, pool, bounds };
-    joint::joint_core(&exec, y0, grid, opts)
+    match opts.exec.pool {
+        PoolKind::Scoped => {
+            let bounds = shard_bounds(batch, threads);
+            let pool = ScopedPool::new(bounds.len());
+            let exec = PooledExec { sys, pool, bounds };
+            let mut sol = joint::joint_core(&exec, y0, grid, opts);
+            sol.exec_stats = ExecStats {
+                pool_kind: PoolKind::Scoped,
+                threads: exec.bounds.len(),
+                shards: exec.bounds.len(),
+                steal_count: 0,
+            };
+            sol
+        }
+        PoolKind::Persistent => {
+            let bounds = chunk_bounds(batch, opts.exec.effective_steal_chunk(batch));
+            let threads = threads.min(bounds.len());
+            let exec = StealExec {
+                sys,
+                pool: PersistentPool::new(threads),
+                queues: ChunkQueues::new(threads, bounds.len()),
+                bounds,
+            };
+            let mut sol = joint::joint_core(&exec, y0, grid, opts);
+            sol.exec_stats = ExecStats {
+                pool_kind: PoolKind::Persistent,
+                threads,
+                shards: exec.bounds.len(),
+                steal_count: exec.queues.steals(),
+            };
+            sol
+        }
+        PoolKind::Serial => unreachable!("serial handled above"),
+    }
 }
 
-/// The pooled [`StageExec`]: shards each batched pass over row ranges.
+/// The scoped [`StageExec`]: shards each batched pass over one
+/// contiguous row range per worker via scoped-thread scatters.
 struct PooledExec<'a, S: OdeSystem + Sync> {
     sys: &'a S,
     pool: ScopedPool,
@@ -303,38 +499,7 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
         eval_inactive: bool,
     ) -> u64 {
         let dim = y.dim();
-        let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
-        let row_sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| hi - lo).collect();
-
-        // Disjoint row-range views of every workspace buffer.
-        let mut k_chunks: Vec<std::vec::IntoIter<&mut [f64]>> = ws
-            .k
-            .iter_mut()
-            .map(|k| split_chunks(k.flat_mut(), &sizes).into_iter())
-            .collect();
-        let mut ytmp_it = split_chunks(ws.ytmp.flat_mut(), &sizes).into_iter();
-        let mut y_new_it = split_chunks(ws.y_new.flat_mut(), &sizes).into_iter();
-        let mut err_it = split_chunks(ws.err.flat_mut(), &sizes).into_iter();
-        let mut ts_it = split_chunks(&mut ws.t_stage[..], &row_sizes).into_iter();
-        let mut cold_it = split_chunks(&mut ws.cold[..], &row_sizes).into_iter();
-
-        let mut shards: Vec<RkRows<'_>> = Vec::with_capacity(self.bounds.len());
-        for &(lo, hi) in &self.bounds {
-            shards.push(RkRows {
-                offset: lo,
-                rows: hi - lo,
-                dim,
-                k: std::array::from_fn(|s| {
-                    k_chunks.get_mut(s).map_or_else(Default::default, |it| it.next().unwrap())
-                }),
-                ytmp: ytmp_it.next().unwrap(),
-                y_new: y_new_it.next().unwrap(),
-                err: err_it.next().unwrap(),
-                t_stage: ts_it.next().unwrap(),
-                cold: cold_it.next().unwrap(),
-            });
-        }
-
+        let shards = workspace_views(ws, &self.bounds, dim);
         let sys = self.sys;
         let y_flat = y.flat();
         let jobs: Vec<_> = shards
@@ -372,6 +537,133 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
         // One-time cost; runs serially (and bitwise-identically).
         initial_step_batch(self.sys, t0, y0, f0, order, tols, span, scratch_y, scratch_f)
     }
+
+    fn error_sumsq(
+        &self,
+        err: &BatchVec,
+        y0: &BatchVec,
+        y1: &BatchVec,
+        tols: &Tolerances,
+        out: &mut [f64],
+    ) {
+        // The scoped pool would pay a thread spawn/join round for this
+        // O(batch · dim) fill — more than the fill itself costs — so the
+        // partials run inline on the coordinator here. Same arithmetic,
+        // same row order; only the parked persistent pool ships this
+        // pass to workers.
+        scaled_sumsq_rows(err, y0, y1, tols, 0, out);
+    }
+}
+
+/// The work-stealing [`StageExec`]: one persistent pool per solve, one
+/// queue refill per sharded pass. Workers claim row chunks dynamically;
+/// every output is written through a chunk-indexed slot, so scheduling
+/// never leaks into results (see the module docs' determinism
+/// invariants).
+struct StealExec<'a, S: OdeSystem + Sync> {
+    sys: &'a S,
+    pool: PersistentPool,
+    queues: ChunkQueues,
+    bounds: Vec<(usize, usize)>,
+}
+
+impl<S: OdeSystem + Sync> StealExec<'_, S> {
+    /// Run one sharded pass: refill the chunk queues, then let every
+    /// worker claim chunk ids and consume the matching per-chunk task
+    /// (each task is taken exactly once).
+    fn run_chunks<T: Send>(&self, tasks: Vec<T>, run: impl Fn(usize, T) + Sync) {
+        debug_assert_eq!(tasks.len(), self.bounds.len());
+        let slots: Vec<_> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        self.queues.reset(slots.len());
+        self.pool.run(&|w| {
+            while let Some(c) = self.queues.pop(w) {
+                let task = slots[c].lock().unwrap().take().expect("chunk delivered once");
+                run(c, task);
+            }
+        });
+    }
+}
+
+impl<S: OdeSystem + Sync> StageExec for StealExec<'_, S> {
+    fn dim(&self) -> usize {
+        self.sys.dim()
+    }
+
+    fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
+        let dim = y.dim();
+        let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
+        let dy_chunks = split_chunks(dy.flat_mut(), &sizes);
+        let sys = self.sys;
+        let y_flat = y.flat();
+        let bounds = &self.bounds;
+        self.run_chunks(dy_chunks, |c, chunk| {
+            let (lo, hi) = bounds[c];
+            let act_s = active.map(|m| &m[lo..hi]);
+            sys.f_rows(lo, hi - lo, &t[lo..hi], &y_flat[lo * dim..hi * dim], chunk, act_s);
+        });
+    }
+
+    fn attempt(
+        &self,
+        ct: &CompiledTableau,
+        t: &[f64],
+        dt: &[f64],
+        y: &BatchVec,
+        ws: &mut RkWorkspace,
+        k0_ready: &[bool],
+        active: Option<&[bool]>,
+        eval_inactive: bool,
+    ) -> u64 {
+        let dim = y.dim();
+        let views = workspace_views(ws, &self.bounds, dim);
+        let sys = self.sys;
+        let y_flat = y.flat();
+        self.run_chunks(views, |_, mut rr| {
+            let (lo, rows) = (rr.offset, rr.rows);
+            let t_s = &t[lo..lo + rows];
+            let dt_s = &dt[lo..lo + rows];
+            let y_s = &y_flat[lo * dim..(lo + rows) * dim];
+            let k0_s = &k0_ready[lo..lo + rows];
+            let act_s = active.map(|m| &m[lo..lo + rows]);
+            rk_attempt_rows(ct, sys, t_s, dt_s, y_s, &mut rr, k0_s, act_s, eval_inactive);
+        });
+
+        // One *semantic* batched call per stage, however many chunks
+        // physically carried it (torchode accounting).
+        attempt_call_count(ct, k0_ready)
+    }
+
+    fn initial_step(
+        &self,
+        t0: &[f64],
+        y0: &BatchVec,
+        f0: &BatchVec,
+        order: usize,
+        tols: &Tolerances,
+        span: &[f64],
+        scratch_y: &mut BatchVec,
+        scratch_f: &mut BatchVec,
+    ) -> Vec<f64> {
+        // One-time cost; runs serially (and bitwise-identically).
+        initial_step_batch(self.sys, t0, y0, f0, order, tols, span, scratch_y, scratch_f)
+    }
+
+    fn error_sumsq(
+        &self,
+        err: &BatchVec,
+        y0: &BatchVec,
+        y1: &BatchVec,
+        tols: &Tolerances,
+        out: &mut [f64],
+    ) {
+        let row_sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+        let out_chunks = split_chunks(out, &row_sizes);
+        let bounds = &self.bounds;
+        self.run_chunks(out_chunks, |c, chunk| {
+            let (lo, _hi) = bounds[c];
+            scaled_sumsq_rows(err, y0, y1, tols, lo, chunk);
+        });
+    }
 }
 
 #[cfg(test)]
@@ -404,5 +696,26 @@ mod tests {
         assert_eq!(chunks[0].len(), 3);
         assert_eq!(chunks[1].len(), 0);
         assert_eq!(chunks[2].len(), 7);
+    }
+
+    #[test]
+    fn workspace_views_are_disjoint_and_aligned() {
+        let mut ws = RkWorkspace::new(3, 7, 2);
+        let bounds = [(0usize, 3usize), (3, 5), (5, 7)];
+        let mut views = workspace_views(&mut ws, &bounds, 2);
+        assert_eq!(views.len(), 3);
+        for (v, &(lo, hi)) in views.iter().zip(&bounds) {
+            assert_eq!(v.offset, lo);
+            assert_eq!(v.rows, hi - lo);
+            assert_eq!(v.ytmp.len(), (hi - lo) * 2);
+            assert_eq!(v.t_stage.len(), hi - lo);
+            assert_eq!(v.k[0].len(), (hi - lo) * 2);
+            // Unused stage slots are empty, not aliased.
+            assert_eq!(v.k[3].len(), 0);
+        }
+        // Writes through one view land in the right workspace rows.
+        views[1].y_new[0] = 42.0;
+        drop(views);
+        assert_eq!(ws.y_new.row(3)[0], 42.0);
     }
 }

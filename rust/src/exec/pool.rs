@@ -1,15 +1,32 @@
-//! A dependency-free scoped-thread worker pool.
+//! Dependency-free CPU worker pools.
 //!
 //! The vendored crate set has no rayon/crossbeam, and the solve loops
 //! need workers that can borrow non-`'static` data (the system, shard
-//! views of a workspace), so the pool is built on `std::thread::scope`:
-//! every [`ScopedPool::scatter`] call fans a set of jobs out over fresh
-//! scoped threads and joins them before returning. The coordinator
-//! thread runs the first job itself, so `n` jobs cost `n - 1` spawns —
-//! for the batch-sharded solves that is one spawn per worker per *solve*
-//! (the parallel loop) or per *step* (the joint loop's row-update
-//! passes), both far below the work they carry at the batch sizes the
-//! pool is built for.
+//! views of a workspace), so two pools are built on `std`:
+//!
+//! - [`ScopedPool`] wraps `std::thread::scope`: every
+//!   [`ScopedPool::scatter`] call fans a set of jobs out over *freshly
+//!   spawned* scoped threads and joins them before returning. The
+//!   coordinator thread runs the first job itself, so `n` jobs cost
+//!   `n - 1` spawns — fine once per solve, wasteful once per step.
+//! - [`PersistentPool`] spawns its workers **once** and parks them on a
+//!   condvar between passes. Each [`PersistentPool::run`] call publishes
+//!   one shared job under a bumped generation counter, wakes the
+//!   workers, runs the job as worker 0 itself, and waits until every
+//!   worker has finished the generation. For the joint loop — several
+//!   row passes per step, thousands of steps per solve — this replaces
+//!   per-pass thread spawn/join with a park/unpark round trip.
+//!
+//! Neither pool schedules anything by itself: callers either pre-split
+//! the work (scoped: one job per shard) or pull chunks from the
+//! work-stealing queues in [`crate::exec::steal`] (persistent). Both
+//! pools therefore leave *results* untouched — determinism is decided by
+//! how callers partition rows and reduce outputs, not by which thread
+//! ran what.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// A worker pool of a fixed size; see the module docs for the execution
 /// model.
@@ -24,6 +41,7 @@ impl ScopedPool {
         Self { threads: threads.max(1) }
     }
 
+    /// The worker count this pool was built with.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -51,6 +69,178 @@ impl ScopedPool {
             }
             out
         })
+    }
+}
+
+/// A long-lived worker pool: `threads - 1` OS threads spawned at
+/// construction, parked on a condvar between passes, woken by a
+/// generation-counter barrier. See the module docs.
+///
+/// One [`PersistentPool::run`] call is one *pass*: the same job closure
+/// runs once on every worker (the coordinator doubles as worker 0), and
+/// `run` returns only after all of them finished — which is what makes
+/// handing borrowed data to the workers sound (see the safety comment in
+/// `run`). Workers pull their actual work items from a shared source
+/// (e.g. [`crate::exec::steal::ChunkQueues`]) keyed by the worker index
+/// the job receives.
+pub struct PersistentPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// State shared between the coordinator and the parked workers.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes workers when a new generation (or shutdown) is published.
+    work: Condvar,
+    /// Wakes the coordinator when the last worker finishes a generation.
+    done: Condvar,
+}
+
+struct PoolState {
+    /// The current pass's job. Only valid while `remaining > 0` for the
+    /// matching `generation`; the lifetime is erased in `run`, which does
+    /// not return before every worker is done with it.
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Barrier counter: bumped once per `run` call.
+    generation: u64,
+    /// Workers that have not yet finished the current generation.
+    remaining: usize,
+    shutdown: bool,
+    /// First worker panic of the current generation, rethrown by `run`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl PersistentPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1). The
+    /// coordinator thread counts as worker 0, so `threads - 1` OS
+    /// threads are created; they park immediately and live until the
+    /// pool is dropped.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                remaining: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|idx| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rode-pool-{idx}"))
+                    .spawn(move || worker_loop(&shared, idx))
+                    .expect("spawn persistent pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Total workers, including the coordinator as worker 0.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run one pass: `job(w)` executes once per worker index
+    /// `w ∈ 0..threads()`, concurrently, and `run` returns after all of
+    /// them completed. A panic in any worker (or in the coordinator's own
+    /// share) is re-raised here after the barrier.
+    // The transmute below changes only the lifetime — which is the point.
+    #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() {
+            job(0);
+            return;
+        }
+        // SAFETY: the only consumers of this lifetime-erased reference
+        // are the pool's own workers, and the barrier below (`remaining`
+        // reaching 0) guarantees every worker is done with the job — and
+        // holds no copy of it — before `run` returns. The borrow it was
+        // created from outlives `run`, so no worker ever observes a
+        // dangling reference.
+        let job_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job_static);
+            st.generation += 1;
+            st.remaining = self.workers.len();
+            st.panic = None;
+            self.shared.work.notify_all();
+        }
+        // The coordinator is worker 0. If its share panics, the workers
+        // must still be awaited before unwinding — they may be borrowing
+        // the same data the panic would free.
+        let own = catch_unwind(AssertUnwindSafe(|| job(0)));
+        let worker_panic = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        if let Err(p) = own {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for PersistentPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PersistentPool").field("threads", &self.threads()).finish()
+    }
+}
+
+/// The parked-worker loop: wait for a generation bump (or shutdown), run
+/// the published job, report completion, park again.
+fn worker_loop(shared: &PoolShared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    break st.job.expect("a bumped generation always publishes a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let res = catch_unwind(AssertUnwindSafe(|| job(idx)));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = res {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
     }
 }
 
@@ -95,5 +285,90 @@ mod tests {
             Box::new(|| panic!("boom")),
         ];
         pool.scatter(jobs);
+    }
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn persistent_pool_runs_every_worker_once_per_pass() {
+        let pool = PersistentPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits = AtomicU64::new(0);
+        let mask = AtomicU64::new(0);
+        pool.run(&|w| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            mask.fetch_or(1 << w, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn persistent_pool_is_reusable_across_passes() {
+        // The whole point: many passes over one set of parked workers,
+        // each pass borrowing fresh stack data.
+        let pool = PersistentPool::new(3);
+        for round in 0u64..50 {
+            let acc = AtomicU64::new(0);
+            pool.run(&|w| {
+                acc.fetch_add(round * 10 + w as u64, Ordering::SeqCst);
+            });
+            assert_eq!(acc.load(Ordering::SeqCst), 3 * round * 10 + 3);
+        }
+    }
+
+    #[test]
+    fn persistent_pool_of_one_runs_inline() {
+        let pool = PersistentPool::new(1);
+        let tid = std::sync::Mutex::new(None);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            *tid.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(tid.lock().unwrap().unwrap(), std::thread::current().id());
+    }
+
+    #[test]
+    fn persistent_pool_workers_can_borrow_caller_data() {
+        let data: Vec<u64> = (0..90).collect();
+        let pool = PersistentPool::new(3);
+        let partial = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+        pool.run(&|w| {
+            let s: u64 = data[w * 30..(w + 1) * 30].iter().sum();
+            partial[w].store(s, Ordering::SeqCst);
+        });
+        let total: u64 = partial.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+        assert_eq!(total, 89 * 90 / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool boom")]
+    fn persistent_pool_worker_panic_propagates() {
+        let pool = PersistentPool::new(2);
+        pool.run(&|w| {
+            if w == 1 {
+                panic!("pool boom");
+            }
+        });
+    }
+
+    /// A panic in one pass must not wedge the pool: later passes still
+    /// run on every worker.
+    #[test]
+    fn persistent_pool_survives_a_panicked_pass() {
+        let pool = PersistentPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 1 {
+                    panic!("first pass");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        let hits = AtomicU64::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
     }
 }

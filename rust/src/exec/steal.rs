@@ -1,0 +1,225 @@
+//! Work-stealing chunk queues for the persistent pool.
+//!
+//! The scoped pool's contiguous shards have a straggler pathology: with
+//! one stiff row and many easy rows, the shard that owns the stiff row
+//! keeps working long after its peers went idle — exactly the
+//! within-batch interaction torchode's per-instance state is meant to
+//! avoid. The persistent pool therefore schedules **chunks** instead:
+//! the batch's row range is cut into many small contiguous chunks
+//! ([`chunk_bounds`]), each worker starts with a contiguous block of
+//! chunk ids in its own deque, drains it front-to-back, and when it runs
+//! dry **steals the back half** of the most-loaded peer's deque
+//! ([`ChunkQueues::pop`]). A straggler-heavy batch thus rebalances at
+//! chunk granularity instead of serializing on one shard.
+//!
+//! ## Determinism
+//!
+//! Stealing randomizes *which worker* processes a chunk and *when* — it
+//! must never change results. The exec layer guarantees that by
+//! construction:
+//!
+//! - a chunk's work depends only on the chunk's own rows (the per-row
+//!   state machines are independent; see [`crate::exec`]), and
+//! - every output is written to a location keyed by **chunk id or row
+//!   index**, never by worker or completion order, and reductions over
+//!   chunk results always iterate in chunk order on the coordinator.
+//!
+//! The steal counter is the one intentionally nondeterministic output;
+//! it is surfaced as scheduling observability in
+//! [`crate::solver::ExecStats`] and excluded from the bitwise contract.
+
+use super::shard_bounds;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Contiguous row chunks of (at most) `chunk` rows covering `0..batch`:
+/// the scheduling grain of the work-stealing pool. Unlike
+/// [`shard_bounds`], the number of chunks grows with the batch, so a
+/// queue of them can rebalance; the partition never affects results,
+/// only scheduling.
+pub(crate) fn chunk_bounds(batch: usize, chunk: usize) -> Vec<(usize, usize)> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::with_capacity(batch.div_ceil(chunk));
+    let mut lo = 0;
+    while lo < batch {
+        let hi = (lo + chunk).min(batch);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Per-worker deques of chunk ids with steal-half rebalancing. All
+/// methods take `&self`; the deques are individually locked so workers
+/// only contend when stealing.
+pub(crate) struct ChunkQueues {
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    steals: AtomicU64,
+}
+
+impl ChunkQueues {
+    /// Queues for `workers` workers over `chunks` chunk ids, each worker
+    /// initially owning a contiguous block of ids (the same partition
+    /// shape the scoped pool uses, so with zero steals the assignment
+    /// degenerates to contiguous shards).
+    pub fn new(workers: usize, chunks: usize) -> Self {
+        let q = Self {
+            queues: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            steals: AtomicU64::new(0),
+        };
+        q.reset(chunks);
+        q
+    }
+
+    /// Refill the deques with `chunks` chunk ids for a fresh pass,
+    /// keeping the cumulative steal counter. The joint loop calls this
+    /// once per sharded pass; the parallel loop once per solve.
+    pub fn reset(&self, chunks: usize) {
+        let blocks = shard_bounds(chunks, self.queues.len());
+        for (w, q) in self.queues.iter().enumerate() {
+            let mut q = q.lock().unwrap();
+            q.clear();
+            if let Some(&(lo, hi)) = blocks.get(w) {
+                q.extend(lo..hi);
+            }
+        }
+    }
+
+    /// Next chunk id for worker `w`: its own deque's front, else the
+    /// back half of the most-loaded peer's deque (one steal operation),
+    /// else `None` — every queue is empty and the pass is over. Chunks
+    /// are delivered exactly once per [`ChunkQueues::reset`].
+    pub fn pop(&self, w: usize) -> Option<usize> {
+        if let Some(c) = self.queues[w].lock().unwrap().pop_front() {
+            return Some(c);
+        }
+        self.steal_into(w)
+    }
+
+    /// Steal operations performed since construction.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    fn steal_into(&self, w: usize) -> Option<usize> {
+        loop {
+            // Pick the most-loaded peer at this instant (racy by nature;
+            // re-checked under the victim's lock below).
+            let mut victim = None;
+            let mut best = 0usize;
+            for (p, q) in self.queues.iter().enumerate() {
+                if p == w {
+                    continue;
+                }
+                let len = q.lock().unwrap().len();
+                if len > best {
+                    best = len;
+                    victim = Some(p);
+                }
+            }
+            let victim = victim?;
+            let stolen = {
+                let mut vq = self.queues[victim].lock().unwrap();
+                let n = vq.len();
+                if n == 0 {
+                    // Raced with the victim (or another thief); rescan.
+                    continue;
+                }
+                // Victim keeps the front floor(n/2); thief takes the rest.
+                vq.split_off(n / 2)
+            };
+            self.steals.fetch_add(1, Ordering::Relaxed);
+            let mut own = self.queues[w].lock().unwrap();
+            own.extend(stolen);
+            return own.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn chunk_bounds_cover_contiguously() {
+        for (batch, chunk) in [(256, 16), (10, 3), (5, 8), (7, 1), (1, 1), (64, 64)] {
+            let b = chunk_bounds(batch, chunk);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, batch);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            assert!(b.iter().all(|&(lo, hi)| hi - lo <= chunk && hi > lo));
+            assert_eq!(b.len(), batch.div_ceil(chunk.max(1)));
+        }
+        // Degenerate chunk size is clamped, not divided by zero.
+        assert_eq!(chunk_bounds(3, 0).len(), 3);
+        assert!(chunk_bounds(0, 4).is_empty());
+    }
+
+    /// Every chunk id is delivered exactly once, whichever worker asks.
+    #[test]
+    fn all_chunks_delivered_exactly_once() {
+        for (workers, chunks) in [(1usize, 5usize), (3, 8), (4, 3), (2, 0)] {
+            let q = ChunkQueues::new(workers, chunks);
+            let mut seen = Vec::new();
+            // Round-robin polling from all workers exercises both own-pops
+            // and steals.
+            let mut w = 0;
+            while let Some(c) = q.pop(w) {
+                seen.push(c);
+                w = (w + 1) % workers;
+            }
+            // Drain any stragglers from the other workers' perspectives.
+            for w in 0..workers {
+                while let Some(c) = q.pop(w) {
+                    seen.push(c);
+                }
+            }
+            let set: BTreeSet<usize> = seen.iter().copied().collect();
+            assert_eq!(seen.len(), chunks, "workers={workers}");
+            assert_eq!(set.len(), chunks, "no duplicates");
+            assert_eq!(set, (0..chunks).collect::<BTreeSet<usize>>(), "workers={workers}");
+        }
+    }
+
+    /// A worker with an empty deque steals from the loaded peer, and the
+    /// steal counter records it.
+    #[test]
+    fn empty_worker_steals_half() {
+        let q = ChunkQueues::new(2, 8);
+        // Worker 0 owns 0..4, worker 1 owns 4..8. Drain worker 1 dry,
+        // then one more pop must steal from worker 0.
+        for _ in 0..4 {
+            q.pop(1).unwrap();
+        }
+        assert_eq!(q.steals(), 0);
+        let c = q.pop(1).unwrap();
+        assert_eq!(q.steals(), 1);
+        // The thief takes the *back* half of 0's remaining deque.
+        assert!(c >= 2, "stole {c}, expected a back-half chunk");
+        // Reset refills chunks but keeps the cumulative counter.
+        q.reset(8);
+        assert_eq!(q.steals(), 1);
+        assert_eq!(q.pop(0), Some(0));
+    }
+
+    /// reset() restores a clean assignment after a partial drain.
+    #[test]
+    fn reset_restores_block_assignment() {
+        let q = ChunkQueues::new(3, 9);
+        q.pop(0).unwrap();
+        q.pop(2).unwrap();
+        q.reset(6);
+        let mut all = Vec::new();
+        for w in 0..3 {
+            while let Some(c) = q.pop(w) {
+                all.push(c);
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

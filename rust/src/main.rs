@@ -10,6 +10,7 @@
 //! no clap.
 
 use anyhow::{anyhow, Result};
+use rode::config::PoolKind;
 use rode::coordinator::{Coordinator, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest};
 use rode::prelude::*;
 use rode::runtime::Runtime;
@@ -45,12 +46,37 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usi
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Parse `--pool serial|scoped|persistent`; `None` when absent, so each
+/// command keeps its own default (scoped for `solve`, config for
+/// `serve`).
+fn flag_pool(flags: &HashMap<String, String>) -> Result<Option<PoolKind>> {
+    flags
+        .get("pool")
+        .map(|s| {
+            PoolKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown pool kind {s} (serial|scoped|persistent)"))
+        })
+        .transpose()
+}
+
+/// Like `flag_usize`, but a present-and-unparsable value is an error
+/// instead of a silent fallback (used for knobs where a typo would
+/// silently change what is being measured).
+fn flag_usize_strict(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("bad integer for --{key}: {v}")),
+    }
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let batch = flag_usize(flags, "batch", 5);
     let mu = flag_f64(flags, "mu", 10.0);
     let t1 = flag_f64(flags, "t1", 10.0);
     let n_eval = flag_usize(flags, "points", 50);
     let threads = flag_usize(flags, "threads", 1);
+    let pool = flag_pool(flags)?.unwrap_or(PoolKind::Scoped);
+    let steal_chunk = flag_usize_strict(flags, "steal-chunk", 0)?;
     let compact = flag_f64(flags, "compact-threshold", 0.0);
     anyhow::ensure!(
         (0.0..=1.0).contains(&compact),
@@ -74,10 +100,19 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let opts = SolveOptions::new(method)
         .with_tols(1e-6, 1e-5)
         .with_threads(threads)
+        .with_pool(pool)
+        .with_steal_chunk(steal_chunk)
         .with_compaction(compact);
     let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 
     println!("status: {:?}", sol.status);
+    println!(
+        "exec:   pool={} threads={} shards={} steals={}",
+        sol.exec_stats.pool_kind.name(),
+        sol.exec_stats.threads,
+        sol.exec_stats.shards,
+        sol.exec_stats.steal_count
+    );
     println!(
         "n_f_evals:     {:?}",
         sol.stats.iter().map(|s| s.n_f_evals).collect::<Vec<_>>()
@@ -106,6 +141,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let n_requests = flag_usize(flags, "requests", 200);
     cfg.max_batch = flag_usize(flags, "max-batch", cfg.max_batch);
     cfg.threads = flag_usize(flags, "threads", cfg.threads);
+    if let Some(p) = flag_pool(flags)? {
+        cfg.pool = p;
+    }
+    cfg.steal_chunk = flag_usize_strict(flags, "steal-chunk", cfg.steal_chunk)?;
     cfg.compact_threshold = flag_f64(flags, "compact-threshold", cfg.compact_threshold);
     anyhow::ensure!(
         (0.0..=1.0).contains(&cfg.compact_threshold),
@@ -120,6 +159,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let solve_opts = rode::solver::SolveOptions::new(cfg.method)
         .with_tols(cfg.atol, cfg.rtol)
         .with_threads(cfg.threads)
+        .with_pool(cfg.pool)
+        .with_steal_chunk(cfg.steal_chunk)
         .with_compaction(cfg.compact_threshold);
 
     let coord = Coordinator::spawn(
@@ -222,10 +263,13 @@ fn main() -> Result<()> {
                  usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
                  \n                   (--threads N shards the batch over N workers; 0 = all cores;\
+                 \n                    --pool serial|scoped|persistent selects the worker pool;\
+                 \n                    --steal-chunk R sets the work-stealing chunk size in rows,\
+                 \n                    0 = heuristic (persistent pool only);\
                  \n                    --compact-threshold F packs solver state once the live\
                  \n                    fraction drops below F, 0 = off)\
-                 \n  serve            coordinator + synthetic workload (also honors --threads\
-                 \n                   and --compact-threshold)\
+                 \n  serve            coordinator + synthetic workload (also honors --threads,\
+                 \n                   --pool, --steal-chunk and --compact-threshold)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\
                  \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"

@@ -20,6 +20,16 @@
 //! in-place `copy_within` gathers are safe). Compacting never changes any
 //! live row's values — only where they are stored — so trajectories are
 //! bitwise-identical with compaction on or off.
+//!
+//! Under the sharded exec layer every worker owns an `ActiveSet` for its
+//! own row range (parallel path), or the packed index list doubles as
+//! the unit the work-stealing chunks are cut over (see [`crate::exec`]);
+//! in both cases the bitwise-determinism contract above is what lets
+//! chunks move freely between workers.
+
+// The solver module predates the crate's missing-docs ratchet; this file
+// opts back in (see `lib.rs`).
+#![warn(missing_docs)]
 
 /// Packed index bookkeeping for a batched solve. See the module docs.
 #[derive(Debug, Clone)]
@@ -86,6 +96,7 @@ impl ActiveSet {
         self.live.len()
     }
 
+    /// Whether no live rows remain (the solve loop's exit condition).
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.live.is_empty()

@@ -9,9 +9,19 @@
 //!
 //! The loop body is written against the [`StageExec`] executor so the
 //! row-update passes (stage accumulation, dynamics evaluation, solution
-//! and error combination) can be sharded across a worker pool by
+//! and error combination, and the fused error-norm partials) can be
+//! sharded across a worker pool by
 //! [`crate::exec::solve_ivp_joint_pooled`], while the shared controller
 //! reduction below stays on the coordinator thread.
+//!
+//! The joint error norm is **fused** into the sharded passes: each row's
+//! unreduced scaled sum of squares is produced by
+//! [`StageExec::error_sumsq`] (one pass over `err`/`y`/`y_new` while they
+//! are cache-hot from the attempt), and the coordinator reduces the
+//! per-row partials in row order — never worker-arrival order — so the
+//! shared norm `sqrt(Σ_rows sumsq / (batch · dim))` is bitwise-identical
+//! whatever pool kind, thread count or steal-chunk size carried the
+//! pass.
 //!
 //! Because every row shares one time and step size, the only per-row
 //! progress in this loop is the dense-output cursor; a packed `pending`
@@ -23,7 +33,6 @@
 
 use super::controller::ControllerState;
 use super::interp::{self, DOPRI5_NCOEFF};
-use super::norm::{scaled_norm, NormKind};
 use super::step::{CompiledTableau, InlineExec, RkWorkspace, StageExec, MAX_STAGES};
 use super::tableau::DenseOutput;
 use super::{SolveOptions, Solution, Status, TimeGrid};
@@ -134,6 +143,8 @@ pub(crate) fn joint_core(
     // state; the shared scalars are broadcast by `fill`, not `vec!`).
     let mut dt_vec = vec![0.0f64; batch];
     let mut k0r = vec![true; batch];
+    // Per-row partials of the fused joint error norm.
+    let mut sumsq = vec![0.0f64; batch];
 
     while !done {
         steps += 1;
@@ -162,23 +173,15 @@ pub(crate) fn joint_core(
         }
 
         // One error norm over the concatenated state: RMS over batch × dim.
-        // This shared reduction is the joint loop's defining coupling and
-        // always runs on the coordinator thread.
+        // The per-row sum-of-squares partials are fused into the sharded
+        // error pass (`error_sumsq`); only this scalar reduction — in row
+        // order, never worker-arrival order — and the controller decision
+        // run on the coordinator thread, so the joint loop's defining
+        // coupling stays deterministic under any executor.
         let (accept, factor) = if adaptive {
-            let mut acc = 0.0;
-            for i in 0..batch {
-                let (atol, rtol) = (opts.tols.atol(i), opts.tols.rtol(i));
-                let e = scaled_norm(
-                    NormKind::Rms,
-                    ws.err.row(i),
-                    y.row(i),
-                    ws.y_new.row(i),
-                    atol,
-                    rtol,
-                );
-                acc += e * e;
-            }
-            let en = (acc / batch as f64).sqrt();
+            exec.error_sumsq(&ws.err, &y, &ws.y_new, &opts.tols, &mut sumsq);
+            let acc: f64 = sumsq.iter().sum();
+            let en = (acc / (batch * dim) as f64).sqrt();
             let d = opts.controller.decide(en, tab.err_order, &ctrl);
             if d.accept {
                 ctrl.push(en);

@@ -40,7 +40,7 @@ pub use naive::solve_ivp_naive;
 pub use parallel::solve_ivp_parallel;
 pub use tableau::{DenseOutput, Tableau};
 
-pub use crate::config::ExecPolicy;
+pub use crate::config::{ExecPolicy, PoolKind};
 use crate::tensor::BatchVec;
 
 /// Explicit Runge–Kutta method selector.
@@ -313,6 +313,20 @@ impl SolveOptions {
         self
     }
 
+    /// Select the worker-pool implementation for the pooled entry points
+    /// (see [`PoolKind`]); results are bitwise-identical across kinds.
+    pub fn with_pool(mut self, kind: PoolKind) -> Self {
+        self.exec.pool = kind;
+        self
+    }
+
+    /// Rows per work-stealing chunk for [`PoolKind::Persistent`]
+    /// (`0` = heuristic). Scheduling only — never affects results.
+    pub fn with_steal_chunk(mut self, rows: usize) -> Self {
+        self.exec.steal_chunk = rows;
+        self
+    }
+
     pub fn skip_inactive(mut self) -> Self {
         self.eval_inactive = false;
         self
@@ -331,9 +345,10 @@ impl SolveOptions {
     }
 
     /// Shard the batched solve across `n` CPU workers (0 = one per core)
-    /// when run through the pooled entry points in [`crate::exec`].
+    /// when run through the pooled entry points in [`crate::exec`]. The
+    /// pool kind and steal-chunk settings are left untouched.
     pub fn with_threads(mut self, n: usize) -> Self {
-        self.exec = ExecPolicy::threads(n);
+        self.exec.threads = n;
         self
     }
 
@@ -363,6 +378,35 @@ pub struct Stats {
     pub n_initialized: u64,
 }
 
+/// How a solve was actually executed — the observability counterpart of
+/// the per-instance [`Stats`]. Deliberately **not** part of the
+/// bitwise-determinism contract: two runs that differ only in
+/// `ExecStats` (pool kind, worker count, steal activity) still produce
+/// identical trajectories, stats, statuses and traces.
+///
+/// The `pool_kind` field records what really ran, so a pooled entry
+/// point quietly degrading to the serial path (`threads = 1`, a one-row
+/// batch, a `Serial` policy) is visible instead of silent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecStats {
+    /// The pool implementation that actually carried the solve.
+    pub pool_kind: PoolKind,
+    /// Workers used (1 for the serial path).
+    pub threads: usize,
+    /// Shards (scoped) or work-stealing chunks (persistent) the batch was
+    /// split into; 1 for the serial path.
+    pub shards: usize,
+    /// Steal operations performed by the persistent pool (0 elsewhere).
+    /// Scheduling noise: may vary run to run while results do not.
+    pub steal_count: u64,
+}
+
+impl Default for ExecStats {
+    fn default() -> Self {
+        Self { pool_kind: PoolKind::Serial, threads: 1, shards: 1, steal_count: 0 }
+    }
+}
+
 /// The result of a batched solve.
 #[derive(Debug, Clone)]
 pub struct Solution {
@@ -375,6 +419,8 @@ pub struct Solution {
     pub status: Vec<Status>,
     /// Per-instance statistics.
     pub stats: Vec<Stats>,
+    /// How the solve was executed (pool kind, workers, steal activity).
+    pub exec_stats: ExecStats,
     /// Optional per-instance `(t, dt_accepted)` traces (Fig. 1).
     pub trace: Option<Vec<Vec<(f64, f64)>>>,
 }
@@ -388,6 +434,7 @@ impl Solution {
             dim,
             status: vec![Status::MaxStepsReached; batch],
             stats: vec![Stats::default(); batch],
+            exec_stats: ExecStats::default(),
             trace: None,
         }
     }
@@ -541,6 +588,23 @@ mod tests {
     #[should_panic(expected = "compaction threshold")]
     fn compaction_threshold_rejects_out_of_range() {
         SolveOptions::new(Method::Dopri5).with_compaction(1.5);
+    }
+
+    #[test]
+    fn exec_builders_compose() {
+        let o = SolveOptions::new(Method::Dopri5)
+            .with_pool(PoolKind::Persistent)
+            .with_steal_chunk(8)
+            .with_threads(4);
+        // with_threads leaves the pool selection untouched.
+        assert_eq!(o.exec.pool, PoolKind::Persistent);
+        assert_eq!(o.exec.steal_chunk, 8);
+        assert_eq!(o.exec.threads, 4);
+        // Shard options always run serially inside a worker.
+        assert_eq!(o.shard_rows(0, 1).exec, ExecPolicy::serial());
+        // A fresh Solution reports the serial path until an exec layer
+        // stamps it.
+        assert_eq!(Solution::new_buffer(2, 3, 1).exec_stats, ExecStats::default());
     }
 
     #[test]

@@ -4,6 +4,28 @@
 //! `err` is `err_i / (atol + rtol · max(|y0_i|, |y1_i|))`; a step is
 //! acceptable iff the norm of that vector is ≤ 1. The default is the RMS
 //! ("Hairer") norm; a max norm is provided as an alternative.
+//!
+//! Two entry points share one per-element arithmetic sequence:
+//!
+//! - [`scaled_norm`] — the finished per-instance norm used by the
+//!   parallel loop's per-row controllers (and the frozen reference loop).
+//! - [`scaled_sumsq`] — the *unreduced* sum of squares, the partial the
+//!   joint loop's fused norm accumulates across rows. The joint error
+//!   norm over a `batch × dim` state is
+//!   `sqrt(Σ_rows scaled_sumsq(row) / (batch · dim))`: each row's partial
+//!   can be produced by any worker (the per-row arithmetic is
+//!   identical wherever it runs) and the scalar reduction happens on the
+//!   coordinator **in row order**, which is what keeps joint solves
+//!   bitwise-identical across pool kinds, thread counts and steal-chunk
+//!   sizes.
+//!
+//! [`scaled_norm`]'s RMS arm is implemented *as* `scaled_sumsq` followed
+//! by the mean/sqrt reduction, so the two can never drift apart.
+
+#![warn(missing_docs)]
+
+use super::Tolerances;
+use crate::tensor::BatchVec;
 
 /// Which reduction to apply to the scaled error vector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,15 +59,7 @@ pub fn scaled_norm(
     debug_assert_eq!(err.len(), y0.len());
     debug_assert_eq!(err.len(), y1.len());
     match kind {
-        NormKind::Rms => {
-            let mut acc = 0.0;
-            for i in 0..err.len() {
-                let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
-                let r = err[i] / scale;
-                acc += r * r;
-            }
-            (acc / err.len() as f64).sqrt()
-        }
+        NormKind::Rms => (scaled_sumsq(err, y0, y1, atol, rtol) / err.len() as f64).sqrt(),
         NormKind::Max => {
             let mut m = 0.0f64;
             for i in 0..err.len() {
@@ -54,6 +68,44 @@ pub fn scaled_norm(
             }
             m
         }
+    }
+}
+
+/// Unreduced scaled sum of squares `Σ_i (err_i / scale_i)²` for one
+/// instance — the partial accumulator of the joint loop's fused error
+/// norm (see the module docs). The per-element arithmetic (including the
+/// [`f64::MIN_POSITIVE`] scale floor) is exactly [`scaled_norm`]'s RMS
+/// arm, minus the final mean/sqrt reduction, so
+/// `scaled_norm(Rms, ..) == (scaled_sumsq(..) / len).sqrt()` bitwise.
+#[inline]
+pub fn scaled_sumsq(err: &[f64], y0: &[f64], y1: &[f64], atol: f64, rtol: f64) -> f64 {
+    debug_assert_eq!(err.len(), y0.len());
+    debug_assert_eq!(err.len(), y1.len());
+    let mut acc = 0.0;
+    for i in 0..err.len() {
+        let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
+        let r = err[i] / scale;
+        acc += r * r;
+    }
+    acc
+}
+
+/// Fill `out[r] = scaled_sumsq(row lo + r)` for a contiguous row range
+/// of a batched state — the single per-row fill behind every
+/// `StageExec::error_sumsq` implementation (inline, scoped, stealing),
+/// so the executors cannot drift apart arithmetically. Tolerances are
+/// indexed by the *global* row `lo + r`.
+pub fn scaled_sumsq_rows(
+    err: &BatchVec,
+    y0: &BatchVec,
+    y1: &BatchVec,
+    tols: &Tolerances,
+    lo: usize,
+    out: &mut [f64],
+) {
+    for (r, o) in out.iter_mut().enumerate() {
+        let i = lo + r;
+        *o = scaled_sumsq(err.row(i), y0.row(i), y1.row(i), tols.atol(i), tols.rtol(i));
     }
 }
 
@@ -107,6 +159,21 @@ mod tests {
         // A genuine error over a zero scale still rejects decisively.
         let n = scaled_norm(NormKind::Rms, &[1e-3, 0.0], &y0, &y1, 0.0, 1e-6);
         assert!(n > 1.0);
+    }
+
+    /// The fused-norm contract: the RMS norm is exactly the unreduced sum
+    /// of squares followed by the mean/sqrt reduction, bit for bit.
+    #[test]
+    fn sumsq_is_unreduced_rms() {
+        let y0 = [1.5, -2.0, 0.0, 1e-8];
+        let y1 = [1.4, -2.5, 0.1, 0.0];
+        let err = [1e-7, -3e-6, 2e-9, 5e-8];
+        let (atol, rtol) = (1e-8, 1e-6);
+        let s = scaled_sumsq(&err, &y0, &y1, atol, rtol);
+        let n = scaled_norm(NormKind::Rms, &err, &y0, &y1, atol, rtol);
+        assert_eq!(n.to_bits(), (s / err.len() as f64).sqrt().to_bits());
+        // And the zero-scale floor carries over: exact steps score 0.
+        assert_eq!(scaled_sumsq(&[0.0], &[0.0], &[0.0], 0.0, 1e-6), 0.0);
     }
 
     #[test]

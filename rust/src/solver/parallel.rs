@@ -37,10 +37,15 @@
 //!
 //! The loop is written so that the per-row state machine depends only on
 //! that row's data: [`crate::exec::solve_ivp_parallel_pooled`] runs this
-//! exact code over contiguous row shards on a worker pool and merges the
-//! results bitwise-identically. The [`CallLedger`] records the batched
+//! exact code over contiguous row ranges on a worker pool — one static
+//! shard per worker (scoped pool) or many small work-stealing chunks
+//! (persistent pool) — and merges the results bitwise-identically
+//! whatever the partition. The [`CallLedger`] records the batched
 //! dynamics calls per loop iteration so the merge can reconstruct
-//! torchode's uniform `n_f_evals` accounting across shards.
+//! torchode's uniform `n_f_evals` accounting across ranges: each
+//! iteration's entry is a per-row property (stage calls, plus the
+//! non-FSAL refresh iff any row accepted), so the per-iteration max over
+//! any partition equals the serial loop's count.
 
 use super::active::ActiveSet;
 use super::controller::ControllerState;

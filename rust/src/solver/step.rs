@@ -23,6 +23,7 @@
 
 use super::active::ActiveSet;
 use super::init::initial_step_batch;
+use super::norm::scaled_sumsq_rows;
 use super::tableau::Tableau;
 use super::Tolerances;
 use crate::problems::OdeSystem;
@@ -479,6 +480,22 @@ pub(crate) trait StageExec {
         scratch_y: &mut BatchVec,
         scratch_f: &mut BatchVec,
     ) -> Vec<f64>;
+
+    /// The fused joint error-norm pass: write each row's unreduced scaled
+    /// sum of squares ([`crate::solver::norm::scaled_sumsq`] of `err`
+    /// against `max(|y0|, |y1|)` under the row's tolerances) into
+    /// `out[row]`. Rows may be computed by any worker in any order — the
+    /// per-row arithmetic is position-independent and the joint loop
+    /// reduces `out` on the coordinator in row order, so the final norm
+    /// is bitwise-identical across executors.
+    fn error_sumsq(
+        &self,
+        err: &BatchVec,
+        y0: &BatchVec,
+        y1: &BatchVec,
+        tols: &Tolerances,
+        out: &mut [f64],
+    );
 }
 
 /// The serial [`StageExec`]: everything on the calling thread.
@@ -521,6 +538,17 @@ impl StageExec for InlineExec<'_> {
         scratch_f: &mut BatchVec,
     ) -> Vec<f64> {
         initial_step_batch(self.sys, t0, y0, f0, order, tols, span, scratch_y, scratch_f)
+    }
+
+    fn error_sumsq(
+        &self,
+        err: &BatchVec,
+        y0: &BatchVec,
+        y1: &BatchVec,
+        tols: &Tolerances,
+        out: &mut [f64],
+    ) {
+        scaled_sumsq_rows(err, y0, y1, tols, 0, out);
     }
 }
 

@@ -101,9 +101,10 @@ fn failing_straggler_matches_reference_under_compaction() {
     assert_bitwise(&reference, &got, "max-steps straggler");
 }
 
-/// The pooled parallel path: every shard runs the active-set loop (with
-/// compaction) independently; the merged result must still equal the
-/// serial reference bitwise, including the uniform `n_f_evals`.
+/// The pooled parallel path: every shard (scoped) or steal-chunk
+/// (persistent) runs the active-set loop with compaction independently;
+/// the merged result must still equal the serial reference bitwise,
+/// including the uniform `n_f_evals`.
 #[test]
 fn pooled_parallel_with_compaction_matches_reference() {
     let (sys, y0, grid) = workload(12);
@@ -114,15 +115,22 @@ fn pooled_parallel_with_compaction_matches_reference() {
         .skip_inactive();
     let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
     for threads in [2, 3, 4] {
-        let opts = base.clone().with_threads(threads).with_compaction(0.5);
-        let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
-        assert_bitwise(&reference, &got, &format!("pooled threads={threads}"));
+        for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+            let opts = base
+                .clone()
+                .with_threads(threads)
+                .with_pool(kind)
+                .with_compaction(0.5);
+            let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&reference, &got, &format!("pooled {kind:?} threads={threads}"));
+        }
     }
 }
 
 /// The joint pooled path is untouched by compaction (one shared state),
 /// but its loop internals changed (hoisted buffers, pending-cursor active
-/// set) — it must still match the serial joint loop bitwise.
+/// set, fused error-norm partials) — it must still match the serial
+/// joint loop bitwise on both pool kinds.
 #[test]
 fn joint_pooled_still_matches_serial_bitwise() {
     let mus = vec![1.0, 6.0, 2.0, 12.0];
@@ -139,9 +147,11 @@ fn joint_pooled_still_matches_serial_bitwise() {
         let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
         assert!(serial.all_success());
         for threads in [2, 4] {
-            let opts = base.clone().with_threads(threads);
-            let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
-            assert_bitwise(&serial, &got, &format!("joint {m:?} threads={threads}"));
+            for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+                let opts = base.clone().with_threads(threads).with_pool(kind);
+                let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(&serial, &got, &format!("joint {m:?} {kind:?} t={threads}"));
+            }
         }
     }
 }

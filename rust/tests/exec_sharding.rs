@@ -40,7 +40,7 @@ fn het_vdp(batch: usize) -> (VdP, BatchVec, TimeGrid) {
 
 /// The `heterogeneous_batch_isolated` scenario, sharded: stiff + easy
 /// VdP instances split across 2..=batch workers must reproduce the
-/// serial solve bitwise.
+/// serial solve bitwise — on both pool kinds.
 #[test]
 fn heterogeneous_batch_sharded_bitwise() {
     let (sys, y0, grid) = het_vdp(6);
@@ -51,9 +51,13 @@ fn heterogeneous_batch_sharded_bitwise() {
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     assert!(serial.all_success());
     for threads in [2, 3, 4, 6] {
-        let opts = base.clone().with_threads(threads);
-        let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
-        assert_bitwise(&serial, &sharded, &format!("threads={threads}"));
+        for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+            let opts = base.clone().with_threads(threads).with_pool(kind);
+            let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            // The intended pool really ran (no silent serial fallback).
+            assert_eq!(sharded.exec_stats.pool_kind, kind, "threads={threads}");
+            assert_bitwise(&serial, &sharded, &format!("{kind:?} threads={threads}"));
+        }
     }
 }
 
@@ -164,8 +168,10 @@ fn pooled_rejects_mismatched_tolerances() {
     solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 }
 
-/// The joint loop with sharded row-update passes matches the serial
-/// joint loop bitwise (the shared controller stays on the coordinator).
+/// The joint loop with sharded row-update passes (including the fused
+/// error-norm partials) matches the serial joint loop bitwise on both
+/// pool kinds — the shared controller reduction stays on the
+/// coordinator, in row order.
 #[test]
 fn joint_pooled_matches_serial_bitwise() {
     let mus = vec![1.0, 5.0, 10.0, 20.0, 2.0];
@@ -179,9 +185,16 @@ fn joint_pooled_matches_serial_bitwise() {
         let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
         assert!(serial.all_success());
         for threads in [2, 3, 8] {
-            let opts = base.clone().with_threads(threads);
-            let sharded = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
-            assert_bitwise(&serial, &sharded, &format!("joint {m:?} threads={threads}"));
+            for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+                let opts = base.clone().with_threads(threads).with_pool(kind);
+                let sharded = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+                assert_eq!(sharded.exec_stats.pool_kind, kind, "joint {m:?}");
+                assert_bitwise(
+                    &serial,
+                    &sharded,
+                    &format!("joint {m:?} {kind:?} threads={threads}"),
+                );
+            }
         }
     }
 }

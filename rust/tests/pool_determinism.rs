@@ -1,0 +1,216 @@
+//! The pool-determinism contract: the same batch solved through every
+//! combination of pool kind (`serial`, `scoped`, `persistent`), thread
+//! count and steal-chunk size produces **bitwise-identical**
+//! trajectories, stats, statuses and traces. Scheduling — which worker
+//! ran which rows, how many steals happened — must never leak into
+//! results; it is only visible through `Solution::exec_stats`, which is
+//! deliberately outside the bitwise contract.
+
+use rode::bench::straggler_workload;
+use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
+use rode::prelude::*;
+use rode::problems::VdP;
+use rode::tensor::BatchVec;
+
+/// Full bitwise equality of two solutions (NaN-safe via bit comparison).
+/// `exec_stats` is intentionally not compared — it records scheduling.
+fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.stats, b.stats, "{label}: stats");
+    let (fa, fb) = (a.ys_flat(), b.ys_flat());
+    assert_eq!(fa.len(), fb.len(), "{label}: ys length");
+    for (idx, (x, y)) in fa.iter().zip(fb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: ys[{idx}] {x} vs {y}");
+    }
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+}
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+const POOLS: [PoolKind; 2] = [PoolKind::Scoped, PoolKind::Persistent];
+const CHUNKS: [usize; 4] = [0, 1, 5, 16];
+
+/// The parallel loop across the full matrix, on the straggler batch the
+/// stealing pool exists for (one stiff row, many easy rows).
+#[test]
+fn parallel_bitwise_across_pools_threads_and_chunks() {
+    let (sys, y0, grid) = straggler_workload(24, 40.0, 0.5, 5.0, 8);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(1_000_000)
+        .with_trace();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(serial.all_success());
+    for threads in THREADS {
+        for kind in POOLS {
+            for chunk in CHUNKS {
+                let opts = base
+                    .clone()
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!("parallel {kind:?} threads={threads} chunk={chunk}"),
+                );
+            }
+        }
+    }
+}
+
+/// The joint loop (shared controller + fused norm) across the matrix:
+/// the per-row norm partials may be computed by any worker, but the
+/// row-order reduction keeps the shared controller decisions — and hence
+/// everything downstream — bitwise-identical.
+#[test]
+fn joint_bitwise_across_pools_threads_and_chunks() {
+    let mus = vec![1.0, 12.0, 3.0, 25.0, 0.7, 6.0, 2.0, 9.0, 1.5, 4.0];
+    let b = mus.len();
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, 8.0, 12);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(1_000_000)
+        .with_trace();
+    let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+    assert!(serial.all_success());
+    for threads in THREADS {
+        for kind in POOLS {
+            for chunk in CHUNKS {
+                let opts = base
+                    .clone()
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!("joint {kind:?} threads={threads} chunk={chunk}"),
+                );
+            }
+        }
+    }
+}
+
+/// Non-FSAL methods exercise the accept-refresh entry of the call
+/// ledger; its per-iteration max must be invariant to the partition —
+/// contiguous shards and steal-chunks alike.
+#[test]
+fn non_fsal_ledger_invariant_to_partition() {
+    let sys = VdP::new(vec![0.5, 8.0, 2.0, 5.0, 0.8, 3.0, 1.2]);
+    let y0 = BatchVec::from_rows(
+        &(0..7).map(|i| vec![1.0 + 0.1 * i as f64, 0.0]).collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(7, 0.0, 4.0, 9);
+    for m in [Method::Fehlberg45, Method::Heun] {
+        let base = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+        let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+        for (threads, chunk) in [(2, 1), (4, 2), (3, 0)] {
+            let opts = base
+                .clone()
+                .with_threads(threads)
+                .with_pool(PoolKind::Persistent)
+                .with_steal_chunk(chunk);
+            let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&serial, &got, &format!("{m:?} threads={threads} chunk={chunk}"));
+        }
+    }
+}
+
+/// Pool selection is observable: the quiet serial fallback, the scoped
+/// path and the persistent path each stamp `exec_stats` — no more
+/// guessing whether a "pooled" solve actually pooled.
+#[test]
+fn pool_kind_is_observable_in_exec_stats() {
+    let (sys, y0, grid) = straggler_workload(12, 20.0, 0.5, 4.0, 6);
+    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+
+    // threads = 1: the pooled entry quietly runs serially — and says so.
+    let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(1));
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Serial);
+    assert_eq!(sol.exec_stats.threads, 1);
+    assert_eq!(sol.exec_stats.steal_count, 0);
+
+    // An explicit serial policy forces the fallback at any thread count.
+    let sol = solve_ivp_parallel_pooled(
+        &sys,
+        &y0,
+        &grid,
+        &base.clone().with_threads(4).with_pool(PoolKind::Serial),
+    );
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Serial);
+
+    // The scoped path really is exercised (not silently degraded).
+    let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(4));
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Scoped);
+    assert_eq!(sol.exec_stats.threads, 4);
+    assert_eq!(sol.exec_stats.shards, 4);
+    assert_eq!(sol.exec_stats.steal_count, 0, "scoped pool never steals");
+
+    // The persistent path records its chunking; with chunk = 1 row the
+    // shard count equals the batch.
+    let opts = base
+        .clone()
+        .with_threads(4)
+        .with_pool(PoolKind::Persistent)
+        .with_steal_chunk(1);
+    let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Persistent);
+    assert_eq!(sol.exec_stats.threads, 4);
+    assert_eq!(sol.exec_stats.shards, 12);
+
+    // Joint entry points stamp the same way.
+    let jgrid = TimeGrid::linspace_shared(12, 0.0, 4.0, 6);
+    let sol = solve_ivp_joint_pooled(&sys, &y0, &jgrid, &base.clone().with_threads(2));
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Scoped);
+    let sol = solve_ivp_joint_pooled(
+        &sys,
+        &y0,
+        &jgrid,
+        &base.clone().with_threads(2).with_pool(PoolKind::Persistent),
+    );
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Persistent);
+    let sol = solve_ivp_joint_pooled(&sys, &y0, &jgrid, &base.clone().with_threads(1));
+    assert_eq!(sol.exec_stats.pool_kind, PoolKind::Serial);
+}
+
+/// An oversubscribed stealing pool (threads and chunks both exceeding
+/// any useful parallelism) stays safe and bitwise-correct.
+#[test]
+fn oversubscribed_stealing_pool_is_safe() {
+    let (sys, y0, grid) = straggler_workload(3, 20.0, 0.5, 4.0, 6);
+    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    let opts =
+        base.clone().with_threads(16).with_pool(PoolKind::Persistent).with_steal_chunk(1);
+    let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+    assert_bitwise(&serial, &got, "oversubscribed persistent");
+    // Workers are capped by the chunk count.
+    assert_eq!(got.exec_stats.threads, 3);
+    assert_eq!(got.exec_stats.shards, 3);
+}
+
+/// Stealing composes with compaction and `eval_inactive = false` — the
+/// straggler chunk packs its own state while its neighbors get stolen.
+#[test]
+fn stealing_composes_with_compaction() {
+    let (sys, y0, grid) = straggler_workload(16, 40.0, 0.5, 5.0, 8);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(1_000_000)
+        .skip_inactive()
+        .with_compaction(0.5);
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    for chunk in [2, 4] {
+        let opts = base
+            .clone()
+            .with_threads(4)
+            .with_pool(PoolKind::Persistent)
+            .with_steal_chunk(chunk);
+        let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+        assert_bitwise(&serial, &got, &format!("compaction chunk={chunk}"));
+    }
+}

@@ -2,19 +2,26 @@
 //!
 //! - `rk_attempt` cost across batch/dim (the per-step kernel),
 //! - error-norm and interpolation kernels,
+//! - the stage-kernel **dim sweep**: lane-blocked (and dim-major) kernels
+//!   vs the preserved scalar kernels across dim × batch, recorded into
+//!   `BENCH_solver.json` (`speedup_vs_scalar`),
 //! - ablations the paper calls out: FSAL reuse, Horner vs naive
 //!   polynomial evaluation, zero-coefficient skipping, and the rode
 //!   extension `eval_inactive=false`.
 //!
-//! Run with `cargo bench --bench solver_micro`.
+//! Run with `cargo bench --bench solver_micro`, or pass section names to
+//! run a subset (`attempt`, `norm`, `ablations`, `dimsweep`), e.g.
+//! `cargo bench --bench solver_micro -- dimsweep`.
 
-use rode::bench::{time_repeats, Summary};
+use rode::bench::{append_bench_json, time_repeats, BenchRecord, Summary};
+use rode::nn::Rng64;
 use rode::prelude::*;
 use rode::problems::VdP;
 use rode::solver::interp;
-use rode::solver::norm::{scaled_norm, NormKind};
-use rode::solver::step::{rk_attempt, CompiledTableau, RkWorkspace};
-use rode::tensor::BatchVec;
+use rode::solver::kernels;
+use rode::solver::norm::{self, scaled_norm, NormKind};
+use rode::solver::step::{rk_attempt, CompiledTableau, RkWorkspace, MAX_STAGES};
+use rode::tensor::{BatchVec, LaneStore};
 
 fn summary_line(name: &str, xs: &[f64], per: f64, unit: &str) {
     let s = Summary::from_samples(xs);
@@ -139,8 +146,297 @@ fn bench_ablations() {
     }
 }
 
+/// One attempt's worth of per-row arithmetic (dopri5 stage shapes, the
+/// fused combine pair, the lane-tree error sum of squares) over the
+/// lane-blocked kernels.
+#[allow(clippy::too_many_arguments)]
+fn attempt_arith_lane(
+    stages: &[(Vec<f64>, Vec<usize>)],
+    bw: &[f64],
+    bj: &[usize],
+    ew: &[f64],
+    ej: &[usize],
+    batch: usize,
+    dim: usize,
+    h: f64,
+    y: &[f64],
+    k: &[Vec<f64>],
+    ytmp: &mut [f64],
+    y_new: &mut [f64],
+    err: &mut [f64],
+) -> f64 {
+    for (w, js) in stages {
+        for r in 0..batch {
+            let mut kr: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+            for (i, &j) in js.iter().enumerate() {
+                kr[i] = &k[j][r * dim..(r + 1) * dim];
+            }
+            kernels::stage_row(
+                &mut ytmp[r * dim..(r + 1) * dim],
+                &y[r * dim..(r + 1) * dim],
+                h,
+                w,
+                &kr[..js.len()],
+            );
+        }
+    }
+    for r in 0..batch {
+        let mut bk: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (i, &j) in bj.iter().enumerate() {
+            bk[i] = &k[j][r * dim..(r + 1) * dim];
+        }
+        let mut ek: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (i, &j) in ej.iter().enumerate() {
+            ek[i] = &k[j][r * dim..(r + 1) * dim];
+        }
+        let (lo, hi) = (r * dim, (r + 1) * dim);
+        let (ynr, er) = (&mut y_new[lo..hi], &mut err[lo..hi]);
+        kernels::combine_pair_row(ynr, er, &y[lo..hi], h, bw, &bk[..bj.len()], ew, &ek[..ej.len()]);
+    }
+    let mut acc = 0.0;
+    for r in 0..batch {
+        let (lo, hi) = (r * dim, (r + 1) * dim);
+        acc += norm::scaled_sumsq(&err[lo..hi], &y[lo..hi], &y_new[lo..hi], 1e-6, 1e-5);
+    }
+    acc
+}
+
+/// The same arithmetic over the preserved scalar kernels: straight-line
+/// stage rows, two separate combine passes, sequential sum of squares.
+#[allow(clippy::too_many_arguments)]
+fn attempt_arith_scalar(
+    stages: &[(Vec<f64>, Vec<usize>)],
+    bw: &[f64],
+    bj: &[usize],
+    ew: &[f64],
+    ej: &[usize],
+    batch: usize,
+    dim: usize,
+    h: f64,
+    y: &[f64],
+    k: &[Vec<f64>],
+    ytmp: &mut [f64],
+    y_new: &mut [f64],
+    err: &mut [f64],
+) -> f64 {
+    for (w, js) in stages {
+        for r in 0..batch {
+            let mut kr: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+            for (i, &j) in js.iter().enumerate() {
+                kr[i] = &k[j][r * dim..(r + 1) * dim];
+            }
+            kernels::scalar::stage_row(
+                &mut ytmp[r * dim..(r + 1) * dim],
+                &y[r * dim..(r + 1) * dim],
+                h,
+                w,
+                &kr[..js.len()],
+            );
+        }
+    }
+    for r in 0..batch {
+        let mut bk: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (i, &j) in bj.iter().enumerate() {
+            bk[i] = &k[j][r * dim..(r + 1) * dim];
+        }
+        let (lo, hi) = (r * dim, (r + 1) * dim);
+        kernels::scalar::combine_row(&mut y_new[lo..hi], Some(&y[lo..hi]), h, bw, &bk[..bj.len()]);
+    }
+    for r in 0..batch {
+        let mut ek: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (i, &j) in ej.iter().enumerate() {
+            ek[i] = &k[j][r * dim..(r + 1) * dim];
+        }
+        let (lo, hi) = (r * dim, (r + 1) * dim);
+        kernels::scalar::combine_row(&mut err[lo..hi], None, h, ew, &ek[..ej.len()]);
+    }
+    let mut acc = 0.0;
+    for r in 0..batch {
+        let (lo, hi) = (r * dim, (r + 1) * dim);
+        acc += kernels::scalar::scaled_sumsq(&err[lo..hi], &y[lo..hi], &y_new[lo..hi], 1e-6, 1e-5);
+    }
+    acc
+}
+
+/// The stage-kernel dim sweep: per (dim, batch), one attempt's worth of
+/// arithmetic through the scalar kernels, the lane-blocked kernels, and
+/// the dim-major lanes (including the transposes the real dim-major
+/// attempt pays at the dynamics boundary). Appends
+/// `dimsweep-d{dim}-b{batch}` records (with `speedup_vs_scalar` and
+/// `speedup_dm_vs_scalar`) to `BENCH_solver.json`.
+fn bench_dim_sweep() {
+    println!("--- stage-kernel dim sweep (dopri5 shapes, per attempt arithmetic) ---");
+    let ct = CompiledTableau::cached(Method::Dopri5);
+    let stages: Vec<(Vec<f64>, Vec<usize>)> = (1..ct.tab.stages)
+        .map(|s| {
+            let nz = &ct.a_nz[s];
+            (nz.iter().map(|&(_, w)| w).collect(), nz.iter().map(|&(j, _)| j).collect())
+        })
+        .collect();
+    let bw: Vec<f64> = ct.b_nz.iter().map(|&(_, w)| w).collect();
+    let bj: Vec<usize> = ct.b_nz.iter().map(|&(j, _)| j).collect();
+    let ew: Vec<f64> = ct.berr_nz.iter().map(|&(_, w)| w).collect();
+    let ej: Vec<usize> = ct.berr_nz.iter().map(|&(j, _)| j).collect();
+    let h = 0.01;
+
+    let mut records = Vec::new();
+    for &dim in &[1usize, 4, 16, 64] {
+        for &batch in &[64usize, 256, 1024] {
+            let mut rng = Rng64::new(dim as u64 * 1000 + batch as u64);
+            let n = batch * dim;
+            let y: Vec<f64> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+            let k: Vec<Vec<f64>> = (0..ct.tab.stages)
+                .map(|_| (0..n).map(|_| rng.range(-3.0, 3.0)).collect())
+                .collect();
+            let mut ytmp = vec![0.0; n];
+            let mut y_new = vec![0.0; n];
+            let mut err = vec![0.0; n];
+            let reps = (2_000_000 / n.max(1)).clamp(20, 2000);
+
+            let xs_scalar = time_repeats(3, reps, || {
+                let acc = attempt_arith_scalar(
+                    &stages,
+                    &bw,
+                    &bj,
+                    &ew,
+                    &ej,
+                    batch,
+                    dim,
+                    h,
+                    &y,
+                    &k,
+                    &mut ytmp,
+                    &mut y_new,
+                    &mut err,
+                );
+                std::hint::black_box(acc);
+            });
+            let s_scalar = Summary::from_samples(&xs_scalar);
+
+            let xs_lane = time_repeats(3, reps, || {
+                let acc = attempt_arith_lane(
+                    &stages,
+                    &bw,
+                    &bj,
+                    &ew,
+                    &ej,
+                    batch,
+                    dim,
+                    h,
+                    &y,
+                    &k,
+                    &mut ytmp,
+                    &mut y_new,
+                    &mut err,
+                );
+                std::hint::black_box(acc);
+            });
+            let s_lane = Summary::from_samples(&xs_lane);
+
+            // Dim-major: lanes plus the transposes the real attempt pays
+            // at the dynamics boundary (ytmp out, k[s] in, results out).
+            let dt = vec![h; batch];
+            let mut dm_y = LaneStore::new(batch, dim);
+            let mut dm_k: Vec<LaneStore> =
+                (0..ct.tab.stages).map(|_| LaneStore::new(batch, dim)).collect();
+            let mut dm_ytmp = LaneStore::new(batch, dim);
+            let mut dm_y_new = LaneStore::new(batch, dim);
+            let mut dm_err = LaneStore::new(batch, dim);
+            let xs_dm = time_repeats(3, reps, || {
+                dm_y.load(&y, batch);
+                dm_k[0].load(&k[0], batch);
+                for (s, (w, js)) in stages.iter().enumerate() {
+                    for d in 0..dim {
+                        let mut kl: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                        for (i, &j) in js.iter().enumerate() {
+                            kl[i] = dm_k[j].lane(d);
+                        }
+                        // Split-borrow dance: ytmp lane out of dm_ytmp,
+                        // slope lanes out of dm_k.
+                        let y_lane = dm_y.lane(d);
+                        kernels::stage_lanes(
+                            &mut dm_ytmp.lane_mut(d)[..batch],
+                            &y_lane[..batch],
+                            &dt,
+                            w,
+                            &kl[..js.len()],
+                        );
+                    }
+                    dm_ytmp.store_rows(&mut ytmp, batch);
+                    dm_k[s + 1].load(&k[s + 1], batch);
+                }
+                for d in 0..dim {
+                    let mut bk: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                    for (i, &j) in bj.iter().enumerate() {
+                        bk[i] = dm_k[j].lane(d);
+                    }
+                    let mut ek: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+                    for (i, &j) in ej.iter().enumerate() {
+                        ek[i] = dm_k[j].lane(d);
+                    }
+                    let y_lane = dm_y.lane(d);
+                    kernels::combine_pair_lanes(
+                        &mut dm_y_new.lane_mut(d)[..batch],
+                        &mut dm_err.lane_mut(d)[..batch],
+                        &y_lane[..batch],
+                        &dt,
+                        &bw,
+                        &bk[..bj.len()],
+                        &ew,
+                        &ek[..ej.len()],
+                    );
+                }
+                dm_y_new.store_rows(&mut y_new, batch);
+                dm_err.store_rows(&mut err, batch);
+                let mut acc = 0.0;
+                for r in 0..batch {
+                    let (lo, hi) = (r * dim, (r + 1) * dim);
+                    acc += norm::scaled_sumsq(&err[lo..hi], &y[lo..hi], &y_new[lo..hi], 1e-6, 1e-5);
+                }
+                std::hint::black_box(acc);
+            });
+            let s_dm = Summary::from_samples(&xs_dm);
+
+            let speedup = s_scalar.mean / s_lane.mean;
+            let speedup_dm = s_scalar.mean / s_dm.mean;
+            println!(
+                "d={dim:<3} b={batch:<5} scalar {:>9.4} ms  lane {:>9.4} ms (x{speedup:.2})  \
+                 dim-major {:>9.4} ms (x{speedup_dm:.2})",
+                s_scalar.mean,
+                s_lane.mean,
+                s_dm.mean
+            );
+            records.push(
+                BenchRecord::new(&format!("dimsweep-d{dim}-b{batch}"), &s_lane)
+                    .field("dim", dim as f64)
+                    .field("batch", batch as f64)
+                    .field("reps", reps as f64)
+                    .field("scalar_ms", s_scalar.mean)
+                    .field("dm_ms", s_dm.mean)
+                    .field("speedup_vs_scalar", speedup)
+                    .field("speedup_dm_vs_scalar", speedup_dm),
+            );
+        }
+    }
+    match append_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => println!("appended {} dimsweep records to BENCH_solver.json", records.len()),
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 fn main() {
-    bench_rk_attempt();
-    bench_norm_interp();
-    bench_ablations();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name || a == "all");
+    if want("attempt") {
+        bench_rk_attempt();
+    }
+    if want("norm") {
+        bench_norm_interp();
+    }
+    if want("dimsweep") {
+        bench_dim_sweep();
+    }
+    if want("ablations") {
+        bench_ablations();
+    }
 }

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Gate benchmark regressions against the committed baseline.
+
+Usage:
+    compare_bench.py BASELINE.json CURRENT.json [--max-regression PCT]
+
+Both files are `write_bench_json` arrays (see rust/src/bench.rs). The
+baseline is a *floor specification*, not a measurement archive: only
+dimensionless ratio fields (the `speedup_*` keys below) are compared,
+because absolute `mean_ms` values are machine-dependent and would make
+the gate meaningless across runners. For every baseline record that
+carries a tracked field, the matching current record (by `name`) must
+
+  - exist (a silently renamed or dropped benchmark fails the gate), and
+  - keep `current >= baseline * (1 - max_regression/100)` for each
+    tracked field present in the baseline record.
+
+A baseline record may carry `"advisory": true`: its floor is still
+checked and reported (loudly, as ADVISORY-MISS), but a miss does not
+fail the gate. This is the calibration state for floors that have not
+yet been backed by a measured CI run — promote them to enforced (drop
+the flag, set the floor from observed numbers) once a few runs exist.
+A missing record fails the gate even when advisory: silently dropping
+a benchmark is never OK.
+
+Exit status 0 = all enforced floors held, 1 = regression or missing
+record, 2 = usage/parse error.
+"""
+
+import argparse
+import json
+import sys
+
+TRACKED = ("speedup_vs_reference", "speedup_vs_scoped", "speedup_vs_scalar")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(records, list):
+        print(f"error: {path}: expected a JSON array of records", file=sys.stderr)
+        sys.exit(2)
+    return {r["name"]: r for r in records if isinstance(r, dict) and "name" in r}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=25.0,
+        metavar="PCT",
+        help="allowed drop below the baseline floor, in percent (default 25)",
+    )
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    current = load(args.current)
+    slack = 1.0 - args.max_regression / 100.0
+
+    failures = []
+    advisories = []
+    checked = 0
+    for name, base in sorted(baseline.items()):
+        tracked = [k for k in TRACKED if isinstance(base.get(k), (int, float))]
+        if not tracked:
+            continue
+        advisory = bool(base.get("advisory"))
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current results (renamed or dropped?)")
+            continue
+        for key in tracked:
+            floor = base[key] * slack
+            got = cur.get(key)
+            if not isinstance(got, (int, float)):
+                failures.append(f"{name}: current record has no numeric {key}")
+                continue
+            checked += 1
+            if got >= floor:
+                status = "ok"
+            elif advisory:
+                status = "ADVISORY-MISS"
+            else:
+                status = "REGRESSED"
+            print(
+                f"{name:<28} {key:<22} baseline {base[key]:6.2f}  "
+                f"floor {floor:6.2f}  current {got:6.2f}  {status}"
+            )
+            if got < floor:
+                msg = (
+                    f"{name}: {key} {got:.3f} is below floor {floor:.3f} "
+                    f"(baseline {base[key]:.3f} - {args.max_regression:.0f}%)"
+                )
+                (advisories if advisory else failures).append(msg)
+
+    if advisories:
+        print(f"\nadvisory floors missed ({len(advisories)}) — calibrate the baseline:")
+        for a in advisories:
+            print(f"  - {a}")
+    if failures:
+        print(f"\nperf gate FAILED ({len(failures)} problem(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nperf gate passed: {checked} tracked ratio(s) checked, all enforced floors held")
+
+
+if __name__ == "__main__":
+    main()

@@ -264,10 +264,7 @@ impl BenchRecord {
     }
 }
 
-/// Write benchmark records as a JSON array (hand-rolled: the vendored
-/// crate set has no serde). Non-finite values are emitted as `null` to
-/// keep the file parseable.
-pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+fn record_json(r: &BenchRecord) -> String {
     fn num(v: f64) -> String {
         if v.is_finite() {
             v.to_string()
@@ -275,24 +272,55 @@ pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<
             "null".to_string()
         }
     }
+    let mut s = format!(
+        "  {{\"name\": \"{}\", \"mean_ms\": {}, \"std_ms\": {}",
+        r.name,
+        num(r.mean_ms),
+        num(r.std_ms)
+    );
+    for (k, v) in &r.fields {
+        s.push_str(&format!(", \"{k}\": {}", num(*v)));
+    }
+    s.push('}');
+    s
+}
+
+/// Write benchmark records as a JSON array (hand-rolled: the vendored
+/// crate set has no serde). Non-finite values are emitted as `null` to
+/// keep the file parseable.
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
     let mut s = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
-        s.push_str(&format!(
-            "  {{\"name\": \"{}\", \"mean_ms\": {}, \"std_ms\": {}",
-            r.name,
-            num(r.mean_ms),
-            num(r.std_ms)
-        ));
-        for (k, v) in &r.fields {
-            s.push_str(&format!(", \"{k}\": {}", num(*v)));
-        }
-        s.push('}');
+        s.push_str(&record_json(r));
         if i + 1 < records.len() {
             s.push(',');
         }
         s.push('\n');
     }
     s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
+/// Append records to an existing `write_bench_json` file (so several
+/// bench binaries can contribute to one `BENCH_solver.json` in a single
+/// CI run). If the file is missing or does not end in a JSON array, a
+/// fresh array is written instead.
+pub fn append_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim_end();
+    let head = match trimmed.strip_suffix(']') {
+        Some(h) if trimmed.starts_with('[') => h.trim_end().to_string(),
+        _ => return write_bench_json(path, records),
+    };
+    let mut s = head;
+    for r in records {
+        if !s.trim_end().ends_with('[') {
+            s.push(',');
+        }
+        s.push('\n');
+        s.push_str(&record_json(r));
+    }
+    s.push_str("\n]\n");
     std::fs::write(path, s)
 }
 
@@ -414,6 +442,26 @@ mod tests {
         assert!(text.contains("\"speedup\": 2.5"));
         assert!(text.trim_end().ends_with(']'));
         // Exactly one comma between the two records.
+        assert_eq!(text.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn bench_json_append_extends_array() {
+        let s = Summary::from_samples(&[1.0, 2.0]);
+        let dir = std::env::temp_dir().join("rode_bench_json_append_test.json");
+        let path = dir.to_str().unwrap();
+        std::fs::remove_file(path).ok();
+        // Appending to a missing file writes a fresh array.
+        append_bench_json(path, &[BenchRecord::new("first", &s)]).unwrap();
+        // Appending again extends it.
+        append_bench_json(path, &[BenchRecord::new("second", &s).field("dim", 16.0)]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"name\": \"first\""));
+        assert!(text.contains("\"name\": \"second\""));
+        assert!(text.contains("\"dim\": 16"));
         assert_eq!(text.matches("},").count(), 1);
     }
 }

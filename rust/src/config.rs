@@ -4,6 +4,7 @@
 //! crate; the subset here covers everything rode's configs need.
 
 use crate::solver::Method;
+use crate::tensor::Layout;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -207,6 +208,10 @@ pub struct RodeConfig {
     /// Active-set compaction threshold for the parallel solve loops
     /// (`0.0` disables; see `SolveOptions::compact_threshold`).
     pub compact_threshold: f64,
+    /// Workspace memory layout for the stage kernels (`layout` key:
+    /// `row_major` | `dim_major`). Bitwise-identical results either way;
+    /// see `SolveOptions::layout`.
+    pub layout: Layout,
 }
 
 impl Default for RodeConfig {
@@ -223,6 +228,7 @@ impl Default for RodeConfig {
             pool: PoolKind::Scoped,
             steal_chunk: 0,
             compact_threshold: 0.0,
+            layout: Layout::default_from_env(),
         }
     }
 }
@@ -270,6 +276,10 @@ impl RodeConfig {
                 "compact_threshold must be in [0, 1], got {v}"
             );
             cfg.compact_threshold = v;
+        }
+        if let Some(v) = raw.get("layout") {
+            cfg.layout = Layout::parse(v)
+                .ok_or_else(|| anyhow!("unknown layout {v} (row_major|dim_major)"))?;
         }
         Ok(cfg)
     }
@@ -382,6 +392,16 @@ mod tests {
         assert_eq!(cfg.steal_chunk, 0);
         // Unknown kinds are rejected, not defaulted.
         assert!(RodeConfig::from_raw(&RawConfig::parse("pool = rayon").unwrap()).is_err());
+    }
+
+    #[test]
+    fn layout_key_parses_and_validates() {
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("layout = dim_major").unwrap()).unwrap();
+        assert_eq!(cfg.layout, Layout::DimMajor);
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("layout = row-major").unwrap()).unwrap();
+        assert_eq!(cfg.layout, Layout::RowMajor);
+        // Unknown layouts are rejected, not defaulted.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("layout = soa").unwrap()).is_err());
     }
 
     #[test]

@@ -78,6 +78,21 @@
 //! holds for `eval_inactive = false`: skipped rows simply never appear
 //! in a worker's index lists.
 //!
+//! ## Interaction with the workspace layout
+//!
+//! `SolveOptions::layout` composes freely with every pool kind. Each
+//! parallel-range worker builds its own workspace in the configured
+//! layout, so a dim-major solve shards like any other. The pooled
+//! *joint* executors ([`PooledExec`]/[`StealExec`]) drive the row-range
+//! kernel (`rk_attempt_rows`) over disjoint workspace views, which is
+//! the row-major path regardless of layout — they report
+//! `workspace_layout() = RowMajor` so the joint loop never allocates
+//! SoA mirrors no pass would touch. Legal because both layouts compute
+//! bit-identical per-element results (`tests/kernel_parity.rs`), so
+//! pooled joint solves still match the serial dim-major loop bitwise. The fused error-norm partials are likewise layout-blind:
+//! the lane-tree reduction of `scaled_sumsq` has a fixed shape per row
+//! length wherever it runs.
+//!
 //! Sharded entry points require `S: OdeSystem + Sync` (the system is
 //! shared read-only across workers); systems with `RefCell` scratch
 //! (CNF/FEN) keep using the serial `solve_ivp_*` functions.
@@ -99,7 +114,7 @@ use crate::solver::{
     joint, solve_ivp_joint, solve_ivp_parallel, ExecStats, SolveOptions, Solution, TimeGrid,
     Tolerances,
 };
-use crate::tensor::BatchVec;
+use crate::tensor::{BatchVec, Layout};
 use std::sync::Mutex;
 use steal::{chunk_bounds, ChunkQueues};
 
@@ -467,6 +482,13 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
         self.sys.dim()
     }
 
+    fn workspace_layout(&self, _requested: Layout) -> Layout {
+        // The sharded passes drive the row-range kernel over workspace
+        // views — always row-major — so never allocate SoA mirrors no
+        // pass would touch. Bitwise-identical either way.
+        Layout::RowMajor
+    }
+
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
         let dim = y.dim();
         let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
@@ -587,6 +609,11 @@ impl<S: OdeSystem + Sync> StealExec<'_, S> {
 impl<S: OdeSystem + Sync> StageExec for StealExec<'_, S> {
     fn dim(&self) -> usize {
         self.sys.dim()
+    }
+
+    fn workspace_layout(&self, _requested: Layout) -> Layout {
+        // Same reasoning as `PooledExec`: chunked passes are row-major.
+        Layout::RowMajor
     }
 
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {

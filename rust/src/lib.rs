@@ -71,5 +71,5 @@ pub mod prelude {
         solve_ivp_joint, solve_ivp_naive, solve_ivp_parallel, Controller, ExecStats, Method,
         SolveOptions, Solution, Status, TimeGrid,
     };
-    pub use crate::tensor::BatchVec;
+    pub use crate::tensor::{BatchVec, Layout};
 }

@@ -59,6 +59,19 @@ fn flag_pool(flags: &HashMap<String, String>) -> Result<Option<PoolKind>> {
         .transpose()
 }
 
+/// Parse `--layout row_major|dim_major`; `None` when absent, so each
+/// command keeps its default (the `RODE_LAYOUT` env var, else
+/// row-major).
+fn flag_layout(flags: &HashMap<String, String>) -> Result<Option<rode::solver::Layout>> {
+    flags
+        .get("layout")
+        .map(|s| {
+            rode::solver::Layout::parse(s)
+                .ok_or_else(|| anyhow!("unknown layout {s} (row_major|dim_major)"))
+        })
+        .transpose()
+}
+
 /// Like `flag_usize`, but a present-and-unparsable value is an error
 /// instead of a silent fallback (used for knobs where a typo would
 /// silently change what is being measured).
@@ -97,12 +110,15 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             .collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
-    let opts = SolveOptions::new(method)
+    let mut opts = SolveOptions::new(method)
         .with_tols(1e-6, 1e-5)
         .with_threads(threads)
         .with_pool(pool)
         .with_steal_chunk(steal_chunk)
         .with_compaction(compact);
+    if let Some(l) = flag_layout(flags)? {
+        opts = opts.with_layout(l);
+    }
     let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 
     println!("status: {:?}", sol.status);
@@ -145,6 +161,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.pool = p;
     }
     cfg.steal_chunk = flag_usize_strict(flags, "steal-chunk", cfg.steal_chunk)?;
+    if let Some(l) = flag_layout(flags)? {
+        cfg.layout = l;
+    }
     cfg.compact_threshold = flag_f64(flags, "compact-threshold", cfg.compact_threshold);
     anyhow::ensure!(
         (0.0..=1.0).contains(&cfg.compact_threshold),
@@ -161,7 +180,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .with_threads(cfg.threads)
         .with_pool(cfg.pool)
         .with_steal_chunk(cfg.steal_chunk)
-        .with_compaction(cfg.compact_threshold);
+        .with_compaction(cfg.compact_threshold)
+        .with_layout(cfg.layout);
 
     let coord = Coordinator::spawn(
         ServiceConfig { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
@@ -267,9 +287,11 @@ fn main() -> Result<()> {
                  \n                    --steal-chunk R sets the work-stealing chunk size in rows,\
                  \n                    0 = heuristic (persistent pool only);\
                  \n                    --compact-threshold F packs solver state once the live\
-                 \n                    fraction drops below F, 0 = off)\
+                 \n                    fraction drops below F, 0 = off;\
+                 \n                    --layout row_major|dim_major selects the stage-kernel\
+                 \n                    memory layout, bitwise-identical results)\
                  \n  serve            coordinator + synthetic workload (also honors --threads,\
-                 \n                   --pool, --steal-chunk and --compact-threshold)\
+                 \n                   --pool, --steal-chunk, --compact-threshold and --layout)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\
                  \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"

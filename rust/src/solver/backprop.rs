@@ -88,7 +88,7 @@ pub fn rk_forward_tape(
     method: super::Method,
 ) -> RkTape {
     let tab = method.tableau();
-    let ct = CompiledTableau::new(tab);
+    let ct = CompiledTableau::cached(method);
     let batch = y0.batch();
     let dim = y0.dim();
     let n = batch * dim;

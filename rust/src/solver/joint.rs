@@ -74,7 +74,7 @@ pub(crate) fn joint_core(
         );
     }
     let tab = opts.method.tableau();
-    let ct = CompiledTableau::new(tab);
+    let ct = CompiledTableau::cached(opts.method);
     let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
 
     let mut sol = Solution::new_buffer(batch, n_eval, dim);
@@ -86,7 +86,8 @@ pub(crate) fn joint_core(
     let mut next_eval = vec![0usize; batch];
     let span = t1 - t0;
 
-    let mut ws = RkWorkspace::new(tab.stages, batch, dim);
+    let mut ws =
+        RkWorkspace::new_with_layout(tab.stages, batch, dim, exec.workspace_layout(opts.layout));
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
 
@@ -161,7 +162,7 @@ pub(crate) fn joint_core(
         dt_vec.fill(dt);
         t_vec.fill(t);
         k0r.fill(k0_ready);
-        let calls = exec.attempt(&ct, &t_vec, &dt_vec, &y, &mut ws, &k0r, None, true);
+        let calls = exec.attempt(ct, &t_vec, &dt_vec, &y, &mut ws, &k0r, None, true);
         fevals += calls;
         for st in sol.stats.iter_mut() {
             st.n_steps += 1;

@@ -1,0 +1,637 @@
+//! Lane-blocked stage kernels — the vectorized arithmetic core of the
+//! RK attempt.
+//!
+//! Every hot arithmetic pass of an attempt (stage accumulation
+//! `ytmp = y + h·Σ a_sj k_j`, the solution/error combination, and the
+//! tolerance-scaled sum of squares behind the error norm) funnels
+//! through this module. The kernels are **portable**: no intrinsics, no
+//! nightly features — they present the optimizer with fixed-width
+//! `chunks_exact`-style blocks plus a scalar tail, the shape LLVM
+//! reliably auto-vectorizes. Width dispatch: the *elementwise* kernels
+//! use width 8 once a row has at least one full 8-lane block
+//! (`len >= 8`) and width 4 below that; the [`scaled_sumsq`]
+//! *reduction* switches to the width-8 tree only at `len >= 16` (two
+//! full blocks — an 8-accumulator tree over a single block buys
+//! nothing), so rows of length 8–15 reduce with the width-4 tree. The
+//! dispatch depends only on the row length, so it is deterministic per
+//! `dim`.
+//!
+//! ## The bitwise contract
+//!
+//! The lane-blocked elementwise kernels ([`stage_row`], [`combine_row`],
+//! [`combine_pair_row`], and the dim-major [`stage_lanes`] /
+//! [`combine_lanes`] / [`combine_pair_lanes`]) compute, for every output
+//! element, the **exact same floating-point expression in the exact same
+//! order** as the straight-line scalar kernels they replaced (preserved
+//! verbatim in [`scalar`]); blocking only regroups independent elements,
+//! never an element's own arithmetic. That is what keeps the active-set
+//! loop, the pooled loops and the dim-major layout bitwise-identical to
+//! the frozen [`crate::solver::reference`] loop
+//! (`tests/kernel_parity.rs`).
+//!
+//! The one genuine reduction — [`scaled_sumsq`] — instead uses a
+//! **deterministic fixed-shape lane tree**: four (or eight) independent
+//! accumulators over the blocked prefix, reduced in a fixed pairwise
+//! tree, then the tail added in element order. The shape depends only on
+//! the row length, never on where or when the row is computed, so
+//! per-row partials remain position-independent (the property the fused
+//! joint norm and every pool kind rely on) and
+//! `scaled_norm(Rms, ..) == (scaled_sumsq(..) / len).sqrt()` stays a
+//! bitwise identity. For rows shorter than one lane block the tree
+//! degenerates to the historical sequential sum, bit for bit.
+
+#![warn(missing_docs)]
+
+/// Narrow lane width: one 256-bit f64 vector.
+pub const LANES: usize = 4;
+/// Wide lane width: one 512-bit f64 vector (or two 256-bit ops).
+pub const LANES_WIDE: usize = 8;
+
+/// Fixed pairwise reduction tree over `W` lane accumulators. The shape
+/// is a compile-time constant per width — never data- or
+/// schedule-dependent.
+#[inline(always)]
+fn tree_reduce<const W: usize>(acc: &[f64; W]) -> f64 {
+    match W {
+        4 => (acc[0] + acc[1]) + (acc[2] + acc[3]),
+        8 => ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])),
+        _ => {
+            let mut s = 0.0;
+            for &a in acc.iter() {
+                s += a;
+            }
+            s
+        }
+    }
+}
+
+/// One row of the fused stage accumulation
+/// `out[d] = y[d] + h · Σ_j w[j] · k[j][d]` over the pre-gathered
+/// nonzero coefficients (`w[j]`, slope row `k[j]`), lane-blocked across
+/// `d`. Per-element arithmetic (including the 1- and 2-term
+/// specializations) is bit-identical to [`scalar::stage_row`].
+#[inline(always)]
+pub fn stage_row(out: &mut [f64], y: &[f64], h: f64, w: &[f64], k: &[&[f64]]) {
+    if out.len() >= LANES_WIDE {
+        stage_row_w::<LANES_WIDE>(out, y, h, w, k);
+    } else {
+        stage_row_w::<LANES>(out, y, h, w, k);
+    }
+}
+
+#[inline(always)]
+fn stage_row_w<const W: usize>(out: &mut [f64], y: &[f64], h: f64, w: &[f64], k: &[&[f64]]) {
+    let n = out.len();
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(w.len(), k.len());
+    match w.len() {
+        1 => {
+            let (w0, k0) = (w[0], k[0]);
+            debug_assert_eq!(k0.len(), n);
+            let nb = n / W * W;
+            let mut c = 0;
+            while c < nb {
+                for l in 0..W {
+                    out[c + l] = y[c + l] + h * w0 * k0[c + l];
+                }
+                c += W;
+            }
+            for i in nb..n {
+                out[i] = y[i] + h * w0 * k0[i];
+            }
+        }
+        2 => {
+            let (w0, k0) = (w[0], k[0]);
+            let (w1, k1) = (w[1], k[1]);
+            let nb = n / W * W;
+            let mut c = 0;
+            while c < nb {
+                for l in 0..W {
+                    out[c + l] = y[c + l] + h * (w0 * k0[c + l] + w1 * k1[c + l]);
+                }
+                c += W;
+            }
+            for i in nb..n {
+                out[i] = y[i] + h * (w0 * k0[i] + w1 * k1[i]);
+            }
+        }
+        _ => {
+            let nb = n / W * W;
+            let mut c = 0;
+            while c < nb {
+                let mut acc = [0.0f64; W];
+                for (j, &wj) in w.iter().enumerate() {
+                    let kc = &k[j][c..c + W];
+                    for l in 0..W {
+                        acc[l] += wj * kc[l];
+                    }
+                }
+                for l in 0..W {
+                    out[c + l] = y[c + l] + h * acc[l];
+                }
+                c += W;
+            }
+            for i in nb..n {
+                let mut acc = 0.0;
+                for (j, &wj) in w.iter().enumerate() {
+                    acc += wj * k[j][i];
+                }
+                out[i] = y[i] + h * acc;
+            }
+        }
+    }
+}
+
+/// One row of the solution/error combination
+/// `out[d] = base[d] + h · acc` (or `h · acc` without a base) where
+/// `acc = Σ_j w[j] · k[j][d]` accumulated in `j` order — the exact
+/// expression shape of [`scalar::combine_row`] (note: *no* 1-term
+/// pre-multiplication; the historical kernel always went through the
+/// accumulator, and `(h·w)·k` is not bitwise `h·(w·k)`).
+#[inline(always)]
+pub fn combine_row(out: &mut [f64], base: Option<&[f64]>, h: f64, w: &[f64], k: &[&[f64]]) {
+    if out.len() >= LANES_WIDE {
+        combine_row_w::<LANES_WIDE>(out, base, h, w, k);
+    } else {
+        combine_row_w::<LANES>(out, base, h, w, k);
+    }
+}
+
+#[inline(always)]
+fn combine_row_w<const W: usize>(
+    out: &mut [f64],
+    base: Option<&[f64]>,
+    h: f64,
+    w: &[f64],
+    k: &[&[f64]],
+) {
+    let n = out.len();
+    debug_assert_eq!(w.len(), k.len());
+    let nb = n / W * W;
+    let mut c = 0;
+    while c < nb {
+        let mut acc = [0.0f64; W];
+        for (j, &wj) in w.iter().enumerate() {
+            let kc = &k[j][c..c + W];
+            for l in 0..W {
+                acc[l] += wj * kc[l];
+            }
+        }
+        match base {
+            Some(y) => {
+                for l in 0..W {
+                    out[c + l] = y[c + l] + h * acc[l];
+                }
+            }
+            None => {
+                for l in 0..W {
+                    out[c + l] = h * acc[l];
+                }
+            }
+        }
+        c += W;
+    }
+    for i in nb..n {
+        let mut acc = 0.0;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * k[j][i];
+        }
+        out[i] = match base {
+            Some(y) => y[i] + h * acc,
+            None => h * acc,
+        };
+    }
+}
+
+/// The fused attempt tail: solution **and** embedded error in one
+/// traversal of the slope rows —
+/// `y_new[d] = y[d] + h·Σ bw[j]·bk[j][d]`,
+/// `err[d] = h·Σ ew[j]·ek[j][d]` — instead of the historical two
+/// separate passes. Per-element arithmetic of each output is unchanged
+/// (each keeps its own accumulator in its own coefficient order), so
+/// fusing is invisible bitwise; it exists purely so each `k` block is
+/// pulled through cache once per attempt tail instead of twice.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn combine_pair_row(
+    y_new: &mut [f64],
+    err: &mut [f64],
+    y: &[f64],
+    h: f64,
+    bw: &[f64],
+    bk: &[&[f64]],
+    ew: &[f64],
+    ek: &[&[f64]],
+) {
+    if y_new.len() >= LANES_WIDE {
+        combine_pair_row_w::<LANES_WIDE>(y_new, err, y, h, bw, bk, ew, ek);
+    } else {
+        combine_pair_row_w::<LANES>(y_new, err, y, h, bw, bk, ew, ek);
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn combine_pair_row_w<const W: usize>(
+    y_new: &mut [f64],
+    err: &mut [f64],
+    y: &[f64],
+    h: f64,
+    bw: &[f64],
+    bk: &[&[f64]],
+    ew: &[f64],
+    ek: &[&[f64]],
+) {
+    let n = y_new.len();
+    debug_assert_eq!(err.len(), n);
+    debug_assert_eq!(y.len(), n);
+    let nb = n / W * W;
+    let mut c = 0;
+    while c < nb {
+        let mut acc_b = [0.0f64; W];
+        for (j, &wj) in bw.iter().enumerate() {
+            let kc = &bk[j][c..c + W];
+            for l in 0..W {
+                acc_b[l] += wj * kc[l];
+            }
+        }
+        let mut acc_e = [0.0f64; W];
+        for (j, &wj) in ew.iter().enumerate() {
+            let kc = &ek[j][c..c + W];
+            for l in 0..W {
+                acc_e[l] += wj * kc[l];
+            }
+        }
+        for l in 0..W {
+            y_new[c + l] = y[c + l] + h * acc_b[l];
+        }
+        for l in 0..W {
+            err[c + l] = h * acc_e[l];
+        }
+        c += W;
+    }
+    for i in nb..n {
+        let mut acc_b = 0.0;
+        for (j, &wj) in bw.iter().enumerate() {
+            acc_b += wj * bk[j][i];
+        }
+        let mut acc_e = 0.0;
+        for (j, &wj) in ew.iter().enumerate() {
+            acc_e += wj * ek[j][i];
+        }
+        y_new[i] = y[i] + h * acc_b;
+        err[i] = h * acc_e;
+    }
+}
+
+/// Tolerance-scaled sum of squares
+/// `Σ_i (err[i] / max(atol + rtol·max(|y0_i|, |y1_i|), MIN_POSITIVE))²`
+/// with the deterministic fixed-shape lane-tree reduction described in
+/// the module docs. This *is* the arithmetic of the solver's error norm
+/// ([`crate::solver::norm::scaled_sumsq`] delegates here); the tree
+/// shape depends only on `err.len()` — width-4 tree below 16 elements
+/// (including lengths 8–15), width-8 tree from 16 up, sequential-sum
+/// degeneration below one 4-block.
+#[inline]
+pub fn scaled_sumsq(err: &[f64], y0: &[f64], y1: &[f64], atol: f64, rtol: f64) -> f64 {
+    if err.len() >= 2 * LANES_WIDE {
+        scaled_sumsq_w::<LANES_WIDE>(err, y0, y1, atol, rtol)
+    } else {
+        scaled_sumsq_w::<LANES>(err, y0, y1, atol, rtol)
+    }
+}
+
+#[inline(always)]
+fn scaled_sumsq_w<const W: usize>(
+    err: &[f64],
+    y0: &[f64],
+    y1: &[f64],
+    atol: f64,
+    rtol: f64,
+) -> f64 {
+    let n = err.len();
+    debug_assert_eq!(y0.len(), n);
+    debug_assert_eq!(y1.len(), n);
+    let nb = n / W * W;
+    let mut acc = [0.0f64; W];
+    let mut c = 0;
+    while c < nb {
+        for l in 0..W {
+            let i = c + l;
+            let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
+            let r = err[i] / scale;
+            acc[l] += r * r;
+        }
+        c += W;
+    }
+    let mut total = tree_reduce::<W>(&acc);
+    for i in nb..n {
+        let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
+        let r = err[i] / scale;
+        total += r * r;
+    }
+    total
+}
+
+/// One dim-lane of the SoA stage accumulation: over rows `r`,
+/// `out[r] = y[r] + dt[r] · Σ_j w[j] · k[j][r]`. Elementwise across the
+/// *batch* with a per-row step size — the dim-major mirror of
+/// [`stage_row`], same per-element expression shapes (1-/2-term
+/// specializations included), so the two layouts are bitwise-identical.
+#[inline(always)]
+pub fn stage_lanes(out: &mut [f64], y: &[f64], dt: &[f64], w: &[f64], k: &[&[f64]]) {
+    let n = out.len();
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(dt.len(), n);
+    debug_assert_eq!(w.len(), k.len());
+    match w.len() {
+        1 => {
+            let (w0, k0) = (w[0], k[0]);
+            for r in 0..n {
+                out[r] = y[r] + dt[r] * w0 * k0[r];
+            }
+        }
+        2 => {
+            let (w0, k0) = (w[0], k[0]);
+            let (w1, k1) = (w[1], k[1]);
+            for r in 0..n {
+                out[r] = y[r] + dt[r] * (w0 * k0[r] + w1 * k1[r]);
+            }
+        }
+        _ => {
+            for r in 0..n {
+                let mut acc = 0.0;
+                for (j, &wj) in w.iter().enumerate() {
+                    acc += wj * k[j][r];
+                }
+                out[r] = y[r] + dt[r] * acc;
+            }
+        }
+    }
+}
+
+/// One dim-lane of the SoA combination: over rows `r`,
+/// `out[r] = base[r] + dt[r] · acc` (or `dt[r] · acc`) with
+/// `acc = Σ_j w[j] · k[j][r]` in `j` order — the dim-major mirror of
+/// [`combine_row`].
+#[inline(always)]
+pub fn combine_lanes(out: &mut [f64], base: Option<&[f64]>, dt: &[f64], w: &[f64], k: &[&[f64]]) {
+    let n = out.len();
+    debug_assert_eq!(dt.len(), n);
+    debug_assert_eq!(w.len(), k.len());
+    for r in 0..n {
+        let mut acc = 0.0;
+        for (j, &wj) in w.iter().enumerate() {
+            acc += wj * k[j][r];
+        }
+        out[r] = match base {
+            Some(y) => y[r] + dt[r] * acc,
+            None => dt[r] * acc,
+        };
+    }
+}
+
+/// The fused attempt tail in dim-major form: one dim-lane of solution
+/// and error together (see [`combine_pair_row`]).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn combine_pair_lanes(
+    y_new: &mut [f64],
+    err: &mut [f64],
+    y: &[f64],
+    dt: &[f64],
+    bw: &[f64],
+    bk: &[&[f64]],
+    ew: &[f64],
+    ek: &[&[f64]],
+) {
+    let n = y_new.len();
+    debug_assert_eq!(err.len(), n);
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(dt.len(), n);
+    for r in 0..n {
+        let mut acc_b = 0.0;
+        for (j, &wj) in bw.iter().enumerate() {
+            acc_b += wj * bk[j][r];
+        }
+        let mut acc_e = 0.0;
+        for (j, &wj) in ew.iter().enumerate() {
+            acc_e += wj * ek[j][r];
+        }
+        y_new[r] = y[r] + dt[r] * acc_b;
+        err[r] = dt[r] * acc_e;
+    }
+}
+
+/// The straight-line scalar kernels the lane-blocked versions replaced,
+/// preserved **verbatim** as the parity oracle
+/// (`tests/kernel_parity.rs` asserts bitwise agreement element by
+/// element) and as the baseline of the dim-sweep benchmark
+/// (`benches/solver_micro.rs -- dimsweep`, `speedup_vs_scalar` in
+/// `BENCH_solver.json`). Do not optimize these; their value is that
+/// they do not change.
+pub mod scalar {
+    /// Scalar stage accumulation — the pre-lane-blocking kernel body.
+    pub fn stage_row(out: &mut [f64], y: &[f64], h: f64, w: &[f64], k: &[&[f64]]) {
+        let dim = out.len();
+        match w.len() {
+            1 => {
+                let (w0, k0) = (w[0], k[0]);
+                for d in 0..dim {
+                    out[d] = y[d] + h * w0 * k0[d];
+                }
+            }
+            2 => {
+                let (w0, k0) = (w[0], k[0]);
+                let (w1, k1) = (w[1], k[1]);
+                for d in 0..dim {
+                    out[d] = y[d] + h * (w0 * k0[d] + w1 * k1[d]);
+                }
+            }
+            _ => {
+                for d in 0..dim {
+                    let mut acc = 0.0;
+                    for (j, &wj) in w.iter().enumerate() {
+                        acc += wj * k[j][d];
+                    }
+                    out[d] = y[d] + h * acc;
+                }
+            }
+        }
+    }
+
+    /// Scalar solution/error combination — the pre-lane-blocking kernel
+    /// body (always through the accumulator, no term-count shortcuts).
+    pub fn combine_row(out: &mut [f64], base: Option<&[f64]>, h: f64, w: &[f64], k: &[&[f64]]) {
+        let dim = out.len();
+        for d in 0..dim {
+            let mut acc = 0.0;
+            for (j, &wj) in w.iter().enumerate() {
+                acc += wj * k[j][d];
+            }
+            out[d] = match base {
+                Some(y) => y[d] + h * acc,
+                None => h * acc,
+            };
+        }
+    }
+
+    /// Scalar sequential tolerance-scaled sum of squares — the
+    /// pre-lane-tree reduction (loop-carried accumulator in element
+    /// order).
+    pub fn scaled_sumsq(err: &[f64], y0: &[f64], y1: &[f64], atol: f64, rtol: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..err.len() {
+            let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
+            let r = err[i] / scale;
+            acc += r * r;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill (no external RNG in unit tests).
+    fn fill(seed: u64, n: usize) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+            })
+            .collect()
+    }
+
+    /// Lane-blocked elementwise kernels are bitwise-identical to the
+    /// preserved scalar bodies across odd and wide dims and term counts.
+    #[test]
+    fn lane_kernels_match_scalar_bitwise() {
+        for &dim in &[1usize, 2, 3, 4, 5, 7, 8, 13, 16, 31, 64] {
+            for &terms in &[1usize, 2, 3, 6] {
+                let y = fill(dim as u64 * 31 + terms as u64, dim);
+                let kdata: Vec<Vec<f64>> =
+                    (0..terms).map(|j| fill(1000 + j as u64 * 7 + dim as u64, dim)).collect();
+                let k: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+                let w: Vec<f64> = (0..terms).map(|j| 0.37 * (j as f64 + 1.0) - 0.5).collect();
+                let h = 0.0123;
+
+                let mut a = vec![0.0; dim];
+                let mut b = vec![0.0; dim];
+                stage_row(&mut a, &y, h, &w, &k);
+                scalar::stage_row(&mut b, &y, h, &w, &k);
+                for d in 0..dim {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "stage dim={dim} terms={terms}");
+                }
+
+                combine_row(&mut a, Some(&y), h, &w, &k);
+                scalar::combine_row(&mut b, Some(&y), h, &w, &k);
+                for d in 0..dim {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "combine dim={dim}");
+                }
+                combine_row(&mut a, None, h, &w, &k);
+                scalar::combine_row(&mut b, None, h, &w, &k);
+                for d in 0..dim {
+                    assert_eq!(a[d].to_bits(), b[d].to_bits(), "combine-nobase dim={dim}");
+                }
+            }
+        }
+    }
+
+    /// The fused pair pass equals two independent combine passes.
+    #[test]
+    fn fused_pair_matches_two_passes() {
+        for &dim in &[1usize, 3, 5, 8, 13, 64] {
+            let y = fill(dim as u64, dim);
+            let kdata: Vec<Vec<f64>> = (0..7).map(|j| fill(j as u64 * 13 + 5, dim)).collect();
+            let k: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+            let bw = [0.1, 0.2, 0.3, 0.15, 0.25];
+            let bk = [k[0], k[2], k[3], k[4], k[5]];
+            let ew = [0.01, -0.02, 0.005];
+            let ek = [k[1], k[4], k[6]];
+            let h = 0.077;
+
+            let mut yn = vec![0.0; dim];
+            let mut er = vec![0.0; dim];
+            combine_pair_row(&mut yn, &mut er, &y, h, &bw, &bk, &ew, &ek);
+
+            let mut yn2 = vec![0.0; dim];
+            let mut er2 = vec![0.0; dim];
+            scalar::combine_row(&mut yn2, Some(&y), h, &bw, &bk);
+            scalar::combine_row(&mut er2, None, h, &ew, &ek);
+            for d in 0..dim {
+                assert_eq!(yn[d].to_bits(), yn2[d].to_bits(), "y_new dim={dim}");
+                assert_eq!(er[d].to_bits(), er2[d].to_bits(), "err dim={dim}");
+            }
+        }
+    }
+
+    /// Dim-major lanes with a broadcast dt equal the row-major kernels
+    /// element by element (the layout-parity property).
+    #[test]
+    fn lanes_match_rows_bitwise() {
+        let n = 13;
+        let y = fill(3, n);
+        let kdata: Vec<Vec<f64>> = (0..3).map(|j| fill(50 + j as u64, n)).collect();
+        let k: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+        let w = [0.4, -0.7, 1.3];
+        let h = 0.031;
+        let dt = vec![h; n];
+
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        stage_lanes(&mut a, &y, &dt, &w, &k);
+        stage_row(&mut b, &y, h, &w, &k);
+        for i in 0..n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "stage lane {i}");
+        }
+        combine_lanes(&mut a, Some(&y), &dt, &w, &k);
+        combine_row(&mut b, Some(&y), h, &w, &k);
+        for i in 0..n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "combine lane {i}");
+        }
+        let mut er_a = vec![0.0; n];
+        let mut er_b = vec![0.0; n];
+        combine_pair_lanes(&mut a, &mut er_a, &y, &dt, &w, &k, &w[..2], &k[..2]);
+        combine_pair_row(&mut b, &mut er_b, &y, h, &w, &k, &w[..2], &k[..2]);
+        for i in 0..n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "pair y_new lane {i}");
+            assert_eq!(er_a[i].to_bits(), er_b[i].to_bits(), "pair err lane {i}");
+        }
+    }
+
+    /// The lane-tree sum of squares: degenerates to the sequential sum
+    /// for short rows, and has a fixed shape (same bits whatever buffer
+    /// the row lives in).
+    #[test]
+    fn sumsq_tree_properties() {
+        // Short rows: bitwise the historical sequential reduction.
+        for &dim in &[1usize, 2, 3] {
+            let e = fill(7 + dim as u64, dim);
+            let y0 = fill(8, dim);
+            let y1 = fill(9, dim);
+            let a = scaled_sumsq(&e, &y0, &y1, 1e-8, 1e-5);
+            let b = scalar::scaled_sumsq(&e, &y0, &y1, 1e-8, 1e-5);
+            assert_eq!(a.to_bits(), b.to_bits(), "dim={dim}");
+        }
+        // Position independence: identical row data => identical bits.
+        for &dim in &[5usize, 16, 64] {
+            let e = fill(100, dim);
+            let y0 = fill(101, dim);
+            let y1 = fill(102, dim);
+            let a = scaled_sumsq(&e, &y0, &y1, 1e-8, 1e-5);
+            let e2 = e.clone();
+            let b = scaled_sumsq(&e2, &y0, &y1, 1e-8, 1e-5);
+            assert_eq!(a.to_bits(), b.to_bits());
+            // And it agrees with the scalar reduction to rounding noise.
+            let s = scalar::scaled_sumsq(&e, &y0, &y1, 1e-8, 1e-5);
+            assert!((a - s).abs() <= 1e-12 * s.abs().max(1.0), "dim={dim}: {a} vs {s}");
+        }
+        // The zero-scale floor carries over: exact steps score 0.
+        assert_eq!(scaled_sumsq(&[0.0; 9], &[0.0; 9], &[0.0; 9], 0.0, 1e-6), 0.0);
+    }
+}

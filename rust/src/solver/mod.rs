@@ -25,6 +25,7 @@ pub mod controller;
 pub mod init;
 pub mod interp;
 pub mod joint;
+pub mod kernels;
 pub mod naive;
 pub mod norm;
 pub mod parallel;
@@ -41,6 +42,8 @@ pub use parallel::solve_ivp_parallel;
 pub use tableau::{DenseOutput, Tableau};
 
 pub use crate::config::{ExecPolicy, PoolKind};
+pub use crate::tensor::Layout;
+
 use crate::tensor::BatchVec;
 
 /// Explicit Runge–Kutta method selector.
@@ -59,6 +62,23 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every selectable method, in declaration order. A method's index
+    /// in this table equals its discriminant (`method as usize`) — the
+    /// slot key of the process-wide compiled-tableau cache
+    /// ([`step::CompiledTableau::cached`]).
+    pub const ALL: [Method; 10] = [
+        Method::Euler,
+        Method::Midpoint,
+        Method::Heun,
+        Method::Ralston,
+        Method::Bosh3,
+        Method::Rk4,
+        Method::Fehlberg45,
+        Method::CashKarp45,
+        Method::Dopri5,
+        Method::Tsit5,
+    ];
+
     /// The Butcher tableau backing this method.
     pub fn tableau(&self) -> &'static Tableau {
         match self {
@@ -264,6 +284,14 @@ pub struct SolveOptions {
     /// functions always run serially (a `&dyn OdeSystem` cannot be shared
     /// across threads).
     pub exec: ExecPolicy,
+    /// Workspace memory layout for the stage-kernel arithmetic
+    /// ([`Layout`]). `RowMajor` (the default) keeps each instance's
+    /// components contiguous; `DimMajor` runs the stage passes over a
+    /// dim-major (SoA) mirror, vectorizing across the batch. Results are
+    /// **bitwise-identical** in both layouts; only wall time differs.
+    /// The process default honors the `RODE_LAYOUT` environment variable
+    /// (how CI runs the suite in both layouts).
+    pub layout: Layout,
 }
 
 impl SolveOptions {
@@ -280,6 +308,7 @@ impl SolveOptions {
             eval_inactive: true,
             compact_threshold: 0.0,
             exec: ExecPolicy::default(),
+            layout: Layout::default_from_env(),
         }
     }
 
@@ -324,6 +353,14 @@ impl SolveOptions {
     /// (`0` = heuristic). Scheduling only — never affects results.
     pub fn with_steal_chunk(mut self, rows: usize) -> Self {
         self.exec.steal_chunk = rows;
+        self
+    }
+
+    /// Select the workspace memory layout for the stage kernels (see
+    /// [`SolveOptions::layout`]); results are bitwise-identical either
+    /// way.
+    pub fn with_layout(mut self, layout: Layout) -> Self {
+        self.layout = layout;
         self
     }
 
@@ -571,6 +608,35 @@ mod tests {
         assert_eq!(s.batch(), 2);
         assert_eq!(s.t0(0), 2.0);
         assert_eq!(s.t1(1), 5.0);
+    }
+
+    /// `Method::ALL` order must match the discriminants — the compiled
+    /// tableau cache indexes with `method as usize`.
+    #[test]
+    fn method_all_matches_discriminants() {
+        for (i, &m) in Method::ALL.iter().enumerate() {
+            assert_eq!(m as usize, i, "{m:?}");
+        }
+        // And the cache hands back the right (and the same) tableau.
+        for &m in Method::ALL.iter() {
+            let ct = step::CompiledTableau::cached(m);
+            assert_eq!(ct.tab.name, m.tableau().name);
+            let again = step::CompiledTableau::cached(m);
+            assert!(std::ptr::eq(ct, again), "cache must return one instance");
+        }
+    }
+
+    #[test]
+    fn layout_builder_and_shards() {
+        let o = SolveOptions::new(Method::Dopri5);
+        // Without RODE_LAYOUT set the default is row-major; either way
+        // the builder overrides it.
+        let o = o.with_layout(Layout::DimMajor);
+        assert_eq!(o.layout, Layout::DimMajor);
+        // Shard options inherit the layout (each shard worker runs the
+        // same lane passes over its own workspace).
+        assert_eq!(o.shard_rows(0, 1).layout, Layout::DimMajor);
+        assert_eq!(o.with_layout(Layout::RowMajor).layout, Layout::RowMajor);
     }
 
     #[test]

@@ -21,9 +21,18 @@
 //!
 //! [`scaled_norm`]'s RMS arm is implemented *as* `scaled_sumsq` followed
 //! by the mean/sqrt reduction, so the two can never drift apart.
+//!
+//! The reduction itself is the **deterministic fixed-shape lane tree**
+//! of [`super::kernels::scaled_sumsq`]: independent lane accumulators
+//! over the blocked prefix, a fixed pairwise reduction tree, then the
+//! tail in element order. The shape depends only on the row length —
+//! never on schedule, worker, or layout — which preserves both the
+//! position-independence of per-row partials and the bitwise
+//! `scaled_norm == (scaled_sumsq / len).sqrt()` identity.
 
 #![warn(missing_docs)]
 
+use super::kernels;
 use super::Tolerances;
 use crate::tensor::BatchVec;
 
@@ -77,17 +86,14 @@ pub fn scaled_norm(
 /// [`f64::MIN_POSITIVE`] scale floor) is exactly [`scaled_norm`]'s RMS
 /// arm, minus the final mean/sqrt reduction, so
 /// `scaled_norm(Rms, ..) == (scaled_sumsq(..) / len).sqrt()` bitwise.
+/// Reduced with the fixed-shape lane tree of
+/// [`kernels::scaled_sumsq`]; for rows shorter than one lane block this
+/// is bit-for-bit the historical sequential sum.
 #[inline]
 pub fn scaled_sumsq(err: &[f64], y0: &[f64], y1: &[f64], atol: f64, rtol: f64) -> f64 {
     debug_assert_eq!(err.len(), y0.len());
     debug_assert_eq!(err.len(), y1.len());
-    let mut acc = 0.0;
-    for i in 0..err.len() {
-        let scale = (atol + rtol * y0[i].abs().max(y1[i].abs())).max(f64::MIN_POSITIVE);
-        let r = err[i] / scale;
-        acc += r * r;
-    }
-    acc
+    kernels::scaled_sumsq(err, y0, y1, atol, rtol)
 }
 
 /// Fill `out[r] = scaled_sumsq(row lo + r)` for a contiguous row range

@@ -108,7 +108,7 @@ pub(crate) fn solve_ivp_parallel_core(
     opts.tols.validate(batch);
     let n_eval = grid.n_eval();
     let tab = opts.method.tableau();
-    let ct = CompiledTableau::new(tab);
+    let ct = CompiledTableau::cached(opts.method);
     let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
 
     let mut sol = Solution::new_buffer(batch, n_eval, dim);
@@ -129,7 +129,7 @@ pub(crate) fn solve_ivp_parallel_core(
     let mut next_eval = vec![0usize; batch];
     let span: Vec<f64> = (0..batch).map(|i| grid.t1(i) - grid.t0(i)).collect();
 
-    let mut ws = RkWorkspace::new(tab.stages, batch, dim);
+    let mut ws = RkWorkspace::new_with_layout(tab.stages, batch, dim, opts.layout);
     // Previous-step slopes for Hermite interpolation (f at step start).
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
@@ -212,7 +212,7 @@ pub(crate) fn solve_ivp_parallel_core(
             }
         }
         let mut calls = rk_attempt_active(
-            &ct,
+            ct,
             sys,
             &act,
             &finished,

@@ -20,14 +20,28 @@
 //! whole-batch case, and the exec layer ([`crate::exec`]) drives the same
 //! code over disjoint shards of the workspace from a worker pool — which
 //! is what makes sharded and serial solves bitwise-identical.
+//!
+//! The per-row arithmetic itself lives in [`super::kernels`]: lane-blocked
+//! (width-4/width-8 `chunks_exact`) passes whose per-element expressions
+//! are bit-identical to the straight-line scalar kernels they replaced,
+//! with the solution and embedded-error combinations **fused into one
+//! traversal** of the slope rows. With
+//! [`crate::tensor::Layout::DimMajor`] the same arithmetic runs over a
+//! dim-major (SoA) mirror of the workspace ([`RkWorkspace`] carries the
+//! lanes), vectorizing across the batch instead of across `dim` — results
+//! are bitwise-identical in both layouts (`tests/kernel_parity.rs`).
+
+#![warn(missing_docs)]
 
 use super::active::ActiveSet;
 use super::init::initial_step_batch;
+use super::kernels;
 use super::norm::scaled_sumsq_rows;
 use super::tableau::Tableau;
 use super::Tolerances;
 use crate::problems::OdeSystem;
-use crate::tensor::BatchVec;
+use crate::tensor::{BatchVec, LaneStore, Layout};
+use std::sync::OnceLock;
 
 /// Upper bound on tableau stages supported by the stack-allocated
 /// row-slice hoists in the stage kernel. Sized to admit high-order
@@ -35,9 +49,13 @@ use crate::tensor::BatchVec;
 /// rejects anything larger instead of silently iterating empty slices.
 pub const MAX_STAGES: usize = 16;
 
-/// A tableau with zero coefficients stripped, built once per solve.
+/// A tableau with zero coefficients stripped. Use
+/// [`CompiledTableau::cached`] in solve loops — the sparsity analysis
+/// runs **once per process per method**, not once per (sub-)solve, so
+/// pooled per-shard sub-solves stop re-deriving it.
 #[derive(Debug, Clone)]
 pub struct CompiledTableau {
+    /// The backing Butcher tableau.
     pub tab: &'static Tableau,
     /// Per stage `s`: the nonzero `(j, a_sj)` pairs.
     pub a_nz: Vec<Vec<(usize, f64)>>,
@@ -47,7 +65,24 @@ pub struct CompiledTableau {
     pub berr_nz: Vec<(usize, f64)>,
 }
 
+/// Process-wide compiled-tableau table, one slot per [`super::Method`]
+/// in `Method::ALL` order, derived on first use.
+static COMPILED: OnceLock<Vec<CompiledTableau>> = OnceLock::new();
+
 impl CompiledTableau {
+    /// The cached compiled tableau for `method`. The whole table is
+    /// derived on the first call (all registered tableaus are tiny) and
+    /// shared for the life of the process; every per-solve and per-shard
+    /// entry point goes through here.
+    pub fn cached(method: super::Method) -> &'static CompiledTableau {
+        let all = COMPILED.get_or_init(|| {
+            super::Method::ALL.iter().map(|m| CompiledTableau::new(m.tableau())).collect()
+        });
+        &all[method as usize]
+    }
+
+    /// Compile `tab` directly (zero-stripping + stage-count check).
+    /// Prefer [`CompiledTableau::cached`] for registered methods.
     pub fn new(tab: &'static Tableau) -> Self {
         assert!(
             tab.stages <= MAX_STAGES,
@@ -78,10 +113,28 @@ impl CompiledTableau {
     }
 }
 
+/// The dim-major (SoA) mirrors of the attempt buffers — allocated once
+/// per solve when [`Layout::DimMajor`] is selected, `None` otherwise.
+/// The mirrors are pure per-attempt scratch: they are (re)filled by
+/// transposes from the row-major sources at the attempt boundary, so
+/// compaction and the FSAL hand-off never need to touch them.
+pub(crate) struct DimScratch {
+    /// Lanes of the committed state `y`.
+    y: LaneStore,
+    /// Lanes of the stage slopes `k[s]`.
+    k: Vec<LaneStore>,
+    /// Lanes of the stage input.
+    ytmp: LaneStore,
+    /// Lanes of the proposed solution.
+    y_new: LaneStore,
+    /// Lanes of the raw error estimate.
+    err: LaneStore,
+}
+
 /// Pre-allocated buffers for the RK attempt, reused across all steps of a
 /// solve. Everything the kernel touches per attempt lives here, so the
 /// steady state of a solve performs **zero heap allocations** (enforced
-/// by `tests/alloc_regression.rs`).
+/// by `tests/alloc_regression.rs`) — in either layout.
 pub struct RkWorkspace {
     /// Stage slopes `k[s]`, each `(batch, dim)`.
     pub k: Vec<BatchVec>,
@@ -97,10 +150,30 @@ pub struct RkWorkspace {
     pub cold: Vec<bool>,
     /// Scratch index list (cold-row gathers in the indexed kernel).
     pub idx: Vec<usize>,
+    /// Dim-major mirrors (`Some` iff the workspace was built with
+    /// [`Layout::DimMajor`]).
+    pub(crate) dm: Option<DimScratch>,
 }
 
 impl RkWorkspace {
+    /// Row-major workspace (the default layout).
     pub fn new(stages: usize, batch: usize, dim: usize) -> Self {
+        Self::new_with_layout(stages, batch, dim, Layout::RowMajor)
+    }
+
+    /// Workspace in an explicit [`Layout`]; `DimMajor` additionally
+    /// allocates the SoA mirrors the lane passes run over.
+    pub fn new_with_layout(stages: usize, batch: usize, dim: usize, layout: Layout) -> Self {
+        let dm = match layout {
+            Layout::RowMajor => None,
+            Layout::DimMajor => Some(DimScratch {
+                y: LaneStore::new(batch, dim),
+                k: (0..stages).map(|_| LaneStore::new(batch, dim)).collect(),
+                ytmp: LaneStore::new(batch, dim),
+                y_new: LaneStore::new(batch, dim),
+                err: LaneStore::new(batch, dim),
+            }),
+        };
         Self {
             k: (0..stages).map(|_| BatchVec::zeros(batch, dim)).collect(),
             ytmp: BatchVec::zeros(batch, dim),
@@ -109,6 +182,16 @@ impl RkWorkspace {
             t_stage: vec![0.0; batch],
             cold: vec![false; batch],
             idx: Vec::with_capacity(batch),
+            dm,
+        }
+    }
+
+    /// The layout this workspace was built with.
+    pub fn layout(&self) -> Layout {
+        if self.dm.is_some() {
+            Layout::DimMajor
+        } else {
+            Layout::RowMajor
         }
     }
 }
@@ -134,10 +217,12 @@ pub(crate) struct RkRows<'a> {
 /// One row of the fused stage accumulation `out = y + h · Σ_j a_sj k_j`
 /// (nonzero coefficients only, slope rows hoisted once per instance —
 /// §Perf: per-element `row()` slicing cost ~35 % of the attempt at
-/// dim 2). Shared by the masked ([`rk_attempt_rows`]) and active-set
-/// ([`rk_attempt_active`]) kernels so their per-row arithmetic is
-/// *structurally* bitwise-identical — the contract `tests/compaction.rs`
-/// and the pooled merge depend on.
+/// dim 2). The arithmetic is the lane-blocked
+/// [`kernels::stage_row`], bit-identical per element to the historical
+/// scalar body ([`kernels::scalar::stage_row`]). Shared by the masked
+/// ([`rk_attempt_rows`]) and active-set ([`rk_attempt_active`]) kernels
+/// so their per-row arithmetic is *structurally* bitwise-identical — the
+/// contract `tests/compaction.rs` and the pooled merge depend on.
 #[inline(always)]
 fn accumulate_stage_row(
     nz: &[(usize, f64)],
@@ -148,66 +233,75 @@ fn accumulate_stage_row(
     yrow: &[f64],
     out: &mut [f64],
 ) {
+    // 1- and 2-term rows skip the MAX_STAGES hoist arrays entirely (the
+    // common dopri5/tsit5 early stages; per-row overhead matters at
+    // dim 2).
     match nz.len() {
         1 => {
             let (j0, w0) = nz[0];
-            let k0 = &kprev[j0][r * dim..(r + 1) * dim];
-            for d in 0..dim {
-                out[d] = yrow[d] + h * w0 * k0[d];
-            }
+            kernels::stage_row(out, yrow, h, &[w0], &[&kprev[j0][r * dim..(r + 1) * dim]]);
         }
         2 => {
             let (j0, w0) = nz[0];
             let (j1, w1) = nz[1];
-            let k0 = &kprev[j0][r * dim..(r + 1) * dim];
-            let k1 = &kprev[j1][r * dim..(r + 1) * dim];
-            for d in 0..dim {
-                out[d] = yrow[d] + h * (w0 * k0[d] + w1 * k1[d]);
-            }
+            kernels::stage_row(
+                out,
+                yrow,
+                h,
+                &[w0, w1],
+                &[&kprev[j0][r * dim..(r + 1) * dim], &kprev[j1][r * dim..(r + 1) * dim]],
+            );
         }
         _ => {
-            let mut krows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
-            for (slot, &(j, _)) in krows.iter_mut().zip(nz.iter()) {
-                *slot = &kprev[j][r * dim..(r + 1) * dim];
+            let mut w: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+            let mut kr: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+            for (i, &(j, wj)) in nz.iter().enumerate() {
+                w[i] = wj;
+                kr[i] = &kprev[j][r * dim..(r + 1) * dim];
             }
-            for d in 0..dim {
-                let mut acc = 0.0;
-                for (idx, &(_, w)) in nz.iter().enumerate() {
-                    acc += w * krows[idx][d];
-                }
-                out[d] = yrow[d] + h * acc;
-            }
+            kernels::stage_row(out, yrow, h, &w[..nz.len()], &kr[..nz.len()]);
         }
     }
 }
 
-/// One row of the solution/error combination `out = base + h · Σ_j w_j k_j`
-/// over the nonzero weights: `base = y` for the solution, absent for the
-/// raw error estimate. Shared by both kernels (see
-/// [`accumulate_stage_row`]).
+/// One row of the **fused** attempt tail: the 5th-order solution and the
+/// embedded error in a single traversal of the hoisted slope rows
+/// ([`kernels::combine_pair_row`]) — one pass over memory where the
+/// historical kernel made two. Falls back to the solution-only
+/// combination for tableaus without an embedded error. Per-element
+/// arithmetic of each output is unchanged (own accumulator, own
+/// coefficient order), so the fusion is bitwise-invisible.
 #[inline(always)]
-fn combine_row(
-    wnz: &[(usize, f64)],
+#[allow(clippy::too_many_arguments)]
+fn combine_rows_fused(
+    ct: &CompiledTableau,
     k: &[&mut [f64]],
     r: usize,
     dim: usize,
     h: f64,
-    base: Option<&[f64]>,
-    out: &mut [f64],
+    yrow: &[f64],
+    y_new: &mut [f64],
+    err: &mut [f64],
+    has_err: bool,
 ) {
-    let mut rows: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
-    for (slot, &(j, _)) in rows.iter_mut().zip(wnz.iter()) {
-        *slot = &k[j][r * dim..(r + 1) * dim];
+    let nb = ct.b_nz.len();
+    let mut bw: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+    let mut bk: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+    for (i, &(j, wj)) in ct.b_nz.iter().enumerate() {
+        bw[i] = wj;
+        bk[i] = &k[j][r * dim..(r + 1) * dim];
     }
-    for d in 0..dim {
-        let mut acc = 0.0;
-        for (idx, &(_, w)) in wnz.iter().enumerate() {
-            acc += w * rows[idx][d];
+    if has_err {
+        let ne = ct.berr_nz.len();
+        let mut ew: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+        let mut ek: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+        for (i, &(j, wj)) in ct.berr_nz.iter().enumerate() {
+            ew[i] = wj;
+            ek[i] = &k[j][r * dim..(r + 1) * dim];
         }
-        out[d] = match base {
-            Some(y) => y[d] + h * acc,
-            None => h * acc,
-        };
+        kernels::combine_pair_row(y_new, err, yrow, h, &bw[..nb], &bk[..nb], &ew[..ne], &ek[..ne]);
+    } else {
+        kernels::combine_row(y_new, Some(yrow), h, &bw[..nb], &bk[..nb]);
     }
 }
 
@@ -276,7 +370,8 @@ pub(crate) fn rk_attempt_rows(
         sys.f_rows(rr.offset, rows, &rr.t_stage[..], &rr.ytmp[..], &mut krest[0][..], eval_mask);
     }
 
-    // Solution + error in one fused pass per row, with hoisted slope rows.
+    // Solution + error in one fused traversal per row, with hoisted
+    // slope rows (the `k` blocks are pulled through cache once).
     let has_err = !ct.berr_nz.is_empty();
     for r in 0..rows {
         if !active.map_or(true, |m| m[r]) {
@@ -284,12 +379,9 @@ pub(crate) fn rk_attempt_rows(
         }
         let h = dt[r];
         let yrow = &y[r * dim..(r + 1) * dim];
-        let out = &mut rr.y_new[r * dim..(r + 1) * dim];
-        combine_row(&ct.b_nz, &rr.k, r, dim, h, Some(yrow), out);
-        if has_err {
-            let out = &mut rr.err[r * dim..(r + 1) * dim];
-            combine_row(&ct.berr_nz, &rr.k, r, dim, h, None, out);
-        }
+        let y_new = &mut rr.y_new[r * dim..(r + 1) * dim];
+        let err = &mut rr.err[r * dim..(r + 1) * dim];
+        combine_rows_fused(ct, &rr.k, r, dim, h, yrow, y_new, err, has_err);
     }
 }
 
@@ -306,6 +398,11 @@ pub(crate) fn attempt_call_count(ct: &CompiledTableau, k0_ready: &[bool]) -> u64
 /// Compute one RK attempt for the whole batch. See [`rk_attempt_rows`]
 /// for the per-row semantics. Returns the number of batched dynamics
 /// calls made.
+///
+/// With a [`Layout::DimMajor`] workspace and no activity mask (the
+/// joint-loop shape) the attempt runs over the SoA lanes — bitwise the
+/// same result, different traversal order. A masked attempt always takes
+/// the row-major path regardless of workspace layout.
 #[allow(clippy::too_many_arguments)]
 pub fn rk_attempt(
     ct: &CompiledTableau,
@@ -318,6 +415,11 @@ pub fn rk_attempt(
     active: Option<&[bool]>,
     eval_inactive: bool,
 ) -> u64 {
+    if ws.dm.is_some() && active.is_none() {
+        // Every row is active, so the eval mask is None whatever
+        // `eval_inactive` says — the dim-major attempt ignores it.
+        return rk_attempt_dm(ct, sys, t, dt, y, ws, k0_ready);
+    }
     let batch = y.batch();
     let dim = y.dim();
     let mut k_it = ws.k.iter_mut();
@@ -333,6 +435,137 @@ pub fn rk_attempt(
         cold: &mut ws.cold[..],
     };
     rk_attempt_rows(ct, sys, t, dt, y.flat(), &mut rr, k0_ready, active, eval_inactive);
+    attempt_call_count(ct, k0_ready)
+}
+
+/// Gather the nonzero weights and the `d`-lanes of their slope mirrors
+/// into fixed stack arrays (no allocation; only the first `nz.len()`
+/// slots are meaningful).
+#[inline(always)]
+fn gather_lanes<'a>(
+    nz: &[(usize, f64)],
+    k: &'a [LaneStore],
+    d: usize,
+    n: usize,
+    w: &mut [f64; MAX_STAGES],
+    kl: &mut [&'a [f64]; MAX_STAGES],
+) {
+    for (i, &(j, wj)) in nz.iter().enumerate() {
+        w[i] = wj;
+        kl[i] = &k[j].lane(d)[..n];
+    }
+}
+
+/// One dim-major stage-accumulation pass: fill the first `n` slots of
+/// every `ytmp` lane from the `y`/`k` lanes (`ytmp = y + dt·Σ a_sj k_j`,
+/// per-row `dt`). Shared verbatim by the whole-batch and active-set
+/// dim-major attempts so the two can never diverge.
+fn dm_stage_pass(dm: &mut DimScratch, nz: &[(usize, f64)], dim: usize, n: usize, dt: &[f64]) {
+    let mut w: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+    let mut kl: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+    for d in 0..dim {
+        gather_lanes(nz, &dm.k, d, n, &mut w, &mut kl);
+        kernels::stage_lanes(
+            &mut dm.ytmp.lane_mut(d)[..n],
+            &dm.y.lane(d)[..n],
+            &dt[..n],
+            &w[..nz.len()],
+            &kl[..nz.len()],
+        );
+    }
+}
+
+/// The fused dim-major attempt tail: fill the first `n` slots of the
+/// `y_new` (and, when the tableau has an embedded error, `err`) lanes.
+/// Shared by both dim-major attempts (see [`dm_stage_pass`]).
+fn dm_combine_pass(dm: &mut DimScratch, ct: &CompiledTableau, dim: usize, n: usize, dt: &[f64]) {
+    let has_err = !ct.berr_nz.is_empty();
+    let nb = ct.b_nz.len();
+    let ne = ct.berr_nz.len();
+    let mut bw: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+    let mut bk: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+    let mut ew: [f64; MAX_STAGES] = [0.0; MAX_STAGES];
+    let mut ek: [&[f64]; MAX_STAGES] = [&[]; MAX_STAGES];
+    for d in 0..dim {
+        gather_lanes(&ct.b_nz, &dm.k, d, n, &mut bw, &mut bk);
+        if has_err {
+            gather_lanes(&ct.berr_nz, &dm.k, d, n, &mut ew, &mut ek);
+            kernels::combine_pair_lanes(
+                &mut dm.y_new.lane_mut(d)[..n],
+                &mut dm.err.lane_mut(d)[..n],
+                &dm.y.lane(d)[..n],
+                &dt[..n],
+                &bw[..nb],
+                &bk[..nb],
+                &ew[..ne],
+                &ek[..ne],
+            );
+        } else {
+            kernels::combine_lanes(
+                &mut dm.y_new.lane_mut(d)[..n],
+                Some(&dm.y.lane(d)[..n]),
+                &dt[..n],
+                &bw[..nb],
+                &bk[..nb],
+            );
+        }
+    }
+}
+
+/// The whole-batch, unmasked RK attempt over the dim-major lanes (the
+/// joint-loop shape: every row active, broadcast eval). Semantics and
+/// results are bit-for-bit those of the row-major [`rk_attempt_rows`];
+/// only the traversal order differs — each arithmetic pass runs lane by
+/// lane across the batch, and the stage inputs/outputs are transposed at
+/// the dynamics boundary because `OdeSystem` is row-oriented.
+fn rk_attempt_dm(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    t: &[f64],
+    dt: &[f64],
+    y: &BatchVec,
+    ws: &mut RkWorkspace,
+    k0_ready: &[bool],
+) -> u64 {
+    let tab = ct.tab;
+    let batch = y.batch();
+    let dim = y.dim();
+
+    // Stage 0: refresh cold slope caches (identical to the row-major
+    // path — the mask contract of `f_rows`).
+    let mut any_cold = false;
+    for (r, &ready) in k0_ready.iter().enumerate() {
+        let c = !ready;
+        ws.cold[r] = c;
+        any_cold |= c;
+    }
+    if any_cold {
+        ws.t_stage.copy_from_slice(t);
+        sys.f_rows(0, batch, &ws.t_stage[..], y.flat(), ws.k[0].flat_mut(), Some(&ws.cold[..]));
+    }
+
+    // Transpose the committed state and the warm k[0] into the lanes.
+    let dm = ws.dm.as_mut().expect("dim-major attempt needs the SoA scratch");
+    dm.y.load(y.flat(), batch);
+    dm.k[0].load(ws.k[0].flat(), batch);
+
+    for s in 1..tab.stages {
+        dm_stage_pass(dm, &ct.a_nz[s], dim, batch, dt);
+        for r in 0..batch {
+            ws.t_stage[r] = t[r] + tab.c[s] * dt[r];
+        }
+        // Row-major view for the batched dynamics call, slopes back in.
+        dm.ytmp.store_rows(ws.ytmp.flat_mut(), batch);
+        sys.f_rows(0, batch, &ws.t_stage[..], ws.ytmp.flat(), ws.k[s].flat_mut(), None);
+        dm.k[s].load(ws.k[s].flat(), batch);
+    }
+
+    // Fused solution + error, lane by lane, then transpose back.
+    dm_combine_pass(dm, ct, dim, batch, dt);
+    dm.y_new.store_rows(ws.y_new.flat_mut(), batch);
+    if !ct.berr_nz.is_empty() {
+        dm.err.store_rows(ws.err.flat_mut(), batch);
+    }
     attempt_call_count(ct, k0_ready)
 }
 
@@ -359,6 +592,9 @@ pub(crate) fn rk_attempt_active(
     k0_ready: &[bool],
     eval_inactive: bool,
 ) -> u64 {
+    if ws.dm.is_some() {
+        return rk_attempt_active_dm(ct, sys, act, finished, t, dt, y, ws, k0_ready, eval_inactive);
+    }
     let tab = ct.tab;
     let dim = y.dim();
     let y_flat = y.flat();
@@ -424,18 +660,133 @@ pub(crate) fn rk_attempt_active(
         sys.f_rows_indexed(0, inst, eval_rows, t_stage, ytmp, &mut krest[0][..]);
     }
 
-    // Solution + error for the live slots, one fused pass per row.
+    // Solution + error for the live slots, one fused traversal per row.
     let y_new = ws.y_new.flat_mut();
     let err = ws.err.flat_mut();
     let has_err = !ct.berr_nz.is_empty();
     for &r in live {
         let h = dt[r];
         let yrow = &y_flat[r * dim..(r + 1) * dim];
-        let out = &mut y_new[r * dim..(r + 1) * dim];
-        combine_row(&ct.b_nz, &k_bufs, r, dim, h, Some(yrow), out);
+        let yn = &mut y_new[r * dim..(r + 1) * dim];
+        let er = &mut err[r * dim..(r + 1) * dim];
+        combine_rows_fused(ct, &k_bufs, r, dim, h, yrow, yn, er, has_err);
+    }
+    calls
+}
+
+/// The active-set RK attempt over the dim-major lanes. Per-slot
+/// semantics (stage-0 refresh, keep-alive copies, indexed evals, the
+/// semantic call count) are identical to the row-major
+/// [`rk_attempt_active`]; the arithmetic passes instead run **densely
+/// over the live span** `0..=max(live)` — state compaction packs the
+/// live slots into a dense prefix, which is what keeps this span tight
+/// on straggler-heavy batches (pair `dim_major` with a nonzero
+/// `compact_threshold`; without compaction a single high-index
+/// straggler keeps the span wide) — and only the *live* slots are
+/// transposed back into the row-major buffers (dead slots keep their
+/// keep-alive `ytmp` and their frozen `y_new`/`err`, matching the
+/// masked kernel's contract). The extra lane work on
+/// finished-but-still-in-span slots operates on their frozen finite
+/// state and is discarded at write-back, so results are bit-for-bit the
+/// row-major kernel's.
+#[allow(clippy::too_many_arguments)]
+fn rk_attempt_active_dm(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    act: &ActiveSet,
+    finished: &[bool],
+    t: &[f64],
+    dt: &[f64],
+    y: &BatchVec,
+    ws: &mut RkWorkspace,
+    k0_ready: &[bool],
+    eval_inactive: bool,
+) -> u64 {
+    let tab = ct.tab;
+    let dim = y.dim();
+    let y_flat = y.flat();
+    let live = act.live();
+    let inst = act.inst_map();
+    let eval_rows: &[usize] = if eval_inactive { act.all_slots() } else { live };
+
+    // Stage 0: refresh cold slope caches among the rows the eval covers
+    // (identical to the row-major path; effectively never fires in the
+    // solve loops).
+    let mut any_cold = false;
+    for &r in eval_rows {
+        let c = !k0_ready[r];
+        ws.cold[r] = c;
+        any_cold |= c;
+    }
+    let mut calls = tab.stages as u64 - 1;
+    if any_cold {
+        ws.idx.clear();
+        for &r in eval_rows {
+            if ws.cold[r] {
+                ws.idx.push(r);
+            }
+        }
+        for &r in &ws.idx {
+            ws.t_stage[r] = t[r];
+        }
+        sys.f_rows_indexed(0, inst, &ws.idx, &ws.t_stage, y_flat, ws.k[0].flat_mut());
+        calls += 1;
+    }
+
+    // Keep-alive for finished-but-materialized slots (identical to the
+    // row-major path): the overhanging evaluations must see a valid
+    // (t, y) in the row-major `ytmp`, which the selective write-back
+    // below never disturbs.
+    if eval_inactive {
+        for &r in act.all_slots() {
+            if finished[r] {
+                ws.ytmp.row_mut(r).copy_from_slice(&y_flat[r * dim..(r + 1) * dim]);
+                ws.t_stage[r] = t[r];
+            }
+        }
+    }
+
+    // The dense lane span: everything up to the highest live slot. The
+    // packed active set keeps live slots ascending, and compaction
+    // gathers them into a prefix, so this is tight whenever compaction
+    // runs; finished slots below the top live one ride along (their
+    // lane results are discarded at write-back). `span == live.len()`
+    // means the span is exactly the live prefix (fresh solve, or right
+    // after a compaction) and the write-backs can be dense transposes.
+    let span = live.last().map_or(0, |&r| r + 1);
+    debug_assert!(span <= act.slots());
+    let dense = live.len() == span;
+    let dm = ws.dm.as_mut().expect("dim-major attempt needs the SoA scratch");
+    dm.y.load(y_flat, span);
+    dm.k[0].load(ws.k[0].flat(), span);
+
+    for s in 1..tab.stages {
+        dm_stage_pass(dm, &ct.a_nz[s], dim, span, dt);
+        for &r in live {
+            ws.t_stage[r] = t[r] + tab.c[s] * dt[r];
+        }
+        if dense {
+            dm.ytmp.store_rows(ws.ytmp.flat_mut(), span);
+        } else {
+            dm.ytmp.store_indexed(ws.ytmp.flat_mut(), live);
+        }
+        sys.f_rows_indexed(0, inst, eval_rows, &ws.t_stage[..], ws.ytmp.flat(), ws.k[s].flat_mut());
+        dm.k[s].load(ws.k[s].flat(), span);
+    }
+
+    // Fused solution + error, lane by lane over the live span, written
+    // back for the live slots only.
+    dm_combine_pass(dm, ct, dim, span, dt);
+    let has_err = !ct.berr_nz.is_empty();
+    if dense {
+        dm.y_new.store_rows(ws.y_new.flat_mut(), span);
         if has_err {
-            let out = &mut err[r * dim..(r + 1) * dim];
-            combine_row(&ct.berr_nz, &k_bufs, r, dim, h, None, out);
+            dm.err.store_rows(ws.err.flat_mut(), span);
+        }
+    } else {
+        dm.y_new.store_indexed(ws.y_new.flat_mut(), live);
+        if has_err {
+            dm.err.store_indexed(ws.err.flat_mut(), live);
         }
     }
     calls
@@ -449,6 +800,16 @@ pub(crate) fn rk_attempt_active(
 pub(crate) trait StageExec {
     /// State dimension of the underlying system.
     fn dim(&self) -> usize;
+
+    /// The workspace layout this executor will actually drive given the
+    /// requested one. The pooled executors shard the row-range kernel
+    /// (always row-major) over workspace views, so they downgrade a
+    /// `DimMajor` request rather than allocate SoA mirrors no pass would
+    /// touch; the inline executor honors the request. Results are
+    /// bitwise-identical either way (`tests/kernel_parity.rs`).
+    fn workspace_layout(&self, requested: Layout) -> Layout {
+        requested
+    }
 
     /// One batched dynamics evaluation (initial slopes, non-FSAL refresh).
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>);
@@ -648,6 +1009,35 @@ mod tests {
         rk_attempt(&ct, &sys, &[0.0], &[0.1], &y, &mut ws_warm, &[true], None, true);
 
         assert!((ws_cold.y_new.row(0)[0] - ws_warm.y_new.row(0)[0]).abs() < 1e-15);
+    }
+
+    /// The dim-major attempt path is bitwise-identical to the row-major
+    /// path on the joint shape (no mask, odd dim, per-instance dt).
+    #[test]
+    fn dim_major_attempt_matches_row_major_bitwise() {
+        let sys = ExponentialDecay::new(vec![1.0, 0.5], 3);
+        let ct = CompiledTableau::new(&tableau::DOPRI5);
+        let y = BatchVec::from_rows(&[vec![1.0, -0.5, 2.0], vec![0.3, 0.7, -1.1]]);
+        let (t, dt, k0) = ([0.0, 0.1], [0.05, 0.2], [false, false]);
+        let mut ws_r = RkWorkspace::new(7, 2, 3);
+        rk_attempt(&ct, &sys, &t, &dt, &y, &mut ws_r, &k0, None, true);
+        let mut ws_d = RkWorkspace::new_with_layout(7, 2, 3, crate::tensor::Layout::DimMajor);
+        assert_eq!(ws_d.layout(), crate::tensor::Layout::DimMajor);
+        rk_attempt(&ct, &sys, &t, &dt, &y, &mut ws_d, &k0, None, true);
+        for i in 0..2 {
+            for d in 0..3 {
+                assert_eq!(
+                    ws_r.y_new.row(i)[d].to_bits(),
+                    ws_d.y_new.row(i)[d].to_bits(),
+                    "y_new i={i} d={d}"
+                );
+                assert_eq!(
+                    ws_r.err.row(i)[d].to_bits(),
+                    ws_d.err.row(i)[d].to_bits(),
+                    "err i={i} d={d}"
+                );
+            }
+        }
     }
 
     /// Compiled tableau strips zeros.

@@ -5,6 +5,65 @@
 //! torchode's "minimize the number of kernels launched") is that the hot
 //! loop is a handful of fused, allocation-free passes over flat memory.
 
+/// Memory layout of the solver workspace (`SolveOptions::layout`,
+/// config key `layout`, CLI `--layout`).
+///
+/// - [`Layout::RowMajor`]: state is `(batch, dim)` row-major — each
+///   instance's components are contiguous. The default; every per-row
+///   pass (controller, dense output, compaction gathers) works on
+///   contiguous rows, and the lane-blocked kernels vectorize across
+///   `dim`.
+/// - [`Layout::DimMajor`]: the stage-kernel arithmetic additionally runs
+///   over a dim-major (SoA) mirror of the workspace ([`LaneStore`]),
+///   where component `d` of every row is contiguous and the kernels
+///   vectorize across the *batch* — the layout of torchode's stacked
+///   GPU tensors. State is transposed into the mirror at the attempt
+///   boundary and results are transposed back, because the dynamics API
+///   (`OdeSystem::f_inst`) is row-oriented. Results are
+///   **bitwise-identical** in both layouts (`tests/kernel_parity.rs`);
+///   only the wall time differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// `(batch, dim)` row-major (the default).
+    RowMajor,
+    /// Dim-major (SoA) stage-kernel mirror; opt-in experiment.
+    DimMajor,
+}
+
+impl Layout {
+    /// Parse a layout as spelled on the CLI and in configs:
+    /// `row_major` / `row-major` or `dim_major` / `dim-major`.
+    pub fn parse(s: &str) -> Option<Layout> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "row_major" | "row-major" | "rowmajor" => Layout::RowMajor,
+            "dim_major" | "dim-major" | "dimmajor" => Layout::DimMajor,
+            _ => return None,
+        })
+    }
+
+    /// The CLI/config spelling of this layout.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::RowMajor => "row_major",
+            Layout::DimMajor => "dim_major",
+        }
+    }
+
+    /// The process-wide default layout: the `RODE_LAYOUT` environment
+    /// variable if set to a valid spelling, else [`Layout::RowMajor`].
+    /// Read once and cached — this is how CI runs the whole test suite
+    /// in both layouts without touching every call site.
+    pub fn default_from_env() -> Layout {
+        static CACHED: std::sync::OnceLock<Layout> = std::sync::OnceLock::new();
+        *CACHED.get_or_init(|| {
+            std::env::var("RODE_LAYOUT")
+                .ok()
+                .and_then(|s| Layout::parse(&s))
+                .unwrap_or(Layout::RowMajor)
+        })
+    }
+}
+
 /// A `(batch, dim)` row-major matrix of `f64`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchVec {
@@ -106,6 +165,98 @@ impl BatchVec {
     }
 }
 
+/// The dim-major (SoA) mirror of a `(batch, dim)` row-major matrix:
+/// lane `d` holds component `d` of every row, contiguously across the
+/// batch. This is the storage behind [`Layout::DimMajor`] — the stage
+/// kernels iterate lanes (vectorizing across rows, with a per-row `dt`)
+/// instead of rows.
+///
+/// Lanes are allocated at full batch capacity once; solves that compact
+/// their state simply use a shorter prefix of every lane, which is why
+/// the packed active set's dense prefix makes the lane passes fully
+/// contiguous. Loads/stores are plain element copies, so round-tripping
+/// through a `LaneStore` is bitwise-exact.
+#[derive(Debug, Clone)]
+pub struct LaneStore {
+    /// Flat `(dim, batch)` storage: lane `d` is `data[d*batch .. d*batch+batch]`.
+    data: Vec<f64>,
+    batch: usize,
+    dim: usize,
+}
+
+impl LaneStore {
+    /// Zero-filled lane store with `dim` lanes of capacity `batch`.
+    pub fn new(batch: usize, dim: usize) -> Self {
+        Self { data: vec![0.0; batch * dim], batch, dim }
+    }
+
+    /// Number of lanes (the row-major `dim`).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Lane capacity (the row-major `batch`).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Lane `d`, full capacity; callers slice the live prefix.
+    #[inline]
+    pub fn lane(&self, d: usize) -> &[f64] {
+        &self.data[d * self.batch..(d + 1) * self.batch]
+    }
+
+    /// Lane `d`, mutable.
+    #[inline]
+    pub fn lane_mut(&mut self, d: usize) -> &mut [f64] {
+        &mut self.data[d * self.batch..(d + 1) * self.batch]
+    }
+
+    /// Transpose in: fill the first `rows` entries of every lane from a
+    /// row-major flat buffer (`src[r*dim + d]`, at least `rows * dim`
+    /// long). No allocation. Panics (release builds included) when
+    /// `rows` exceeds the lane capacity — an oversized prefix would
+    /// otherwise silently write into neighboring lanes.
+    pub fn load(&mut self, src: &[f64], rows: usize) {
+        assert!(rows <= self.batch, "lane prefix {rows} exceeds capacity {}", self.batch);
+        for r in 0..rows {
+            let row = &src[r * self.dim..(r + 1) * self.dim];
+            for (d, &v) in row.iter().enumerate() {
+                self.data[d * self.batch + r] = v;
+            }
+        }
+    }
+
+    /// Transpose out: write the first `rows` entries of every lane into
+    /// a row-major flat buffer. No allocation; same hard capacity check
+    /// as [`LaneStore::load`].
+    pub fn store_rows(&self, dst: &mut [f64], rows: usize) {
+        assert!(rows <= self.batch, "lane prefix {rows} exceeds capacity {}", self.batch);
+        for r in 0..rows {
+            let row = &mut dst[r * self.dim..(r + 1) * self.dim];
+            for (d, v) in row.iter_mut().enumerate() {
+                *v = self.data[d * self.batch + r];
+            }
+        }
+    }
+
+    /// Transpose out a scattered subset: write only the listed rows
+    /// (indices into the lane prefix) into the row-major buffer, leaving
+    /// every other row untouched — how the active-set attempt writes
+    /// back live slots without disturbing keep-alive rows. Out-of-range
+    /// indices panic (release builds included) — they would otherwise
+    /// silently read the next lane's storage.
+    pub fn store_indexed(&self, dst: &mut [f64], rows: &[usize]) {
+        for &r in rows {
+            assert!(r < self.batch, "lane index {r} exceeds capacity {}", self.batch);
+            let row = &mut dst[r * self.dim..(r + 1) * self.dim];
+            for (d, v) in row.iter_mut().enumerate() {
+                *v = self.data[d * self.batch + r];
+            }
+        }
+    }
+}
+
 /// Elementwise `out = a + s * b` over flat slices (single fused pass —
 /// the native analogue of torchode's `addcmul` usage).
 #[inline]
@@ -170,5 +321,45 @@ mod tests {
     fn max_abs_works() {
         let m = BatchVec::from_rows(&[vec![-3.0, 2.0]]);
         assert_eq!(m.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn layout_parse_roundtrip() {
+        for l in [Layout::RowMajor, Layout::DimMajor] {
+            assert_eq!(Layout::parse(l.name()), Some(l));
+        }
+        assert_eq!(Layout::parse("dim-major"), Some(Layout::DimMajor));
+        assert_eq!(Layout::parse("ROW_MAJOR"), Some(Layout::RowMajor));
+        assert_eq!(Layout::parse("column"), None);
+        // The env default is a valid layout whatever the environment.
+        let _ = Layout::default_from_env();
+    }
+
+    #[test]
+    fn lane_store_roundtrip() {
+        // (batch=3, dim=2) rows -> lanes -> rows is exact.
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut ls = LaneStore::new(3, 2);
+        ls.load(&src, 3);
+        assert_eq!(ls.lane(0), &[1.0, 3.0, 5.0]);
+        assert_eq!(ls.lane(1), &[2.0, 4.0, 6.0]);
+        let mut dst = [0.0; 6];
+        ls.store_rows(&mut dst, 3);
+        assert_eq!(dst, src);
+        // Prefix loads leave the lane tail alone.
+        let mut ls = LaneStore::new(3, 2);
+        ls.lane_mut(0)[2] = 99.0;
+        ls.load(&src, 2);
+        assert_eq!(ls.lane(0), &[1.0, 3.0, 99.0]);
+    }
+
+    #[test]
+    fn lane_store_indexed_store_is_selective() {
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut ls = LaneStore::new(3, 2);
+        ls.load(&src, 3);
+        let mut dst = [0.0; 6];
+        ls.store_indexed(&mut dst, &[0, 2]);
+        assert_eq!(dst, [1.0, 2.0, 0.0, 0.0, 5.0, 6.0]);
     }
 }

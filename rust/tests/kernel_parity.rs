@@ -1,0 +1,237 @@
+//! The lane-kernel / layout contract: the lane-blocked stage kernels
+//! (`rode::solver::kernels`) and the dim-major (SoA) workspace layout
+//! are **bitwise-identical** to the frozen mask-based reference loop
+//! (`rode::solver::reference`, which still drives the historical
+//! row-major whole-batch path) across odd dims, FSAL and non-FSAL
+//! methods, fixed-step methods, compaction thresholds, pool kinds and
+//! the joint loop. Plus direct per-element parity of every lane kernel
+//! against the preserved scalar bodies in `kernels::scalar`.
+
+use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
+use rode::nn::Rng64;
+use rode::prelude::*;
+use rode::problems::ExponentialDecay;
+use rode::solver::reference::solve_ivp_parallel_reference;
+use rode::solver::{kernels, norm};
+use rode::tensor::LaneStore;
+
+/// Full bitwise equality of two solutions (NaN-safe via bit comparison).
+fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.stats, b.stats, "{label}: stats");
+    let (fa, fb) = (a.ys_flat(), b.ys_flat());
+    assert_eq!(fa.len(), fb.len(), "{label}: ys length");
+    for (idx, (x, y)) in fa.iter().zip(fb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: ys[{idx}] {x} vs {y}");
+    }
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+}
+
+/// A heterogeneous decay batch at an arbitrary `dim`: per-instance rates
+/// spread two orders of magnitude so rows finish at different times (the
+/// regime where the active set, compaction and keep-alive paths all
+/// fire).
+fn workload(batch: usize, dim: usize, seed: u64) -> (ExponentialDecay, BatchVec, TimeGrid) {
+    let mut rng = Rng64::new(seed);
+    let rates: Vec<f64> = (0..batch).map(|_| rng.range(0.05, 5.0)).collect();
+    let sys = ExponentialDecay::new(rates, dim);
+    let y0 = BatchVec::from_rows(
+        &(0..batch).map(|_| (0..dim).map(|_| rng.range(-2.0, 2.0)).collect()).collect::<Vec<_>>(),
+    );
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 3.0, 7);
+    (sys, y0, grid)
+}
+
+/// Both layouts, FSAL and non-FSAL adaptive methods, both eval modes,
+/// with and without eager compaction, across odd dims: all bitwise equal
+/// to the frozen reference loop.
+#[test]
+fn both_layouts_match_reference_across_odd_dims() {
+    for &dim in &[1usize, 3, 5, 7, 13] {
+        let (sys, y0, grid) = workload(6, dim, dim as u64);
+        for m in [Method::Dopri5, Method::CashKarp45] {
+            let base =
+                SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(100_000).with_trace();
+            for eval_inactive in [true, false] {
+                let mut opts = base.clone();
+                opts.eval_inactive = eval_inactive;
+                let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &opts);
+                assert!(reference.all_success(), "{m:?} dim={dim}");
+                for layout in [Layout::RowMajor, Layout::DimMajor] {
+                    for threshold in [0.0, 1.0] {
+                        let copts = opts.clone().with_layout(layout).with_compaction(threshold);
+                        let got = solve_ivp_parallel(&sys, &y0, &grid, &copts);
+                        assert_bitwise(
+                            &reference,
+                            &got,
+                            &format!(
+                                "{m:?} dim={dim} {} eval_inactive={eval_inactive} \
+                                 threshold={threshold}",
+                                layout.name()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fixed-step methods (no controller, no embedded error — the
+/// solution-only combine path) in both layouts.
+#[test]
+fn fixed_step_layout_parity() {
+    for &dim in &[3usize, 13] {
+        let (sys, y0, grid) = workload(4, dim, 77 + dim as u64);
+        let base = SolveOptions::new(Method::Rk4).with_fixed_dt(5e-3).with_max_steps(20_000);
+        let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+        for layout in [Layout::RowMajor, Layout::DimMajor] {
+            let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_layout(layout));
+            assert_bitwise(&reference, &got, &format!("rk4 dim={dim} {}", layout.name()));
+        }
+    }
+}
+
+/// The pooled parallel path shards dim-major workspaces per worker; the
+/// merged result must still equal the serial reference bitwise for both
+/// pool kinds.
+#[test]
+fn pooled_layouts_match_reference() {
+    let (sys, y0, grid) = workload(10, 5, 11);
+    let base = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-6)
+        .with_max_steps(100_000)
+        .with_trace();
+    let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
+    for layout in [Layout::RowMajor, Layout::DimMajor] {
+        for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+            let opts = base
+                .clone()
+                .with_layout(layout)
+                .with_threads(3)
+                .with_pool(kind)
+                .with_compaction(0.75);
+            let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&reference, &got, &format!("pooled {} {}", kind.name(), layout.name()));
+        }
+    }
+}
+
+/// The joint loop: dim-major must match row-major bitwise, serially and
+/// through both pooled executors (which drive the row-range kernel
+/// whatever the layout — legal only because the layouts are
+/// element-exact).
+#[test]
+fn joint_layout_parity_serial_and_pooled() {
+    for &dim in &[1usize, 3, 7, 13] {
+        let (sys, y0, grid) = workload(6, dim, 200 + dim as u64);
+        let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let row = solve_ivp_joint(&sys, &y0, &grid, &base);
+        assert!(row.all_success(), "dim={dim}");
+        let dm = solve_ivp_joint(&sys, &y0, &grid, &base.clone().with_layout(Layout::DimMajor));
+        assert_bitwise(&row, &dm, &format!("joint dim={dim} dim_major"));
+        for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+            let opts = base
+                .clone()
+                .with_layout(Layout::DimMajor)
+                .with_threads(2)
+                .with_pool(kind);
+            let pooled = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&row, &pooled, &format!("joint pooled {} dim={dim}", kind.name()));
+        }
+    }
+}
+
+/// Non-FSAL joint loop in both layouts (exercises the dim-major k[0]
+/// reload after the end-slope refresh).
+#[test]
+fn joint_non_fsal_layout_parity() {
+    let (sys, y0, grid) = workload(4, 5, 31);
+    let base = SolveOptions::new(Method::Fehlberg45).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+    let row = solve_ivp_joint(&sys, &y0, &grid, &base);
+    let dm = solve_ivp_joint(&sys, &y0, &grid, &base.clone().with_layout(Layout::DimMajor));
+    assert_bitwise(&row, &dm, "joint fehlberg45 dim_major");
+}
+
+/// Direct per-element parity of the lane-blocked kernels against the
+/// preserved scalar bodies, on solver-shaped data (dopri5 coefficient
+/// counts) across odd dims.
+#[test]
+fn lane_kernels_bitwise_equal_scalar_on_solver_shapes() {
+    let ct = rode::solver::step::CompiledTableau::cached(Method::Dopri5);
+    let mut rng = Rng64::new(5);
+    for &dim in &[1usize, 3, 5, 7, 13] {
+        let y: Vec<f64> = (0..dim).map(|_| rng.range(-2.0, 2.0)).collect();
+        let kdata: Vec<Vec<f64>> =
+            (0..7).map(|_| (0..dim).map(|_| rng.range(-3.0, 3.0)).collect()).collect();
+        let kr: Vec<&[f64]> = kdata.iter().map(|v| v.as_slice()).collect();
+        let h = 0.013;
+
+        // Stage rows with dopri5's real sparsity patterns.
+        for s in 1..7 {
+            let nz = &ct.a_nz[s];
+            let w: Vec<f64> = nz.iter().map(|&(_, w)| w).collect();
+            let k: Vec<&[f64]> = nz.iter().map(|&(j, _)| kr[j]).collect();
+            let mut lane = vec![0.0; dim];
+            let mut scal = vec![0.0; dim];
+            kernels::stage_row(&mut lane, &y, h, &w, &k);
+            kernels::scalar::stage_row(&mut scal, &y, h, &w, &k);
+            for d in 0..dim {
+                assert_eq!(lane[d].to_bits(), scal[d].to_bits(), "stage s={s} dim={dim} d={d}");
+            }
+        }
+
+        // The fused combine pair vs two scalar passes with dopri5's b/b_err.
+        let bw: Vec<f64> = ct.b_nz.iter().map(|&(_, w)| w).collect();
+        let bk: Vec<&[f64]> = ct.b_nz.iter().map(|&(j, _)| kr[j]).collect();
+        let ew: Vec<f64> = ct.berr_nz.iter().map(|&(_, w)| w).collect();
+        let ek: Vec<&[f64]> = ct.berr_nz.iter().map(|&(j, _)| kr[j]).collect();
+        let mut yn = vec![0.0; dim];
+        let mut er = vec![0.0; dim];
+        kernels::combine_pair_row(&mut yn, &mut er, &y, h, &bw, &bk, &ew, &ek);
+        let mut yn_s = vec![0.0; dim];
+        let mut er_s = vec![0.0; dim];
+        kernels::scalar::combine_row(&mut yn_s, Some(&y), h, &bw, &bk);
+        kernels::scalar::combine_row(&mut er_s, None, h, &ew, &ek);
+        for d in 0..dim {
+            assert_eq!(yn[d].to_bits(), yn_s[d].to_bits(), "y_new dim={dim} d={d}");
+            assert_eq!(er[d].to_bits(), er_s[d].to_bits(), "err dim={dim} d={d}");
+        }
+    }
+}
+
+/// The error-norm contracts under the lane tree: the RMS norm is still
+/// literally `sqrt(sumsq / len)` bitwise, short rows reduce exactly like
+/// the historical sequential sum, and a lane round-trip through the SoA
+/// store never changes bits.
+#[test]
+fn sumsq_contracts_hold() {
+    let mut rng = Rng64::new(9);
+    for &dim in &[1usize, 3, 5, 7, 13, 16, 64] {
+        let e: Vec<f64> = (0..dim).map(|_| rng.range(-1e-5, 1e-5)).collect();
+        let a: Vec<f64> = (0..dim).map(|_| rng.range(-2.0, 2.0)).collect();
+        let b: Vec<f64> = (0..dim).map(|_| rng.range(-2.0, 2.0)).collect();
+        let s = norm::scaled_sumsq(&e, &a, &b, 1e-8, 1e-5);
+        let n = norm::scaled_norm(norm::NormKind::Rms, &e, &a, &b, 1e-8, 1e-5);
+        assert_eq!(n.to_bits(), (s / dim as f64).sqrt().to_bits(), "rms contract dim={dim}");
+        if dim < 4 {
+            let seq = kernels::scalar::scaled_sumsq(&e, &a, &b, 1e-8, 1e-5);
+            assert_eq!(s.to_bits(), seq.to_bits(), "short-row degeneration dim={dim}");
+        }
+    }
+
+    // SoA round-trip exactness on a batch of rows.
+    let batch = 9;
+    let dim = 5;
+    let mut flat = Vec::new();
+    for _ in 0..batch * dim {
+        flat.push(rng.range(-3.0, 3.0));
+    }
+    let mut ls = LaneStore::new(batch, dim);
+    ls.load(&flat, batch);
+    let mut back = vec![0.0; batch * dim];
+    ls.store_rows(&mut back, batch);
+    for (i, (x, y)) in flat.iter().zip(&back).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "lane round-trip at {i}");
+    }
+}

@@ -3,13 +3,15 @@
 //! perf smoke.
 //!
 //! Run with `cargo bench --bench coordinator_bench`, or pass section
-//! names to run a subset (`batcher`, `service`, `threads`, `straggler`),
-//! e.g. `cargo bench --bench coordinator_bench -- straggler`. The
-//! straggler section writes machine-readable `BENCH_solver.json` so CI
-//! can track the perf trajectory per PR.
+//! names to run a subset (`batcher`, `service`, `threads`, `straggler`,
+//! `stiffsweep`), e.g. `cargo bench --bench coordinator_bench --
+//! straggler`. The straggler section writes machine-readable
+//! `BENCH_solver.json` (the stiffsweep section appends to it) so CI can
+//! track the perf trajectory per PR.
 
 use rode::bench::{
-    straggler_workload, threads_sweep, time_repeats, write_bench_json, BenchRecord, Summary,
+    append_bench_json, straggler_workload, threads_sweep, time_repeats, vdp_stiff_span,
+    write_bench_json, BenchRecord, Summary,
 };
 use rode::coordinator::{
     Coordinator, DynamicBatcher, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
@@ -241,6 +243,88 @@ fn bench_straggler() {
     }
 }
 
+/// The stiffness sweep: a VdP μ sweep comparing the implicit TR-BDF2
+/// method against explicit Dopri5 — wall time, steps-to-solve and the
+/// per-instance dynamics-evaluation accounting (including the implicit
+/// method's `n_jac_evals`/`n_lu_factor`). At μ = 10 the problem is
+/// non-stiff and the explicit method should win; by μ = 100 the
+/// stability cap on the explicit step has flipped the ranking; at
+/// μ = 1000 the explicit solver exhausts its step budget (recorded as
+/// `explicit_success = 0`) while the implicit method strolls through —
+/// the wall the implicit subsystem removes. Appends
+/// `stiffsweep-mu{μ}` records to `BENCH_solver.json`
+/// (`speedup_vs_explicit` carries advisory floors in
+/// `BENCH_baseline.json` for the μ where the explicit method finishes).
+fn bench_stiffsweep() {
+    println!("--- stiffsweep (batch 16 VdP, trbdf2 vs dopri5, tol 1e-6/1e-4) ---");
+    let batch = 16;
+    let mut records = Vec::new();
+    for &mu in &[10.0f64, 100.0, 1000.0] {
+        let sys = rode::problems::VdP::uniform(batch, mu);
+        let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
+        let t1 = vdp_stiff_span(mu);
+        let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 8);
+
+        let mut run = |method: Method, max_steps: usize, warmup: usize, reps: usize| {
+            let opts = SolveOptions::new(method).with_tols(1e-6, 1e-4).with_max_steps(max_steps);
+            let mut steps = 0u64;
+            let mut fevals = 0u64;
+            let mut jacs = 0u64;
+            let mut success = true;
+            let xs = time_repeats(warmup, reps, || {
+                let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+                success = sol.all_success();
+                steps = sol.max_steps();
+                fevals = sol.stats[0].n_f_evals;
+                jacs = sol.stats[0].n_jac_evals;
+                std::hint::black_box(sol.ys_flat()[0]);
+            });
+            (Summary::from_samples(&xs), steps, fevals, jacs, success)
+        };
+
+        let (s_imp, steps_imp, fe_imp, jac_imp, ok_imp) = run(Method::Trbdf2, 500_000, 1, 3);
+        assert!(ok_imp, "mu={mu}: implicit must solve the sweep");
+        // The explicit leg gets a bounded budget, probed once: at
+        // μ = 1000 it cannot finish inside it (stability caps dt ~ 1e-3
+        // over a span of 400), and re-timing a known budget-exhausting
+        // failure would just burn CI time — only a successful leg is
+        // re-run for a fair timing.
+        let probe = run(Method::Dopri5, 200_000, 0, 1);
+        let (s_exp, steps_exp, fe_exp, _, ok_exp) =
+            if probe.4 { run(Method::Dopri5, 200_000, 1, 3) } else { probe };
+        let speedup = s_exp.mean / s_imp.mean;
+        // Only a successful explicit leg yields a meaningful ratio; a
+        // failed probe's wall time is just its budget burning down.
+        let speedup_txt =
+            if ok_exp { format!("x{speedup:.2}") } else { "n/a (explicit failed)".to_string() };
+        println!(
+            "mu={mu:<6} trbdf2 {:>9.2} ms ({steps_imp:>6} steps, {fe_imp:>8} f, \
+             {jac_imp:>5} jac) | dopri5 {:>9.2} ms ({steps_exp:>6} steps, {fe_exp:>8} f, \
+             success={ok_exp}) | {speedup_txt}",
+            s_imp.mean,
+            s_exp.mean
+        );
+        let mut rec = BenchRecord::new(&format!("stiffsweep-mu{mu}"), &s_imp)
+            .field("mu", mu)
+            .field("batch", batch as f64)
+            .field("t1", t1)
+            .field("implicit_steps", steps_imp as f64)
+            .field("implicit_f_evals", fe_imp as f64)
+            .field("implicit_jac_evals", jac_imp as f64)
+            .field("explicit_ms", s_exp.mean)
+            .field("explicit_steps", steps_exp as f64)
+            .field("explicit_success", if ok_exp { 1.0 } else { 0.0 });
+        if ok_exp {
+            rec = rec.field("speedup_vs_explicit", speedup);
+        }
+        records.push(rec);
+    }
+    match append_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => println!("appended {} stiffsweep records to BENCH_solver.json", records.len()),
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name || a == "all");
@@ -255,5 +339,8 @@ fn main() {
     }
     if want("straggler") {
         bench_straggler();
+    }
+    if want("stiffsweep") {
+        bench_stiffsweep();
     }
 }

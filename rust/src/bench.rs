@@ -186,6 +186,30 @@ impl<'a> OdeSystem for TimedSystem<'a> {
     fn has_vjp(&self) -> bool {
         self.inner.has_vjp()
     }
+
+    fn has_jac(&self) -> bool {
+        self.inner.has_jac()
+    }
+
+    fn jac_inst(&self, inst: usize, t: f64, y: &[f64], jac: &mut [f64]) {
+        let start = Instant::now();
+        self.inner.jac_inst(inst, t, y, jac);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+    }
+
+    fn jac_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        let start = Instant::now();
+        self.inner.jac_rows(offset, n, t, y, jac, rows);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+    }
 }
 
 /// One solve measured the paper's way.
@@ -241,6 +265,17 @@ pub fn straggler_workload(
     let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
     let grid = crate::solver::TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
     (sys, y0, grid)
+}
+
+/// Integration span for a stiff Van der Pol workload starting at
+/// y0 = (2, 0): `0.4·μ`, clamped to `[4, 400]`. The first fast
+/// relaxation jump happens near `t ≈ μ(3/2 − ln 2) ≈ 0.81μ`, so this
+/// keeps the endpoint on the smooth slow branch where final-state
+/// comparisons are well-conditioned. Shared by the `stiffsweep` bench
+/// and `tests/stiff_regression.rs`, so the committed stiffness floors
+/// and the regression suite always measure the same window.
+pub fn vdp_stiff_span(mu: f64) -> f64 {
+    (0.4 * mu).clamp(4.0, 400.0)
 }
 
 /// One machine-readable benchmark record for `BENCH_solver.json`.

@@ -183,7 +183,8 @@ impl ExecPolicy {
 /// Top-level service configuration (CLI flags override file values).
 #[derive(Debug, Clone)]
 pub struct RodeConfig {
-    /// Runge–Kutta method (`method` key; e.g. `dopri5`, `tsit5`).
+    /// Runge–Kutta method (`method` key; e.g. `dopri5`, `tsit5`, or the
+    /// implicit `trbdf2` for stiff workloads).
     pub method: Method,
     /// Absolute tolerance (`atol` key).
     pub atol: f64,
@@ -307,6 +308,13 @@ mod tests {
         assert_eq!(cfg.engine, "aot");
         // Unset keys keep defaults.
         assert_eq!(cfg.rtol, 1e-5);
+    }
+
+    #[test]
+    fn implicit_method_key_parses() {
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("method = trbdf2").unwrap()).unwrap();
+        assert_eq!(cfg.method, Method::Trbdf2);
+        assert!(cfg.method.is_implicit());
     }
 
     #[test]

@@ -231,6 +231,7 @@ impl SolveEngine for AotEngine {
                         n_accepted: n_accepted[i] as u64,
                         n_f_evals: n_f_evals[i] as u64,
                         n_initialized: e_req as u64,
+                        ..Default::default()
                     },
                     status: if status[i] == 0.0 {
                         Status::Success

@@ -173,6 +173,28 @@ impl<S: OdeSystem + ?Sized> OdeSystem for OffsetSystem<'_, S> {
     ) {
         self.inner.f_rows(self.offset, y.batch(), t, y.flat(), dy.flat_mut(), active)
     }
+
+    fn has_jac(&self) -> bool {
+        self.inner.has_jac()
+    }
+
+    fn jac_inst(&self, inst: usize, t: f64, y: &[f64], jac: &mut [f64]) {
+        self.inner.jac_inst(self.offset + inst, t, y, jac)
+    }
+
+    fn jac_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        // Composes like `f_rows`, so the implicit solver's analytic
+        // Jacobian hook works unchanged inside a shard worker.
+        self.inner.jac_rows(self.offset + offset, n, t, y, jac, rows)
+    }
 }
 
 /// Contiguous near-equal row shards: `min(shards, batch)` ranges whose
@@ -226,6 +248,10 @@ fn workspace_views<'w>(
     let mut err_it = split_chunks(ws.err.flat_mut(), &sizes).into_iter();
     let mut ts_it = split_chunks(&mut ws.t_stage[..], &row_sizes).into_iter();
     let mut cold_it = split_chunks(&mut ws.cold[..], &row_sizes).into_iter();
+    // Implicit workspaces carry per-slot Newton state; each view gets its
+    // own disjoint range of it (per-row Jacobian/LU blocks shard exactly
+    // like the stage buffers).
+    let mut newton_it = ws.newton.as_mut().map(|nw| nw.split_views(bounds).into_iter());
 
     let mut views: Vec<RkRows<'w>> = Vec::with_capacity(bounds.len());
     for &(lo, hi) in bounds {
@@ -241,6 +267,7 @@ fn workspace_views<'w>(
             err: err_it.next().unwrap(),
             t_stage: ts_it.next().unwrap(),
             cold: cold_it.next().unwrap(),
+            newton: newton_it.as_mut().map(|it| it.next().unwrap()),
         });
     }
     views
@@ -364,8 +391,13 @@ fn parallel_stealing<S: OdeSystem + Sync>(
 /// — a per-row property, so the max is invariant to the partition), so
 /// the merged count is `base + Σ_n max_ranges per_iter[n]` — exactly the
 /// serial loop's number, whether the ranges came from [`shard_bounds`]
-/// or [`chunk_bounds`]. Ranges are always iterated in index order, so
-/// the merge itself is scheduling-independent.
+/// or [`chunk_bounds`]. Under an implicit method each row's `n_f_evals`
+/// additionally carries its own Newton/FD evaluations on top of the
+/// shard's uniform count; that excess is a pure per-row property
+/// (`n_jac_evals`/`n_lu_factor` likewise), so the merge re-bases it onto
+/// the global uniform count and the result is exactly the serial
+/// loop's, whatever the partition. Ranges are always iterated in index
+/// order, so the merge itself is scheduling-independent.
 fn merge_sharded(
     bounds: &[(usize, usize)],
     results: &[(Solution, CallLedger)],
@@ -378,20 +410,8 @@ fn merge_sharded(
     let mut trace: Option<Vec<Vec<(f64, f64)>>> =
         if record_trace { Some(vec![Vec::new(); batch]) } else { None };
 
-    for (&(lo, _hi), (shard, _)) in bounds.iter().zip(results) {
-        for r in 0..shard.batch() {
-            let i = lo + r;
-            for e in 0..n_eval {
-                sol.y_mut(i, e).copy_from_slice(shard.y(r, e));
-            }
-            sol.status[i] = shard.status[r];
-            sol.stats[i] = shard.stats[r].clone();
-            if let (Some(tr), Some(st)) = (trace.as_mut(), shard.trace.as_ref()) {
-                tr[i] = st[r].clone();
-            }
-        }
-    }
-
+    // Uniform batched-call reconstruction: the global loop's count is
+    // base + Σ_iter max over ranges.
     let base = results.first().map_or(0, |(_, l)| l.base);
     debug_assert!(
         results.iter().all(|(_, l)| l.base == base),
@@ -406,8 +426,26 @@ fn merge_sharded(
             .max()
             .unwrap_or(0);
     }
-    for st in sol.stats.iter_mut() {
-        st.n_f_evals = total;
+
+    for (&(lo, _hi), (shard, ledger)) in bounds.iter().zip(results) {
+        // A shard's own uniform count; anything a row's `n_f_evals`
+        // carries beyond it is per-row Newton work (implicit methods),
+        // which is partition-invariant and rides the merge unchanged on
+        // top of the globally reconstructed uniform count.
+        let shard_total: u64 = ledger.base + ledger.per_iter.iter().sum::<u64>();
+        for r in 0..shard.batch() {
+            let i = lo + r;
+            for e in 0..n_eval {
+                sol.y_mut(i, e).copy_from_slice(shard.y(r, e));
+            }
+            sol.status[i] = shard.status[r];
+            let mut st = shard.stats[r].clone();
+            st.n_f_evals = total + (st.n_f_evals - shard_total);
+            sol.stats[i] = st;
+            if let (Some(tr), Some(stt)) = (trace.as_mut(), shard.trace.as_ref()) {
+                tr[i] = stt[r].clone();
+            }
+        }
     }
 
     sol.trace = trace;

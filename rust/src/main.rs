@@ -282,7 +282,9 @@ fn main() -> Result<()> {
                 "rode — parallel ODE solver stack (torchode reproduction)\n\n\
                  usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
-                 \n                   (--threads N shards the batch over N workers; 0 = all cores;\
+                 \n                   (--method euler|..|dopri5|tsit5|trbdf2 — trbdf2 is the\
+                 \n                    implicit (stiff) method;\
+                 \n                    --threads N shards the batch over N workers; 0 = all cores;\
                  \n                    --pool serial|scoped|persistent selects the worker pool;\
                  \n                    --steal-chunk R sets the work-stealing chunk size in rows,\
                  \n                    0 = heuristic (persistent pool only);\

@@ -14,6 +14,7 @@ mod fen;
 mod linear;
 mod lotka;
 mod oscillators;
+mod robertson;
 mod vdp;
 
 pub use cnf::CnfDynamics;
@@ -21,6 +22,7 @@ pub use fen::{FenDynamics, Mesh};
 pub use linear::{ExponentialDecay, LinearSystem};
 pub use lotka::LotkaVolterra;
 pub use oscillators::{Brusselator, Pendulum};
+pub use robertson::Robertson;
 pub use vdp::VdP;
 
 use crate::tensor::BatchVec;
@@ -110,6 +112,62 @@ pub trait OdeSystem {
     /// [`OdeSystem::f_rows`] over the full row range.
     fn f_batch(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
         self.f_rows(0, y.batch(), t, y.flat(), dy.flat_mut(), active);
+    }
+
+    /// Whether an analytic Jacobian is available through
+    /// [`OdeSystem::jac_rows`]. When `false` (the default) the implicit
+    /// solver ([`crate::solver::implicit`]) builds Jacobians by forward
+    /// differences against the step-start slope instead.
+    fn has_jac(&self) -> bool {
+        false
+    }
+
+    /// Analytic Jacobian `∂f/∂y` of instance `inst` at `(t, y)`, written
+    /// row-major into `jac` (`dim × dim`). Only required when
+    /// [`OdeSystem::has_jac`] returns `true`; the default panics.
+    fn jac_inst(&self, _inst: usize, _t: f64, _y: &[f64], _jac: &mut [f64]) {
+        unimplemented!("system does not provide an analytic Jacobian (has_jac() is false)")
+    }
+
+    /// Jacobians for the contiguous instance range `[offset, offset+n)`:
+    /// block `r` of `jac` (a `dim²` row-major block) receives `∂f/∂y` at
+    /// `(t[r], y[r])` for instance `offset + r`. `rows` restricts the
+    /// fill to the listed local rows (`None` = all). This is the analytic
+    /// hook the implicit solver drives — per-row results must be
+    /// independent and deterministic so sharded implicit solves stay
+    /// bitwise-identical to serial ones. Delegates to
+    /// [`OdeSystem::jac_inst`] by default.
+    fn jac_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        let dim = self.dim();
+        let dd = dim * dim;
+        let mut fill = |r: usize| {
+            self.jac_inst(
+                offset + r,
+                t[r],
+                &y[r * dim..(r + 1) * dim],
+                &mut jac[r * dd..(r + 1) * dd],
+            )
+        };
+        match rows {
+            Some(idx) => {
+                for &r in idx {
+                    fill(r);
+                }
+            }
+            None => {
+                for r in 0..n {
+                    fill(r);
+                }
+            }
+        }
     }
 
     /// Vector-Jacobian products for the adjoint method:

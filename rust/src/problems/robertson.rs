@@ -1,0 +1,138 @@
+//! The Robertson chemical kinetics problem — the classic stiff benchmark
+//! (Robertson 1966; Hairer & Wanner's first "stiff test problem").
+//!
+//! Three species with reaction rates spanning nine orders of magnitude:
+//!
+//! ```text
+//! y₁' = −k₁ y₁ + k₃ y₂ y₃
+//! y₂' =  k₁ y₁ − k₃ y₂ y₃ − k₂ y₂²
+//! y₃' =  k₂ y₂²
+//! ```
+//!
+//! with the classic constants `k₁ = 0.04`, `k₂ = 3·10⁷`, `k₃ = 10⁴` and
+//! `y(0) = (1, 0, 0)`. The fast transient pulls `y₂` to ~3.6·10⁻⁵ almost
+//! immediately; afterwards the Jacobian has an eigenvalue around `−10⁴`,
+//! which caps an explicit solver's stable step at ~10⁻⁴ forever while an
+//! L-stable implicit method steps right over it. Mass is conserved
+//! (`y₁ + y₂ + y₃ ≡ 1`) — a free accuracy check the stiff regression
+//! suite asserts.
+//!
+//! The analytic Jacobian is provided through the
+//! [`OdeSystem::jac_rows`] hook, exercising the implicit solver's
+//! analytic path (Van der Pol covers it too; systems without the hook
+//! fall back to finite differences).
+
+use super::OdeSystem;
+
+/// Classic rate constant k₁ (slow decay of y₁).
+pub const K1: f64 = 0.04;
+/// Classic rate constant k₂ (fast y₂² recombination).
+pub const K2: f64 = 3.0e7;
+/// Classic rate constant k₃ (y₂y₃ back-reaction).
+pub const K3: f64 = 1.0e4;
+
+/// A batch of identical Robertson kinetics instances (the classic
+/// constants; the stiffness lives in the dynamics, not in per-instance
+/// parameters).
+#[derive(Debug, Clone)]
+pub struct Robertson {
+    batch: usize,
+}
+
+impl Robertson {
+    /// `batch` identical instances.
+    pub fn new(batch: usize) -> Self {
+        assert!(batch >= 1);
+        Self { batch }
+    }
+
+    /// Number of instances this system was built for (informational —
+    /// the dynamics are instance-independent).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The classic initial condition `(1, 0, 0)`.
+    pub fn y0() -> [f64; 3] {
+        [1.0, 0.0, 0.0]
+    }
+}
+
+impl OdeSystem for Robertson {
+    fn dim(&self) -> usize {
+        3
+    }
+
+    #[inline]
+    fn f_inst(&self, _inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let (y1, y2, y3) = (y[0], y[1], y[2]);
+        let r1 = K1 * y1;
+        let r2 = K2 * y2 * y2;
+        let r3 = K3 * y2 * y3;
+        dy[0] = -r1 + r3;
+        dy[1] = r1 - r3 - r2;
+        dy[2] = r2;
+    }
+
+    fn has_jac(&self) -> bool {
+        true
+    }
+
+    fn jac_inst(&self, _inst: usize, _t: f64, y: &[f64], jac: &mut [f64]) {
+        let (y2, y3) = (y[1], y[2]);
+        // Row-major ∂f_i/∂y_j.
+        jac[0] = -K1;
+        jac[1] = K3 * y3;
+        jac[2] = K3 * y2;
+        jac[3] = K1;
+        jac[4] = -K3 * y3 - 2.0 * K2 * y2;
+        jac[5] = -K3 * y2;
+        jac[6] = 0.0;
+        jac[7] = 2.0 * K2 * y2;
+        jac[8] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamics_conserve_mass_pointwise() {
+        let sys = Robertson::new(1);
+        let mut dy = [0.0; 3];
+        for y in [[1.0, 0.0, 0.0], [0.7, 3e-5, 0.3], [0.1, 1e-6, 0.9]] {
+            sys.f_inst(0, 0.0, &y, &mut dy);
+            let s: f64 = dy.iter().sum();
+            assert!(s.abs() < 1e-12, "Σdy = {s} for {y:?}");
+        }
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        let sys = Robertson::new(1);
+        let y = [0.7, 3.0e-5, 0.3 - 3.0e-5];
+        let mut jac = [0.0; 9];
+        sys.jac_inst(0, 0.0, &y, &mut jac);
+        let mut fp = [0.0; 3];
+        let mut fm = [0.0; 3];
+        let mut yy = y;
+        for j in 0..3 {
+            let h = 1e-7 * (1.0 + y[j].abs());
+            yy[j] = y[j] + h;
+            sys.f_inst(0, 0.0, &yy, &mut fp);
+            yy[j] = y[j] - h;
+            sys.f_inst(0, 0.0, &yy, &mut fm);
+            yy[j] = y[j];
+            for i in 0..3 {
+                let fd = (fp[i] - fm[i]) / (2.0 * h);
+                let scale = 1.0 + fd.abs();
+                assert!(
+                    (jac[i * 3 + j] - fd).abs() < 1e-4 * scale,
+                    "J[{i}][{j}] = {} vs fd {fd}",
+                    jac[i * 3 + j]
+                );
+            }
+        }
+    }
+}

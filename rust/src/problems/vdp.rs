@@ -79,6 +79,22 @@ impl OdeSystem for VdP {
     fn has_vjp(&self) -> bool {
         true
     }
+
+    fn has_jac(&self) -> bool {
+        true
+    }
+
+    fn jac_inst(&self, inst: usize, _t: f64, y: &[f64], jac: &mut [f64]) {
+        let mu = self.mu(inst);
+        let (x, v) = (y[0], y[1]);
+        // J = [[0, 1], [-2μxv - 1, μ(1 - x²)]] — the matrix the implicit
+        // solver's Newton iteration factors; at large μ its stiff
+        // eigenvalue ~ μ(1 - x²) is what breaks explicit methods.
+        jac[0] = 0.0;
+        jac[1] = 1.0;
+        jac[2] = -2.0 * mu * x * v - 1.0;
+        jac[3] = mu * (1.0 - x * x);
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +166,24 @@ mod tests {
         VdP::uniform(1, 2.5 - h).f_inst(0, 0.0, &y, &mut fm);
         let fd = a[0] * (fp[0] - fm[0]) / (2.0 * h) + a[1] * (fp[1] - fm[1]) / (2.0 * h);
         assert!((out_p[0] - fd).abs() < 1e-5);
+    }
+
+    #[test]
+    fn jac_matches_vjp_rows() {
+        // aᵀJ from vjp_inst must agree with the explicit Jacobian.
+        let sys = VdP::uniform(1, 3.5);
+        let y = [0.7, -1.2];
+        let mut jac = [0.0; 4];
+        sys.jac_inst(0, 0.0, &y, &mut jac);
+        for a in [[1.0, 0.0], [0.0, 1.0], [0.3, -2.0]] {
+            let mut out_y = [0.0; 2];
+            let mut out_p = [0.0; 1];
+            sys.vjp_inst(0, 0.0, &y, &a, &mut out_y, &mut out_p);
+            for j in 0..2 {
+                let want = a[0] * jac[j] + a[1] * jac[2 + j];
+                assert!((out_y[j] - want).abs() < 1e-12, "col {j}");
+            }
+        }
     }
 
     #[test]

@@ -88,6 +88,11 @@ pub fn rk_forward_tape(
     method: super::Method,
 ) -> RkTape {
     let tab = method.tableau();
+    assert!(
+        tab.diag.is_empty(),
+        "discretize-then-differentiate backprop only supports explicit methods, got {}",
+        tab.name
+    );
     let ct = CompiledTableau::cached(method);
     let batch = y0.batch();
     let dim = y0.dim();

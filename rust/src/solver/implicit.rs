@@ -1,0 +1,827 @@
+//! The implicit (ESDIRK) stage solver — the stiff-capable counterpart of
+//! the explicit attempt in [`super::step`].
+//!
+//! An ESDIRK tableau ([`super::tableau::TRBDF2`]) has an explicit first
+//! stage and implicit later stages: stage `s` must satisfy
+//!
+//! ```text
+//! z_s = y + h·Σ_{j<s} a_sj k_j  +  h·γ·f(t + c_s h, z_s),      γ = diag[s]
+//! ```
+//!
+//! solved here by **simplified Newton iteration per row**: the iteration
+//! matrix `M = I − hγJ` uses a Jacobian `J ≈ ∂f/∂y` frozen at the step
+//! start (finite differences by default, the analytic
+//! [`crate::problems::OdeSystem::jac_rows`] hook when provided), and its
+//! LU factors are **reused across stages and across steps** until they go
+//! stale (Jacobian older than [`JAC_MAX_AGE`] attempts, `hγ` drifted more
+//! than [`LU_HG_DRIFT`], or a Newton failure). The converged stage slope
+//! is recovered algebraically (`k_s = (z_s − rhs)/(hγ)`) so convergence
+//! costs one dynamics evaluation per Newton iteration and none extra.
+//!
+//! **Divergence feeds the rejection path, not a dt death spiral**: when
+//! the iteration fails ([`NEWTON_MAX_ITERS`] exhausted, the increment
+//! growing faster than [`NEWTON_DIV_RATE`], a singular iteration matrix,
+//! or a non-finite increment) under a *reused* Jacobian, the attempt
+//! first retries once at the same step size with a Jacobian rebuilt at
+//! the current `(t, y)` (the RADAU5/CVODE stale-Jacobian recovery).
+//! Only a failure with a fresh Jacobian clears the row's `ok` flag, and
+//! the solve loops then treat the attempt as a rejected step with the
+//! hard shrink factor [`NEWTON_REJECT_FACTOR`] — the controller's
+//! `DtUnderflow` safeguard still applies if Newton keeps failing at the
+//! minimum step, and fixed-step solves (no controller to recover with)
+//! fail outright with `Status::NewtonDiverged`.
+//!
+//! The embedded error estimate is **filtered** through the same LU
+//! (`ê = (I − hγJ)⁻¹ · h·Σ b_err k`, Hosea & Shampine 1996): the raw
+//! difference against the 3rd-order companion overestimates the error in
+//! the stiff limit and would reject steps the L-stable solution handles
+//! fine.
+//!
+//! ## Determinism and accounting
+//!
+//! Everything here is **per-row**: each row's Newton history (Jacobian,
+//! LU, ages, counters) lives in slot-indexed scratch inside
+//! [`super::step::RkWorkspace`], moves with the row under active-set
+//! compaction, and depends on nothing outside the row. That is what
+//! keeps implicit solves bitwise-identical across pool kinds, thread
+//! counts, steal-chunk sizes and workspace layouts (the implicit attempt
+//! is layout-blind — there are no lane passes to transpose for).
+//!
+//! Work is accounted per row too: Newton residual and finite-difference
+//! evaluations accumulate into per-slot counters that the solve loops
+//! fold into `Stats::n_f_evals` (so `n_f_evals` is *not* uniform across
+//! a batch under an implicit method — each row pays for its own
+//! iterations), and Jacobian builds / LU factorizations land in the new
+//! `Stats::n_jac_evals` / `Stats::n_lu_factor`. All three are per-row
+//! properties, so the pooled merges reproduce them exactly whatever the
+//! partition (`crate::exec::merge_sharded` reconstructs the uniform
+//! batched-call part from the ledger and carries the per-row Newton part
+//! through unchanged).
+
+#![warn(missing_docs)]
+
+use super::active::ActiveSet;
+use super::linalg;
+use super::step::{
+    accumulate_stage_row, combine_rows_fused, CompiledTableau, RkRows, RkWorkspace, MAX_STAGES,
+};
+use super::Tolerances;
+use crate::problems::OdeSystem;
+use crate::tensor::BatchVec;
+
+/// Maximum simplified-Newton iterations per implicit stage before the
+/// attempt is declared failed for the row.
+pub const NEWTON_MAX_ITERS: usize = 10;
+
+/// Convergence threshold on the tolerance-scaled RMS of the Newton
+/// increment: iteration stops once
+/// `rms(δ_d / (atol + rtol·|z_d|)) ≤ NEWTON_TOL`, keeping the Newton
+/// error well below the local truncation error the controller sees.
+pub const NEWTON_TOL: f64 = 0.03;
+
+/// Divergence threshold: an increment growing by more than this factor
+/// over the previous iteration aborts the stage solve.
+pub const NEWTON_DIV_RATE: f64 = 2.0;
+
+/// Attempts a row's Jacobian may age before a forced refresh.
+pub const JAC_MAX_AGE: u32 = 20;
+
+/// Relative drift of `hγ` (against the value the LU was factored with)
+/// that forces a refactorization; smaller drifts reuse the LU as a
+/// quasi-Newton matrix.
+pub const LU_HG_DRIFT: f64 = 0.2;
+
+/// Step-size factor the solve loops apply when Newton diverges — the
+/// "reject hard and retry smaller" path, mirroring the controller's
+/// non-finite-error shrink.
+pub const NEWTON_REJECT_FACTOR: f64 = 0.25;
+
+/// Per-solve Newton state: slot-indexed scratch plus the cross-step
+/// Jacobian/LU reuse bookkeeping, allocated once by
+/// [`RkWorkspace::new_for_tableau`] — the steady state of an implicit
+/// solve performs zero heap allocations (`tests/alloc_regression.rs`).
+pub(crate) struct NewtonWs {
+    dim: usize,
+    /// Per-slot Jacobian `J ≈ ∂f/∂y`, row-major `dim × dim` blocks.
+    jac: Vec<f64>,
+    /// Per-slot LU factors of `I − hγJ`.
+    lu: Vec<f64>,
+    /// Per-slot pivot indices of the LU.
+    piv: Vec<usize>,
+    /// The `hγ` each slot's LU was factored with (`NaN` = invalid).
+    lu_hg: Vec<f64>,
+    /// Whether each slot's Jacobian is usable.
+    jac_valid: Vec<bool>,
+    /// Attempts since each slot's Jacobian was built.
+    jac_age: Vec<u32>,
+    /// Newton outcome of each slot's last attempt.
+    ok: Vec<bool>,
+    /// Per-attempt accumulators, folded into `Stats` (and reset) by the
+    /// solve loops after every attempt.
+    fevals: Vec<u64>,
+    jacs: Vec<u64>,
+    lus: Vec<u64>,
+    /// Per-slot stage iterate / dynamics / increment / FD scratch rows.
+    z: Vec<f64>,
+    fz: Vec<f64>,
+    del: Vec<f64>,
+    pert: Vec<f64>,
+    /// Per-slot tolerances (sliced per shard, moved under compaction).
+    atol: Vec<f64>,
+    rtol: Vec<f64>,
+}
+
+impl NewtonWs {
+    /// Fresh Newton state for `batch` slots of dimension `dim`.
+    pub(crate) fn new(batch: usize, dim: usize, tols: &Tolerances) -> Self {
+        Self {
+            dim,
+            jac: vec![0.0; batch * dim * dim],
+            lu: vec![0.0; batch * dim * dim],
+            piv: vec![0; batch * dim],
+            lu_hg: vec![f64::NAN; batch],
+            jac_valid: vec![false; batch],
+            jac_age: vec![0; batch],
+            ok: vec![true; batch],
+            fevals: vec![0; batch],
+            jacs: vec![0; batch],
+            lus: vec![0; batch],
+            z: vec![0.0; batch * dim],
+            fz: vec![0.0; batch * dim],
+            del: vec![0.0; batch * dim],
+            pert: vec![0.0; batch * dim],
+            atol: (0..batch).map(|i| tols.atol(i)).collect(),
+            rtol: (0..batch).map(|i| tols.rtol(i)).collect(),
+        }
+    }
+
+    /// Whether slot `r`'s last Newton attempt converged.
+    #[inline]
+    pub(crate) fn newton_ok(&self, r: usize) -> bool {
+        self.ok[r]
+    }
+
+    /// Whether any slot's last attempt failed (the joint loop's shared
+    /// reject condition).
+    pub(crate) fn any_failed(&self) -> bool {
+        self.ok.iter().any(|&o| !o)
+    }
+
+    /// Drain slot `r`'s per-attempt work counters:
+    /// `(f_evals, jac_builds, lu_factorizations)`.
+    #[inline]
+    pub(crate) fn take_work(&mut self, r: usize) -> (u64, u64, u64) {
+        let w = (self.fevals[r], self.jacs[r], self.lus[r]);
+        self.fevals[r] = 0;
+        self.jacs[r] = 0;
+        self.lus[r] = 0;
+        w
+    }
+
+    /// Move slot `src`'s persistent Newton state to `dst` (active-set
+    /// compaction). The per-attempt scratch rows (`z`/`fz`/`del`/`pert`)
+    /// are never read before being written within an attempt, so only
+    /// the cross-step state moves.
+    pub(crate) fn compact_move(&mut self, dst: usize, src: usize) {
+        let dd = self.dim * self.dim;
+        self.jac.copy_within(src * dd..(src + 1) * dd, dst * dd);
+        self.lu.copy_within(src * dd..(src + 1) * dd, dst * dd);
+        self.piv.copy_within(src * self.dim..(src + 1) * self.dim, dst * self.dim);
+        self.lu_hg[dst] = self.lu_hg[src];
+        self.jac_valid[dst] = self.jac_valid[src];
+        self.jac_age[dst] = self.jac_age[src];
+        self.ok[dst] = self.ok[src];
+        self.fevals[dst] = self.fevals[src];
+        self.jacs[dst] = self.jacs[src];
+        self.lus[dst] = self.lus[src];
+        self.atol[dst] = self.atol[src];
+        self.rtol[dst] = self.rtol[src];
+    }
+
+    /// The whole-batch mutable view (the serial attempt's shape).
+    pub(crate) fn view_mut(&mut self) -> NewtonRows<'_> {
+        NewtonRows {
+            jac: &mut self.jac,
+            lu: &mut self.lu,
+            piv: &mut self.piv,
+            lu_hg: &mut self.lu_hg,
+            jac_valid: &mut self.jac_valid,
+            jac_age: &mut self.jac_age,
+            ok: &mut self.ok,
+            fevals: &mut self.fevals,
+            jacs: &mut self.jacs,
+            lus: &mut self.lus,
+            z: &mut self.z,
+            fz: &mut self.fz,
+            del: &mut self.del,
+            pert: &mut self.pert,
+            atol: &mut self.atol,
+            rtol: &mut self.rtol,
+        }
+    }
+
+    /// Disjoint per-range views for the sharded joint executors, one per
+    /// entry of `bounds` — the Newton analogue of
+    /// `crate::exec`'s workspace views.
+    pub(crate) fn split_views(&mut self, bounds: &[(usize, usize)]) -> Vec<NewtonRows<'_>> {
+        let dim = self.dim;
+        let dd = dim * dim;
+        let sz_dd: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * dd).collect();
+        let sz_d: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
+        let sz_r: Vec<usize> = bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+        let mut jac = split_mut(&mut self.jac, &sz_dd).into_iter();
+        let mut lu = split_mut(&mut self.lu, &sz_dd).into_iter();
+        let mut piv = split_mut(&mut self.piv, &sz_d).into_iter();
+        let mut lu_hg = split_mut(&mut self.lu_hg, &sz_r).into_iter();
+        let mut jac_valid = split_mut(&mut self.jac_valid, &sz_r).into_iter();
+        let mut jac_age = split_mut(&mut self.jac_age, &sz_r).into_iter();
+        let mut ok = split_mut(&mut self.ok, &sz_r).into_iter();
+        let mut fevals = split_mut(&mut self.fevals, &sz_r).into_iter();
+        let mut jacs = split_mut(&mut self.jacs, &sz_r).into_iter();
+        let mut lus = split_mut(&mut self.lus, &sz_r).into_iter();
+        let mut z = split_mut(&mut self.z, &sz_d).into_iter();
+        let mut fz = split_mut(&mut self.fz, &sz_d).into_iter();
+        let mut del = split_mut(&mut self.del, &sz_d).into_iter();
+        let mut pert = split_mut(&mut self.pert, &sz_d).into_iter();
+        let mut atol = split_mut(&mut self.atol, &sz_r).into_iter();
+        let mut rtol = split_mut(&mut self.rtol, &sz_r).into_iter();
+        bounds
+            .iter()
+            .map(|_| NewtonRows {
+                jac: jac.next().unwrap(),
+                lu: lu.next().unwrap(),
+                piv: piv.next().unwrap(),
+                lu_hg: lu_hg.next().unwrap(),
+                jac_valid: jac_valid.next().unwrap(),
+                jac_age: jac_age.next().unwrap(),
+                ok: ok.next().unwrap(),
+                fevals: fevals.next().unwrap(),
+                jacs: jacs.next().unwrap(),
+                lus: lus.next().unwrap(),
+                z: z.next().unwrap(),
+                fz: fz.next().unwrap(),
+                del: del.next().unwrap(),
+                pert: pert.next().unwrap(),
+                atol: atol.next().unwrap(),
+                rtol: rtol.next().unwrap(),
+            })
+            .collect()
+    }
+}
+
+/// Split a flat buffer into consecutive chunks of the given sizes
+/// (local twin of `crate::exec`'s `split_chunks`, kept here so the
+/// solver layer does not depend on the exec layer).
+fn split_mut<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let (chunk, rest) = s.split_at_mut(n);
+        out.push(chunk);
+        s = rest;
+    }
+    out
+}
+
+/// A mutable row-range view of [`NewtonWs`]: the Newton state a worker
+/// owns during a sharded implicit attempt. Indexed locally — row `r` of
+/// the view is slot `offset + r` of the solve.
+pub(crate) struct NewtonRows<'a> {
+    jac: &'a mut [f64],
+    lu: &'a mut [f64],
+    piv: &'a mut [usize],
+    lu_hg: &'a mut [f64],
+    jac_valid: &'a mut [bool],
+    jac_age: &'a mut [u32],
+    ok: &'a mut [bool],
+    fevals: &'a mut [u64],
+    jacs: &'a mut [u64],
+    lus: &'a mut [u64],
+    z: &'a mut [f64],
+    fz: &'a mut [f64],
+    del: &'a mut [f64],
+    pert: &'a mut [f64],
+    atol: &'a mut [f64],
+    rtol: &'a mut [f64],
+}
+
+impl NewtonRows<'_> {
+    /// The per-row working set of local row `r`.
+    fn row(&mut self, r: usize, dim: usize) -> RowNewton<'_> {
+        let dd = dim * dim;
+        RowNewton {
+            jac: &mut self.jac[r * dd..(r + 1) * dd],
+            lu: &mut self.lu[r * dd..(r + 1) * dd],
+            piv: &mut self.piv[r * dim..(r + 1) * dim],
+            lu_hg: &mut self.lu_hg[r],
+            jac_valid: &mut self.jac_valid[r],
+            jac_age: &mut self.jac_age[r],
+            ok: &mut self.ok[r],
+            fevals: &mut self.fevals[r],
+            jacs: &mut self.jacs[r],
+            lus: &mut self.lus[r],
+            z: &mut self.z[r * dim..(r + 1) * dim],
+            fz: &mut self.fz[r * dim..(r + 1) * dim],
+            del: &mut self.del[r * dim..(r + 1) * dim],
+            pert: &mut self.pert[r * dim..(r + 1) * dim],
+            atol: self.atol[r],
+            rtol: self.rtol[r],
+        }
+    }
+}
+
+/// One row's Newton working set: mutable borrows of the slot's blocks of
+/// [`NewtonWs`].
+struct RowNewton<'a> {
+    jac: &'a mut [f64],
+    lu: &'a mut [f64],
+    piv: &'a mut [usize],
+    lu_hg: &'a mut f64,
+    jac_valid: &'a mut bool,
+    jac_age: &'a mut u32,
+    ok: &'a mut bool,
+    fevals: &'a mut u64,
+    jacs: &'a mut u64,
+    lus: &'a mut u64,
+    z: &'a mut [f64],
+    fz: &'a mut [f64],
+    del: &'a mut [f64],
+    pert: &'a mut [f64],
+    atol: f64,
+    rtol: f64,
+}
+
+/// Mark the row's attempt failed. The LU is always invalidated (the
+/// retry arrives with a smaller `dt`, so `hγ` changes); the Jacobian is
+/// invalidated only when it was *not* built this very attempt — a fresh
+/// one was evaluated at the current `(t, y)` and a rebuild on the retry
+/// would reproduce it bit for bit, wasting the FD evaluations.
+fn fail_row(st: &mut RowNewton<'_>, jac_fresh: bool) {
+    *st.ok = false;
+    if !jac_fresh {
+        *st.jac_valid = false;
+    }
+    *st.lu_hg = f64::NAN;
+}
+
+/// Build the row's Jacobian at the step start `(t, y)`: the analytic
+/// [`OdeSystem::jac_rows`] hook when the system provides one, forward
+/// differences against the warm step-start slope `f0 = k[0]` otherwise
+/// (each FD column costs one dynamics evaluation, accounted to the
+/// row's `fevals`; the build itself increments `jacs`).
+fn build_jacobian(
+    sys: &dyn OdeSystem,
+    g: usize,
+    dim: usize,
+    t: f64,
+    yrow: &[f64],
+    f0: &[f64],
+    st: &mut RowNewton<'_>,
+) {
+    if sys.has_jac() {
+        sys.jac_rows(g, 1, &[t], yrow, st.jac, None);
+    } else {
+        let fd_eps = f64::EPSILON.sqrt();
+        st.pert.copy_from_slice(yrow);
+        for j in 0..dim {
+            let dy = fd_eps * (1.0 + yrow[j].abs());
+            st.pert[j] = yrow[j] + dy;
+            sys.f_rows(g, 1, &[t], st.pert, st.fz, None);
+            *st.fevals += 1;
+            for i in 0..dim {
+                st.jac[i * dim + j] = (st.fz[i] - f0[i]) / dy;
+            }
+            st.pert[j] = yrow[j];
+        }
+    }
+    *st.jacs += 1;
+    *st.jac_valid = true;
+    *st.jac_age = 0;
+}
+
+/// Run the stage solves of one attempt for one row (stages 1..S over
+/// the current LU). Returns `true` when every stage's Newton iteration
+/// converged; on `false` the caller decides between a fresh-Jacobian
+/// retry at the same step size and a failed attempt. Rerunning is safe:
+/// every stage recomputes its `rhs` and predictor from scratch and
+/// `k[0]` is never written.
+#[allow(clippy::too_many_arguments)]
+fn solve_stages_row(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    g: usize,
+    r: usize,
+    dim: usize,
+    t: f64,
+    h: f64,
+    yrow: &[f64],
+    k: &mut [&mut [f64]],
+    rhs: &mut [f64],
+    st: &mut RowNewton<'_>,
+) -> bool {
+    let tab = ct.tab;
+    // Stages 1..S: explicit accumulation of the known part, then the
+    // per-stage Newton solve (or a plain evaluation for an explicit
+    // inner stage, diag[s] = 0 — not present in TR-BDF2 but legal EDIRK
+    // structure).
+    for s in 1..tab.stages {
+        let t_s = t + tab.c[s] * h;
+        let (kprev, krest) = k.split_at_mut(s);
+        accumulate_stage_row(&ct.a_nz[s], kprev, r, dim, h, yrow, rhs);
+        let ks = &mut krest[0][r * dim..(r + 1) * dim];
+        let d_s = tab.diag[s];
+        if d_s == 0.0 {
+            sys.f_rows(g, 1, &[t_s], rhs, ks, None);
+            *st.fevals += 1;
+            continue;
+        }
+        let hd = h * d_s;
+
+        // Predictor: the stage equation with the previous stage's slope,
+        // z₀ = rhs + hγ·k_{s−1} (k₀ = f(t, y) for the first implicit
+        // stage). Deterministic and allocation-free.
+        let kp = &kprev[s - 1][r * dim..(r + 1) * dim];
+        for d in 0..dim {
+            st.z[d] = rhs[d] + hd * kp[d];
+        }
+
+        // Simplified Newton: M·δ = −(z − rhs − hγ·f(t_s, z)), z += δ.
+        let mut prev_eta = f64::INFINITY;
+        let mut converged = false;
+        for it in 0..NEWTON_MAX_ITERS {
+            sys.f_rows(g, 1, &[t_s], st.z, st.fz, None);
+            *st.fevals += 1;
+            for d in 0..dim {
+                st.del[d] = -(st.z[d] - rhs[d] - hd * st.fz[d]);
+            }
+            linalg::lu_solve(st.lu, st.piv, dim, st.del);
+            for d in 0..dim {
+                st.z[d] += st.del[d];
+            }
+            let mut acc = 0.0;
+            for d in 0..dim {
+                let scale = (st.atol + st.rtol * st.z[d].abs()).max(f64::MIN_POSITIVE);
+                let q = st.del[d] / scale;
+                acc += q * q;
+            }
+            let eta = (acc / dim as f64).sqrt();
+            if !eta.is_finite() {
+                break;
+            }
+            if eta <= NEWTON_TOL {
+                converged = true;
+                break;
+            }
+            if it > 0 && eta > NEWTON_DIV_RATE * prev_eta {
+                break;
+            }
+            prev_eta = eta;
+        }
+        if !converged {
+            return false;
+        }
+
+        // Stage slope from the stage equation — exact algebra on the
+        // converged z, no extra dynamics evaluation.
+        for d in 0..dim {
+            ks[d] = (st.z[d] - rhs[d]) / hd;
+        }
+    }
+    true
+}
+
+/// Solve every implicit stage of one row and produce its `y_new`/`err`
+/// (the fused combine plus the stiff error filter). A Newton failure
+/// under a *reused* Jacobian first retries once at the same step size
+/// with a Jacobian rebuilt at the current `(t, y)` — the standard
+/// stale-Jacobian recovery (RADAU5/CVODE), which saves the step-size
+/// loss of a spurious rejection. Only a failure with a fresh Jacobian
+/// clears the row's `ok` flag (outputs left untouched); the solve loops
+/// then reject the attempt for this row.
+#[allow(clippy::too_many_arguments)]
+fn implicit_row(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    g: usize,
+    r: usize,
+    dim: usize,
+    t: f64,
+    h: f64,
+    yrow: &[f64],
+    k: &mut [&mut [f64]],
+    rhs: &mut [f64],
+    y_new_row: &mut [f64],
+    err_row: &mut [f64],
+    mut st: RowNewton<'_>,
+) {
+    *st.ok = true;
+    let hg = h * ct.gamma;
+
+    // Jacobian refresh (age- or failure-triggered) up front; the LU of
+    // I − hγJ is (re)factored when the Jacobian changed or hγ drifted
+    // past the reuse window.
+    let mut jac_fresh = false;
+    if !*st.jac_valid || *st.jac_age >= JAC_MAX_AGE {
+        let f0 = &k[0][r * dim..(r + 1) * dim];
+        build_jacobian(sys, g, dim, t, yrow, f0, &mut st);
+        jac_fresh = true;
+    } else {
+        *st.jac_age += 1;
+    }
+    let drifted = !st.lu_hg.is_finite() || (hg - *st.lu_hg).abs() > LU_HG_DRIFT * st.lu_hg.abs();
+    let mut need_factor = jac_fresh || drifted;
+    loop {
+        if need_factor {
+            for i in 0..dim {
+                for j in 0..dim {
+                    st.lu[i * dim + j] = -hg * st.jac[i * dim + j];
+                }
+                st.lu[i * dim + i] += 1.0;
+            }
+            if !linalg::lu_factor(st.lu, st.piv, dim) {
+                if jac_fresh {
+                    fail_row(&mut st, true);
+                    return;
+                }
+                // Singular with a reused Jacobian: rebuild and retry.
+                let f0 = &k[0][r * dim..(r + 1) * dim];
+                build_jacobian(sys, g, dim, t, yrow, f0, &mut st);
+                jac_fresh = true;
+                continue;
+            }
+            *st.lus += 1;
+            *st.lu_hg = hg;
+            need_factor = false;
+        }
+        if solve_stages_row(ct, sys, g, r, dim, t, h, yrow, k, rhs, &mut st) {
+            break;
+        }
+        if jac_fresh {
+            fail_row(&mut st, true);
+            return;
+        }
+        // Newton failed under a reused Jacobian: rebuild at the current
+        // (t, y) and retry the whole attempt once at the same h.
+        let f0 = &k[0][r * dim..(r + 1) * dim];
+        build_jacobian(sys, g, dim, t, yrow, f0, &mut st);
+        jac_fresh = true;
+        need_factor = true;
+    }
+
+    // Solution + raw embedded error through the shared fused combine
+    // (bitwise the same arithmetic the explicit kernels use), then the
+    // stiff error filter ê = (I − hγJ)⁻¹·err through the step's LU.
+    let has_err = !ct.berr_nz.is_empty();
+    combine_rows_fused(ct, k, r, dim, h, yrow, y_new_row, err_row, has_err);
+    if has_err {
+        linalg::lu_solve(st.lu, st.piv, dim, err_row);
+    }
+}
+
+/// The implicit attempt over a contiguous row-range view — the shape
+/// shared by the serial whole-batch attempt ([`super::step::rk_attempt`])
+/// and the pooled joint executors, which drive disjoint views of the
+/// same workspace from worker threads. `eval_inactive` has no effect on
+/// implicit attempts (there are no batched stage evaluations to overhang
+/// onto finished rows); inactive rows are simply skipped.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn implicit_attempt_rows(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    t: &[f64],
+    dt: &[f64],
+    y: &[f64],
+    rr: &mut RkRows<'_>,
+    k0_ready: &[bool],
+    active: Option<&[bool]>,
+) {
+    let rows = rr.rows;
+    let dim = rr.dim;
+
+    // Stage 0 (explicit, c₀ = 0): refresh cold slope caches exactly like
+    // the explicit kernel. Warm in the solve loops (initial slopes, the
+    // non-FSAL end-slope refresh).
+    let mut any_cold = false;
+    for (r, &ready) in k0_ready.iter().enumerate() {
+        let c = !ready && active.map_or(true, |m| m[r]);
+        rr.cold[r] = c;
+        any_cold |= c;
+    }
+    if any_cold {
+        rr.t_stage.copy_from_slice(t);
+        sys.f_rows(rr.offset, rows, &rr.t_stage[..], y, &mut rr.k[0][..], Some(&rr.cold[..]));
+    }
+
+    let offset = rr.offset;
+    let nw = rr
+        .newton
+        .as_mut()
+        .expect("implicit attempt needs Newton scratch (RkWorkspace::new_for_tableau)");
+    for r in 0..rows {
+        if !active.map_or(true, |m| m[r]) {
+            continue;
+        }
+        let yrow = &y[r * dim..(r + 1) * dim];
+        let rhs = &mut rr.ytmp[r * dim..(r + 1) * dim];
+        let ynr = &mut rr.y_new[r * dim..(r + 1) * dim];
+        let er = &mut rr.err[r * dim..(r + 1) * dim];
+        let st = nw.row(r, dim);
+        implicit_row(ct, sys, offset + r, r, dim, t[r], dt[r], yrow, &mut rr.k, rhs, ynr, er, st);
+    }
+}
+
+/// The implicit attempt driven by the packed [`ActiveSet`] — the
+/// parallel loop's shape. Only live slots do any work (`eval_inactive`
+/// is a no-op here, as in [`implicit_attempt_rows`]); the per-row
+/// arithmetic is the shared [`implicit_row`], so the two entry points
+/// cannot diverge. Returns the semantic batched-call count — the same
+/// `stages − 1 (+ cold stage-0)` formula as the explicit attempt, which
+/// is what keeps the `CallLedger` partition-invariant; the row-local
+/// Newton evaluations are accounted separately through the per-slot
+/// counters.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn implicit_attempt_active(
+    ct: &CompiledTableau,
+    sys: &dyn OdeSystem,
+    act: &ActiveSet,
+    t: &[f64],
+    dt: &[f64],
+    y: &BatchVec,
+    ws: &mut RkWorkspace,
+    k0_ready: &[bool],
+) -> u64 {
+    let tab = ct.tab;
+    let dim = y.dim();
+    let y_flat = y.flat();
+    let live = act.live();
+    let inst = act.inst_map();
+
+    // Stage 0 refresh among the live slots (warm in the solve loops).
+    let mut any_cold = false;
+    for &r in live {
+        let c = !k0_ready[r];
+        ws.cold[r] = c;
+        any_cold |= c;
+    }
+    let mut calls = tab.stages as u64 - 1;
+    if any_cold {
+        ws.idx.clear();
+        for &r in live {
+            if ws.cold[r] {
+                ws.idx.push(r);
+            }
+        }
+        for &r in &ws.idx {
+            ws.t_stage[r] = t[r];
+        }
+        sys.f_rows_indexed(0, inst, &ws.idx, &ws.t_stage, y_flat, ws.k[0].flat_mut());
+        calls += 1;
+    }
+
+    let mut k_it = ws.k.iter_mut();
+    let mut k_bufs: [&mut [f64]; MAX_STAGES] =
+        std::array::from_fn(|_| k_it.next().map_or_else(Default::default, |k| k.flat_mut()));
+    let ytmp = ws.ytmp.flat_mut();
+    let y_new = ws.y_new.flat_mut();
+    let err = ws.err.flat_mut();
+    let mut nw = ws
+        .newton
+        .as_mut()
+        .expect("implicit attempt needs Newton scratch (RkWorkspace::new_for_tableau)")
+        .view_mut();
+    for &r in live {
+        let g = inst[r];
+        let yrow = &y_flat[r * dim..(r + 1) * dim];
+        let rhs = &mut ytmp[r * dim..(r + 1) * dim];
+        let ynr = &mut y_new[r * dim..(r + 1) * dim];
+        let er = &mut err[r * dim..(r + 1) * dim];
+        let st = nw.row(r, dim);
+        implicit_row(ct, sys, g, r, dim, t[r], dt[r], yrow, &mut k_bufs, rhs, ynr, er, st);
+    }
+    calls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::ExponentialDecay;
+    use crate::solver::step::rk_attempt;
+    use crate::solver::Method;
+    use crate::tensor::Layout;
+
+    fn trbdf2_ws(batch: usize, dim: usize) -> RkWorkspace {
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        RkWorkspace::new_for_tableau(
+            ct,
+            batch,
+            dim,
+            Layout::RowMajor,
+            &Tolerances::scalar(1e-10, 1e-10),
+        )
+    }
+
+    /// One TR-BDF2 step on y' = −y: the one-step error against exp(−h)
+    /// must shrink like h³ (local error of a 2nd-order method), with
+    /// Newton converging through the finite-difference Jacobian.
+    #[test]
+    fn trbdf2_single_step_second_order() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        assert!(ct.is_implicit());
+        let y = BatchVec::from_rows(&[vec![1.0]]);
+        let mut errs = Vec::new();
+        for &h in &[0.1, 0.05] {
+            let mut ws = trbdf2_ws(1, 1);
+            rk_attempt(ct, &sys, &[0.0], &[h], &y, &mut ws, &[false], None, true);
+            assert!(ws.newton.as_ref().unwrap().newton_ok(0));
+            errs.push((ws.y_new.row(0)[0] - (-h).exp()).abs());
+        }
+        // Local error order 3: halving h shrinks the one-step error ~8×.
+        let ratio = errs[0] / errs[1];
+        assert!(ratio > 6.0, "one-step error ratio {ratio} too small for order 2");
+        assert!(errs[0] < 1e-4, "one-step error {} too large", errs[0]);
+    }
+
+    /// L-stability: one huge step on y' = λy with λ = −10⁶ stays bounded
+    /// (|y₁| ≤ |y₀|); an explicit method would explode by ~|hλ|^stages.
+    #[test]
+    fn trbdf2_l_stable_huge_step() {
+        let sys = ExponentialDecay::new(vec![1e6], 1);
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let y = BatchVec::from_rows(&[vec![1.0]]);
+        let mut ws = trbdf2_ws(1, 1);
+        rk_attempt(ct, &sys, &[0.0], &[1.0], &y, &mut ws, &[false], None, true);
+        let nw = ws.newton.as_ref().unwrap();
+        assert!(nw.newton_ok(0), "Newton must converge on a linear problem");
+        let y1 = ws.y_new.row(0)[0];
+        assert!(y1.is_finite());
+        assert!(y1.abs() <= 1.0, "L-stable step left |y1| = {}", y1.abs());
+    }
+
+    /// The per-row counters record real work: a finite-difference
+    /// Jacobian build, at least one LU factorization and at least one
+    /// Newton iteration per implicit stage.
+    #[test]
+    fn counters_record_newton_work() {
+        let sys = ExponentialDecay::new(vec![2.0], 3);
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let y = BatchVec::from_rows(&[vec![1.0, -0.5, 2.0]]);
+        let mut ws = trbdf2_ws(1, 3);
+        rk_attempt(ct, &sys, &[0.0], &[0.05], &y, &mut ws, &[false], None, true);
+        let nw = ws.newton.as_mut().unwrap();
+        let (fe, je, lu) = nw.take_work(0);
+        assert_eq!(je, 1, "one Jacobian build");
+        assert_eq!(lu, 1, "one LU factorization");
+        // FD build costs dim evals; two implicit stages cost ≥ 1 each.
+        assert!(fe >= 3 + 2, "fevals {fe}");
+        // Drained after the fold.
+        assert_eq!(nw.take_work(0), (0, 0, 0));
+    }
+
+    /// A second attempt at the same (t, y, h) reuses the Jacobian and the
+    /// LU — the cross-step reuse path.
+    #[test]
+    fn jacobian_and_lu_are_reused() {
+        let sys = ExponentialDecay::new(vec![1.0], 2);
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let y = BatchVec::from_rows(&[vec![1.0, 2.0]]);
+        let mut ws = trbdf2_ws(1, 2);
+        rk_attempt(ct, &sys, &[0.0], &[0.1], &y, &mut ws, &[false], None, true);
+        let (_, je1, lu1) = ws.newton.as_mut().unwrap().take_work(0);
+        assert_eq!((je1, lu1), (1, 1));
+        rk_attempt(ct, &sys, &[0.0], &[0.1], &y, &mut ws, &[true], None, true);
+        let (_, je2, lu2) = ws.newton.as_mut().unwrap().take_work(0);
+        assert_eq!((je2, lu2), (0, 0), "same h: Jacobian and LU reused");
+        // A big dt change refactors the LU but keeps the Jacobian.
+        rk_attempt(ct, &sys, &[0.0], &[0.5], &y, &mut ws, &[true], None, true);
+        let (_, je3, lu3) = ws.newton.as_mut().unwrap().take_work(0);
+        assert_eq!(je3, 0);
+        assert_eq!(lu3, 1, "hγ drift forces a refactorization");
+    }
+
+    /// Newton work is per-row: a two-row batch where only one row is
+    /// active leaves the inactive row's counters and `ok` flag alone.
+    #[test]
+    fn inactive_rows_do_no_newton_work() {
+        let sys = ExponentialDecay::new(vec![1.0], 1);
+        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let y = BatchVec::from_rows(&[vec![1.0], vec![1.0]]);
+        let mut ws = trbdf2_ws(2, 1);
+        ws.y_new.row_mut(0)[0] = 123.0;
+        rk_attempt(
+            ct,
+            &sys,
+            &[0.0, 0.0],
+            &[0.1, 0.1],
+            &y,
+            &mut ws,
+            &[false, false],
+            Some(&[false, true]),
+            true,
+        );
+        assert_eq!(ws.y_new.row(0)[0], 123.0, "inactive row untouched");
+        let nw = ws.newton.as_mut().unwrap();
+        assert_eq!(nw.take_work(0), (0, 0, 0));
+        let (fe, je, lu) = nw.take_work(1);
+        assert!(fe > 0 && je == 1 && lu == 1);
+    }
+}

@@ -32,6 +32,7 @@
 //! inline executor (`tests/alloc_regression.rs`).
 
 use super::controller::ControllerState;
+use super::implicit;
 use super::interp::{self, DOPRI5_NCOEFF};
 use super::step::{CompiledTableau, InlineExec, RkWorkspace, StageExec, MAX_STAGES};
 use super::tableau::DenseOutput;
@@ -86,8 +87,13 @@ pub(crate) fn joint_core(
     let mut next_eval = vec![0usize; batch];
     let span = t1 - t0;
 
-    let mut ws =
-        RkWorkspace::new_with_layout(tab.stages, batch, dim, exec.workspace_layout(opts.layout));
+    let mut ws = RkWorkspace::new_for_tableau(
+        ct,
+        batch,
+        dim,
+        exec.workspace_layout(opts.layout),
+        &opts.tols,
+    );
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
 
@@ -168,6 +174,21 @@ pub(crate) fn joint_core(
             st.n_steps += 1;
         }
 
+        // Implicit methods: fold every row's Newton work into its stats
+        // (rows pay for their own iterations on top of the shared
+        // batched-call count), and remember whether any row's Newton
+        // diverged — the shared step is then rejected outright below.
+        let mut newton_failed = false;
+        if let Some(nw) = ws.newton.as_mut() {
+            for (i, st) in sol.stats.iter_mut().enumerate() {
+                let (fe, je, lu) = nw.take_work(i);
+                st.n_f_evals += fe;
+                st.n_jac_evals += je;
+                st.n_lu_factor += lu;
+            }
+            newton_failed = nw.any_failed();
+        }
+
         if ws.y_new.flat().iter().any(|v| !v.is_finite()) {
             status = Status::NonFinite;
             break;
@@ -179,7 +200,19 @@ pub(crate) fn joint_core(
         // order, never worker-arrival order — and the controller decision
         // run on the coordinator thread, so the joint loop's defining
         // coupling stays deterministic under any executor.
-        let (accept, factor) = if adaptive {
+        if newton_failed && !adaptive {
+            // A fixed step that cannot be solved is a hard failure:
+            // with no controller to re-grow dt, silently shrinking
+            // would integrate a different grid than requested.
+            status = Status::NewtonDiverged;
+            break;
+        }
+        let (accept, factor) = if newton_failed {
+            // Divergence feeds the rejection path: shrink hard and retry
+            // at the same (t, y). The min-dt safeguard below still turns
+            // a never-converging Newton into DtUnderflow.
+            (false, implicit::NEWTON_REJECT_FACTOR)
+        } else if adaptive {
             exec.error_sumsq(&ws.err, &y, &ws.y_new, &opts.tols, &mut sumsq);
             let acc: f64 = sumsq.iter().sum();
             let en = (acc / (batch * dim) as f64).sqrt();

@@ -1,0 +1,177 @@
+//! Small dense linear algebra for the implicit (ESDIRK) solver.
+//!
+//! The simplified-Newton iteration of [`super::implicit`] solves one
+//! `dim × dim` system `(I − hγJ)·δ = −F` per iteration per row. State
+//! dimensions in this crate are small (VdP: 2, Robertson: 3, neural
+//! dynamics: tens), so a textbook LU factorization with partial pivoting
+//! is both the fastest and the most predictable choice: no blocking, no
+//! allocation, purely sequential arithmetic — the factorization of a
+//! given matrix is **bit-for-bit deterministic** wherever it runs, which
+//! is what lets implicit solves stay bitwise-identical across pool
+//! kinds, thread counts and layouts.
+//!
+//! Both entry points work in place on caller-provided scratch (the
+//! per-row blocks of [`super::step::RkWorkspace`]'s Newton scratch), so
+//! the steady state of an implicit solve performs zero heap allocations
+//! (`tests/alloc_regression.rs`).
+
+#![warn(missing_docs)]
+
+/// Factor the row-major `n × n` matrix `a` in place as `P·A = L·U` with
+/// partial pivoting: on return the strict lower triangle of `a` holds
+/// the multipliers of `L` (unit diagonal implied) and the upper triangle
+/// holds `U`. `piv[k]` records the row swapped into position `k` at
+/// elimination step `k`. Returns `false` when a pivot column is exactly
+/// zero (singular to working precision) — callers treat that as a
+/// Newton failure, not a panic, because a transiently singular iteration
+/// matrix just means "reject the step and retry smaller".
+pub fn lu_factor(a: &mut [f64], piv: &mut [usize], n: usize) -> bool {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert!(piv.len() >= n);
+    for k in 0..n {
+        // Pivot: the largest-magnitude entry in column k at or below the
+        // diagonal. Deterministic tie-breaking (first maximum wins).
+        let mut p = k;
+        let mut best = a[k * n + k].abs();
+        for i in (k + 1)..n {
+            let v = a[i * n + k].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        piv[k] = p;
+        if best == 0.0 {
+            return false;
+        }
+        if p != k {
+            for j in 0..n {
+                a.swap(k * n + j, p * n + j);
+            }
+        }
+        let pivot = a[k * n + k];
+        for i in (k + 1)..n {
+            let m = a[i * n + k] / pivot;
+            a[i * n + k] = m;
+            for j in (k + 1)..n {
+                a[i * n + j] -= m * a[k * n + j];
+            }
+        }
+    }
+    true
+}
+
+/// Solve `A·x = b` in place using the factors produced by
+/// [`lu_factor`]: `x` enters holding `b` and leaves holding the
+/// solution. Applies the recorded row swaps, then forward- and
+/// back-substitution.
+pub fn lu_solve(a: &[f64], piv: &[usize], n: usize, x: &mut [f64]) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert!(piv.len() >= n && x.len() >= n);
+    for k in 0..n {
+        let p = piv[k];
+        if p != k {
+            x.swap(k, p);
+        }
+    }
+    // Forward: L (unit diagonal) — x[i] -= Σ_{j<i} L[i][j]·x[j].
+    for i in 1..n {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= a[i * n + j] * x[j];
+        }
+        x[i] = s;
+    }
+    // Backward: U — x[i] = (x[i] − Σ_{j>i} U[i][j]·x[j]) / U[i][i].
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= a[i * n + j] * x[j];
+        }
+        x[i] = s / a[i * n + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+        let mut lu = a.to_vec();
+        let mut piv = vec![0usize; n];
+        if !lu_factor(&mut lu, &mut piv, n) {
+            return None;
+        }
+        let mut x = b.to_vec();
+        lu_solve(&lu, &piv, n, &mut x);
+        Some(x)
+    }
+
+    #[test]
+    fn solves_identity() {
+        let x = solve(&[1.0, 0.0, 0.0, 1.0], &[3.0, -4.0], 2).unwrap();
+        assert_eq!(x, vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn solves_2x2_needing_pivot() {
+        // First pivot is 0: partial pivoting must swap rows.
+        let a = [0.0, 2.0, 3.0, 1.0];
+        let x = solve(&a, &[4.0, 11.0], 2).unwrap();
+        // 3x0 + x1 = 11, 2x1 = 4 => x1 = 2, x0 = 3.
+        assert!((x[0] - 3.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solves_3x3_against_known_solution() {
+        let a = [2.0, 1.0, -1.0, -3.0, -1.0, 2.0, -2.0, 1.0, 2.0];
+        let x = solve(&a, &[8.0, -11.0, -3.0], 3).unwrap();
+        let expect = [2.0, 3.0, -1.0];
+        for i in 0..3 {
+            assert!((x[i] - expect[i]).abs() < 1e-12, "x[{i}] = {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn residual_small_on_illconditioned_newton_shape() {
+        // A Newton matrix I − hγJ with a large stiff entry (the Robertson
+        // regime): the residual of the computed solution must be tiny.
+        let n = 3;
+        let a = [
+            1.0 + 0.04, -1e4 * 1e-4, -1e4 * 1e-4, //
+            -0.04, 1.0 + 1e4 * 1e-4 + 6e7 * 1e-6, 1e4 * 1e-4, //
+            0.0, -6e7 * 1e-6, 1.0,
+        ];
+        let b = [1.0, -2.0, 0.5];
+        let x = solve(&a, &b, n).unwrap();
+        for i in 0..n {
+            let mut r = -b[i];
+            for j in 0..n {
+                r += a[i * n + j] * x[j];
+            }
+            let scale: f64 = a[i * n..(i + 1) * n].iter().map(|v| v.abs()).sum();
+            assert!(r.abs() < 1e-10 * (1.0 + scale), "row {i} residual {r}");
+        }
+    }
+
+    #[test]
+    fn reports_singular_instead_of_panicking() {
+        assert!(solve(&[1.0, 2.0, 2.0, 4.0], &[1.0, 2.0], 2).is_none());
+        assert!(solve(&[0.0], &[1.0], 1).is_none());
+    }
+
+    #[test]
+    fn factorization_is_deterministic() {
+        let a = [3.0, -1.0, 2.0, 1.0, 4.0, 0.5, -2.0, 1.5, 1.0];
+        let mut lu1 = a.to_vec();
+        let mut lu2 = a.to_vec();
+        let (mut p1, mut p2) = (vec![0usize; 3], vec![0usize; 3]);
+        assert!(lu_factor(&mut lu1, &mut p1, 3));
+        assert!(lu_factor(&mut lu2, &mut p2, 3));
+        assert_eq!(p1, p2);
+        for (x, y) in lu1.iter().zip(&lu2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

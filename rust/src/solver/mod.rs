@@ -22,10 +22,12 @@ pub mod active;
 pub mod adjoint;
 pub mod backprop;
 pub mod controller;
+pub mod implicit;
 pub mod init;
 pub mod interp;
 pub mod joint;
 pub mod kernels;
+pub mod linalg;
 pub mod naive;
 pub mod norm;
 pub mod parallel;
@@ -46,7 +48,11 @@ pub use crate::tensor::Layout;
 
 use crate::tensor::BatchVec;
 
-/// Explicit Runge–Kutta method selector.
+/// Runge–Kutta method selector: the explicit pairs, plus the implicit
+/// (ESDIRK) TR-BDF2 pair for stiff problems — selected through the same
+/// API, so every solve loop, pool kind, layout and the active-set
+/// machinery work unchanged (the stage kernel dispatches internally; see
+/// [`implicit`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     Euler,
@@ -59,6 +65,10 @@ pub enum Method {
     CashKarp45,
     Dopri5,
     Tsit5,
+    /// TR-BDF2 2(3): stiffly-accurate, L-stable ESDIRK pair with
+    /// simplified-Newton stage solves — the stiff-capable method
+    /// (Van der Pol at μ ≫ 100, Robertson kinetics).
+    Trbdf2,
 }
 
 impl Method {
@@ -66,7 +76,7 @@ impl Method {
     /// in this table equals its discriminant (`method as usize`) — the
     /// slot key of the process-wide compiled-tableau cache
     /// ([`step::CompiledTableau::cached`]).
-    pub const ALL: [Method; 10] = [
+    pub const ALL: [Method; 11] = [
         Method::Euler,
         Method::Midpoint,
         Method::Heun,
@@ -77,6 +87,7 @@ impl Method {
         Method::CashKarp45,
         Method::Dopri5,
         Method::Tsit5,
+        Method::Trbdf2,
     ];
 
     /// The Butcher tableau backing this method.
@@ -92,7 +103,16 @@ impl Method {
             Method::CashKarp45 => &tableau::CASHKARP45,
             Method::Dopri5 => &tableau::DOPRI5,
             Method::Tsit5 => &tableau::TSIT5,
+            Method::Trbdf2 => &tableau::TRBDF2,
         }
+    }
+
+    /// Whether this method has implicit stages (Newton-based stage
+    /// solves; supported by the parallel and joint loops and every
+    /// pooled entry point, but not by the frozen reference loop, the
+    /// naive baseline or the backprop/adjoint paths).
+    pub fn is_implicit(&self) -> bool {
+        !self.tableau().diag.is_empty()
     }
 
     /// Parse a method name as used on the CLI and in configs.
@@ -108,6 +128,7 @@ impl Method {
             "cashkarp45" | "ck45" => Method::CashKarp45,
             "dopri5" => Method::Dopri5,
             "tsit5" => Method::Tsit5,
+            "trbdf2" | "tr-bdf2" => Method::Trbdf2,
             _ => return None,
         })
     }
@@ -129,6 +150,12 @@ pub enum Status {
     DtUnderflow = 2,
     /// A non-finite value appeared in the state or error estimate.
     NonFinite = 3,
+    /// An implicit method's Newton iteration failed to converge at the
+    /// prescribed fixed step size (`SolveOptions::fixed_dt`). Adaptive
+    /// solves never report this — a divergence there feeds the
+    /// rejection path and, if Newton never recovers, ends in
+    /// [`Status::DtUnderflow`] once dt hits the floor.
+    NewtonDiverged = 4,
 }
 
 /// Per-instance evaluation grid: row `i` holds the (ascending) times at
@@ -407,12 +434,26 @@ pub struct Stats {
     pub n_steps: u64,
     /// Accepted steps.
     pub n_accepted: u64,
-    /// Dynamics evaluations *experienced by this instance* — in torchode
-    /// semantics this is uniform across the batch because the model is
-    /// always evaluated on the full batch.
+    /// Dynamics evaluations *experienced by this instance*. For explicit
+    /// methods this is uniform across the batch (torchode semantics: the
+    /// model is always evaluated on the full batch). Under an implicit
+    /// method each instance additionally pays for its **own** Newton
+    /// residual and finite-difference-Jacobian evaluations, so the count
+    /// is per-instance — the uniform batched-call part is still
+    /// reconstructed exactly by the pooled merges, and the per-row
+    /// Newton part rides along unchanged (see
+    /// [`crate::exec::solve_ivp_parallel_pooled`]).
     pub n_f_evals: u64,
     /// Dense-output evaluation points produced.
     pub n_initialized: u64,
+    /// Jacobian builds performed for this instance (implicit methods
+    /// only; analytic and finite-difference builds both count one — an
+    /// FD build's per-column dynamics evaluations land in `n_f_evals`).
+    pub n_jac_evals: u64,
+    /// LU factorizations of the Newton matrix `I − hγJ` performed for
+    /// this instance (implicit methods only; smaller than `n_jac_evals +
+    /// step count` whenever the factor-reuse window holds).
+    pub n_lu_factor: u64,
 }
 
 /// How a solve was actually executed — the observability counterpart of
@@ -533,21 +574,23 @@ mod tests {
 
     #[test]
     fn method_parse_roundtrip() {
-        for m in [
-            Method::Euler,
-            Method::Midpoint,
-            Method::Heun,
-            Method::Ralston,
-            Method::Bosh3,
-            Method::Rk4,
-            Method::Fehlberg45,
-            Method::CashKarp45,
-            Method::Dopri5,
-            Method::Tsit5,
-        ] {
+        for m in Method::ALL {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
+        assert_eq!(Method::parse("tr-bdf2"), Some(Method::Trbdf2));
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn implicit_flag_matches_tableau() {
+        assert!(Method::Trbdf2.is_implicit());
+        assert!(step::CompiledTableau::cached(Method::Trbdf2).is_implicit());
+        for m in Method::ALL {
+            if m != Method::Trbdf2 {
+                assert!(!m.is_implicit(), "{m:?}");
+                assert!(!step::CompiledTableau::cached(m).is_implicit(), "{m:?}");
+            }
+        }
     }
 
     #[test]

@@ -109,6 +109,12 @@ pub fn solve_ivp_naive(
         );
     }
     let tab = opts.method.tableau();
+    assert!(
+        tab.diag.is_empty(),
+        "the naive per-op baseline only implements explicit methods; \
+         use solve_ivp_parallel/solve_ivp_joint for {}",
+        tab.name
+    );
     let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
 
     let mut sol = Solution::new_buffer(batch, n_eval, dim);

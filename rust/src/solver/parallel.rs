@@ -49,6 +49,7 @@
 
 use super::active::ActiveSet;
 use super::controller::ControllerState;
+use super::implicit;
 use super::init::initial_step_batch;
 use super::interp::{self, DOPRI5_NCOEFF};
 use super::norm::{scaled_norm, NormKind};
@@ -129,7 +130,7 @@ pub(crate) fn solve_ivp_parallel_core(
     let mut next_eval = vec![0usize; batch];
     let span: Vec<f64> = (0..batch).map(|i| grid.t1(i) - grid.t0(i)).collect();
 
-    let mut ws = RkWorkspace::new_with_layout(tab.stages, batch, dim, opts.layout);
+    let mut ws = RkWorkspace::new_for_tableau(ct, batch, dim, opts.layout, &opts.tols);
     // Previous-step slopes for Hermite interpolation (f at step start).
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];
@@ -230,6 +231,32 @@ pub(crate) fn solve_ivp_parallel_core(
             accepted[r] = false;
             let g = act.inst(r);
             sol.stats[g].n_steps += 1;
+
+            // Implicit methods: fold this attempt's per-row Newton work
+            // into the row's stats, and route a Newton divergence into
+            // the rejection path — an adaptive row shrinks hard and
+            // retries (pass 2's min-dt safeguard turns a never-recovering
+            // Newton into DtUnderflow); a fixed-step row fails outright
+            // below.
+            if let Some(nw) = ws.newton.as_mut() {
+                let (fe, je, lu) = nw.take_work(r);
+                sol.stats[g].n_f_evals += fe;
+                sol.stats[g].n_jac_evals += je;
+                sol.stats[g].n_lu_factor += lu;
+                if !nw.newton_ok(r) {
+                    if adaptive {
+                        factor[r] = implicit::NEWTON_REJECT_FACTOR;
+                        continue;
+                    }
+                    // A fixed step that cannot be solved is a hard
+                    // failure: with no controller to re-grow dt,
+                    // silently shrinking would integrate a different
+                    // grid than the one requested.
+                    sol.status[g] = Status::NewtonDiverged;
+                    finished[r] = true;
+                    continue;
+                }
+            }
 
             let y_new = ws.y_new.row(r);
             if y_new.iter().any(|v| !v.is_finite()) {
@@ -457,6 +484,11 @@ fn compact_state(
         finished[dst] = finished[src];
         ctrl[dst] = ctrl[src];
         next_eval[dst] = next_eval[src];
+        // Implicit methods: the per-slot Jacobian/LU reuse state moves
+        // with the row, so compaction stays value-invariant.
+        if let Some(nw) = ws.newton.as_mut() {
+            nw.compact_move(dst, src);
+        }
     });
 }
 

@@ -43,6 +43,14 @@ pub fn solve_ivp_parallel_reference(
     opts.tols.validate(batch);
     let n_eval = grid.n_eval();
     let tab = opts.method.tableau();
+    // Guard, not behavior: the frozen loop predates implicit methods
+    // and must fail loudly rather than panic deep in the stage kernel.
+    assert!(
+        tab.diag.is_empty(),
+        "the frozen reference loop only implements explicit methods; \
+         use solve_ivp_parallel for {}",
+        tab.name
+    );
     let ct = CompiledTableau::new(tab);
     let adaptive = tab.adaptive() && opts.fixed_dt.is_none();
 

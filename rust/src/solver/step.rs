@@ -30,10 +30,17 @@
 //! dim-major (SoA) mirror of the workspace ([`RkWorkspace`] carries the
 //! lanes), vectorizing across the batch instead of across `dim` — results
 //! are bitwise-identical in both layouts (`tests/kernel_parity.rs`).
+//!
+//! Implicit (ESDIRK) tableaus dispatch from the same entry points to the
+//! per-row Newton kernel in [`super::implicit`]: every attempt signature,
+//! loop, pool kind and the active-set machinery work unchanged, only the
+//! stage arithmetic differs. Implicit workspaces carry the Newton
+//! scratch ([`RkWorkspace::new_for_tableau`]).
 
 #![warn(missing_docs)]
 
 use super::active::ActiveSet;
+use super::implicit::{self, NewtonRows, NewtonWs};
 use super::init::initial_step_batch;
 use super::kernels;
 use super::norm::scaled_sumsq_rows;
@@ -63,6 +70,11 @@ pub struct CompiledTableau {
     pub b_nz: Vec<(usize, f64)>,
     /// Nonzero `(j, b_err_j)` pairs.
     pub berr_nz: Vec<(usize, f64)>,
+    /// The shared implicit diagonal coefficient γ of an (ES)DIRK tableau
+    /// (`0.0` for explicit methods). Derived from `Tableau::diag` with
+    /// the single-γ structure checked, so one LU of `I − hγJ` per step
+    /// serves every implicit stage ([`super::implicit`]).
+    pub gamma: f64,
 }
 
 /// Process-wide compiled-tableau table, one slot per [`super::Method`]
@@ -109,7 +121,34 @@ impl CompiledTableau {
             tab.b.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
         let berr_nz =
             tab.b_err.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
-        Self { tab, a_nz, b_nz, berr_nz }
+        let gamma = if tab.diag.is_empty() {
+            0.0
+        } else {
+            assert_eq!(
+                tab.diag.len(),
+                tab.stages,
+                "tableau '{}': diag must have one entry per stage",
+                tab.name
+            );
+            let g = tab.diag.iter().copied().find(|&d| d != 0.0).unwrap_or(0.0);
+            assert!(g > 0.0, "tableau '{}': implicit diagonal must be positive", tab.name);
+            for (s, &d) in tab.diag.iter().enumerate() {
+                assert!(
+                    d == 0.0 || d == g,
+                    "tableau '{}' stage {s}: only single-γ (ES)DIRK diagonals are supported",
+                    tab.name
+                );
+            }
+            g
+        };
+        Self { tab, a_nz, b_nz, berr_nz, gamma }
+    }
+
+    /// Whether this tableau has implicit stages (dispatches the attempt
+    /// to the Newton-based kernel in [`super::implicit`]).
+    #[inline]
+    pub fn is_implicit(&self) -> bool {
+        self.gamma != 0.0
     }
 }
 
@@ -153,6 +192,10 @@ pub struct RkWorkspace {
     /// Dim-major mirrors (`Some` iff the workspace was built with
     /// [`Layout::DimMajor`]).
     pub(crate) dm: Option<DimScratch>,
+    /// Newton scratch + Jacobian/LU reuse state for implicit methods
+    /// (`Some` iff the workspace was built via
+    /// [`RkWorkspace::new_for_tableau`] with an implicit tableau).
+    pub(crate) newton: Option<NewtonWs>,
 }
 
 impl RkWorkspace {
@@ -183,7 +226,31 @@ impl RkWorkspace {
             cold: vec![false; batch],
             idx: Vec::with_capacity(batch),
             dm,
+            newton: None,
         }
+    }
+
+    /// Workspace sized for a compiled tableau: the explicit buffers in
+    /// the requested [`Layout`], plus the per-slot Newton scratch
+    /// ([`super::implicit`]) when the tableau is implicit. Implicit
+    /// attempts are layout-blind (the per-row Newton solves have no lane
+    /// passes to transpose for), so an implicit workspace skips the SoA
+    /// mirrors a `DimMajor` request would otherwise allocate — results
+    /// are bitwise-identical in both layouts either way. This is the
+    /// constructor the solve loops use.
+    pub fn new_for_tableau(
+        ct: &CompiledTableau,
+        batch: usize,
+        dim: usize,
+        layout: Layout,
+        tols: &Tolerances,
+    ) -> Self {
+        let layout = if ct.is_implicit() { Layout::RowMajor } else { layout };
+        let mut ws = Self::new_with_layout(ct.tab.stages, batch, dim, layout);
+        if ct.is_implicit() {
+            ws.newton = Some(NewtonWs::new(batch, dim, tols));
+        }
+        ws
     }
 
     /// The layout this workspace was built with.
@@ -212,6 +279,9 @@ pub(crate) struct RkRows<'a> {
     pub err: &'a mut [f64],
     pub t_stage: &'a mut [f64],
     pub cold: &'a mut [bool],
+    /// This range's view of the Newton scratch (`Some` iff the workspace
+    /// carries implicit state; see [`RkWorkspace::new_for_tableau`]).
+    pub newton: Option<NewtonRows<'a>>,
 }
 
 /// One row of the fused stage accumulation `out = y + h · Σ_j a_sj k_j`
@@ -224,7 +294,7 @@ pub(crate) struct RkRows<'a> {
 /// so their per-row arithmetic is *structurally* bitwise-identical — the
 /// contract `tests/compaction.rs` and the pooled merge depend on.
 #[inline(always)]
-fn accumulate_stage_row(
+pub(crate) fn accumulate_stage_row(
     nz: &[(usize, f64)],
     kprev: &[&mut [f64]],
     r: usize,
@@ -273,7 +343,7 @@ fn accumulate_stage_row(
 /// coefficient order), so the fusion is bitwise-invisible.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn combine_rows_fused(
+pub(crate) fn combine_rows_fused(
     ct: &CompiledTableau,
     k: &[&mut [f64]],
     r: usize,
@@ -329,6 +399,13 @@ pub(crate) fn rk_attempt_rows(
     active: Option<&[bool]>,
     eval_inactive: bool,
 ) {
+    if ct.is_implicit() {
+        // Implicit stages are solved per row by Newton iteration;
+        // `eval_inactive` has no effect (there are no batched stage
+        // evaluations to overhang onto inactive rows).
+        implicit::implicit_attempt_rows(ct, sys, t, dt, y, rr, k0_ready, active);
+        return;
+    }
     let tab = ct.tab;
     let rows = rr.rows;
     let dim = rr.dim;
@@ -415,13 +492,14 @@ pub fn rk_attempt(
     active: Option<&[bool]>,
     eval_inactive: bool,
 ) -> u64 {
-    if ws.dm.is_some() && active.is_none() {
+    if ws.dm.is_some() && active.is_none() && !ct.is_implicit() {
         // Every row is active, so the eval mask is None whatever
         // `eval_inactive` says — the dim-major attempt ignores it.
         return rk_attempt_dm(ct, sys, t, dt, y, ws, k0_ready);
     }
     let batch = y.batch();
     let dim = y.dim();
+    let newton = ws.newton.as_mut().map(|nw| nw.view_mut());
     let mut k_it = ws.k.iter_mut();
     let mut rr = RkRows {
         offset: 0,
@@ -433,6 +511,7 @@ pub fn rk_attempt(
         err: ws.err.flat_mut(),
         t_stage: &mut ws.t_stage[..],
         cold: &mut ws.cold[..],
+        newton,
     };
     rk_attempt_rows(ct, sys, t, dt, y.flat(), &mut rr, k0_ready, active, eval_inactive);
     attempt_call_count(ct, k0_ready)
@@ -592,6 +671,12 @@ pub(crate) fn rk_attempt_active(
     k0_ready: &[bool],
     eval_inactive: bool,
 ) -> u64 {
+    if ct.is_implicit() {
+        // Per-row Newton solves; `finished`/`eval_inactive` are
+        // irrelevant (only live slots do any work, and there are no
+        // batched stage evaluations to overhang).
+        return implicit::implicit_attempt_active(ct, sys, act, t, dt, y, ws, k0_ready);
+    }
     if ws.dm.is_some() {
         return rk_attempt_active_dm(ct, sys, act, finished, t, dt, y, ws, k0_ready, eval_inactive);
     }
@@ -1081,6 +1166,7 @@ mod tests {
             b,
             b_err: &[],
             c,
+            diag: &[],
             fsal: false,
             dense: DenseOutput::Hermite,
         }));
@@ -1122,6 +1208,7 @@ mod tests {
             b: Box::leak(b.into_boxed_slice()),
             b_err: &[],
             c: Box::leak(c.into_boxed_slice()),
+            diag: &[],
             fsal: false,
             dense: DenseOutput::Hermite,
         }));

@@ -21,6 +21,14 @@ pub struct Tableau {
     pub err_order: usize,
     /// Strictly lower-triangular stage matrix, flattened: row i has i entries.
     pub a: &'static [f64],
+    /// Diagonal stage coefficients `a_ss` for diagonally-implicit (ESDIRK)
+    /// tableaus, one entry per stage; **empty for explicit methods**. A
+    /// nonzero `diag[s]` makes stage `s` implicit: its stage equation is
+    /// `z_s = y + h·Σ_{j<s} a_sj k_j + h·diag[s]·f(t + c_s h, z_s)`,
+    /// solved by simplified Newton iteration ([`crate::solver::implicit`]).
+    /// All nonzero entries must be equal (single-γ SDIRK structure), so a
+    /// step needs one LU factorization of `I − hγJ`, reused across stages.
+    pub diag: &'static [f64],
     /// Solution weights (len = stages).
     pub b: &'static [f64],
     /// Error weights `b - b̂` (len = stages, empty if no embedded method).
@@ -74,6 +82,7 @@ pub static EULER: Tableau = Tableau {
     b: &[1.0],
     b_err: &[],
     c: &[0.0],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -88,6 +97,7 @@ pub static MIDPOINT: Tableau = Tableau {
     b: &[0.0, 1.0],
     b_err: &[],
     c: &[0.0, 0.5],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -103,6 +113,7 @@ pub static HEUN21: Tableau = Tableau {
     // b̂ = Euler = [1, 0]  =>  b_err = [-0.5, 0.5]
     b_err: &[-0.5, 0.5],
     c: &[0.0, 1.0],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -117,6 +128,7 @@ pub static RALSTON2: Tableau = Tableau {
     b: &[0.25, 0.75],
     b_err: &[],
     c: &[0.0, 2.0 / 3.0],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -144,6 +156,7 @@ pub static BOSH3: Tableau = Tableau {
         -0.125,
     ],
     c: &[0.0, 0.5, 0.75, 1.0],
+    diag: &[],
     fsal: true,
     dense: DenseOutput::Hermite,
 };
@@ -162,6 +175,7 @@ pub static RK4: Tableau = Tableau {
     b: &[1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
     b_err: &[],
     c: &[0.0, 0.5, 0.5, 1.0],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -208,6 +222,7 @@ pub static FEHLBERG45: Tableau = Tableau {
         2.0 / 55.0,
     ],
     c: &[0.0, 0.25, 3.0 / 8.0, 12.0 / 13.0, 1.0, 0.5],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -253,6 +268,7 @@ pub static CASHKARP45: Tableau = Tableau {
         512.0 / 1771.0 - 0.25,
     ],
     c: &[0.0, 0.2, 0.3, 0.6, 1.0, 7.0 / 8.0],
+    diag: &[],
     fsal: false,
     dense: DenseOutput::Hermite,
 };
@@ -306,6 +322,7 @@ pub static DOPRI5: Tableau = Tableau {
         -1.0 / 40.0,
     ],
     c: &[0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+    diag: &[],
     fsal: true,
     dense: DenseOutput::Dopri5,
 };
@@ -370,25 +387,75 @@ pub static TSIT5: Tableau = Tableau {
         0.015151515151515152,
     ],
     c: &[0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0],
+    diag: &[],
     fsal: true,
+    dense: DenseOutput::Hermite,
+};
+
+// --- TR-BDF2 2(3), stiffly-accurate ESDIRK -----------------------------------
+//
+// One trapezoidal substage to t + γh followed by a BDF2-like substage to
+// t + h, with γ = 2 − √2 (Bank et al. 1985; embedded 3rd-order companion
+// per Hosea & Shampine 1996). Stage 0 is explicit (c₀ = 0, diag₀ = 0);
+// stages 1 and 2 share the diagonal d = γ/2 = 1 − √2/2, so one LU of
+// `I − h·d·J` serves the whole step. The last stage row equals `b`
+// (stiffly accurate): the propagated 2nd-order solution is the last
+// stage value, which is what makes the method L-stable. The embedded
+// weights b̂ = [(1−w)/3, (3w+1)/3, d/3] (w = √2/4) are the 3rd-order
+// companion; the raw difference `b − b̂` behaves like the 2nd-order
+// method's O(h³) local error, so `err_order = 2`.
+//
+// NOT FSAL in the loop's hand-off sense: k₂ is recovered *algebraically*
+// from the stage equation (k₂ = (z₂ − rhs)/(h·d)), which equals
+// f(t+h, y_new) only up to the Newton tolerance — reusing it as the next
+// step's k₀ would inject O(tol/h) slope error. With `fsal: false` the
+// loops refresh k₀ = f(t_new, y_new) exactly on acceptance (also the
+// Hermite dense-output end slope).
+const TRBDF2_GAMMA: f64 = 2.0 - std::f64::consts::SQRT_2;
+const TRBDF2_D: f64 = TRBDF2_GAMMA / 2.0;
+const TRBDF2_W: f64 = std::f64::consts::SQRT_2 / 4.0;
+
+pub static TRBDF2: Tableau = Tableau {
+    name: "trbdf2",
+    stages: 3,
+    order: 2,
+    err_order: 2,
+    // Strictly lower-triangular part; the diagonal lives in `diag`.
+    a: &[
+        TRBDF2_D, //
+        TRBDF2_W, TRBDF2_W,
+    ],
+    b: &[TRBDF2_W, TRBDF2_W, TRBDF2_D],
+    // b̂ = [(1 − w)/3, (3w + 1)/3, d/3]  =>  b_err = b − b̂
+    b_err: &[
+        TRBDF2_W - (1.0 - TRBDF2_W) / 3.0,
+        TRBDF2_W - (3.0 * TRBDF2_W + 1.0) / 3.0,
+        TRBDF2_D - TRBDF2_D / 3.0,
+    ],
+    c: &[0.0, TRBDF2_GAMMA, 1.0],
+    diag: &[0.0, TRBDF2_D, TRBDF2_D],
+    fsal: false,
     dense: DenseOutput::Hermite,
 };
 
 /// All registered tableaus, for iteration in tests and the CLI.
 pub static ALL: &[&Tableau] = &[
     &EULER, &MIDPOINT, &HEUN21, &RALSTON2, &BOSH3, &RK4, &FEHLBERG45, &CASHKARP45, &DOPRI5, &TSIT5,
+    &TRBDF2,
 ];
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Row sums of `a` must equal the nodes `c` (stage consistency).
+    /// Row sums of `a` (plus the implicit diagonal, where present) must
+    /// equal the nodes `c` (stage consistency).
     #[test]
     fn stage_consistency() {
         for t in ALL {
             for i in 1..t.stages {
-                let s: f64 = t.a_row(i).iter().sum();
+                let diag = t.diag.get(i).copied().unwrap_or(0.0);
+                let s: f64 = t.a_row(i).iter().sum::<f64>() + diag;
                 assert!(
                     (s - t.c[i]).abs() < 1e-12,
                     "{}: row {} sums to {} but c = {}",
@@ -399,6 +466,35 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// ESDIRK structure of the implicit tableau: explicit first stage,
+    /// one shared positive diagonal, stiffly-accurate last row
+    /// (`a_row(last) + diag[last] == b`), and the 2nd/3rd-order
+    /// conditions of both the solution weights and the embedded
+    /// companion b̂ = b − b_err.
+    #[test]
+    fn trbdf2_structure() {
+        let t = &TRBDF2;
+        assert_eq!(t.diag.len(), t.stages);
+        assert_eq!(t.diag[0], 0.0, "ESDIRK: first stage explicit");
+        assert!(t.diag[1] > 0.0 && t.diag[1] == t.diag[2], "single-γ diagonal");
+        // Stiffly accurate: the last stage value is the solution.
+        for j in 0..t.stages - 1 {
+            assert!((t.a_row(t.stages - 1)[j] - t.b[j]).abs() < 1e-15, "j={j}");
+        }
+        assert!((t.diag[t.stages - 1] - t.b[t.stages - 1]).abs() < 1e-15);
+        // The embedded companion b̂ is 3rd order: Σb̂ = 1, Σb̂c = 1/2,
+        // Σb̂c² = 1/3 (the diagonal enters only the stage equations, not
+        // the quadrature conditions on b̂ and c).
+        let bhat: Vec<f64> = t.b.iter().zip(t.b_err).map(|(b, e)| b - e).collect();
+        let s0: f64 = bhat.iter().sum();
+        let s1: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c).sum();
+        let s2: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
+        assert!((s0 - 1.0).abs() < 1e-14, "Σb̂ = {s0}");
+        assert!((s1 - 0.5).abs() < 1e-14, "Σb̂c = {s1}");
+        assert!((s2 - 1.0 / 3.0).abs() < 1e-14, "Σb̂c² = {s2}");
+        assert!(!t.fsal, "k_last is algebraic, not f(t_new, y_new)");
     }
 
     /// Solution weights must sum to 1 (first order condition).
@@ -496,6 +592,8 @@ mod tests {
             if t.adaptive() {
                 assert_eq!(t.b_err.len(), t.stages);
             }
+            // diag is empty (explicit) or exactly one entry per stage.
+            assert!(t.diag.is_empty() || t.diag.len() == t.stages, "{}", t.name);
         }
     }
 }

@@ -137,6 +137,30 @@ fn steady_state_allocates_nothing() {
                 joint_steps(t1, &opts)
             }),
         ),
+        // Implicit (TR-BDF2): the Newton scratch — Jacobian/LU blocks,
+        // pivots, iterate rows, counters — must live entirely in the
+        // workspace; neither the per-stage Newton loops nor the
+        // finite-difference Jacobian builds may allocate per step.
+        (
+            "parallel implicit (trbdf2)",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Trbdf2)
+                    .with_tols(1e-6, 1e-5)
+                    .with_max_steps(20_000)
+                    .skip_inactive()
+                    .with_compaction(0.5);
+                parallel_steps(t1, &opts)
+            }),
+        ),
+        (
+            "joint implicit (trbdf2)",
+            Box::new(|t1| {
+                let opts = SolveOptions::new(Method::Trbdf2)
+                    .with_tols(1e-6, 1e-5)
+                    .with_max_steps(20_000);
+                joint_steps(t1, &opts)
+            }),
+        ),
     ];
 
     for (label, run) in &cases {

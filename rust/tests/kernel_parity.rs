@@ -200,6 +200,65 @@ fn lane_kernels_bitwise_equal_scalar_on_solver_shapes() {
     }
 }
 
+/// The implicit method is layout-blind by construction (per-row Newton
+/// solves have no lane passes), but the contract is the same as for the
+/// explicit kernels: `dim_major`, compaction, `eval_inactive` and both
+/// pooled paths must all be bitwise-identical to the serial row-major
+/// solve — including the Newton counters in `Stats`. (The frozen
+/// reference loop predates implicit methods, so the serial active-set
+/// solve is the oracle here.)
+#[test]
+fn implicit_layouts_compaction_and_pools_bitwise() {
+    for &dim in &[1usize, 3, 5] {
+        let (sys, y0, grid) = workload(6, dim, 400 + dim as u64);
+        let base = SolveOptions::new(Method::Trbdf2)
+            .with_tols(1e-7, 1e-6)
+            .with_max_steps(100_000)
+            .with_trace();
+        let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+        assert!(serial.all_success(), "dim={dim}");
+        for eval_inactive in [true, false] {
+            for layout in [Layout::RowMajor, Layout::DimMajor] {
+                for threshold in [0.0, 1.0] {
+                    let mut opts = base.clone().with_layout(layout).with_compaction(threshold);
+                    opts.eval_inactive = eval_inactive;
+                    let got = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+                    assert_bitwise(
+                        &serial,
+                        &got,
+                        &format!(
+                            "implicit dim={dim} {} eval_inactive={eval_inactive} \
+                             threshold={threshold}",
+                            layout.name()
+                        ),
+                    );
+                }
+            }
+        }
+        for kind in [PoolKind::Scoped, PoolKind::Persistent] {
+            let opts = base
+                .clone()
+                .with_layout(Layout::DimMajor)
+                .with_threads(3)
+                .with_pool(kind)
+                .with_compaction(0.75);
+            let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(&serial, &got, &format!("implicit pooled {} dim={dim}", kind.name()));
+        }
+        // Joint, both layouts, serial and pooled.
+        let jrow = solve_ivp_joint(&sys, &y0, &grid, &base);
+        let jdm = solve_ivp_joint(&sys, &y0, &grid, &base.clone().with_layout(Layout::DimMajor));
+        assert_bitwise(&jrow, &jdm, &format!("implicit joint dim={dim} dim_major"));
+        let jp = solve_ivp_joint_pooled(
+            &sys,
+            &y0,
+            &grid,
+            &base.clone().with_threads(2).with_pool(PoolKind::Persistent),
+        );
+        assert_bitwise(&jrow, &jp, &format!("implicit joint pooled dim={dim}"));
+    }
+}
+
 /// The error-norm contracts under the lane tree: the RMS norm is still
 /// literally `sqrt(sumsq / len)` bitwise, short rows reduce exactly like
 /// the historical sequential sum, and a lane round-trip through the SoA

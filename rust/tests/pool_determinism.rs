@@ -120,6 +120,80 @@ fn non_fsal_ledger_invariant_to_partition() {
     }
 }
 
+/// The implicit (TR-BDF2) method through the parallel matrix: per-row
+/// Newton state (Jacobian/LU reuse, divergence history) is slot-local,
+/// so trajectories, traces and every `Stats` counter — including the
+/// Newton accounting `n_f_evals`/`n_jac_evals`/`n_lu_factor` — must be
+/// bitwise-identical across pool kind × threads × steal-chunk.
+#[test]
+fn implicit_parallel_bitwise_across_pools_threads_and_chunks() {
+    let (sys, y0, grid) = straggler_workload(16, 200.0, 0.5, 5.0, 6);
+    let base = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(1_000_000)
+        .with_trace();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(serial.all_success());
+    // Per-row accounting really is per-row: the stiff straggler did more
+    // Newton work than its easy neighbors.
+    assert!(serial.stats[0].n_f_evals > serial.stats[1].n_f_evals);
+    assert!(serial.stats[0].n_jac_evals > 0);
+    for threads in [2, 4, 7] {
+        for kind in POOLS {
+            for chunk in [0, 3] {
+                let opts = base
+                    .clone()
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!("implicit parallel {kind:?} threads={threads} chunk={chunk}"),
+                );
+            }
+        }
+    }
+}
+
+/// The implicit method through the joint matrix: the sharded executors
+/// split the Newton scratch per range exactly like the stage buffers,
+/// and a Newton divergence (a shared reject) is a per-row property, so
+/// the shared controller sequence — and everything downstream — is
+/// bitwise-identical whatever carried the passes.
+#[test]
+fn implicit_joint_bitwise_across_pools_threads_and_chunks() {
+    let mus = vec![1.0, 60.0, 3.0, 25.0, 0.7, 120.0, 2.0, 9.0];
+    let b = mus.len();
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, 6.0, 8);
+    let base = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(1_000_000)
+        .with_trace();
+    let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+    assert!(serial.all_success());
+    for threads in [2, 4] {
+        for kind in POOLS {
+            for chunk in [0, 3] {
+                let opts = base
+                    .clone()
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!("implicit joint {kind:?} threads={threads} chunk={chunk}"),
+                );
+            }
+        }
+    }
+}
+
 /// Pool selection is observable: the quiet serial fallback, the scoped
 /// path and the persistent path each stamp `exec_stats` — no more
 /// guessing whether a "pooled" solve actually pooled.

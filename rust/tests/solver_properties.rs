@@ -170,6 +170,82 @@ fn prop_joint_naive_equivalence() {
     });
 }
 
+/// Empirical order of convergence of the implicit TR-BDF2 pair on a
+/// smooth nonlinear problem (Lotka–Volterra): with fixed steps the
+/// global error must shrink like h² — the observed order from two
+/// refinements must sit within tolerance of the design order 2. Newton
+/// is solved far below the measurement floor (tols 1e-12 make the
+/// convergence threshold ~1e-13), so the slope measures the
+/// discretization, not the nonlinear solver.
+#[test]
+fn trbdf2_observed_order_matches_design_order() {
+    let sys = rode::problems::LotkaVolterra::uniform(1, 1.1, 0.4, 0.1, 0.4);
+    let y0 = BatchVec::from_rows(&[vec![2.0, 1.0]]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 2);
+    let solve_fixed = |h: f64| -> Vec<f64> {
+        let opts = SolveOptions::new(Method::Trbdf2)
+            .with_tols(1e-12, 1e-12)
+            .with_fixed_dt(h)
+            .with_max_steps(100_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+        assert!(sol.all_success(), "h={h}");
+        sol.y_final(0).to_vec()
+    };
+    let reference = solve_fixed(0.003125);
+    let err = |y: &[f64]| -> f64 {
+        y.iter().zip(&reference).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+    };
+    let e1 = err(&solve_fixed(0.05));
+    let e2 = err(&solve_fixed(0.025));
+    let e3 = err(&solve_fixed(0.0125));
+    let order_a = (e1 / e2).log2();
+    let order_b = (e2 / e3).log2();
+    assert!(
+        (1.7..=2.4).contains(&order_a) && (1.7..=2.4).contains(&order_b),
+        "observed orders {order_a:.2}, {order_b:.2} (errors {e1:.3e}, {e2:.3e}, {e3:.3e})"
+    );
+}
+
+/// Linear-problem sanity for the implicit pair: (a) L-stability smoke —
+/// on y' = λy with λ = −10⁶, steps of size 1 (hλ = −10⁶) stay bounded
+/// and decaying; (b) exactness regime — at small hλ the fixed-step
+/// solution tracks exp(λt) with the h² global error of the trapezoidal
+/// substage.
+#[test]
+fn trbdf2_linear_l_stability_and_small_h_accuracy() {
+    // (a) One-step-per-unit integration of a brutally stiff decay.
+    let sys = rode::problems::ExponentialDecay::new(vec![1e6], 1);
+    let y0 = BatchVec::from_rows(&[vec![1.0]]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 3.0, 4);
+    let opts = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-8, 1e-8)
+        .with_fixed_dt(1.0)
+        .with_max_steps(100);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success(), "{:?}", sol.status);
+    let mut prev = 1.0f64;
+    for e in 1..4 {
+        let v = sol.y(0, e)[0];
+        assert!(v.is_finite() && v.abs() <= prev, "e={e}: |{v}| > {prev}");
+        prev = v.abs();
+    }
+    // L-stable damping: after one huge step the fast mode is essentially
+    // gone (an A-stable-only trapezoid would leave |y| ≈ |y0|).
+    assert!(sol.y(0, 1)[0].abs() < 1e-2, "fast mode survived: {}", sol.y(0, 1)[0]);
+
+    // (b) Small-h accuracy on y' = −y.
+    let sys = rode::problems::ExponentialDecay::new(vec![1.0], 1);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
+    let opts = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-12, 1e-12)
+        .with_fixed_dt(0.01)
+        .with_max_steps(1_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success());
+    let err = (sol.y_final(0)[0] - (-1.0f64).exp()).abs();
+    assert!(err < 1e-5, "fixed-step error {err} too large for h=0.01");
+}
+
 /// Adjoint gradients match finite differences for random VdP problems.
 #[test]
 fn prop_adjoint_gradients_match_fd() {

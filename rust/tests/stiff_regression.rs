@@ -1,0 +1,276 @@
+//! The stiff-regression suite: the implicit (TR-BDF2) method must solve
+//! the workloads that defined the explicit solver's wall — Van der Pol
+//! at μ up to 5000 and the Robertson kinetics problem — while explicit
+//! Dopri5 at μ = 1000 is pinned to still hit `DtUnderflow` (the wall the
+//! implicit method removes). The acceptance batch (256 rows, one μ=1000
+//! straggler among easy rows) must reach `Status::Success` in both the
+//! parallel and joint loops, bitwise-identical across pool kinds,
+//! steal-chunk sizes, layouts and compaction, with the per-row Newton
+//! accounting (`n_f_evals`, `n_jac_evals`, `n_lu_factor`) exact under
+//! sharded merges — `Stats` equality below covers all counters.
+
+use rode::bench::vdp_stiff_span;
+use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
+use rode::prelude::*;
+use rode::problems::{Robertson, VdP};
+use rode::tensor::BatchVec;
+
+/// Full bitwise equality of two solutions (NaN-safe via bit comparison).
+fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.status, b.status, "{label}: status");
+    assert_eq!(a.stats, b.stats, "{label}: stats");
+    let (fa, fb) = (a.ys_flat(), b.ys_flat());
+    assert_eq!(fa.len(), fb.len(), "{label}: ys length");
+    for (idx, (x, y)) in fa.iter().zip(fb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: ys[{idx}] {x} vs {y}");
+    }
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+}
+
+/// VdP μ ∈ {10, 100, 1000, 5000} all reach Success under TR-BDF2, and
+/// the loose-tolerance solution agrees with a tight-tolerance
+/// self-reference — the accuracy check that the Newton/Jacobian-reuse
+/// machinery converges to the right trajectory, not just *a* trajectory.
+#[test]
+fn vdp_mu_sweep_solves_with_implicit() {
+    for &mu in &[10.0, 100.0, 1000.0, 5000.0] {
+        let sys = VdP::new(vec![mu]);
+        let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+        // The span sits on the slow branch of the relaxation oscillation
+        // (see `vdp_stiff_span`), so the final-state comparison below is
+        // well-conditioned.
+        let grid = TimeGrid::linspace_shared(1, 0.0, vdp_stiff_span(mu), 9);
+        let loose = SolveOptions::new(Method::Trbdf2)
+            .with_tols(1e-6, 1e-4)
+            .with_max_steps(1_000_000);
+        let sol = solve_ivp_parallel(&sys, &y0, &grid, &loose);
+        assert_eq!(sol.status[0], Status::Success, "mu={mu}: {:?}", sol.status[0]);
+        // The implicit machinery really ran: Jacobians were built, LUs
+        // factored, and Newton evaluations accrued beyond the batched
+        // stage calls.
+        let st = &sol.stats[0];
+        assert!(st.n_jac_evals > 0, "mu={mu}: no Jacobian builds");
+        assert!(st.n_lu_factor >= st.n_jac_evals, "mu={mu}: LU count");
+        assert!(st.n_f_evals > 2 * st.n_steps, "mu={mu}: f-eval accounting");
+
+        let tight = SolveOptions::new(Method::Trbdf2)
+            .with_tols(1e-9, 1e-7)
+            .with_max_steps(2_000_000);
+        let reference = solve_ivp_parallel(&sys, &y0, &grid, &tight);
+        assert_eq!(reference.status[0], Status::Success, "mu={mu} (tight)");
+        for d in 0..2 {
+            let (got, want) = (sol.y_final(0)[d], reference.y_final(0)[d]);
+            assert!(
+                (got - want).abs() < 5e-2 * (1.0 + want.abs()),
+                "mu={mu} d={d}: {got} vs tight reference {want}"
+            );
+        }
+    }
+}
+
+/// The Robertson kinetics problem (the classic stiff benchmark) solves
+/// to Success with the implicit method and its analytic Jacobian,
+/// conserves mass at every dense-output point, and agrees with a
+/// tight-tolerance self-reference.
+#[test]
+fn robertson_solves_with_implicit() {
+    let sys = Robertson::new(1);
+    let y0 = BatchVec::from_rows(&[Robertson::y0().to_vec()]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 100.0, 11);
+    let opts = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-8, 1e-5)
+        .with_max_steps(1_000_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.status[0], Status::Success, "{:?}", sol.status[0]);
+    for e in 0..11 {
+        let y = sol.y(0, e);
+        let mass: f64 = y.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-5, "e={e}: mass {mass}");
+        assert!(y[1].abs() < 1e-3, "e={e}: y2 = {} left the QSS regime", y[1]);
+    }
+
+    let tight = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-10, 1e-8)
+        .with_max_steps(2_000_000);
+    let reference = solve_ivp_parallel(&sys, &y0, &grid, &tight);
+    assert_eq!(reference.status[0], Status::Success);
+    for d in 0..3 {
+        let (got, want) = (sol.y_final(0)[d], reference.y_final(0)[d]);
+        assert!(
+            (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "d={d}: {got} vs {want}"
+        );
+    }
+}
+
+/// Pin the wall the tentpole removes: explicit Dopri5 at μ = 1000 with
+/// the minimum step pinned just above the method's stability ceiling
+/// (|hλ| ≲ 3.3 with λ ≈ −3μ ⇒ h_stable ≈ 1.1·10⁻³ < min_dt = 4·10⁻³)
+/// must ride its rejections into `DtUnderflow` — while TR-BDF2 under
+/// the *same* options steps straight through.
+#[test]
+fn explicit_dopri5_still_underflows_at_mu_1000() {
+    let sys = VdP::new(vec![1000.0]);
+    let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 400.0, 5);
+    let mut opts = SolveOptions::new(Method::Dopri5)
+        .with_tols(1e-6, 1e-4)
+        .with_dt0(0.01)
+        .with_max_steps(500_000);
+    opts.min_dt_rel = 1e-5; // min_dt = 400·1e-5 = 4e-3, above the stability ceiling
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert_eq!(
+        sol.status[0],
+        Status::DtUnderflow,
+        "explicit dopri5 should hit the stiffness wall, got {:?}",
+        sol.status[0]
+    );
+
+    // Same options, implicit method: the wall is gone.
+    let mut iopts = opts.clone();
+    iopts.method = Method::Trbdf2;
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &iopts);
+    assert_eq!(sol.status[0], Status::Success, "{:?}", sol.status[0]);
+}
+
+/// The acceptance batch: 256 rows, one μ=1000 straggler among easy
+/// μ=0.5 oscillators, solved by the **parallel** loop with TR-BDF2 —
+/// Success everywhere, and bitwise-identical (trajectories, traces and
+/// every `Stats` counter including `n_f_evals`/`n_jac_evals`/
+/// `n_lu_factor`) across pool kind × threads × steal-chunk × layout ×
+/// compaction.
+#[test]
+fn implicit_parallel_batch256_bitwise_across_pools_layouts_compaction() {
+    let batch = 256;
+    let mut mus = vec![0.5; batch];
+    mus[0] = 1000.0;
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 40.0, 6);
+    let base = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(1_000_000)
+        .with_trace();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(serial.all_success(), "serial: {:?}", &serial.status[..4]);
+    // The stiff straggler did real Newton work; the easy rows did their
+    // own, smaller share (per-row accounting).
+    assert!(serial.stats[0].n_jac_evals > 0);
+    assert!(serial.stats[0].n_steps > serial.stats[1].n_steps);
+
+    for layout in [Layout::RowMajor, Layout::DimMajor] {
+        for compact in [0.0, 0.5] {
+            for (kind, threads, chunk) in [
+                (PoolKind::Scoped, 4, 0),
+                (PoolKind::Persistent, 4, 0),
+                (PoolKind::Persistent, 7, 5),
+            ] {
+                let opts = base
+                    .clone()
+                    .with_layout(layout)
+                    .with_compaction(compact)
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!(
+                        "parallel {} {} compact={compact} threads={threads} chunk={chunk}",
+                        kind.name(),
+                        layout.name()
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The same acceptance batch through the **joint** loop (shared
+/// controller): Success, and bitwise-identical across pool kinds,
+/// thread counts, steal-chunks and layouts.
+#[test]
+fn implicit_joint_batch256_bitwise_across_pools_and_layouts() {
+    let batch = 256;
+    let mut mus = vec![0.5; batch];
+    mus[0] = 1000.0;
+    let sys = VdP::new(mus);
+    let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 10.0, 5);
+    let base = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(1_000_000);
+    let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+    assert!(serial.all_success(), "serial joint: {:?}", &serial.status[..4]);
+
+    for layout in [Layout::RowMajor, Layout::DimMajor] {
+        for (kind, threads, chunk) in [
+            (PoolKind::Scoped, 4, 0),
+            (PoolKind::Persistent, 4, 0),
+            (PoolKind::Persistent, 3, 8),
+        ] {
+            let opts = base
+                .clone()
+                .with_layout(layout)
+                .with_threads(threads)
+                .with_pool(kind)
+                .with_steal_chunk(chunk);
+            let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(
+                &serial,
+                &got,
+                &format!("joint {} {} threads={threads} chunk={chunk}", kind.name(), layout.name()),
+            );
+        }
+    }
+}
+
+/// A fixed-step implicit solve whose Newton iteration cannot converge
+/// must fail loudly with the dedicated `Status::NewtonDiverged` — not
+/// silently shrink the "fixed" step, and not misreport `DtUnderflow`.
+/// The probe is `y' = y²` from y0 = 2 at h = 1: the trapezoidal stage
+/// equation `z = rhs + h·d·z²` has negative discriminant (no real
+/// solution), so divergence is guaranteed, fresh Jacobian or not.
+#[test]
+fn fixed_step_newton_divergence_is_reported() {
+    struct Quadratic;
+    impl OdeSystem for Quadratic {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn f_inst(&self, _inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+            dy[0] = y[0] * y[0];
+        }
+    }
+    let sys = Quadratic;
+    let y0 = BatchVec::from_rows(&[vec![2.0]]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 3);
+    let opts = SolveOptions::new(Method::Trbdf2).with_fixed_dt(1.0).with_max_steps(100);
+    // Parallel loop: the row fails outright.
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.status[0], Status::NewtonDiverged, "{:?}", sol.status[0]);
+    // Joint loop: the shared fixed step fails the whole batch the same
+    // way (the batch here is one row; the status must still be the
+    // dedicated one, not DtUnderflow or MaxStepsReached).
+    let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.status[0], Status::NewtonDiverged, "{:?}", sol.status[0]);
+}
+
+/// Newton divergence feeds the rejection path, not a death spiral: a
+/// solve that starts with an absurdly large dt0 must recover (reject,
+/// shrink, refresh the Jacobian) and still finish with Success.
+#[test]
+fn newton_divergence_recovers_through_rejection() {
+    let sys = VdP::new(vec![100.0]);
+    let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, 40.0, 5);
+    let opts = SolveOptions::new(Method::Trbdf2)
+        .with_tols(1e-6, 1e-4)
+        .with_dt0(40.0) // the whole span in one step — Newton will diverge
+        .with_max_steps(200_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.status[0], Status::Success, "{:?}", sol.status[0]);
+    // Divergence shows up as rejected attempts, not as an aborted solve.
+    assert!(sol.stats[0].n_steps > sol.stats[0].n_accepted);
+}

@@ -44,7 +44,7 @@ fn forward(model: &CnfDynamics, batch: &[[f64; D]]) -> (BatchVec, f64) {
         // logp channel starts at 0: accumulates -∫div.
     }
     let grid = TimeGrid::linspace_shared(b, 0.0, T1, 2);
-    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_max_steps(2_000);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5).with_max_steps(2_000);
     let sol = solve_ivp_parallel(model, &y0, &grid, &opts);
     assert!(sol.all_success(), "{:?}", sol.status);
     let mut y1 = BatchVec::zeros(b, D + 1);
@@ -81,7 +81,7 @@ fn main() {
 
     let batch_size = 32;
     let adj_opts = AdjointOptions::new(
-        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(5_000),
+        SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(5_000),
     );
 
     let mut logf = fs::File::create("results/cnf_loss.csv").unwrap();

@@ -66,7 +66,7 @@ fn main() {
     };
     let solve_teacher = |y0: &BatchVec| -> Solution {
         let grid = TimeGrid::linspace_shared(y0.batch(), 0.0, horizon, snapshots);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_parallel(&teacher, y0, &grid, &opts);
         assert!(sol.all_success());
         sol
@@ -94,7 +94,7 @@ fn main() {
     writeln!(logf, "step,train_mse").unwrap();
     let t_start = std::time::Instant::now();
     for step in 0..train_steps {
-        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, Method::Rk4);
+        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, MethodId::RK4);
         // Loss gradient at each snapshot, accumulated by walking segments
         // backwards: here we use the terminal-sum formulation — seed the
         // gradient at the end and add snapshot seeds as the tape unwinds.
@@ -124,7 +124,7 @@ fn main() {
             }
             // Backprop through the tape prefix [0, step_idx]: re-tape the
             // prefix (cheap: share the same forward trajectory).
-            let prefix = rk_forward_tape(&model, &y0_train, 0.0, dt, step_idx, Method::Rk4);
+            let prefix = rk_forward_tape(&model, &y0_train, 0.0, dt, step_idx, MethodId::RK4);
             let (_, dp) = rk_backward(&model, &prefix, &seed);
             for (g, d) in grad.iter_mut().zip(&dp) {
                 *g += d / count.max(1.0);
@@ -145,7 +145,7 @@ fn main() {
 
     // --- evaluation (the Table-4 metrics) --------------------------------------
     let grid = TimeGrid::linspace_shared(n_test, 0.0, horizon, snapshots);
-    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
     let par = solve_ivp_parallel(&model, &y0_test, &grid, &opts);
     let joint = solve_ivp_joint(&model, &y0_test, &grid, &opts);
     assert!(par.all_success() && joint.all_success());

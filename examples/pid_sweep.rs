@@ -18,7 +18,7 @@ fn steps_for(mu: f64, controller: Controller) -> u64 {
     let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
     let t1 = rode::problems::VdP::approx_period(mu.max(0.1));
     let grid = TimeGrid::linspace_shared(1, 0.0, t1, 100);
-    let opts = SolveOptions::new(Method::Dopri5)
+    let opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-5, 1e-5)
         .with_controller(controller)
         .with_max_steps(1_000_000);

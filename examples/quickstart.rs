@@ -24,7 +24,7 @@ fn main() {
 
     // sol = solve_ivp(vdp, y0, t_eval, method="tsit5", args=mu)
     let sys = rode::problems::VdP::uniform(batch_size, mu);
-    let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-5);
+    let opts = SolveOptions::new(MethodId::TSIT5).with_tols(1e-6, 1e-5);
     let sol = solve_ivp_parallel(&sys, &y0, &t_eval, &opts);
 
     // print(sol.status)  # => tensor([0, 0, 0, 0, 0])

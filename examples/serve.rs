@@ -26,6 +26,7 @@ fn workload(rng: &mut Rng64, n: usize) -> Vec<SolveRequest> {
                 problem: ProblemSpec::Vdp { mu },
                 y0: vec![rng.normal() * 1.5, rng.normal() * 0.5],
                 t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+                method: None,
             }
         })
         .collect()

@@ -34,7 +34,7 @@ fn main() {
     let mut rng = rode::nn::Rng64::new(1);
     let y0 = phase_shifted_y0(batch, &mut rng);
     let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
-    let opts = SolveOptions::new(Method::Dopri5)
+    let opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-5, 1e-5)
         .with_max_steps(100_000)
         .with_trace();
@@ -77,7 +77,7 @@ fn main() {
         let mut rng = rode::nn::Rng64::new(123);
         let y0 = phase_shifted_y0(batch, &mut rng);
         let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
-        let opts = SolveOptions::new(Method::Dopri5)
+        let opts = SolveOptions::new(MethodId::DOPRI5)
             .with_tols(1e-5, 1e-5)
             .with_max_steps(100_000);
         let sys = rode::problems::VdP::uniform(batch, mu);

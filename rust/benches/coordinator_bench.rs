@@ -19,7 +19,7 @@ use rode::coordinator::{
 use rode::exec::solve_ivp_parallel_pooled;
 use rode::nn::Rng64;
 use rode::solver::reference::solve_ivp_parallel_reference;
-use rode::solver::{solve_ivp_parallel, Method, PoolKind, SolveOptions, TimeGrid};
+use rode::solver::{solve_ivp_parallel, MethodId, PoolKind, SolveOptions, TimeGrid};
 use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
@@ -29,6 +29,7 @@ fn req(rng: &mut Rng64, id: u64) -> SolveRequest {
         problem: ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
         y0: vec![rng.normal(), rng.normal()],
         t_eval: (0..20).map(|k| k as f64 * 0.25).collect(),
+        method: None,
     }
 }
 
@@ -101,7 +102,7 @@ fn bench_threads_sweep() {
         );
         let grid = TimeGrid::linspace_shared(batch, 0.0, 10.0, 20);
         let rows = threads_sweep(&[1, 2, 4, 8], 1, 5, |threads| {
-            let opts = SolveOptions::new(Method::Dopri5)
+            let opts = SolveOptions::new(MethodId::DOPRI5)
                 .with_tols(1e-5, 1e-5)
                 .with_max_steps(1_000_000)
                 .with_threads(threads);
@@ -134,7 +135,7 @@ fn bench_straggler() {
     println!("--- straggler batch (1 stiff VdP + 255 easy, dopri5, eval_inactive=false) ---");
     let batch = 256;
     let (sys, y0, grid) = straggler_workload(batch, 60.0, 0.5, 12.0, 20);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(1_000_000)
         .skip_inactive();
@@ -191,7 +192,7 @@ fn bench_straggler() {
     // runs must agree with the serial solve bitwise.
     println!("--- straggler pools (same batch, 4 threads, eval_inactive=true) ---");
     let pool_base =
-        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+        SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &pool_base);
     let mut measure_pool = |name: &str, opts: &SolveOptions| -> f64 {
         let mut stats = None;
@@ -253,8 +254,15 @@ fn bench_straggler() {
 /// `explicit_success = 0`) while the implicit method strolls through —
 /// the wall the implicit subsystem removes. Appends
 /// `stiffsweep-mu{μ}` records to `BENCH_solver.json`
-/// (`speedup_vs_explicit` carries advisory floors in
-/// `BENCH_baseline.json` for the μ where the explicit method finishes).
+/// (`speedup_vs_explicit` carries floors in `BENCH_baseline.json` for
+/// the μ where the explicit method finishes).
+///
+/// A second leg pits Kvaerno 4(3) against TR-BDF2 at tight tolerances
+/// (atol = rtol = 1e-8), where the order-4 method's larger stable-accurate
+/// step should need *fewer accepted steps* for the same trajectory.
+/// Appends `stiffsweep-kvaerno43-mu{μ}` records whose `steps_vs_trbdf2`
+/// ratio (TR-BDF2 accepted steps / Kvaerno accepted steps, > 1 means
+/// Kvaerno wins) carries an advisory floor in `BENCH_baseline.json`.
 fn bench_stiffsweep() {
     println!("--- stiffsweep (batch 16 VdP, trbdf2 vs dopri5, tol 1e-6/1e-4) ---");
     let batch = 16;
@@ -265,9 +273,15 @@ fn bench_stiffsweep() {
         let t1 = vdp_stiff_span(mu);
         let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 8);
 
-        let mut run = |method: Method, max_steps: usize, warmup: usize, reps: usize| {
-            let opts = SolveOptions::new(method).with_tols(1e-6, 1e-4).with_max_steps(max_steps);
+        let mut run = |method: MethodId,
+                       tols: (f64, f64),
+                       max_steps: usize,
+                       warmup: usize,
+                       reps: usize| {
+            let opts =
+                SolveOptions::new(method).with_tols(tols.0, tols.1).with_max_steps(max_steps);
             let mut steps = 0u64;
+            let mut accepted = 0u64;
             let mut fevals = 0u64;
             let mut jacs = 0u64;
             let mut success = true;
@@ -275,23 +289,25 @@ fn bench_stiffsweep() {
                 let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
                 success = sol.all_success();
                 steps = sol.max_steps();
+                accepted = sol.stats[0].n_accepted;
                 fevals = sol.stats[0].n_f_evals;
                 jacs = sol.stats[0].n_jac_evals;
                 std::hint::black_box(sol.ys_flat()[0]);
             });
-            (Summary::from_samples(&xs), steps, fevals, jacs, success)
+            (Summary::from_samples(&xs), steps, accepted, fevals, jacs, success)
         };
 
-        let (s_imp, steps_imp, fe_imp, jac_imp, ok_imp) = run(Method::Trbdf2, 500_000, 1, 3);
+        let (s_imp, steps_imp, _, fe_imp, jac_imp, ok_imp) =
+            run(MethodId::TRBDF2, (1e-6, 1e-4), 500_000, 1, 3);
         assert!(ok_imp, "mu={mu}: implicit must solve the sweep");
         // The explicit leg gets a bounded budget, probed once: at
         // μ = 1000 it cannot finish inside it (stability caps dt ~ 1e-3
         // over a span of 400), and re-timing a known budget-exhausting
         // failure would just burn CI time — only a successful leg is
         // re-run for a fair timing.
-        let probe = run(Method::Dopri5, 200_000, 0, 1);
-        let (s_exp, steps_exp, fe_exp, _, ok_exp) =
-            if probe.4 { run(Method::Dopri5, 200_000, 1, 3) } else { probe };
+        let probe = run(MethodId::DOPRI5, (1e-6, 1e-4), 200_000, 0, 1);
+        let (s_exp, steps_exp, _, fe_exp, _, ok_exp) =
+            if probe.5 { run(MethodId::DOPRI5, (1e-6, 1e-4), 200_000, 1, 3) } else { probe };
         let speedup = s_exp.mean / s_imp.mean;
         // Only a successful explicit leg yields a meaningful ratio; a
         // failed probe's wall time is just its budget burning down.
@@ -318,6 +334,37 @@ fn bench_stiffsweep() {
             rec = rec.field("speedup_vs_explicit", speedup);
         }
         records.push(rec);
+
+        // The ESDIRK-vs-ESDIRK leg: tight tolerances, where method order
+        // (not stability) sets the step count. Step counts are exactly
+        // reproducible, so warmup 0 / one rep suffices — the wall time is
+        // recorded for context only.
+        let (s_tr, _, acc_tr, _, _, ok_tr) =
+            run(MethodId::TRBDF2, (1e-8, 1e-8), 2_000_000, 0, 1);
+        let (s_kv, _, acc_kv, _, jac_kv, ok_kv) =
+            run(MethodId::KVAERNO43, (1e-8, 1e-8), 2_000_000, 0, 1);
+        assert!(ok_tr && ok_kv, "mu={mu}: tight-tolerance legs must solve");
+        assert!(
+            acc_kv < acc_tr,
+            "mu={mu}: kvaerno43 accepted {acc_kv} steps, trbdf2 {acc_tr} — the \
+             order-4 pair should need fewer at tol 1e-8"
+        );
+        let ratio = acc_tr as f64 / acc_kv as f64;
+        println!(
+            "mu={mu:<6} tol 1e-8: kvaerno43 {:>9.2} ms ({acc_kv:>6} acc) | trbdf2 \
+             {:>9.2} ms ({acc_tr:>6} acc) | steps x{ratio:.2}",
+            s_kv.mean, s_tr.mean
+        );
+        records.push(
+            BenchRecord::new(&format!("stiffsweep-kvaerno43-mu{mu}"), &s_kv)
+                .field("mu", mu)
+                .field("batch", batch as f64)
+                .field("accepted_steps", acc_kv as f64)
+                .field("jac_evals", jac_kv as f64)
+                .field("trbdf2_ms", s_tr.mean)
+                .field("trbdf2_accepted_steps", acc_tr as f64)
+                .field("steps_vs_trbdf2", ratio),
+        );
     }
     match append_bench_json("BENCH_solver.json", &records) {
         Ok(()) => println!("appended {} stiffsweep records to BENCH_solver.json", records.len()),

@@ -42,7 +42,7 @@ fn bench_rk_attempt() {
         // VdP has dim 2; emulate larger dims with ExponentialDecay.
         let run = |reps: usize| -> Vec<f64> {
             if dim == 2 {
-                let ct = CompiledTableau::new(Method::Dopri5.tableau());
+                let ct = CompiledTableau::new(MethodId::DOPRI5.tableau());
                 let mut ws = RkWorkspace::new(7, batch, 2);
                 let y = BatchVec::broadcast(&[2.0, 0.0], batch);
                 let t = vec![0.0; batch];
@@ -53,7 +53,7 @@ fn bench_rk_attempt() {
                 })
             } else {
                 let sys = rode::problems::ExponentialDecay::new(vec![1.0], dim);
-                let ct = CompiledTableau::new(Method::Dopri5.tableau());
+                let ct = CompiledTableau::new(MethodId::DOPRI5.tableau());
                 let mut ws = RkWorkspace::new(7, batch, dim);
                 let y = BatchVec::zeros(batch, dim);
                 let t = vec![0.0; batch];
@@ -115,7 +115,7 @@ fn bench_ablations() {
 
     // FSAL (dopri5/tsit5) vs non-FSAL (cashkarp45) at equal order: count
     // dynamics evaluations.
-    for m in [Method::Dopri5, Method::Tsit5, Method::CashKarp45, Method::Fehlberg45] {
+    for m in [MethodId::DOPRI5, MethodId::TSIT5, MethodId::CASHKARP45, MethodId::FEHLBERG45] {
         let opts = SolveOptions::new(m).with_tols(1e-5, 1e-5).with_max_steps(100_000);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
@@ -132,10 +132,13 @@ fn bench_ablations() {
     let mus: Vec<f64> = (0..batch).map(|i| 0.5 + 10.0 * (i as f64 / batch as f64)).collect();
     let sys_het = VdP::new(mus);
     for (label, opts) in [
-        ("eval_inactive=true (torchode)", SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5)),
+        (
+            "eval_inactive=true (torchode)",
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5),
+        ),
         (
             "eval_inactive=false (rode ext)",
-            SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).skip_inactive(),
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5).skip_inactive(),
         ),
     ] {
         let xs = time_repeats(1, 5, || {
@@ -266,7 +269,7 @@ fn attempt_arith_scalar(
 /// `speedup_dm_vs_scalar`) to `BENCH_solver.json`.
 fn bench_dim_sweep() {
     println!("--- stage-kernel dim sweep (dopri5 shapes, per attempt arithmetic) ---");
-    let ct = CompiledTableau::cached(Method::Dopri5);
+    let ct = CompiledTableau::cached(MethodId::DOPRI5);
     let stages: Vec<(Vec<f64>, Vec<usize>)> = (1..ct.tab.stages)
         .map(|s| {
             let nz = &ct.a_nz[s];

@@ -36,6 +36,7 @@ TRACKED = (
     "speedup_vs_scoped",
     "speedup_vs_scalar",
     "speedup_vs_explicit",
+    "steps_vs_trbdf2",
 )
 
 

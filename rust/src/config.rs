@@ -3,7 +3,7 @@
 //! the CLI and the serve example. The vendored crate set has no `toml`
 //! crate; the subset here covers everything rode's configs need.
 
-use crate::solver::Method;
+use crate::solver::MethodId;
 use crate::tensor::Layout;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -183,9 +183,11 @@ impl ExecPolicy {
 /// Top-level service configuration (CLI flags override file values).
 #[derive(Debug, Clone)]
 pub struct RodeConfig {
-    /// Runge–Kutta method (`method` key; e.g. `dopri5`, `tsit5`, or the
-    /// implicit `trbdf2` for stiff workloads).
-    pub method: Method,
+    /// Runge–Kutta method (`method` key): any name or alias the method
+    /// registry resolves — e.g. `dopri5`, `tsit5`, or the implicit
+    /// `trbdf2` / `kvaerno43` for stiff workloads. `rode methods` lists
+    /// everything registered.
+    pub method: MethodId,
     /// Absolute tolerance (`atol` key).
     pub atol: f64,
     /// Relative tolerance (`rtol` key).
@@ -218,7 +220,7 @@ pub struct RodeConfig {
 impl Default for RodeConfig {
     fn default() -> Self {
         Self {
-            method: Method::Dopri5,
+            method: MethodId::DOPRI5,
             atol: 1e-6,
             rtol: 1e-5,
             max_batch: 64,
@@ -241,7 +243,7 @@ impl RodeConfig {
     pub fn from_raw(raw: &RawConfig) -> Result<Self> {
         let mut cfg = Self::default();
         if let Some(m) = raw.get("method") {
-            cfg.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}"))?;
+            cfg.method = MethodId::parse(m).ok_or_else(|| anyhow!("unknown method {m}"))?;
         }
         if let Some(v) = raw.get_f64("atol")? {
             cfg.atol = v;
@@ -302,7 +304,7 @@ mod tests {
         )
         .unwrap();
         let cfg = RodeConfig::from_raw(&raw).unwrap();
-        assert_eq!(cfg.method, Method::Tsit5);
+        assert_eq!(cfg.method, MethodId::TSIT5);
         assert_eq!(cfg.atol, 1e-7);
         assert_eq!(cfg.max_batch, 32);
         assert_eq!(cfg.engine, "aot");
@@ -313,7 +315,11 @@ mod tests {
     #[test]
     fn implicit_method_key_parses() {
         let cfg = RodeConfig::from_raw(&RawConfig::parse("method = trbdf2").unwrap()).unwrap();
-        assert_eq!(cfg.method, Method::Trbdf2);
+        assert_eq!(cfg.method, MethodId::TRBDF2);
+        assert!(cfg.method.is_implicit());
+        // Aliases resolve through the registry too.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("method = kv43").unwrap()).unwrap();
+        assert_eq!(cfg.method, MethodId::KVAERNO43);
         assert!(cfg.method.is_implicit());
     }
 
@@ -329,7 +335,7 @@ mod tests {
         let raw = RawConfig::parse("\n# only comments\n\n").unwrap();
         assert!(raw.get("anything").is_none());
         let cfg = RodeConfig::from_raw(&raw).unwrap();
-        assert_eq!(cfg.method, Method::Dopri5);
+        assert_eq!(cfg.method, MethodId::DOPRI5);
     }
 
     #[test]

@@ -2,11 +2,15 @@
 //!
 //! The §4.1 lesson shapes the policy: batching is *free* under parallel
 //! solving (each instance keeps its own solver state), so the batcher
-//! groups aggressively by *shape* only — (problem kind, dim, n_eval) —
-//! never by stiffness or time range. A joint-batching engine would need
+//! groups aggressively by *shape* — (problem kind, dim, n_eval) — plus the
+//! per-request method override, never by stiffness or time range. The
+//! method joins the key because one batch is compiled and stepped with one
+//! tableau; two requests asking for different methods can never share a
+//! stage loop. A joint-batching engine would additionally need
 //! stiffness-aware admission; the parallel engines do not.
 
 use super::request::SolveRequest;
+use crate::solver::MethodId;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -17,11 +21,19 @@ pub struct BucketKey {
     pub kind: &'static str,
     pub dim: usize,
     pub n_eval: usize,
+    /// Per-request method override; `None` = engine default. Part of the
+    /// key so each bucket maps to exactly one compiled tableau.
+    pub method: Option<MethodId>,
 }
 
 impl BucketKey {
     pub fn of(req: &SolveRequest) -> Self {
-        Self { kind: req.problem.kind(), dim: req.dim(), n_eval: req.n_eval() }
+        Self {
+            kind: req.problem.kind(),
+            dim: req.dim(),
+            n_eval: req.n_eval(),
+            method: req.method,
+        }
     }
 }
 
@@ -143,6 +155,7 @@ mod tests {
             },
             y0: vec![1.0, 0.0],
             t_eval: (0..n_eval).map(|k| k as f64).collect(),
+            method: None,
         }
     }
 
@@ -167,6 +180,25 @@ mod tests {
         assert_eq!(b.pending(), 3);
         let batch = b.push(req(4, 0, 5), t).unwrap();
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+    }
+
+    #[test]
+    fn method_overrides_do_not_mix() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        let stiff = |id| {
+            let mut r = req(id, 0, 5);
+            r.method = Some(MethodId::TRBDF2);
+            r
+        };
+        assert!(b.push(req(1, 0, 5), t).is_none()); // default method
+        assert!(b.push(stiff(2), t).is_none()); // trbdf2 bucket
+        assert_eq!(b.pending(), 2);
+        // Same shape + same method flushes; the default bucket stays put.
+        let batch = b.push(stiff(3), t).unwrap();
+        assert_eq!(batch.key.method, Some(MethodId::TRBDF2));
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(b.pending(), 1);
     }
 
     #[test]

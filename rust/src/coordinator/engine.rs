@@ -11,7 +11,7 @@ use super::request::{ProblemSpec, SolveResponse};
 use crate::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
 use crate::problems::{ExponentialDecay, VdP};
 use crate::runtime::Runtime;
-use crate::solver::{Method, SolveOptions, Solution, Stats, Status, TimeGrid};
+use crate::solver::{MethodId, SolveOptions, Solution, Stats, Status, TimeGrid};
 use crate::tensor::BatchVec;
 use anyhow::{anyhow, Result};
 
@@ -31,7 +31,23 @@ fn build_y0(batch: &Batch) -> BatchVec {
     BatchVec::from_rows(&batch.requests.iter().map(|r| r.y0.clone()).collect::<Vec<_>>())
 }
 
-fn to_responses(batch: &Batch, sol: &Solution, engine: &'static str) -> Vec<SolveResponse> {
+/// Clone the engine's default options, applying the bucket's method
+/// override. Buckets are method-homogeneous (the method is part of
+/// [`super::batcher::BucketKey`]), so one resolved method covers the batch.
+fn routed_opts(opts: &SolveOptions, batch: &Batch) -> SolveOptions {
+    let mut opts = opts.clone();
+    if let Some(m) = batch.key.method {
+        opts.method = m;
+    }
+    opts
+}
+
+fn to_responses(
+    batch: &Batch,
+    sol: &Solution,
+    engine: &'static str,
+    method: Option<MethodId>,
+) -> Vec<SolveResponse> {
     batch
         .requests
         .iter()
@@ -47,6 +63,7 @@ fn to_responses(batch: &Batch, sol: &Solution, engine: &'static str) -> Vec<Solv
                 stats: sol.stats[i].clone(),
                 status: sol.status[i],
                 engine,
+                method,
             }
         })
         .collect()
@@ -105,7 +122,7 @@ impl NativeEngine {
 
 impl Default for NativeEngine {
     fn default() -> Self {
-        Self::new(SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5))
+        Self::new(SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5))
     }
 }
 
@@ -115,8 +132,9 @@ impl SolveEngine for NativeEngine {
     }
 
     fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>> {
-        let sol = solve_native(batch, &self.opts, false)?;
-        Ok(to_responses(batch, &sol, self.name()))
+        let opts = routed_opts(&self.opts, batch);
+        let sol = solve_native(batch, &opts, false)?;
+        Ok(to_responses(batch, &sol, self.name(), Some(opts.method)))
     }
 }
 
@@ -142,8 +160,9 @@ impl SolveEngine for JointEngine {
                 return Err(anyhow!("joint engine requires a shared integration range"));
             }
         }
-        let sol = solve_native(batch, &self.opts, true)?;
-        Ok(to_responses(batch, &sol, self.name()))
+        let opts = routed_opts(&self.opts, batch);
+        let sol = solve_native(batch, &opts, true)?;
+        Ok(to_responses(batch, &sol, self.name(), Some(opts.method)))
     }
 }
 
@@ -171,6 +190,14 @@ impl SolveEngine for AotEngine {
     fn solve(&mut self, batch: &Batch) -> Result<Vec<SolveResponse>> {
         if batch.key.kind != "vdp" {
             return Err(anyhow!("no AOT artifact for kind '{}'", batch.key.kind));
+        }
+        if let Some(m) = batch.key.method {
+            // Artifacts bake their method at lowering time; a per-request
+            // override cannot be honored, so fail loudly instead of
+            // silently solving with the wrong tableau.
+            return Err(anyhow!(
+                "aot engine cannot route method '{m}'; artifacts bake the method in"
+            ));
         }
         let n = batch.requests.len();
         let e_req = batch.key.n_eval;
@@ -239,6 +266,7 @@ impl SolveEngine for AotEngine {
                         Status::MaxStepsReached
                     },
                     engine: "aot-pjrt",
+                    method: None,
                 }
             })
             .collect())
@@ -261,6 +289,7 @@ mod tests {
                 problem: ProblemSpec::Vdp { mu },
                 y0: vec![2.0, 0.0],
                 t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+                method: None,
             })
             .collect();
         Batch {
@@ -290,7 +319,7 @@ mod tests {
         let batch = vdp_batch(&[1.0, 5.0, 0.7, 12.0], 10, 5.0);
         let mut serial = NativeEngine::default();
         let mut sharded = NativeEngine::new(
-            SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_threads(2),
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5).with_threads(2),
         );
         let rs = serial.solve(&batch).unwrap();
         let rp = sharded.solve(&batch).unwrap();
@@ -302,8 +331,30 @@ mod tests {
     }
 
     #[test]
+    fn method_override_routes_the_whole_batch() {
+        let mut eng = NativeEngine::default(); // dopri5 default
+        let mut batch = vdp_batch(&[1.0, 5.0], 10, 5.0);
+        for r in batch.requests.iter_mut() {
+            r.method = Some(MethodId::TRBDF2);
+        }
+        batch.key = BucketKey::of(&batch.requests[0]);
+        let rs = eng.solve(&batch).unwrap();
+        assert!(rs.iter().all(|r| r.status == Status::Success));
+        // The response reports the routed method, and the implicit path
+        // actually ran (Jacobian builds happened).
+        assert!(rs.iter().all(|r| r.method == Some(MethodId::TRBDF2)));
+        assert!(rs.iter().all(|r| r.stats.n_jac_evals > 0));
+        // A default-method batch on the same engine stays explicit.
+        let plain = vdp_batch(&[1.0], 10, 5.0);
+        let rp = eng.solve(&plain).unwrap();
+        assert_eq!(rp[0].method, Some(MethodId::DOPRI5));
+        assert_eq!(rp[0].stats.n_jac_evals, 0);
+    }
+
+    #[test]
     fn joint_engine_shares_steps() {
-        let mut eng = JointEngine { opts: SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5) };
+        let mut eng =
+            JointEngine { opts: SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5) };
         let batch = vdp_batch(&[1.0, 10.0], 10, 5.0);
         let rs = eng.solve(&batch).unwrap();
         assert_eq!(rs[0].stats.n_steps, rs[1].stats.n_steps);
@@ -311,7 +362,7 @@ mod tests {
 
     #[test]
     fn joint_engine_rejects_mixed_ranges() {
-        let mut eng = JointEngine { opts: SolveOptions::new(Method::Dopri5) };
+        let mut eng = JointEngine { opts: SolveOptions::new(MethodId::DOPRI5) };
         let mut batch = vdp_batch(&[1.0, 2.0], 5, 5.0);
         for t in batch.requests[1].t_eval.iter_mut() {
             *t += 1.0;
@@ -322,7 +373,7 @@ mod tests {
     #[test]
     fn native_and_joint_agree_on_solution() {
         let mut a = NativeEngine::default();
-        let mut b = JointEngine { opts: SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7) };
+        let mut b = JointEngine { opts: SolveOptions::new(MethodId::DOPRI5).with_tols(1e-7, 1e-7) };
         let batch = vdp_batch(&[2.0, 2.0], 8, 4.0);
         let ra = a.solve(&batch).unwrap();
         let rb = b.solve(&batch).unwrap();

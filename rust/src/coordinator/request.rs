@@ -1,6 +1,6 @@
 //! Request/response types of the solver service.
 
-use crate::solver::{Stats, Status};
+use crate::solver::{MethodId, Stats, Status};
 
 /// Which dynamics a request wants solved. The coordinator buckets
 /// compatible problems together; per-instance parameters (e.g. μ) ride
@@ -33,6 +33,13 @@ pub struct SolveRequest {
     /// Ascending evaluation times; integration runs over
     /// `[t_eval[0], t_eval[last]]`.
     pub t_eval: Vec<f64>,
+    /// Optional per-request method override. `None` uses the engine's
+    /// default; `Some(m)` routes this request into a bucket that is solved
+    /// with `m` — any [`MethodId`], including runtime-registered ones. The
+    /// batcher never mixes methods inside one batch, so a stiff request can
+    /// ask for `trbdf2`/`kvaerno43` while easy traffic stays on the
+    /// engine's explicit default.
+    pub method: Option<MethodId>,
 }
 
 impl SolveRequest {
@@ -55,6 +62,11 @@ pub struct SolveResponse {
     pub status: Status,
     /// Which engine produced this (diagnostics).
     pub engine: &'static str,
+    /// The method that actually solved the bucket: the request's override
+    /// if set, else the engine default. `None` when the engine does not
+    /// route through the registry (the AOT artifacts bake their method in)
+    /// or the batch failed before a method was resolved.
+    pub method: Option<MethodId>,
 }
 
 #[cfg(test)]
@@ -81,6 +93,7 @@ mod tests {
             problem: ProblemSpec::Vdp { mu: 2.0 },
             y0: vec![1.0, 0.0],
             t_eval: vec![0.0, 0.5, 1.0],
+            method: None,
         };
         assert_eq!(r.dim(), 2);
         assert_eq!(r.n_eval(), 3);

@@ -141,6 +141,7 @@ fn worker_loop(
                             stats: Stats::default(),
                             status: Status::NonFinite,
                             engine: "failed",
+                            method: batch.key.method,
                         });
                     }
                 }
@@ -191,6 +192,7 @@ mod tests {
             problem: ProblemSpec::Vdp { mu },
             y0: vec![2.0, 0.0],
             t_eval: (0..10).map(|k| k as f64 * 0.5).collect(),
+            method: None,
         }
     }
 

@@ -65,9 +65,9 @@ pub fn cnf_table5(cfg: &CnfT5Config) -> Vec<CnfT5Row> {
         y0.row_mut(i)[1] = 0.4 * rng.normal();
     }
     let grid = TimeGrid::linspace_shared(b, 0.0, cfg.t1, 2);
-    let fw_opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_max_steps(10_000);
+    let fw_opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5).with_max_steps(10_000);
     let adj_opts = AdjointOptions::new(
-        SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(50_000),
+        SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(50_000),
     );
 
     // Shared forward solve to get y1 + seed.

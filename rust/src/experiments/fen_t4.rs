@@ -80,7 +80,7 @@ pub fn fen_table4(cfg: &FenT4Config) -> Vec<FenT4Row> {
     let y0_train = make_fields(&mut rng, cfg.batch);
     let y0_test = make_fields(&mut rng, cfg.batch);
     let grid = TimeGrid::linspace_shared(cfg.batch, 0.0, horizon, cfg.n_eval);
-    let opts_ref = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+    let opts_ref = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
     let truth_train = solve_ivp_parallel(&teacher, &y0_train, &grid, &opts_ref);
     let truth_test = solve_ivp_parallel(&teacher, &y0_test, &grid, &opts_ref);
 
@@ -92,7 +92,7 @@ pub fn fen_table4(cfg: &FenT4Config) -> Vec<FenT4Row> {
     let n_rk = 12;
     let dt = horizon / n_rk as f64;
     for _ in 0..cfg.train_steps {
-        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, Method::Rk4);
+        let tape = rk_forward_tape(&model, &y0_train, 0.0, dt, n_rk, MethodId::RK4);
         let yf = tape.y_final();
         let mut seed = BatchVec::zeros(cfg.batch, dim);
         for i in 0..cfg.batch {
@@ -108,7 +108,7 @@ pub fn fen_table4(cfg: &FenT4Config) -> Vec<FenT4Row> {
     }
 
     // --- measurement ----------------------------------------------------------
-    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
     let timed = TimedSystem::new(&model);
 
     let mae_of = |sol: &Solution| -> f64 {

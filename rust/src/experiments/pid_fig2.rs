@@ -41,7 +41,7 @@ fn steps_for(mu: f64, tol: f64, controller: Controller) -> u64 {
     let y0 = crate::tensor::BatchVec::from_rows(&[vec![2.0, 0.0]]);
     let t1 = VdP::approx_period(mu.max(0.1));
     let grid = TimeGrid::linspace_shared(1, 0.0, t1, 100);
-    let opts = SolveOptions::new(Method::Dopri5)
+    let opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(tol, tol)
         .with_controller(controller)
         .with_max_steps(1_000_000);

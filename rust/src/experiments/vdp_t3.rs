@@ -82,7 +82,7 @@ pub fn vdp_table3(cfg: &VdpT3Config) -> Vec<VdpT3Row> {
     let y0 = phase_y0(cfg.batch);
     let t1 = VdP::approx_period(cfg.mu);
     let grid = TimeGrid::linspace_shared(cfg.batch, 0.0, t1, cfg.n_eval);
-    let opts = SolveOptions::new(Method::Dopri5)
+    let opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(cfg.tol, cfg.tol)
         .with_max_steps(1_000_000);
 
@@ -104,7 +104,7 @@ pub fn vdp_table3(cfg: &VdpT3Config) -> Vec<VdpT3Row> {
         });
     };
 
-    let stages = Method::Dopri5.tableau().stages;
+    let stages = MethodId::DOPRI5.tableau().stages;
     measure(
         "naive (torchdiffeq-like)",
         &mut |steps| crate::solver::naive::last_op_count() as f64 / steps as f64,
@@ -185,7 +185,7 @@ pub fn sec41_steps(mu: f64, tol: f64, batches: &[usize]) -> Vec<Sec41Point> {
             let sys = VdP::uniform(batch, mu);
             let y0 = phase_y0(batch);
             let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
-            let opts = SolveOptions::new(Method::Dopri5)
+            let opts = SolveOptions::new(MethodId::DOPRI5)
                 .with_tols(tol, tol)
                 .with_max_steps(1_000_000);
             let joint = solve_ivp_joint(&sys, &y0, &grid, &opts);

@@ -25,7 +25,7 @@
 //! let sys = rode::problems::VdP::new(vec![2.0; 4]);
 //! let y0 = BatchVec::broadcast(&[1.0, 0.0], 4);
 //! let t_eval = TimeGrid::linspace_shared(4, 0.0, 6.0, 20);
-//! let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+//! let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
 //! let sol = solve_ivp_parallel(&sys, &y0, &t_eval, &opts);
 //! assert!(sol.all_success());
 //! ```
@@ -68,8 +68,9 @@ pub mod prelude {
     pub use crate::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
     pub use crate::problems::OdeSystem;
     pub use crate::solver::{
-        solve_ivp_joint, solve_ivp_naive, solve_ivp_parallel, Controller, ExecStats, Method,
-        SolveOptions, Solution, Status, TimeGrid,
+        register_method, register_method_with_aliases, solve_ivp_joint, solve_ivp_naive,
+        solve_ivp_parallel, Controller, ExecStats, MethodId, RegisterError, SolveOptions,
+        Solution, Status, TimeGrid,
     };
     pub use crate::tensor::{BatchVec, Layout};
 }

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   solve            one-shot native solve demo (prints Listing-1 style output)
 //!   serve            run the coordinator on a synthetic workload, print metrics
+//!   methods          list every registered method (built-ins + runtime)
 //!   check-artifacts  compile + smoke-run every AOT artifact
 //!   tables <which>   regenerate the paper's tables/figures (see EXPERIMENTS.md)
 //!
@@ -97,9 +98,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     );
     let method = flags
         .get("method")
-        .map(|m| Method::parse(m).ok_or_else(|| anyhow!("unknown method {m}")))
+        .map(|m| MethodId::parse(m).ok_or_else(|| anyhow!("unknown method {m}")))
         .transpose()?
-        .unwrap_or(Method::Tsit5);
+        .unwrap_or(MethodId::TSIT5);
 
     // Mirrors the paper's Listing 1.
     let sys = rode::problems::VdP::uniform(batch, mu);
@@ -210,6 +211,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             t_eval: (0..n_eval)
                 .map(|k| t1 * k as f64 / (n_eval - 1) as f64)
                 .collect(),
+            method: None,
         }));
     }
     let mut ok = 0;
@@ -221,6 +223,36 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     println!("{}/{} requests succeeded", ok, n_requests);
     println!("{}", coord.metrics().summary());
+    Ok(())
+}
+
+/// `rode methods` — dump the method registry as a table. Everything the
+/// process can route to is listed, so a runtime-registered method would
+/// appear here too.
+fn cmd_methods() -> Result<()> {
+    println!(
+        "{:<12} {:<18} {:>6} {:>5} {:>8}  {}",
+        "name", "aliases", "stages", "order", "implicit", "error est."
+    );
+    for m in MethodId::all() {
+        let t = m.tableau();
+        let aliases =
+            if m.aliases().is_empty() { "-".to_string() } else { m.aliases().join(", ") };
+        let err = if t.b_err.is_empty() {
+            "none (fixed step)".to_string()
+        } else {
+            format!("order {}", t.err_order)
+        };
+        println!(
+            "{:<12} {:<18} {:>6} {:>5} {:>8}  {}",
+            m.name(),
+            aliases,
+            t.stages,
+            t.order,
+            if m.is_implicit() { "yes" } else { "no" },
+            err,
+        );
+    }
     Ok(())
 }
 
@@ -275,15 +307,16 @@ fn main() -> Result<()> {
     match cmd {
         "solve" => cmd_solve(&flags),
         "serve" => cmd_serve(&flags),
+        "methods" => cmd_methods(),
         "check-artifacts" => cmd_check_artifacts(&flags),
         "tables" => tables::run(&args[1.min(args.len())..], &flags),
         _ => {
             println!(
                 "rode — parallel ODE solver stack (torchode reproduction)\n\n\
-                 usage: rode <solve|serve|check-artifacts|tables> [--flags]\n\
+                 usage: rode <solve|serve|methods|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
-                 \n                   (--method euler|..|dopri5|tsit5|trbdf2 — trbdf2 is the\
-                 \n                    implicit (stiff) method;\
+                 \n                   (--method <name> — any registered method, see `rode methods`;\
+                 \n                    trbdf2 and kvaerno43 are the implicit (stiff) methods;\
                  \n                    --threads N shards the batch over N workers; 0 = all cores;\
                  \n                    --pool serial|scoped|persistent selects the worker pool;\
                  \n                    --steal-chunk R sets the work-stealing chunk size in rows,\
@@ -294,6 +327,7 @@ fn main() -> Result<()> {
                  \n                    memory layout, bitwise-identical results)\
                  \n  serve            coordinator + synthetic workload (also honors --threads,\
                  \n                   --pool, --steal-chunk, --compact-threshold and --layout)\
+                 \n  methods          list registered methods (name, aliases, stages, order)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\
                  \n                   (t3 | t4 | t5 | sec41 | fig1 | fig2 | all)"

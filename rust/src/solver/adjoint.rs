@@ -258,7 +258,7 @@ fn collect_result(sol: &Solution, batch: usize, f: usize, p: usize) -> AdjointRe
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, VdP};
-    use crate::solver::{Method, SolveOptions};
+    use crate::solver::{MethodId, SolveOptions};
 
     fn solve_forward(
         sys: &dyn OdeSystem,
@@ -267,7 +267,7 @@ mod tests {
         t1: f64,
     ) -> BatchVec {
         let grid = TimeGrid::linspace_shared(y0.batch(), t0, t1, 2);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10);
         let sol = solve_ivp_parallel(sys, y0, &grid, &opts);
         assert!(sol.all_success());
         let mut y1 = BatchVec::zeros(y0.batch(), y0.dim());
@@ -288,7 +288,7 @@ mod tests {
         let y1 = solve_forward(&sys, &y0, 0.0, tt);
         let dl = BatchVec::from_rows(&[vec![1.0]]);
         let opts =
-            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+            AdjointOptions::new(SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10));
         let res = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0], &[tt], &opts);
         assert!(res.status.iter().all(|s| *s == Status::Success));
         let expect_dy0 = (-lam * tt).exp();
@@ -317,7 +317,7 @@ mod tests {
         let y1 = solve_forward(&sys, &y0, 0.0, tt);
         let dl = BatchVec::from_rows(&[vec![1.0, 0.0]]);
         let opts =
-            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+            AdjointOptions::new(SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10));
         let res = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0], &[tt], &opts);
         let h = 1e-5;
         for d in 0..2 {
@@ -345,7 +345,7 @@ mod tests {
         let y1 = solve_forward(&sys, &y0, 0.0, tt);
         let dl = BatchVec::from_rows(&[vec![1.0, -0.5], vec![0.3, 1.0]]);
         let opts =
-            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10));
+            AdjointOptions::new(SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10));
         let par = adjoint_backward_parallel(&sys, &y1, &dl, &[0.0, 0.0], &[tt, tt], &opts);
         let joint = adjoint_backward_joint(&sys, &y1, &dl, 0.0, tt, &opts);
         for i in 0..2 {
@@ -371,7 +371,7 @@ mod tests {
         let y1 = solve_forward(&sys, &y0, 0.0, tt);
         let dl = BatchVec::broadcast(&[1.0, 0.0], b);
         let opts =
-            AdjointOptions::new(SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8));
+            AdjointOptions::new(SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8));
         let par = adjoint_backward_parallel(&sys, &y1, &dl, &vec![0.0; b], &vec![tt; b], &opts);
         let joint = adjoint_backward_joint(&sys, &y1, &dl, 0.0, tt, &opts);
         let par_total: u64 = par.stats.iter().map(|s| s.n_steps).sum();

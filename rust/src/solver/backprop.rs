@@ -85,7 +85,7 @@ pub fn rk_forward_tape(
     t0: f64,
     dt: f64,
     n_steps: usize,
-    method: super::Method,
+    method: super::MethodId,
 ) -> RkTape {
     let tab = method.tableau();
     assert!(
@@ -234,13 +234,13 @@ pub fn rk_backward(
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, VdP};
-    use crate::solver::Method;
+    use crate::solver::MethodId;
 
     #[test]
     fn forward_tape_matches_solver() {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::from_rows(&[vec![1.0]]);
-        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.01, 100, Method::Rk4);
+        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.01, 100, MethodId::RK4);
         let yf = tape.y_final();
         assert!((yf.row(0)[0] - (-1.0f64).exp()).abs() < 1e-9);
         assert_eq!(tape.n_steps(), 100);
@@ -254,7 +254,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![lam], 1);
         let y0 = BatchVec::from_rows(&[vec![2.0]]);
         let tt = 1.0;
-        let tape = rk_forward_tape(&sys, &y0, 0.0, tt / 200.0, 200, Method::Rk4);
+        let tape = rk_forward_tape(&sys, &y0, 0.0, tt / 200.0, 200, MethodId::RK4);
         let dl = BatchVec::from_rows(&[vec![1.0]]);
         let (dy0, dp) = rk_backward(&sys, &tape, &dl);
         assert!((dy0.row(0)[0] - (-lam * tt).exp()).abs() < 1e-6);
@@ -270,12 +270,12 @@ mod tests {
         let run = |mu: f64, y0v: [f64; 2]| -> f64 {
             let sys = VdP::new(vec![mu]);
             let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
-            let tape = rk_forward_tape(&sys, &y0, 0.0, tt / n as f64, n, Method::Rk4);
+            let tape = rk_forward_tape(&sys, &y0, 0.0, tt / n as f64, n, MethodId::RK4);
             tape.y_final().row(0)[1] // L = v(T)
         };
         let sys = VdP::new(vec![mu]);
         let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
-        let tape = rk_forward_tape(&sys, &y0, 0.0, tt / n as f64, n, Method::Rk4);
+        let tape = rk_forward_tape(&sys, &y0, 0.0, tt / n as f64, n, MethodId::RK4);
         let dl = BatchVec::from_rows(&[vec![0.0, 1.0]]);
         let (dy0, dp) = rk_backward(&sys, &tape, &dl);
         let h = 1e-6;
@@ -296,7 +296,7 @@ mod tests {
         // Backprop works for any explicit tableau, not just rk4.
         let sys = ExponentialDecay::new(vec![0.7], 1);
         let y0 = BatchVec::from_rows(&[vec![1.5]]);
-        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.05, 20, Method::Dopri5);
+        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.05, 20, MethodId::DOPRI5);
         let dl = BatchVec::from_rows(&[vec![1.0]]);
         let (dy0, _) = rk_backward(&sys, &tape, &dl);
         let expect = (-0.7f64).exp();
@@ -307,7 +307,7 @@ mod tests {
     fn batch_gradients_independent() {
         let sys = VdP::new(vec![0.5, 2.0]);
         let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![1.0, 0.0]]);
-        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.01, 50, Method::Rk4);
+        let tape = rk_forward_tape(&sys, &y0, 0.0, 0.01, 50, MethodId::RK4);
         let dl = BatchVec::from_rows(&[vec![1.0, 0.0], vec![0.0, 0.0]]);
         let (dy0, _) = rk_backward(&sys, &tape, &dl);
         // Zero seed on instance 1 => zero gradient there.

@@ -705,11 +705,11 @@ mod tests {
     use super::*;
     use crate::problems::ExponentialDecay;
     use crate::solver::step::rk_attempt;
-    use crate::solver::Method;
+    use crate::solver::MethodId;
     use crate::tensor::Layout;
 
     fn trbdf2_ws(batch: usize, dim: usize) -> RkWorkspace {
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         RkWorkspace::new_for_tableau(
             ct,
             batch,
@@ -725,7 +725,7 @@ mod tests {
     #[test]
     fn trbdf2_single_step_second_order() {
         let sys = ExponentialDecay::new(vec![1.0], 1);
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         assert!(ct.is_implicit());
         let y = BatchVec::from_rows(&[vec![1.0]]);
         let mut errs = Vec::new();
@@ -746,7 +746,7 @@ mod tests {
     #[test]
     fn trbdf2_l_stable_huge_step() {
         let sys = ExponentialDecay::new(vec![1e6], 1);
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         let y = BatchVec::from_rows(&[vec![1.0]]);
         let mut ws = trbdf2_ws(1, 1);
         rk_attempt(ct, &sys, &[0.0], &[1.0], &y, &mut ws, &[false], None, true);
@@ -763,7 +763,7 @@ mod tests {
     #[test]
     fn counters_record_newton_work() {
         let sys = ExponentialDecay::new(vec![2.0], 3);
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         let y = BatchVec::from_rows(&[vec![1.0, -0.5, 2.0]]);
         let mut ws = trbdf2_ws(1, 3);
         rk_attempt(ct, &sys, &[0.0], &[0.05], &y, &mut ws, &[false], None, true);
@@ -782,7 +782,7 @@ mod tests {
     #[test]
     fn jacobian_and_lu_are_reused() {
         let sys = ExponentialDecay::new(vec![1.0], 2);
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         let y = BatchVec::from_rows(&[vec![1.0, 2.0]]);
         let mut ws = trbdf2_ws(1, 2);
         rk_attempt(ct, &sys, &[0.0], &[0.1], &y, &mut ws, &[false], None, true);
@@ -803,7 +803,7 @@ mod tests {
     #[test]
     fn inactive_rows_do_no_newton_work() {
         let sys = ExponentialDecay::new(vec![1.0], 1);
-        let ct = CompiledTableau::cached(Method::Trbdf2);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
         let y = BatchVec::from_rows(&[vec![1.0], vec![1.0]]);
         let mut ws = trbdf2_ws(2, 1);
         ws.y_new.row_mut(0)[0] = 123.0;

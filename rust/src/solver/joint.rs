@@ -341,14 +341,14 @@ pub(crate) fn joint_core(
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, VdP};
-    use crate::solver::{solve_ivp_parallel, Method};
+    use crate::solver::{solve_ivp_parallel, MethodId};
 
     #[test]
     fn joint_accuracy_on_homogeneous_batch() {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 4);
         let grid = TimeGrid::linspace_shared(4, 0.0, 1.0, 11);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for i in 0..4 {
@@ -361,7 +361,7 @@ mod tests {
         let sys = VdP::new(vec![1.0, 20.0]);
         let y0 = BatchVec::from_rows(&[vec![2.0, 0.0], vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(2, 0.0, 10.0, 20);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
         let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         assert_eq!(sol.stats[0].n_steps, sol.stats[1].n_steps);
@@ -377,7 +377,7 @@ mod tests {
         let sys = VdP::new(mus);
         let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
         let grid = TimeGrid::linspace_shared(b, 0.0, 15.0, 30);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
         let joint = solve_ivp_joint(&sys, &y0, &grid, &opts);
         let par = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(joint.all_success() && par.all_success());
@@ -398,7 +398,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 2);
         let grid = TimeGrid::from_rows(&[vec![0.0, 1.0], vec![0.0, 2.0]]);
-        let opts = SolveOptions::new(Method::Dopri5);
+        let opts = SolveOptions::new(MethodId::DOPRI5);
         solve_ivp_joint(&sys, &y0, &grid, &opts);
     }
 
@@ -409,7 +409,7 @@ mod tests {
         let sys = VdP::uniform(3, 2.0);
         let y0 = BatchVec::broadcast(&[1.0, 0.0], 3);
         let grid = TimeGrid::linspace_shared(3, 0.0, 5.0, 10);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-7, 1e-7);
         let j = solve_ivp_joint(&sys, &y0, &grid, &opts);
         let p = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         for e in 0..10 {
@@ -426,7 +426,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 2);
         let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 41);
-        let opts = SolveOptions::new(Method::Rk4).with_fixed_dt(0.1).with_max_steps(1_000);
+        let opts = SolveOptions::new(MethodId::RK4).with_fixed_dt(0.1).with_max_steps(1_000);
         let sol = solve_ivp_joint(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         let mut max_err = 0.0f64;

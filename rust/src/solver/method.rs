@@ -1,0 +1,535 @@
+//! The runtime method registry: methods as data, not enum arms.
+//!
+//! torchode's public surface registers methods by name
+//! (`register_method("tsit5", Tsit5)`) precisely so new integrators can
+//! be added without touching the solver. This module is the Rust
+//! counterpart: a [`MethodId`] is a copyable handle into an append-only,
+//! process-wide registry of [`Tableau`]s. The built-in methods are
+//! pre-registered from [`tableau::ALL`] (their slots are the stable
+//! [`MethodId::BUILTINS`] constants); user tableaus join at runtime via
+//! [`register_method`] and are then first-class everywhere — name lookup
+//! ([`MethodId::parse`]), the compiled-tableau cache
+//! ([`MethodId::compiled`]), implicit dispatch
+//! ([`MethodId::is_implicit`]), every solve loop, and per-request
+//! routing in the coordinator.
+//!
+//! ## Slot keying and determinism
+//!
+//! A `MethodId` wraps the method's **registration index**. Registration
+//! is append-only: a slot, once assigned, never changes or disappears,
+//! and a name can never be re-bound to a different tableau. That makes
+//! the handle a stable cache key for the process lifetime — the
+//! compiled tableau is built exactly once per slot, so two solves
+//! naming the same method always share one `CompiledTableau` (pointer
+//! identity, which the bitwise-determinism tests assert) — and it makes
+//! method resolution deterministic: the same sequence of registrations
+//! yields the same ids, independent of lookup order or thread timing.
+//!
+//! Records are leaked (`Box::leak`) into `'static` storage so accessors
+//! hand out `&'static` references without holding any lock. The
+//! registry lock only guards the slot vector and the name map; it is
+//! never held across user code.
+
+#![warn(missing_docs)]
+
+use super::step::{CompiledTableau, MAX_STAGES};
+use super::tableau::{self, Tableau};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+/// A handle to a registered Runge–Kutta method: the method's slot in
+/// the process-wide registry.
+///
+/// Copyable, comparable and hashable — it is the method key of
+/// [`SolveOptions`](super::SolveOptions), the coordinator's batch
+/// buckets, and the compiled-tableau cache. Built-in methods are the
+/// associated constants ([`MethodId::DOPRI5`], [`MethodId::TRBDF2`],
+/// ...); runtime-registered methods get the next free slot from
+/// [`register_method`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MethodId(u32);
+
+/// One registered method: its identity, its lookup names, its tableau
+/// and the zero-stripped compiled form. Leaked into `'static` storage
+/// at registration, so every accessor returns `'static` data.
+struct MethodRecord {
+    id: MethodId,
+    name: &'static str,
+    aliases: &'static [&'static str],
+    tab: &'static Tableau,
+    compiled: CompiledTableau,
+}
+
+struct Registry {
+    /// Slot-indexed records; `MethodId(i)` resolves to `records[i]`.
+    records: Vec<&'static MethodRecord>,
+    /// Lowercased name and alias → id.
+    by_name: HashMap<&'static str, MethodId>,
+}
+
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+/// Aliases of the built-in methods, index-aligned with [`tableau::ALL`].
+const BUILTIN_ALIASES: [&[&str]; 12] = [
+    &[],          // euler
+    &[],          // midpoint
+    &[],          // heun
+    &[],          // ralston
+    &[],          // bosh3
+    &[],          // rk4
+    &["rkf45"],   // fehlberg45
+    &["ck45"],    // cashkarp45
+    &[],          // dopri5
+    &[],          // tsit5
+    &["tr-bdf2"], // trbdf2
+    &["kv43"],    // kvaerno43
+];
+
+fn registry() -> &'static Mutex<Registry> {
+    REGISTRY.get_or_init(|| {
+        assert_eq!(
+            tableau::ALL.len(),
+            BUILTIN_ALIASES.len(),
+            "tableau::ALL and BUILTIN_ALIASES drifted apart"
+        );
+        let mut reg =
+            Registry { records: Vec::with_capacity(tableau::ALL.len()), by_name: HashMap::new() };
+        for (i, (tab, aliases)) in tableau::ALL.iter().zip(BUILTIN_ALIASES.iter()).enumerate() {
+            let tab: &'static Tableau = tab;
+            let aliases: &'static [&'static str] = aliases;
+            let id = MethodId(i as u32);
+            let rec: &'static MethodRecord = Box::leak(Box::new(MethodRecord {
+                id,
+                name: tab.name,
+                aliases,
+                tab,
+                compiled: CompiledTableau::new(tab),
+            }));
+            reg.records.push(rec);
+            let prev = reg.by_name.insert(rec.name, id);
+            assert!(prev.is_none(), "duplicate built-in method name '{}'", rec.name);
+            for &al in rec.aliases {
+                let prev = reg.by_name.insert(al, id);
+                assert!(prev.is_none(), "duplicate built-in method alias '{al}'");
+            }
+        }
+        Mutex::new(reg)
+    })
+}
+
+impl MethodId {
+    /// Euler (1st order, fixed step).
+    pub const EULER: MethodId = MethodId(0);
+    /// Explicit midpoint (2nd order, fixed step).
+    pub const MIDPOINT: MethodId = MethodId(1);
+    /// Heun 2(1) (trapezoid with embedded Euler).
+    pub const HEUN: MethodId = MethodId(2);
+    /// Ralston 2nd order (fixed step, minimal truncation error).
+    pub const RALSTON: MethodId = MethodId(3);
+    /// Bogacki–Shampine 3(2), FSAL.
+    pub const BOSH3: MethodId = MethodId(4);
+    /// Classic RK4 (fixed step).
+    pub const RK4: MethodId = MethodId(5);
+    /// Fehlberg 4(5).
+    pub const FEHLBERG45: MethodId = MethodId(6);
+    /// Cash–Karp 4(5).
+    pub const CASHKARP45: MethodId = MethodId(7);
+    /// Dormand–Prince 5(4), FSAL, with dedicated dense output.
+    pub const DOPRI5: MethodId = MethodId(8);
+    /// Tsitouras 5(4), FSAL.
+    pub const TSIT5: MethodId = MethodId(9);
+    /// TR-BDF2 2(3): stiffly-accurate, L-stable ESDIRK pair with
+    /// simplified-Newton stage solves — the workhorse stiff method
+    /// (Van der Pol at μ ≫ 100, Robertson kinetics).
+    pub const TRBDF2: MethodId = MethodId(10);
+    /// Kvaerno 4(3): stiffly-accurate, L-stable 5-stage ESDIRK pair —
+    /// the higher-order stiff method, fewer accepted steps than TR-BDF2
+    /// at tight tolerances. Registered as pure tableau data; the Newton
+    /// machinery is shared with TR-BDF2.
+    pub const KVAERNO43: MethodId = MethodId(11);
+
+    /// The built-in methods, in registration (slot) order — index `i`
+    /// of this table is `MethodId(i)` backed by `tableau::ALL[i]`.
+    pub const BUILTINS: [MethodId; 12] = [
+        MethodId::EULER,
+        MethodId::MIDPOINT,
+        MethodId::HEUN,
+        MethodId::RALSTON,
+        MethodId::BOSH3,
+        MethodId::RK4,
+        MethodId::FEHLBERG45,
+        MethodId::CASHKARP45,
+        MethodId::DOPRI5,
+        MethodId::TSIT5,
+        MethodId::TRBDF2,
+        MethodId::KVAERNO43,
+    ];
+
+    /// Resolve a method name or alias (case-insensitive), as used on
+    /// the CLI, in configs, and for runtime-registered methods.
+    pub fn parse(s: &str) -> Option<MethodId> {
+        let key = s.to_ascii_lowercase();
+        registry().lock().unwrap().by_name.get(key.as_str()).copied()
+    }
+
+    /// Snapshot of every registered method (built-ins first, then
+    /// runtime registrations), in slot order.
+    pub fn all() -> Vec<MethodId> {
+        registry().lock().unwrap().records.iter().map(|r| r.id).collect()
+    }
+
+    /// This method's registry record; panics on a forged id (the only
+    /// way to hold a `MethodId` outside the registry's range).
+    fn record(self) -> &'static MethodRecord {
+        let reg = registry().lock().unwrap();
+        reg.records
+            .get(self.0 as usize)
+            .copied()
+            .unwrap_or_else(|| panic!("MethodId({}) is not a registered method", self.0))
+    }
+
+    /// The Butcher tableau backing this method.
+    pub fn tableau(self) -> &'static Tableau {
+        self.record().tab
+    }
+
+    /// The zero-stripped compiled tableau — built once per slot for the
+    /// process lifetime, so repeated calls return the **same** instance
+    /// (pointer identity; the cache key is the registry slot).
+    pub fn compiled(self) -> &'static CompiledTableau {
+        &self.record().compiled
+    }
+
+    /// The registered (lookup) name — `parse(self.name())` round-trips.
+    pub fn name(self) -> &'static str {
+        self.record().name
+    }
+
+    /// Alternate lookup names (e.g. `tr-bdf2` for `trbdf2`).
+    pub fn aliases(self) -> &'static [&'static str] {
+        self.record().aliases
+    }
+
+    /// Whether this method has implicit stages (Newton-based stage
+    /// solves; supported by the parallel and joint loops and every
+    /// pooled entry point, but not by the frozen reference loop, the
+    /// naive baseline or the backprop/adjoint paths).
+    pub fn is_implicit(self) -> bool {
+        self.record().compiled.is_implicit()
+    }
+
+    /// The registry slot index (stable for the process lifetime).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for MethodId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a [`register_method`] call was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegisterError {
+    /// The name (or an alias) is empty or contains whitespace.
+    InvalidName(String),
+    /// The name (or an alias) is already bound — names are never
+    /// re-bound, so existing `MethodId`s stay deterministic.
+    NameTaken(String),
+    /// The tableau fails a structural invariant (shape, single-γ
+    /// diagonal, stage consistency, Σb = 1, ...); the message names it.
+    InvalidTableau(String),
+}
+
+impl fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegisterError::InvalidName(n) => write!(f, "invalid method name {n:?}"),
+            RegisterError::NameTaken(n) => write!(f, "method name '{n}' is already registered"),
+            RegisterError::InvalidTableau(why) => write!(f, "invalid tableau: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+fn validate_name(s: &str) -> Result<String, RegisterError> {
+    if s.is_empty() || s.chars().any(|c| c.is_whitespace()) {
+        return Err(RegisterError::InvalidName(s.to_string()));
+    }
+    Ok(s.to_ascii_lowercase())
+}
+
+/// Structural validation mirroring (and preceding) the assertions in
+/// [`CompiledTableau::new`], so user registrations fail with an `Err`
+/// instead of a panic. Uses 1e-9 tolerances — looser than the 1e-12 the
+/// built-in suite holds itself to, since user coefficients are often
+/// truncated decimals.
+fn validate_tableau(tab: &Tableau) -> Result<(), RegisterError> {
+    let fail = |why: String| Err(RegisterError::InvalidTableau(why));
+    if tab.stages == 0 {
+        return fail("zero stages".into());
+    }
+    if tab.stages > MAX_STAGES {
+        return fail(format!("{} stages exceeds the kernel bound {MAX_STAGES}", tab.stages));
+    }
+    let tri = tab.stages * (tab.stages - 1) / 2;
+    if tab.a.len() != tri {
+        return fail(format!("a has {} entries, expected {tri}", tab.a.len()));
+    }
+    if tab.b.len() != tab.stages || tab.c.len() != tab.stages {
+        return fail(format!(
+            "b/c have {}/{} entries, expected {}",
+            tab.b.len(),
+            tab.c.len(),
+            tab.stages
+        ));
+    }
+    if !tab.b_err.is_empty() && tab.b_err.len() != tab.stages {
+        return fail(format!("b_err has {} entries, expected 0 or {}", tab.b_err.len(), tab.stages));
+    }
+    let mut all = tab.a.iter().chain(tab.b).chain(tab.b_err).chain(tab.c).chain(tab.diag);
+    if all.any(|v| !v.is_finite()) {
+        return fail("non-finite coefficient".into());
+    }
+    if tab.c[0] != 0.0 {
+        return fail(format!("c[0] = {} (first node must be 0)", tab.c[0]));
+    }
+    if !tab.diag.is_empty() {
+        if tab.diag.len() != tab.stages {
+            return fail(format!(
+                "diag has {} entries, expected 0 or {}",
+                tab.diag.len(),
+                tab.stages
+            ));
+        }
+        if tab.diag[0] != 0.0 {
+            return fail("diag[0] must be 0 (ESDIRK: explicit first stage)".into());
+        }
+        let g = tab.diag.iter().copied().find(|&d| d != 0.0).unwrap_or(0.0);
+        if g <= 0.0 {
+            return fail("implicit diagonal must have a positive γ (or be empty)".into());
+        }
+        for (s, &d) in tab.diag.iter().enumerate() {
+            if d != 0.0 && d != g {
+                return fail(format!("stage {s}: only single-γ (ES)DIRK diagonals are supported"));
+            }
+        }
+    }
+    let sum_b: f64 = tab.b.iter().sum();
+    if (sum_b - 1.0).abs() > 1e-9 {
+        return fail(format!("Σb = {sum_b}, expected 1"));
+    }
+    if tab.adaptive() {
+        let sum_e: f64 = tab.b_err.iter().sum();
+        if sum_e.abs() > 1e-9 {
+            return fail(format!("Σb_err = {sum_e}, expected 0"));
+        }
+    }
+    for i in 1..tab.stages {
+        let diag = tab.diag.get(i).copied().unwrap_or(0.0);
+        let s: f64 = tab.a_row(i).iter().sum::<f64>() + diag;
+        if (s - tab.c[i]).abs() > 1e-9 {
+            return fail(format!("row {i} sums to {s} but c = {} (stage consistency)", tab.c[i]));
+        }
+    }
+    Ok(())
+}
+
+/// Register a user tableau under `name`, returning its fresh
+/// [`MethodId`]. The tableau must have `'static` lifetime (leak it with
+/// `Box::leak` if built at runtime) and pass the structural checks —
+/// shape, stage consistency, Σb = 1, and the single-γ ESDIRK diagonal
+/// structure if implicit. Registration is append-only: the returned id
+/// is valid (and resolves to this exact tableau) for the rest of the
+/// process, and `name` can never be re-bound.
+pub fn register_method(name: &str, tab: &'static Tableau) -> Result<MethodId, RegisterError> {
+    register_method_with_aliases(name, &[], tab)
+}
+
+/// [`register_method`] with alternate lookup names. Name and aliases
+/// are matched case-insensitively and must all be unused.
+pub fn register_method_with_aliases(
+    name: &str,
+    aliases: &[&str],
+    tab: &'static Tableau,
+) -> Result<MethodId, RegisterError> {
+    let name = validate_name(name)?;
+    let mut alias_keys = Vec::with_capacity(aliases.len());
+    for a in aliases {
+        let a = validate_name(a)?;
+        if a == name || alias_keys.contains(&a) {
+            return Err(RegisterError::NameTaken(a));
+        }
+        alias_keys.push(a);
+    }
+    validate_tableau(tab)?;
+    // Validation guarantees the constructor's assertions hold, so the
+    // compile runs outside the lock and cannot poison it.
+    let compiled = CompiledTableau::new(tab);
+    let mut reg = registry().lock().unwrap();
+    if reg.by_name.contains_key(name.as_str()) {
+        return Err(RegisterError::NameTaken(name));
+    }
+    for a in &alias_keys {
+        if reg.by_name.contains_key(a.as_str()) {
+            return Err(RegisterError::NameTaken(a.clone()));
+        }
+    }
+    let id = MethodId(reg.records.len() as u32);
+    let name: &'static str = Box::leak(name.into_boxed_str());
+    let alias_refs: Vec<&'static str> =
+        alias_keys.into_iter().map(|a| &*Box::leak(a.into_boxed_str())).collect();
+    let aliases: &'static [&'static str] = Box::leak(alias_refs.into_boxed_slice());
+    let rec: &'static MethodRecord =
+        Box::leak(Box::new(MethodRecord { id, name, aliases, tab, compiled }));
+    reg.records.push(rec);
+    reg.by_name.insert(rec.name, id);
+    for &a in rec.aliases {
+        reg.by_name.insert(a, id);
+    }
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_map_to_tableau_all_in_slot_order() {
+        for (i, &m) in MethodId::BUILTINS.iter().enumerate() {
+            assert_eq!(m.index(), i, "{m:?}");
+            assert!(std::ptr::eq(m.tableau(), tableau::ALL[i]), "{m:?}");
+            assert_eq!(m.name(), tableau::ALL[i].name);
+        }
+        assert_eq!(MethodId::all()[..MethodId::BUILTINS.len()], MethodId::BUILTINS);
+    }
+
+    #[test]
+    fn parse_resolves_names_and_aliases() {
+        for m in MethodId::BUILTINS {
+            assert_eq!(MethodId::parse(m.name()), Some(m));
+            for al in m.aliases() {
+                assert_eq!(MethodId::parse(al), Some(m), "{al}");
+            }
+        }
+        assert_eq!(MethodId::parse("TR-BDF2"), Some(MethodId::TRBDF2));
+        assert_eq!(MethodId::parse("kv43"), Some(MethodId::KVAERNO43));
+        assert_eq!(MethodId::parse("nope"), None);
+    }
+
+    #[test]
+    fn compiled_is_slot_cached() {
+        for m in MethodId::BUILTINS {
+            let ct = m.compiled();
+            assert_eq!(ct.tab.name, m.tableau().name);
+            assert!(std::ptr::eq(ct, m.compiled()), "{m:?}: cache must return one instance");
+        }
+    }
+
+    #[test]
+    fn display_is_the_registered_name() {
+        assert_eq!(MethodId::KVAERNO43.to_string(), "kvaerno43");
+    }
+
+    #[test]
+    fn runtime_registration_appends_and_resolves() {
+        // A valid 2-stage explicit midpoint clone under a private name.
+        let tab: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "unit-test-midpoint",
+            stages: 2,
+            order: 2,
+            err_order: 0,
+            a: &[0.5],
+            diag: &[],
+            b: &[0.0, 1.0],
+            b_err: &[],
+            c: &[0.0, 0.5],
+            fsal: false,
+            dense: tableau::DenseOutput::Hermite,
+        }));
+        let id = register_method_with_aliases("unit_mid2", &["unit_mid2_alias"], tab).unwrap();
+        assert!(id.index() >= MethodId::BUILTINS.len(), "slots append after the built-ins");
+        assert_eq!(MethodId::parse("unit_mid2"), Some(id));
+        assert_eq!(MethodId::parse("UNIT_MID2_ALIAS"), Some(id));
+        assert_eq!(id.name(), "unit_mid2");
+        assert!(std::ptr::eq(id.tableau(), tab));
+        assert!(std::ptr::eq(id.compiled(), id.compiled()), "stable cache slot");
+        assert!(!id.is_implicit());
+        assert!(MethodId::all().contains(&id));
+        // Names are never re-bound.
+        assert_eq!(
+            register_method("unit_mid2", tab),
+            Err(RegisterError::NameTaken("unit_mid2".into()))
+        );
+        // Built-in names are protected too.
+        assert_eq!(
+            register_method("dopri5", tab),
+            Err(RegisterError::NameTaken("dopri5".into()))
+        );
+    }
+
+    #[test]
+    fn registration_rejects_bad_names_and_tableaus() {
+        let tab: &'static Tableau = &tableau::MIDPOINT;
+        assert!(matches!(register_method("", tab), Err(RegisterError::InvalidName(_))));
+        assert!(matches!(register_method("has space", tab), Err(RegisterError::InvalidName(_))));
+        // Broken shape: b too short.
+        let bad: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "unit-test-bad",
+            stages: 2,
+            order: 2,
+            err_order: 0,
+            a: &[0.5],
+            diag: &[],
+            b: &[1.0],
+            b_err: &[],
+            c: &[0.0, 0.5],
+            fsal: false,
+            dense: tableau::DenseOutput::Hermite,
+        }));
+        assert!(matches!(
+            register_method("unit_bad_shape", bad),
+            Err(RegisterError::InvalidTableau(_))
+        ));
+        // Broken quadrature: Σb ≠ 1.
+        let bad_b: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "unit-test-bad-b",
+            stages: 2,
+            order: 2,
+            err_order: 0,
+            a: &[0.5],
+            diag: &[],
+            b: &[0.0, 0.5],
+            b_err: &[],
+            c: &[0.0, 0.5],
+            fsal: false,
+            dense: tableau::DenseOutput::Hermite,
+        }));
+        assert!(matches!(
+            register_method("unit_bad_b", bad_b),
+            Err(RegisterError::InvalidTableau(_))
+        ));
+        // Broken diagonal: two distinct γ values.
+        let bad_diag: &'static Tableau = Box::leak(Box::new(Tableau {
+            name: "unit-test-bad-diag",
+            stages: 3,
+            order: 2,
+            err_order: 0,
+            a: &[0.25, 0.25, 0.35],
+            diag: &[0.0, 0.25, 0.4],
+            b: &[0.25, 0.35, 0.4],
+            b_err: &[],
+            c: &[0.0, 0.5, 1.0],
+            fsal: false,
+            dense: tableau::DenseOutput::Hermite,
+        }));
+        assert!(matches!(
+            register_method("unit_bad_diag", bad_diag),
+            Err(RegisterError::InvalidTableau(_))
+        ));
+    }
+}

@@ -28,6 +28,7 @@ pub mod interp;
 pub mod joint;
 pub mod kernels;
 pub mod linalg;
+pub mod method;
 pub mod naive;
 pub mod norm;
 pub mod parallel;
@@ -39,6 +40,7 @@ pub use active::ActiveSet;
 pub use adjoint::{adjoint_backward_joint, adjoint_backward_parallel, AdjointOptions, AdjointResult};
 pub use controller::{Controller, ControllerState, StepDecision};
 pub use joint::solve_ivp_joint;
+pub use method::{register_method, register_method_with_aliases, MethodId, RegisterError};
 pub use naive::solve_ivp_naive;
 pub use parallel::solve_ivp_parallel;
 pub use tableau::{DenseOutput, Tableau};
@@ -47,96 +49,6 @@ pub use crate::config::{ExecPolicy, PoolKind};
 pub use crate::tensor::Layout;
 
 use crate::tensor::BatchVec;
-
-/// Runge–Kutta method selector: the explicit pairs, plus the implicit
-/// (ESDIRK) TR-BDF2 pair for stiff problems — selected through the same
-/// API, so every solve loop, pool kind, layout and the active-set
-/// machinery work unchanged (the stage kernel dispatches internally; see
-/// [`implicit`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Method {
-    Euler,
-    Midpoint,
-    Heun,
-    Ralston,
-    Bosh3,
-    Rk4,
-    Fehlberg45,
-    CashKarp45,
-    Dopri5,
-    Tsit5,
-    /// TR-BDF2 2(3): stiffly-accurate, L-stable ESDIRK pair with
-    /// simplified-Newton stage solves — the stiff-capable method
-    /// (Van der Pol at μ ≫ 100, Robertson kinetics).
-    Trbdf2,
-}
-
-impl Method {
-    /// Every selectable method, in declaration order. A method's index
-    /// in this table equals its discriminant (`method as usize`) — the
-    /// slot key of the process-wide compiled-tableau cache
-    /// ([`step::CompiledTableau::cached`]).
-    pub const ALL: [Method; 11] = [
-        Method::Euler,
-        Method::Midpoint,
-        Method::Heun,
-        Method::Ralston,
-        Method::Bosh3,
-        Method::Rk4,
-        Method::Fehlberg45,
-        Method::CashKarp45,
-        Method::Dopri5,
-        Method::Tsit5,
-        Method::Trbdf2,
-    ];
-
-    /// The Butcher tableau backing this method.
-    pub fn tableau(&self) -> &'static Tableau {
-        match self {
-            Method::Euler => &tableau::EULER,
-            Method::Midpoint => &tableau::MIDPOINT,
-            Method::Heun => &tableau::HEUN21,
-            Method::Ralston => &tableau::RALSTON2,
-            Method::Bosh3 => &tableau::BOSH3,
-            Method::Rk4 => &tableau::RK4,
-            Method::Fehlberg45 => &tableau::FEHLBERG45,
-            Method::CashKarp45 => &tableau::CASHKARP45,
-            Method::Dopri5 => &tableau::DOPRI5,
-            Method::Tsit5 => &tableau::TSIT5,
-            Method::Trbdf2 => &tableau::TRBDF2,
-        }
-    }
-
-    /// Whether this method has implicit stages (Newton-based stage
-    /// solves; supported by the parallel and joint loops and every
-    /// pooled entry point, but not by the frozen reference loop, the
-    /// naive baseline or the backprop/adjoint paths).
-    pub fn is_implicit(&self) -> bool {
-        !self.tableau().diag.is_empty()
-    }
-
-    /// Parse a method name as used on the CLI and in configs.
-    pub fn parse(s: &str) -> Option<Method> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "euler" => Method::Euler,
-            "midpoint" => Method::Midpoint,
-            "heun" => Method::Heun,
-            "ralston" => Method::Ralston,
-            "bosh3" => Method::Bosh3,
-            "rk4" => Method::Rk4,
-            "fehlberg45" | "rkf45" => Method::Fehlberg45,
-            "cashkarp45" | "ck45" => Method::CashKarp45,
-            "dopri5" => Method::Dopri5,
-            "tsit5" => Method::Tsit5,
-            "trbdf2" | "tr-bdf2" => Method::Trbdf2,
-            _ => return None,
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        self.tableau().name
-    }
-}
 
 /// Per-instance termination status, mirroring torchode's `Status` enum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -276,7 +188,7 @@ impl Tolerances {
 /// Options shared by all solve loops.
 #[derive(Debug, Clone)]
 pub struct SolveOptions {
-    pub method: Method,
+    pub method: MethodId,
     pub tols: Tolerances,
     pub controller: Controller,
     /// Per-instance step budget.
@@ -322,7 +234,7 @@ pub struct SolveOptions {
 }
 
 impl SolveOptions {
-    pub fn new(method: Method) -> Self {
+    pub fn new(method: MethodId) -> Self {
         Self {
             method,
             tols: Tolerances::scalar(1e-6, 1e-5),
@@ -574,22 +486,24 @@ mod tests {
 
     #[test]
     fn method_parse_roundtrip() {
-        for m in Method::ALL {
-            assert_eq!(Method::parse(m.name()), Some(m));
+        for m in MethodId::BUILTINS {
+            assert_eq!(MethodId::parse(m.name()), Some(m));
         }
-        assert_eq!(Method::parse("tr-bdf2"), Some(Method::Trbdf2));
-        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(MethodId::parse("tr-bdf2"), Some(MethodId::TRBDF2));
+        assert_eq!(MethodId::parse("nope"), None);
     }
 
     #[test]
     fn implicit_flag_matches_tableau() {
-        assert!(Method::Trbdf2.is_implicit());
-        assert!(step::CompiledTableau::cached(Method::Trbdf2).is_implicit());
-        for m in Method::ALL {
-            if m != Method::Trbdf2 {
-                assert!(!m.is_implicit(), "{m:?}");
-                assert!(!step::CompiledTableau::cached(m).is_implicit(), "{m:?}");
-            }
+        assert!(MethodId::TRBDF2.is_implicit());
+        assert!(MethodId::KVAERNO43.is_implicit());
+        for m in MethodId::BUILTINS {
+            assert_eq!(m.is_implicit(), !m.tableau().diag.is_empty(), "{m:?}");
+            assert_eq!(
+                step::CompiledTableau::cached(m).is_implicit(),
+                m.is_implicit(),
+                "{m:?}"
+            );
         }
     }
 
@@ -653,15 +567,16 @@ mod tests {
         assert_eq!(s.t1(1), 5.0);
     }
 
-    /// `Method::ALL` order must match the discriminants — the compiled
-    /// tableau cache indexes with `method as usize`.
+    /// The built-in handles must occupy registry slots 0..N in
+    /// `tableau::ALL` order — the slot is the compiled-tableau cache
+    /// key, so this pins the append-only pre-registration contract.
     #[test]
-    fn method_all_matches_discriminants() {
-        for (i, &m) in Method::ALL.iter().enumerate() {
-            assert_eq!(m as usize, i, "{m:?}");
+    fn builtin_slots_key_the_compiled_cache() {
+        for (i, &m) in MethodId::BUILTINS.iter().enumerate() {
+            assert_eq!(m.index(), i, "{m:?}");
         }
         // And the cache hands back the right (and the same) tableau.
-        for &m in Method::ALL.iter() {
+        for &m in MethodId::BUILTINS.iter() {
             let ct = step::CompiledTableau::cached(m);
             assert_eq!(ct.tab.name, m.tableau().name);
             let again = step::CompiledTableau::cached(m);
@@ -671,7 +586,7 @@ mod tests {
 
     #[test]
     fn layout_builder_and_shards() {
-        let o = SolveOptions::new(Method::Dopri5);
+        let o = SolveOptions::new(MethodId::DOPRI5);
         // Without RODE_LAYOUT set the default is row-major; either way
         // the builder overrides it.
         let o = o.with_layout(Layout::DimMajor);
@@ -684,7 +599,7 @@ mod tests {
 
     #[test]
     fn compaction_threshold_builder() {
-        let o = SolveOptions::new(Method::Dopri5);
+        let o = SolveOptions::new(MethodId::DOPRI5);
         assert_eq!(o.compact_threshold, 0.0, "compaction is opt-in");
         let o = o.with_compaction(0.4);
         assert_eq!(o.compact_threshold, 0.4);
@@ -696,12 +611,12 @@ mod tests {
     #[test]
     #[should_panic(expected = "compaction threshold")]
     fn compaction_threshold_rejects_out_of_range() {
-        SolveOptions::new(Method::Dopri5).with_compaction(1.5);
+        SolveOptions::new(MethodId::DOPRI5).with_compaction(1.5);
     }
 
     #[test]
     fn exec_builders_compose() {
-        let o = SolveOptions::new(Method::Dopri5)
+        let o = SolveOptions::new(MethodId::DOPRI5)
             .with_pool(PoolKind::Persistent)
             .with_steal_chunk(8)
             .with_threads(4);

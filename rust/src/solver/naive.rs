@@ -335,14 +335,14 @@ fn eval_no_count(k0: &[f64]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, VdP};
-    use crate::solver::{solve_ivp_joint, Method};
+    use crate::solver::{solve_ivp_joint, MethodId};
 
     #[test]
     fn op_count_tracks_work() {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 2);
         let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 3);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6);
         let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
         let ops = last_op_count();
         // At least ~30 ops per step (6 evals + per-coefficient passes).
@@ -358,7 +358,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 3);
         let grid = TimeGrid::linspace_shared(3, 0.0, 1.0, 5);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for i in 0..3 {
@@ -373,7 +373,7 @@ mod tests {
         let sys = VdP::new(vec![2.0, 8.0]);
         let y0 = BatchVec::broadcast(&[2.0, 0.0], 2);
         let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6);
         let a = solve_ivp_naive(&sys, &y0, &grid, &opts);
         let b = solve_ivp_joint(&sys, &y0, &grid, &opts);
         assert!(a.all_success() && b.all_success());
@@ -389,7 +389,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![2.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 1);
         let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 3);
-        let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::TSIT5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_naive(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         assert!((sol.y_final(0)[0] - (-2.0f64).exp()).abs() < 1e-6);

@@ -496,14 +496,14 @@ fn compact_state(
 mod tests {
     use super::*;
     use crate::problems::{ExponentialDecay, LinearSystem, LotkaVolterra, VdP};
-    use crate::solver::Method;
+    use crate::solver::MethodId;
 
     #[test]
     fn exponential_decay_accuracy() {
         let sys = ExponentialDecay::new(vec![1.0], 2);
         let y0 = BatchVec::from_rows(&[vec![1.0, -2.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 21);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for e in 0..21 {
@@ -521,12 +521,12 @@ mod tests {
         let y0 = BatchVec::from_rows(&[vec![1.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 3.0, 7);
         for m in [
-            Method::Heun,
-            Method::Bosh3,
-            Method::Fehlberg45,
-            Method::CashKarp45,
-            Method::Dopri5,
-            Method::Tsit5,
+            MethodId::HEUN,
+            MethodId::BOSH3,
+            MethodId::FEHLBERG45,
+            MethodId::CASHKARP45,
+            MethodId::DOPRI5,
+            MethodId::TSIT5,
         ] {
             let opts = SolveOptions::new(m).with_tols(1e-7, 1e-7).with_max_steps(100_000);
             let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
@@ -548,7 +548,9 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::from_rows(&[vec![1.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
-        for (m, tol) in [(Method::Euler, 5e-3), (Method::Midpoint, 1e-4), (Method::Rk4, 1e-8)] {
+        for (m, tol) in
+            [(MethodId::EULER, 5e-3), (MethodId::MIDPOINT, 1e-4), (MethodId::RK4, 1e-8)]
+        {
             let opts = SolveOptions::new(m).with_fixed_dt(1e-3).with_max_steps(10_000);
             let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
             assert!(sol.all_success(), "{m:?}");
@@ -566,7 +568,7 @@ mod tests {
             (0..11).map(|k| k as f64 / 10.0).collect(),
             (0..11).map(|k| 5.0 + 2.0 * k as f64 / 10.0).collect(),
         ]);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         assert!((sol.y_final(0)[0] - (-1.0f64).exp()).abs() < 1e-6);
@@ -578,7 +580,7 @@ mod tests {
         let sys = VdP::new(vec![2.0, 25.0]);
         let y0 = BatchVec::from_rows(&[vec![2.0, 0.0], vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(2, 0.0, 10.0, 50);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for st in &sol.stats {
@@ -600,7 +602,7 @@ mod tests {
         let y0 = BatchVec::from_rows(&[vec![2.0, 1.0]]);
         let coarse = TimeGrid::linspace_shared(1, 0.0, 8.0, 5);
         let fine = TimeGrid::linspace_shared(1, 0.0, 8.0, 41);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-9, 1e-9);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-9, 1e-9);
         let sc = solve_ivp_parallel(&sys, &y0, &coarse, &opts);
         let sf = solve_ivp_parallel(&sys, &y0, &fine, &opts);
         assert!(sc.all_success() && sf.all_success());
@@ -622,7 +624,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::from_rows(&[vec![1.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 41);
-        let opts = SolveOptions::new(Method::Rk4).with_fixed_dt(0.1).with_max_steps(1_000);
+        let opts = SolveOptions::new(MethodId::RK4).with_fixed_dt(0.1).with_max_steps(1_000);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         let mut max_err = 0.0f64;
@@ -638,7 +640,7 @@ mod tests {
         let sys = VdP::new(vec![1000.0]); // very stiff
         let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 100.0, 10);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8).with_max_steps(50);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8).with_max_steps(50);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert_eq!(sol.status[0], Status::MaxStepsReached);
     }
@@ -649,7 +651,7 @@ mod tests {
         let sys = VdP::uniform(b, 2.0);
         let y0 = BatchVec::broadcast(&[1.0, 0.5], b);
         let grid = TimeGrid::linspace_shared(b, 0.0, 5.0, 10);
-        let opts = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-6);
+        let opts = SolveOptions::new(MethodId::TSIT5).with_tols(1e-6, 1e-6);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for i in 1..b {
@@ -670,14 +672,14 @@ mod tests {
             let sys = VdP::new(vec![0.5]);
             let y0 = BatchVec::from_rows(&[vec![1.0, 0.0]]);
             let grid = TimeGrid::linspace_shared(1, 0.0, 5.0, 10);
-            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+            let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-7, 1e-7);
             solve_ivp_parallel(&sys, &y0, &grid, &opts)
         };
         let mixed = {
             let sys = VdP::new(vec![0.5, 40.0]);
             let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
             let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
-            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-7, 1e-7);
+            let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-7, 1e-7);
             solve_ivp_parallel(&sys, &y0, &grid, &opts)
         };
         assert!(mixed.all_success());
@@ -695,7 +697,7 @@ mod tests {
         let sys = VdP::new(vec![5.0]);
         let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 10.0, 5);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5).with_trace();
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5).with_trace();
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         let trace = sol.trace.as_ref().unwrap();
         assert_eq!(trace[0].len() as u64, sol.stats[0].n_accepted);
@@ -714,7 +716,7 @@ mod tests {
         let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
         let mut errs = Vec::new();
         for &h in &[0.1, 0.05] {
-            let opts = SolveOptions::new(Method::Dopri5).with_fixed_dt(h);
+            let opts = SolveOptions::new(MethodId::DOPRI5).with_fixed_dt(h);
             let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
             errs.push((sol.y_final(0)[0] - (-1.0f64).exp()).abs());
         }
@@ -730,7 +732,7 @@ mod tests {
         let sys = VdP::new(vec![2.0]);
         let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(1, 0.0, 5.0, 10);
-        for m in [Method::Dopri5, Method::Fehlberg45] {
+        for m in [MethodId::DOPRI5, MethodId::FEHLBERG45] {
             let opts = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(100_000);
             let (sol, ledger) = solve_ivp_parallel_core(&sys, &y0, &grid, &opts);
             assert!(sol.all_success());
@@ -748,7 +750,8 @@ mod tests {
         let sys = VdP::new(vec![0.5, 30.0, 1.0]);
         let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0], vec![1.5, 0.2]]);
         let grid = TimeGrid::linspace_shared(3, 0.0, 5.0, 8);
-        let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let base =
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
         let (_, plain) = solve_ivp_parallel_core(&sys, &y0, &grid, &base);
         let compacting = base.with_compaction(1.0).skip_inactive();
         let (_, packed) = solve_ivp_parallel_core(&sys, &y0, &grid, &compacting);
@@ -762,7 +765,7 @@ mod tests {
         let sys = ExponentialDecay::new(vec![1.0], 1);
         let y0 = BatchVec::broadcast(&[1.0], 3);
         let grid = TimeGrid::linspace_shared(3, 0.0, 1.0, 3);
-        let mut opts = SolveOptions::new(Method::Dopri5);
+        let mut opts = SolveOptions::new(MethodId::DOPRI5);
         opts.tols = crate::solver::Tolerances::per_instance(vec![1e-6; 2], vec![1e-6; 2]);
         solve_ivp_parallel(&sys, &y0, &grid, &opts);
     }

@@ -304,7 +304,7 @@ pub fn solve_ivp_parallel_reference(
 mod tests {
     use super::*;
     use crate::problems::VdP;
-    use crate::solver::{solve_ivp_parallel, Method};
+    use crate::solver::{solve_ivp_parallel, MethodId};
 
     /// The reference loop still is what it claims to be: identical to the
     /// active-set loop on a mixed batch (the heavyweight matrix lives in
@@ -314,7 +314,8 @@ mod tests {
         let sys = VdP::new(vec![0.5, 12.0]);
         let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
         let grid = TimeGrid::linspace_shared(2, 0.0, 5.0, 10);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let opts =
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
         let a = solve_ivp_parallel_reference(&sys, &y0, &grid, &opts);
         let b = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert_eq!(a.status, b.status);

@@ -48,7 +48,6 @@ use super::tableau::Tableau;
 use super::Tolerances;
 use crate::problems::OdeSystem;
 use crate::tensor::{BatchVec, LaneStore, Layout};
-use std::sync::OnceLock;
 
 /// Upper bound on tableau stages supported by the stack-allocated
 /// row-slice hoists in the stage kernel. Sized to admit high-order
@@ -77,20 +76,14 @@ pub struct CompiledTableau {
     pub gamma: f64,
 }
 
-/// Process-wide compiled-tableau table, one slot per [`super::Method`]
-/// in `Method::ALL` order, derived on first use.
-static COMPILED: OnceLock<Vec<CompiledTableau>> = OnceLock::new();
-
 impl CompiledTableau {
-    /// The cached compiled tableau for `method`. The whole table is
-    /// derived on the first call (all registered tableaus are tiny) and
-    /// shared for the life of the process; every per-solve and per-shard
-    /// entry point goes through here.
-    pub fn cached(method: super::Method) -> &'static CompiledTableau {
-        let all = COMPILED.get_or_init(|| {
-            super::Method::ALL.iter().map(|m| CompiledTableau::new(m.tableau())).collect()
-        });
-        &all[method as usize]
+    /// The cached compiled tableau for `method` — a thin delegate to the
+    /// method registry ([`super::MethodId::compiled`]), which keys the
+    /// cache on registry slots: one compile per registered method for
+    /// the life of the process, shared by every per-solve and per-shard
+    /// entry point (and valid for runtime-registered methods too).
+    pub fn cached(method: super::MethodId) -> &'static CompiledTableau {
+        method.compiled()
     }
 
     /// Compile `tab` directly (zero-stripping + stage-count check).

@@ -438,10 +438,69 @@ pub static TRBDF2: Tableau = Tableau {
     dense: DenseOutput::Hermite,
 };
 
-/// All registered tableaus, for iteration in tests and the CLI.
+// --- Kvaerno 4(3), stiffly-accurate ESDIRK ----------------------------------
+//
+// Kværnø's 5-stage ESDIRK 4(3) pair (Kværnø 2004, "Singly diagonally
+// implicit Runge–Kutta methods with an explicit first stage"). Stage 0
+// is explicit; stages 1–4 share the diagonal γ, the relevant root of
+// γ³ − 3γ² + 3γ/2 − 1/6 = 0 (L-stability of the 4th-order solution).
+// Both the solution row and the embedded 3rd-order companion are
+// stiffly accurate — b is stage row 4, b̂ is stage row 3 — so the error
+// estimate stays bounded in the stiff limit even before the
+// Hosea–Shampine filter. The coefficients here are re-derived to full
+// f64 precision from the order conditions (stage order 2 for every
+// implicit stage; b̂ solves the order-3 quadrature system; b solves the
+// order-4 quadrature system; c₃ is pinned by the one non-automatic
+// 4th-order condition Σᵢ bᵢ(Ac²)ᵢ = 1/12) — the commonly published
+// 10-digit values miss this module's 1e-12 consistency checks.
+//
+// Like TR-BDF2, NOT FSAL in the hand-off sense: the last slope is
+// recovered algebraically from the stage equation, so the loops refresh
+// k₀ = f(t_new, y_new) exactly on acceptance.
+const KV43_GAMMA: f64 = 0.4358665215084592;
+const KV43_C3: f64 = 0.4682387448518447;
+const KV43_A31: f64 = 0.14073777472470633;
+const KV43_A32: f64 = -0.10836555138132084;
+const KV43_A41: f64 = 0.10239940061991126;
+const KV43_A42: f64 = -0.3768784522555564;
+const KV43_A43: f64 = 0.838612530127186;
+const KV43_B1: f64 = 0.15702489786032495;
+const KV43_B2: f64 = 0.11733044137043755;
+const KV43_B3: f64 = 0.6166780303921222;
+const KV43_B4: f64 = -0.32689989113134393;
+
+pub static KVAERNO43: Tableau = Tableau {
+    name: "kvaerno43",
+    stages: 5,
+    order: 4,
+    err_order: 3,
+    // Strictly lower-triangular part; the diagonal lives in `diag`.
+    a: &[
+        KV43_GAMMA, //
+        KV43_A31, KV43_A32, //
+        KV43_A41, KV43_A42, KV43_A43, //
+        KV43_B1, KV43_B2, KV43_B3, KV43_B4,
+    ],
+    b: &[KV43_B1, KV43_B2, KV43_B3, KV43_B4, KV43_GAMMA],
+    // b̂ = stage row 3 = [a41, a42, a43, γ, 0]  =>  b_err = b − b̂
+    b_err: &[
+        KV43_B1 - KV43_A41,
+        KV43_B2 - KV43_A42,
+        KV43_B3 - KV43_A43,
+        KV43_B4 - KV43_GAMMA,
+        KV43_GAMMA,
+    ],
+    c: &[0.0, 2.0 * KV43_GAMMA, KV43_C3, 1.0, 1.0],
+    diag: &[0.0, KV43_GAMMA, KV43_GAMMA, KV43_GAMMA, KV43_GAMMA],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+/// All built-in tableaus, in the registration order of the method
+/// registry ([`crate::solver::MethodId::BUILTINS`] indexes this table).
 pub static ALL: &[&Tableau] = &[
     &EULER, &MIDPOINT, &HEUN21, &RALSTON2, &BOSH3, &RK4, &FEHLBERG45, &CASHKARP45, &DOPRI5, &TSIT5,
-    &TRBDF2,
+    &TRBDF2, &KVAERNO43,
 ];
 
 #[cfg(test)]
@@ -468,33 +527,44 @@ mod tests {
         }
     }
 
-    /// ESDIRK structure of the implicit tableau: explicit first stage,
-    /// one shared positive diagonal, stiffly-accurate last row
+    /// ESDIRK structure of every implicit tableau: explicit first
+    /// stage, one shared positive diagonal, stiffly-accurate last row
     /// (`a_row(last) + diag[last] == b`), and the 2nd/3rd-order
-    /// conditions of both the solution weights and the embedded
-    /// companion b̂ = b − b_err.
+    /// conditions of the embedded companion b̂ = b − b_err.
     #[test]
-    fn trbdf2_structure() {
-        let t = &TRBDF2;
-        assert_eq!(t.diag.len(), t.stages);
-        assert_eq!(t.diag[0], 0.0, "ESDIRK: first stage explicit");
-        assert!(t.diag[1] > 0.0 && t.diag[1] == t.diag[2], "single-γ diagonal");
-        // Stiffly accurate: the last stage value is the solution.
-        for j in 0..t.stages - 1 {
-            assert!((t.a_row(t.stages - 1)[j] - t.b[j]).abs() < 1e-15, "j={j}");
+    fn esdirk_structure() {
+        let implicit: Vec<&&Tableau> = ALL.iter().filter(|t| !t.diag.is_empty()).collect();
+        assert!(implicit.len() >= 2, "TR-BDF2 and Kvaerno 4(3) should be here");
+        for t in implicit {
+            assert_eq!(t.diag.len(), t.stages, "{}", t.name);
+            assert_eq!(t.diag[0], 0.0, "{}: ESDIRK first stage explicit", t.name);
+            let gamma = t.diag[1];
+            assert!(gamma > 0.0, "{}", t.name);
+            for (s, &d) in t.diag.iter().enumerate().skip(1) {
+                assert!(d == gamma, "{}: single-γ diagonal violated at stage {s}", t.name);
+            }
+            // Stiffly accurate: the last stage value is the solution.
+            for j in 0..t.stages - 1 {
+                assert!(
+                    (t.a_row(t.stages - 1)[j] - t.b[j]).abs() < 1e-15,
+                    "{}: j={j}",
+                    t.name
+                );
+            }
+            assert!((t.diag[t.stages - 1] - t.b[t.stages - 1]).abs() < 1e-15, "{}", t.name);
+            // The embedded companion b̂ is (at least) 3rd order:
+            // Σb̂ = 1, Σb̂c = 1/2, Σb̂c² = 1/3 (the diagonal enters only
+            // the stage equations, not the quadrature conditions on b̂
+            // and c).
+            let bhat: Vec<f64> = t.b.iter().zip(t.b_err).map(|(b, e)| b - e).collect();
+            let s0: f64 = bhat.iter().sum();
+            let s1: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c).sum();
+            let s2: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
+            assert!((s0 - 1.0).abs() < 1e-14, "{}: Σb̂ = {s0}", t.name);
+            assert!((s1 - 0.5).abs() < 1e-14, "{}: Σb̂c = {s1}", t.name);
+            assert!((s2 - 1.0 / 3.0).abs() < 1e-14, "{}: Σb̂c² = {s2}", t.name);
+            assert!(!t.fsal, "{}: k_last is algebraic, not f(t_new, y_new)", t.name);
         }
-        assert!((t.diag[t.stages - 1] - t.b[t.stages - 1]).abs() < 1e-15);
-        // The embedded companion b̂ is 3rd order: Σb̂ = 1, Σb̂c = 1/2,
-        // Σb̂c² = 1/3 (the diagonal enters only the stage equations, not
-        // the quadrature conditions on b̂ and c).
-        let bhat: Vec<f64> = t.b.iter().zip(t.b_err).map(|(b, e)| b - e).collect();
-        let s0: f64 = bhat.iter().sum();
-        let s1: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c).sum();
-        let s2: f64 = bhat.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
-        assert!((s0 - 1.0).abs() < 1e-14, "Σb̂ = {s0}");
-        assert!((s1 - 0.5).abs() < 1e-14, "Σb̂c = {s1}");
-        assert!((s2 - 1.0 / 3.0).abs() < 1e-14, "Σb̂c² = {s2}");
-        assert!(!t.fsal, "k_last is algebraic, not f(t_new, y_new)");
     }
 
     /// Solution weights must sum to 1 (first order condition).
@@ -528,6 +598,17 @@ mod tests {
         }
     }
 
+    /// `(A·v)_i` including the implicit diagonal (empty for explicit
+    /// tableaus) — the full stage matrix the order conditions see.
+    fn a_dot(t: &Tableau, v: &[f64]) -> Vec<f64> {
+        (0..t.stages)
+            .map(|i| {
+                let strict: f64 = t.a_row(i).iter().zip(v).map(|(a, x)| a * x).sum();
+                strict + t.diag.get(i).copied().unwrap_or(0.0) * v[i]
+            })
+            .collect()
+    }
+
     /// Third-order conditions for methods of order ≥ 3.
     #[test]
     fn third_order_conditions() {
@@ -535,24 +616,34 @@ mod tests {
             if t.order >= 3 {
                 let s1: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
                 assert!((s1 - 1.0 / 3.0).abs() < 1e-9, "{}: Σ b c² = {}", t.name, s1);
-                // Σ_i b_i Σ_j a_ij c_j = 1/6
-                let mut s2 = 0.0;
-                for i in 1..t.stages {
-                    let inner: f64 = t.a_row(i).iter().zip(t.c).map(|(a, c)| a * c).sum();
-                    s2 += t.b[i] * inner;
-                }
+                // Σ_i b_i (A c)_i = 1/6, with the implicit diagonal part
+                // of A included where present.
+                let ac = a_dot(t, t.c);
+                let s2: f64 = t.b.iter().zip(&ac).map(|(b, x)| b * x).sum();
                 assert!((s2 - 1.0 / 6.0).abs() < 1e-9, "{}: Σ b A c = {}", t.name, s2);
             }
         }
     }
 
-    /// Fourth-order conditions for methods of order ≥ 4.
+    /// Fourth-order conditions for methods of order ≥ 4 — all four
+    /// order-4 trees, with the implicit diagonal part of A included.
     #[test]
     fn fourth_order_conditions() {
         for t in ALL {
             if t.order >= 4 {
                 let s: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c * c).sum();
                 assert!((s - 0.25).abs() < 1e-9, "{}: Σ b c³ = {}", t.name, s);
+                let c2: Vec<f64> = t.c.iter().map(|c| c * c).collect();
+                let ac = a_dot(t, t.c);
+                let s2: f64 =
+                    t.b.iter().zip(t.c).zip(&ac).map(|((b, c), x)| b * c * x).sum();
+                assert!((s2 - 0.125).abs() < 1e-9, "{}: Σ b c (A c) = {}", t.name, s2);
+                let ac2 = a_dot(t, &c2);
+                let s3: f64 = t.b.iter().zip(&ac2).map(|(b, x)| b * x).sum();
+                assert!((s3 - 1.0 / 12.0).abs() < 1e-9, "{}: Σ b A c² = {}", t.name, s3);
+                let aac = a_dot(t, &ac);
+                let s4: f64 = t.b.iter().zip(&aac).map(|(b, x)| b * x).sum();
+                assert!((s4 - 1.0 / 24.0).abs() < 1e-9, "{}: Σ b A A c = {}", t.name, s4);
             }
         }
     }

@@ -199,7 +199,7 @@ fn fig1() -> Result<()> {
             .collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(batch, 0.0, t1, 200);
-    let opts = SolveOptions::new(Method::Dopri5)
+    let opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-5, 1e-5)
         .with_max_steps(100_000)
         .with_trace();

@@ -100,7 +100,7 @@ fn steady_state_allocates_nothing() {
         (
             "parallel skip_inactive+compact",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Dopri5)
+                let opts = SolveOptions::new(MethodId::DOPRI5)
                     .with_tols(1e-6, 1e-6)
                     .with_max_steps(20_000)
                     .skip_inactive()
@@ -111,7 +111,7 @@ fn steady_state_allocates_nothing() {
         (
             "parallel overhang evals",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Dopri5)
+                let opts = SolveOptions::new(MethodId::DOPRI5)
                     .with_tols(1e-6, 1e-6)
                     .with_max_steps(20_000);
                 parallel_steps(t1, &opts)
@@ -120,7 +120,7 @@ fn steady_state_allocates_nothing() {
         (
             "parallel non-FSAL",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Fehlberg45)
+                let opts = SolveOptions::new(MethodId::FEHLBERG45)
                     .with_tols(1e-6, 1e-6)
                     .with_max_steps(20_000)
                     .skip_inactive()
@@ -131,7 +131,7 @@ fn steady_state_allocates_nothing() {
         (
             "joint",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Dopri5)
+                let opts = SolveOptions::new(MethodId::DOPRI5)
                     .with_tols(1e-6, 1e-6)
                     .with_max_steps(20_000);
                 joint_steps(t1, &opts)
@@ -144,7 +144,7 @@ fn steady_state_allocates_nothing() {
         (
             "parallel implicit (trbdf2)",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Trbdf2)
+                let opts = SolveOptions::new(MethodId::TRBDF2)
                     .with_tols(1e-6, 1e-5)
                     .with_max_steps(20_000)
                     .skip_inactive()
@@ -155,7 +155,7 @@ fn steady_state_allocates_nothing() {
         (
             "joint implicit (trbdf2)",
             Box::new(|t1| {
-                let opts = SolveOptions::new(Method::Trbdf2)
+                let opts = SolveOptions::new(MethodId::TRBDF2)
                     .with_tols(1e-6, 1e-5)
                     .with_max_steps(20_000);
                 joint_steps(t1, &opts)

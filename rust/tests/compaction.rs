@@ -36,7 +36,7 @@ fn workload(batch: usize) -> (rode::problems::VdP, BatchVec, TimeGrid) {
 #[test]
 fn active_set_matches_reference_across_methods_and_thresholds() {
     let (sys, y0, grid) = workload(12);
-    for m in [Method::Dopri5, Method::Tsit5, Method::Fehlberg45] {
+    for m in [MethodId::DOPRI5, MethodId::TSIT5, MethodId::FEHLBERG45] {
         let base = SolveOptions::new(m)
             .with_tols(1e-6, 1e-6)
             .with_max_steps(1_000_000)
@@ -64,7 +64,7 @@ fn active_set_matches_reference_across_methods_and_thresholds() {
 #[test]
 fn fixed_step_matches_reference_under_compaction() {
     let (sys, y0, grid) = workload(6);
-    let base = SolveOptions::new(Method::Rk4).with_fixed_dt(1e-3).with_max_steps(20_000);
+    let base = SolveOptions::new(MethodId::RK4).with_fixed_dt(1e-3).with_max_steps(20_000);
     let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
     let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_compaction(1.0));
     assert_bitwise(&reference, &got, "rk4 fixed-step");
@@ -75,7 +75,7 @@ fn fixed_step_matches_reference_under_compaction() {
 #[test]
 fn per_instance_tolerances_survive_compaction() {
     let (sys, y0, grid) = workload(6);
-    let mut base = SolveOptions::new(Method::Dopri5).with_max_steps(1_000_000);
+    let mut base = SolveOptions::new(MethodId::DOPRI5).with_max_steps(1_000_000);
     base.tols = Tolerances::per_instance(
         vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
         vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
@@ -94,7 +94,7 @@ fn failing_straggler_matches_reference_under_compaction() {
     // Easy rows (µ = 0.5, tol 1e-6) finish within ~200 steps, so
     // compaction actually fires before the stiff row hits the cap.
     let (sys, y0, grid) = straggler_workload(5, 1000.0, 0.5, 10.0, 8);
-    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(400);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(400);
     let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
     assert_eq!(reference.status[0], Status::MaxStepsReached);
     let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_compaction(1.0));
@@ -108,7 +108,7 @@ fn failing_straggler_matches_reference_under_compaction() {
 #[test]
 fn pooled_parallel_with_compaction_matches_reference() {
     let (sys, y0, grid) = workload(12);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(1_000_000)
         .with_trace()
@@ -138,7 +138,7 @@ fn joint_pooled_still_matches_serial_bitwise() {
     let sys = rode::problems::VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, 8.0, 15);
-    for m in [Method::Dopri5, Method::Fehlberg45] {
+    for m in [MethodId::DOPRI5, MethodId::FEHLBERG45] {
         let base = SolveOptions::new(m)
             .with_tols(1e-6, 1e-6)
             .with_max_steps(1_000_000)
@@ -164,7 +164,7 @@ fn zero_state_with_zero_atol_succeeds() {
     let sys = rode::problems::ExponentialDecay::new(vec![1.0, 1.0], 1);
     let y0 = BatchVec::from_rows(&[vec![0.0], vec![0.0]]);
     let grid = TimeGrid::linspace_shared(2, 0.0, 1.0, 5);
-    let mut opts = SolveOptions::new(Method::Dopri5).with_max_steps(10_000);
+    let mut opts = SolveOptions::new(MethodId::DOPRI5).with_max_steps(10_000);
     opts.tols = Tolerances::per_instance(vec![0.0, 0.0], vec![1e-6, 1e-6]);
     let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
     assert!(sol.all_success(), "{:?}", sol.status);

@@ -14,6 +14,7 @@ fn vdp_req(id: u64, mu: f64, n_eval: usize, t1: f64) -> SolveRequest {
         problem: ProblemSpec::Vdp { mu },
         y0: vec![2.0, 0.0],
         t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+        method: None,
     }
 }
 

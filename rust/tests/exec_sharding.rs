@@ -44,7 +44,7 @@ fn het_vdp(batch: usize) -> (VdP, BatchVec, TimeGrid) {
 #[test]
 fn heterogeneous_batch_sharded_bitwise() {
     let (sys, y0, grid) = het_vdp(6);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-7, 1e-7)
         .with_max_steps(200_000)
         .with_trace();
@@ -68,7 +68,7 @@ fn identical_problems_sharded_bitwise() {
     let sys = VdP::uniform(b, 2.0);
     let y0 = BatchVec::broadcast(&[1.0, 0.5], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, 5.0, 10);
-    let base = SolveOptions::new(Method::Tsit5).with_tols(1e-6, 1e-6);
+    let base = SolveOptions::new(MethodId::TSIT5).with_tols(1e-6, 1e-6);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(4));
     assert!(sharded.all_success());
@@ -94,7 +94,7 @@ fn non_fsal_methods_sharded_bitwise() {
         &(0..5).map(|i| vec![1.0 + 0.1 * i as f64, 0.0]).collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(5, 0.0, 4.0, 9);
-    for m in [Method::Fehlberg45, Method::Heun, Method::CashKarp45] {
+    for m in [MethodId::FEHLBERG45, MethodId::HEUN, MethodId::CASHKARP45] {
         let base = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
         let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
         let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(3));
@@ -106,7 +106,7 @@ fn non_fsal_methods_sharded_bitwise() {
 #[test]
 fn fixed_step_sharded_bitwise() {
     let (sys, y0, grid) = het_vdp(4);
-    let base = SolveOptions::new(Method::Rk4).with_fixed_dt(1e-3).with_max_steps(10_000);
+    let base = SolveOptions::new(MethodId::RK4).with_fixed_dt(1e-3).with_max_steps(10_000);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(2));
     assert_bitwise(&serial, &sharded, "rk4-fixed");
@@ -117,7 +117,7 @@ fn fixed_step_sharded_bitwise() {
 #[test]
 fn oversubscribed_pool_is_safe() {
     let (sys, y0, grid) = het_vdp(3);
-    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(16));
     assert_bitwise(&serial, &sharded, "oversubscribed");
@@ -133,7 +133,7 @@ fn failure_status_merges_bitwise() {
     let sys = VdP::new(vec![0.5, 1000.0]);
     let y0 = BatchVec::from_rows(&[vec![1.0, 0.0], vec![2.0, 0.0]]);
     let grid = TimeGrid::linspace_shared(2, 0.0, 50.0, 10);
-    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8).with_max_steps(60);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8).with_max_steps(60);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     assert_eq!(serial.status[1], Status::MaxStepsReached);
     let sharded = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(2));
@@ -145,7 +145,7 @@ fn failure_status_merges_bitwise() {
 #[test]
 fn per_instance_tolerances_shard_correctly() {
     let (sys, y0, grid) = het_vdp(6);
-    let mut base = SolveOptions::new(Method::Dopri5).with_max_steps(400_000);
+    let mut base = SolveOptions::new(MethodId::DOPRI5).with_max_steps(400_000);
     base.tols = Tolerances::per_instance(
         vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
         vec![1e-5, 1e-7, 1e-6, 1e-8, 1e-5, 1e-6],
@@ -163,7 +163,7 @@ fn per_instance_tolerances_shard_correctly() {
 #[should_panic(expected = "atol")]
 fn pooled_rejects_mismatched_tolerances() {
     let (sys, y0, grid) = het_vdp(4);
-    let mut opts = SolveOptions::new(Method::Dopri5).with_threads(2);
+    let mut opts = SolveOptions::new(MethodId::DOPRI5).with_threads(2);
     opts.tols = Tolerances::per_instance(vec![1e-6; 3], vec![1e-6; 3]);
     solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
 }
@@ -179,7 +179,7 @@ fn joint_pooled_matches_serial_bitwise() {
     let sys = VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, 10.0, 20);
-    for m in [Method::Dopri5, Method::Fehlberg45] {
+    for m in [MethodId::DOPRI5, MethodId::FEHLBERG45] {
         let base =
             SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000).with_trace();
         let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
@@ -203,7 +203,7 @@ fn joint_pooled_matches_serial_bitwise() {
 #[test]
 fn skip_inactive_sharded_bitwise() {
     let (sys, y0, grid) = het_vdp(6);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(100_000)
         .skip_inactive();

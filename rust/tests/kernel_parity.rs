@@ -49,7 +49,7 @@ fn workload(batch: usize, dim: usize, seed: u64) -> (ExponentialDecay, BatchVec,
 fn both_layouts_match_reference_across_odd_dims() {
     for &dim in &[1usize, 3, 5, 7, 13] {
         let (sys, y0, grid) = workload(6, dim, dim as u64);
-        for m in [Method::Dopri5, Method::CashKarp45] {
+        for m in [MethodId::DOPRI5, MethodId::CASHKARP45] {
             let base =
                 SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(100_000).with_trace();
             for eval_inactive in [true, false] {
@@ -83,7 +83,7 @@ fn both_layouts_match_reference_across_odd_dims() {
 fn fixed_step_layout_parity() {
     for &dim in &[3usize, 13] {
         let (sys, y0, grid) = workload(4, dim, 77 + dim as u64);
-        let base = SolveOptions::new(Method::Rk4).with_fixed_dt(5e-3).with_max_steps(20_000);
+        let base = SolveOptions::new(MethodId::RK4).with_fixed_dt(5e-3).with_max_steps(20_000);
         let reference = solve_ivp_parallel_reference(&sys, &y0, &grid, &base);
         for layout in [Layout::RowMajor, Layout::DimMajor] {
             let got = solve_ivp_parallel(&sys, &y0, &grid, &base.clone().with_layout(layout));
@@ -98,7 +98,7 @@ fn fixed_step_layout_parity() {
 #[test]
 fn pooled_layouts_match_reference() {
     let (sys, y0, grid) = workload(10, 5, 11);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(100_000)
         .with_trace();
@@ -125,7 +125,8 @@ fn pooled_layouts_match_reference() {
 fn joint_layout_parity_serial_and_pooled() {
     for &dim in &[1usize, 3, 7, 13] {
         let (sys, y0, grid) = workload(6, dim, 200 + dim as u64);
-        let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+        let base =
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(100_000);
         let row = solve_ivp_joint(&sys, &y0, &grid, &base);
         assert!(row.all_success(), "dim={dim}");
         let dm = solve_ivp_joint(&sys, &y0, &grid, &base.clone().with_layout(Layout::DimMajor));
@@ -147,7 +148,8 @@ fn joint_layout_parity_serial_and_pooled() {
 #[test]
 fn joint_non_fsal_layout_parity() {
     let (sys, y0, grid) = workload(4, 5, 31);
-    let base = SolveOptions::new(Method::Fehlberg45).with_tols(1e-6, 1e-6).with_max_steps(100_000);
+    let base =
+        SolveOptions::new(MethodId::FEHLBERG45).with_tols(1e-6, 1e-6).with_max_steps(100_000);
     let row = solve_ivp_joint(&sys, &y0, &grid, &base);
     let dm = solve_ivp_joint(&sys, &y0, &grid, &base.clone().with_layout(Layout::DimMajor));
     assert_bitwise(&row, &dm, "joint fehlberg45 dim_major");
@@ -158,7 +160,7 @@ fn joint_non_fsal_layout_parity() {
 /// counts) across odd dims.
 #[test]
 fn lane_kernels_bitwise_equal_scalar_on_solver_shapes() {
-    let ct = rode::solver::step::CompiledTableau::cached(Method::Dopri5);
+    let ct = rode::solver::step::CompiledTableau::cached(MethodId::DOPRI5);
     let mut rng = Rng64::new(5);
     for &dim in &[1usize, 3, 5, 7, 13] {
         let y: Vec<f64> = (0..dim).map(|_| rng.range(-2.0, 2.0)).collect();
@@ -211,7 +213,7 @@ fn lane_kernels_bitwise_equal_scalar_on_solver_shapes() {
 fn implicit_layouts_compaction_and_pools_bitwise() {
     for &dim in &[1usize, 3, 5] {
         let (sys, y0, grid) = workload(6, dim, 400 + dim as u64);
-        let base = SolveOptions::new(Method::Trbdf2)
+        let base = SolveOptions::new(MethodId::TRBDF2)
             .with_tols(1e-7, 1e-6)
             .with_max_steps(100_000)
             .with_trace();

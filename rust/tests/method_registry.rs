@@ -1,0 +1,156 @@
+//! End-to-end registry behavior: runtime method registration feeding the
+//! ordinary solve entry points, and per-request method routing through the
+//! coordinator. Built-in registry invariants live in
+//! `tableau_cross_check.rs`; these tests exercise the *open* part of the
+//! registry (methods the crate has never heard of) and the service path.
+
+use rode::coordinator::{
+    Batch, BucketKey, NativeEngine, ProblemSpec, SolveEngine, SolveRequest,
+};
+use rode::coordinator::{Coordinator, ServiceConfig};
+use rode::prelude::*;
+use rode::problems::ExponentialDecay;
+use rode::solver::tableau::{DenseOutput, Tableau};
+use std::time::Duration;
+
+/// Heun–Euler 2(1): the smallest embedded explicit pair. Not shipped as a
+/// built-in, which is exactly why it makes a good runtime-registration
+/// probe — the solver has never seen it before this test registers it.
+static HEUN_EULER21: Tableau = Tableau {
+    name: "heun_euler21",
+    stages: 2,
+    order: 2,
+    err_order: 1,
+    a: &[1.0],
+    b: &[0.5, 0.5],
+    // b − b̂ with b̂ = [1, 0] (the embedded Euler solution).
+    b_err: &[-0.5, 0.5],
+    c: &[0.0, 1.0],
+    diag: &[],
+    fsal: false,
+    dense: DenseOutput::Hermite,
+};
+
+#[test]
+fn runtime_registration_roundtrip() {
+    let id = register_method_with_aliases("heun_euler21", &["he21"], &HEUN_EULER21)
+        .expect("register");
+
+    // Name and alias resolve to the same slot; display echoes the name.
+    assert_eq!(MethodId::parse("heun_euler21"), Some(id));
+    assert_eq!(MethodId::parse("HE21"), Some(id));
+    assert_eq!(id.to_string(), "heun_euler21");
+    assert!(!id.is_implicit());
+    assert!(MethodId::all().contains(&id));
+
+    // The compiled tableau is slot-cached: every lookup returns the same
+    // 'static allocation (this is what keys the engines' kernel reuse).
+    assert!(std::ptr::eq(id.compiled(), id.compiled()));
+    assert!(std::ptr::eq(id.tableau(), &HEUN_EULER21));
+
+    // The registered method drives a real solve through the normal entry
+    // point. ẏ = −y from 1.0: compare against e^{−t}.
+    let sys = ExponentialDecay::new(vec![1.0], 1);
+    let y0 = BatchVec::from_rows(&[vec![1.0]]);
+    let grid = TimeGrid::from_rows(&[vec![0.0, 0.5, 1.0]]);
+    let opts = SolveOptions::new(id).with_tols(1e-8, 1e-8);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert_eq!(sol.status[0], Status::Success);
+    assert!((sol.y(0, 2)[0] - (-1.0f64).exp()).abs() < 1e-5);
+
+    // Names are never re-bound: registering the same name (or a built-in
+    // name) fails instead of shadowing.
+    assert!(matches!(
+        register_method("heun_euler21", &HEUN_EULER21),
+        Err(RegisterError::NameTaken(_))
+    ));
+    assert!(matches!(
+        register_method("dopri5", &HEUN_EULER21),
+        Err(RegisterError::NameTaken(_))
+    ));
+}
+
+fn vdp_req(id: u64, mu: f64, method: Option<MethodId>) -> SolveRequest {
+    SolveRequest {
+        id,
+        problem: ProblemSpec::Vdp { mu },
+        y0: vec![2.0, 0.0],
+        t_eval: (0..10).map(|k| k as f64 * 0.45).collect(),
+        method,
+    }
+}
+
+/// One service run carrying three method buckets at once: easy traffic on
+/// the engine default (dopri5) plus stiff traffic routed to trbdf2 and
+/// kvaerno43. Each bucket must flush separately, resolve to its own
+/// method, and reproduce a standalone single-bucket solve bitwise.
+#[test]
+fn coordinator_routes_methods_per_request() {
+    let groups: Vec<(Option<MethodId>, Vec<SolveRequest>)> = vec![
+        (None, (1..=3).map(|i| vdp_req(i, 1.5, None)).collect()),
+        (
+            Some(MethodId::TRBDF2),
+            (11..=13).map(|i| vdp_req(i, 120.0, Some(MethodId::TRBDF2))).collect(),
+        ),
+        (
+            Some(MethodId::KVAERNO43),
+            (21..=23).map(|i| vdp_req(i, 120.0, Some(MethodId::KVAERNO43))).collect(),
+        ),
+    ];
+
+    // max_batch = group size, long deadline: each group flushes exactly
+    // when its third request arrives, so batch composition is
+    // deterministic and comparable to the standalone solves below.
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: 3, max_wait: Duration::from_secs(60) },
+        || Box::new(NativeEngine::default()),
+    );
+    let mut rxs = Vec::new();
+    for (_, reqs) in &groups {
+        for r in reqs {
+            rxs.push(coord.submit(r.clone()));
+        }
+    }
+    let mut responses = Vec::new();
+    for rx in rxs {
+        responses.push(rx.recv_timeout(Duration::from_secs(120)).expect("response"));
+    }
+    assert_eq!(coord.metrics().batches_dispatched.load(std::sync::atomic::Ordering::Relaxed), 3);
+    drop(coord);
+
+    // Every request succeeded and reports the method its bucket resolved
+    // to (the override when set, the engine default otherwise).
+    for (gi, (method, reqs)) in groups.iter().enumerate() {
+        let expect = method.unwrap_or(MethodId::DOPRI5);
+        for r in reqs {
+            let resp = responses.iter().find(|x| x.id == r.id).expect("id");
+            assert_eq!(resp.status, Status::Success, "group {gi} id {}", r.id);
+            assert_eq!(resp.method, Some(expect), "group {gi} id {}", r.id);
+        }
+    }
+    // The implicit buckets actually ran Newton (Jacobian builds), the
+    // explicit bucket did not.
+    for r in &responses {
+        let implicit = r.method.map(|m| m.is_implicit()).unwrap_or(false);
+        assert_eq!(r.stats.n_jac_evals > 0, implicit, "id {}", r.id);
+    }
+
+    // Routed service output is bitwise-identical to solving the same
+    // bucket standalone with the same engine defaults.
+    for (method, reqs) in &groups {
+        let mut engine = NativeEngine::default();
+        let batch = Batch {
+            key: BucketKey::of(&reqs[0]),
+            requests: reqs.clone(),
+            oldest_wait: Duration::ZERO,
+        };
+        assert_eq!(batch.key.method, *method);
+        for standalone in engine.solve(&batch).expect("standalone solve") {
+            let routed = responses.iter().find(|x| x.id == standalone.id).expect("id");
+            assert_eq!(routed.stats, standalone.stats, "id {}", standalone.id);
+            let a: Vec<u64> = routed.ys.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = standalone.ys.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "trajectory of id {} differs", standalone.id);
+        }
+    }
+}

@@ -34,7 +34,7 @@ const CHUNKS: [usize; 4] = [0, 1, 5, 16];
 #[test]
 fn parallel_bitwise_across_pools_threads_and_chunks() {
     let (sys, y0, grid) = straggler_workload(24, 40.0, 0.5, 5.0, 8);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(1_000_000)
         .with_trace();
@@ -70,7 +70,7 @@ fn joint_bitwise_across_pools_threads_and_chunks() {
     let sys = VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, 8.0, 12);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(1_000_000)
         .with_trace();
@@ -105,7 +105,7 @@ fn non_fsal_ledger_invariant_to_partition() {
         &(0..7).map(|i| vec![1.0 + 0.1 * i as f64, 0.0]).collect::<Vec<_>>(),
     );
     let grid = TimeGrid::linspace_shared(7, 0.0, 4.0, 9);
-    for m in [Method::Fehlberg45, Method::Heun] {
+    for m in [MethodId::FEHLBERG45, MethodId::HEUN] {
         let base = SolveOptions::new(m).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
         let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
         for (threads, chunk) in [(2, 1), (4, 2), (3, 0)] {
@@ -128,7 +128,7 @@ fn non_fsal_ledger_invariant_to_partition() {
 #[test]
 fn implicit_parallel_bitwise_across_pools_threads_and_chunks() {
     let (sys, y0, grid) = straggler_workload(16, 200.0, 0.5, 5.0, 6);
-    let base = SolveOptions::new(Method::Trbdf2)
+    let base = SolveOptions::new(MethodId::TRBDF2)
         .with_tols(1e-6, 1e-4)
         .with_max_steps(1_000_000)
         .with_trace();
@@ -169,7 +169,7 @@ fn implicit_joint_bitwise_across_pools_threads_and_chunks() {
     let sys = VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, 6.0, 8);
-    let base = SolveOptions::new(Method::Trbdf2)
+    let base = SolveOptions::new(MethodId::TRBDF2)
         .with_tols(1e-6, 1e-4)
         .with_max_steps(1_000_000)
         .with_trace();
@@ -200,7 +200,7 @@ fn implicit_joint_bitwise_across_pools_threads_and_chunks() {
 #[test]
 fn pool_kind_is_observable_in_exec_stats() {
     let (sys, y0, grid) = straggler_workload(12, 20.0, 0.5, 4.0, 6);
-    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
 
     // threads = 1: the pooled entry quietly runs serially — and says so.
     let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &base.clone().with_threads(1));
@@ -256,7 +256,7 @@ fn pool_kind_is_observable_in_exec_stats() {
 #[test]
 fn oversubscribed_stealing_pool_is_safe() {
     let (sys, y0, grid) = straggler_workload(3, 20.0, 0.5, 4.0, 6);
-    let base = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(1_000_000);
     let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
     let opts =
         base.clone().with_threads(16).with_pool(PoolKind::Persistent).with_steal_chunk(1);
@@ -272,7 +272,7 @@ fn oversubscribed_stealing_pool_is_safe() {
 #[test]
 fn stealing_composes_with_compaction() {
     let (sys, y0, grid) = straggler_workload(16, 40.0, 0.5, 5.0, 8);
-    let base = SolveOptions::new(Method::Dopri5)
+    let base = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-6)
         .with_max_steps(1_000_000)
         .skip_inactive()

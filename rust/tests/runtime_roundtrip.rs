@@ -43,7 +43,7 @@ fn solve_artifact_matches_native_solver() {
     let sys = rode::problems::VdP::new(mus);
     let y0n = BatchVec::broadcast(&[2.0, 0.0], b);
     let grid = TimeGrid::linspace_shared(b, 0.0, t1, e);
-    let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-5, 1e-5);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-5, 1e-5);
     let sol = solve_ivp_parallel(&sys, &y0n, &grid, &opts);
     assert!(sol.all_success());
 
@@ -72,7 +72,7 @@ fn step_artifact_agrees_with_native_step() {
 
     // Native single attempt.
     let sys = rode::problems::VdP::uniform(b, mu);
-    let ct = rode::solver::step::CompiledTableau::new(Method::Dopri5.tableau());
+    let ct = rode::solver::step::CompiledTableau::new(MethodId::DOPRI5.tableau());
     let mut ws = rode::solver::step::RkWorkspace::new(7, b, 2);
     let y = BatchVec::broadcast(&[2.0, 0.0], b);
     let t = vec![0.0; b];

@@ -17,7 +17,7 @@ fn prop_adaptive_methods_solve_linear_systems() {
         let t1 = rng.range(0.5, 4.0);
         let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
         let grid = TimeGrid::linspace_shared(1, 0.0, t1, 5);
-        let m = [Method::Bosh3, Method::Dopri5, Method::Tsit5, Method::CashKarp45]
+        let m = [MethodId::BOSH3, MethodId::DOPRI5, MethodId::TSIT5, MethodId::CASHKARP45]
             [rng.below(4)];
         let opts = SolveOptions::new(m).with_tols(1e-8, 1e-8).with_max_steps(100_000);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
@@ -50,7 +50,7 @@ fn prop_instance_isolation_under_batching() {
             let sys = rode::problems::VdP::new(vec![mu]);
             let y0 = BatchVec::from_rows(&[y0v.clone()]);
             let grid = TimeGrid::linspace_shared(1, 0.0, t1, n_eval);
-            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+            let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6);
             solve_ivp_parallel(&sys, &y0, &grid, &opts)
         };
 
@@ -65,7 +65,7 @@ fn prop_instance_isolation_under_batching() {
         let sys = rode::problems::VdP::new(mus);
         let y0 = BatchVec::from_rows(&rows);
         let grid = TimeGrid::linspace_shared(1 + extra, 0.0, t1, n_eval);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6);
         let mixed = solve_ivp_parallel(&sys, &y0, &grid, &opts);
 
         assert_eq!(mixed.status[0], solo.status[0]);
@@ -95,7 +95,7 @@ fn prop_stats_invariants() {
         );
         let n_eval = 2 + rng.below(20);
         let grid = TimeGrid::linspace_shared(batch, 0.0, rng.range(1.0, 8.0), n_eval);
-        let m = [Method::Dopri5, Method::Tsit5, Method::Bosh3][rng.below(3)];
+        let m = [MethodId::DOPRI5, MethodId::TSIT5, MethodId::BOSH3][rng.below(3)];
         let opts = SolveOptions::new(m).with_tols(1e-5, 1e-5).with_max_steps(100_000);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         let f0 = sol.stats[0].n_f_evals;
@@ -125,7 +125,7 @@ fn prop_dense_output_consistency() {
         let t1 = rng.range(1.0, 4.0);
         let n_eval = 4 + rng.below(12);
         let grid = TimeGrid::linspace_shared(1, 0.0, t1, n_eval);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-8, 1e-8);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         assert!(sol.all_success());
         for e in 0..n_eval {
@@ -153,7 +153,7 @@ fn prop_joint_naive_equivalence() {
         let sys = rode::problems::VdP::new(mus);
         let y0 = BatchVec::broadcast(&[rng.range(0.5, 2.0), 0.0], batch);
         let grid = TimeGrid::linspace_shared(batch, 0.0, rng.range(2.0, 5.0), 6);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-6, 1e-6);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6);
         let a = solve_ivp_joint(&sys, &y0, &grid, &opts);
         let b = solve_ivp_naive(&sys, &y0, &grid, &opts);
         assert!(a.all_success() && b.all_success());
@@ -183,7 +183,7 @@ fn trbdf2_observed_order_matches_design_order() {
     let y0 = BatchVec::from_rows(&[vec![2.0, 1.0]]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 2);
     let solve_fixed = |h: f64| -> Vec<f64> {
-        let opts = SolveOptions::new(Method::Trbdf2)
+        let opts = SolveOptions::new(MethodId::TRBDF2)
             .with_tols(1e-12, 1e-12)
             .with_fixed_dt(h)
             .with_max_steps(100_000);
@@ -217,7 +217,7 @@ fn trbdf2_linear_l_stability_and_small_h_accuracy() {
     let sys = rode::problems::ExponentialDecay::new(vec![1e6], 1);
     let y0 = BatchVec::from_rows(&[vec![1.0]]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 3.0, 4);
-    let opts = SolveOptions::new(Method::Trbdf2)
+    let opts = SolveOptions::new(MethodId::TRBDF2)
         .with_tols(1e-8, 1e-8)
         .with_fixed_dt(1.0)
         .with_max_steps(100);
@@ -236,7 +236,7 @@ fn trbdf2_linear_l_stability_and_small_h_accuracy() {
     // (b) Small-h accuracy on y' = −y.
     let sys = rode::problems::ExponentialDecay::new(vec![1.0], 1);
     let grid = TimeGrid::linspace_shared(1, 0.0, 1.0, 2);
-    let opts = SolveOptions::new(Method::Trbdf2)
+    let opts = SolveOptions::new(MethodId::TRBDF2)
         .with_tols(1e-12, 1e-12)
         .with_fixed_dt(0.01)
         .with_max_steps(1_000);
@@ -257,14 +257,14 @@ fn prop_adjoint_gradients_match_fd() {
             let sys = rode::problems::VdP::new(vec![mu]);
             let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
             let grid = TimeGrid::linspace_shared(1, 0.0, tt, 2);
-            let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+            let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10);
             let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
             sol.y_final(0)[0]
         };
         let sys = rode::problems::VdP::new(vec![mu]);
         let y0 = BatchVec::from_rows(&[y0v.to_vec()]);
         let grid = TimeGrid::linspace_shared(1, 0.0, tt, 2);
-        let opts = SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10);
+        let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
         let mut y1 = BatchVec::zeros(1, 2);
         y1.row_mut(0).copy_from_slice(sol.y_final(0));
@@ -276,7 +276,7 @@ fn prop_adjoint_gradients_match_fd() {
             &[0.0],
             &[tt],
             &rode::solver::AdjointOptions::new(
-                SolveOptions::new(Method::Dopri5).with_tols(1e-10, 1e-10),
+                SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10),
             ),
         );
         let h = 1e-5;

@@ -1,4 +1,6 @@
-//! The stiff-regression suite: the implicit (TR-BDF2) method must solve
+//! The stiff-regression suite: the implicit method under test (TR-BDF2 by
+//! default, any registered implicit method via `RODE_STIFF_METHOD`, e.g.
+//! `RODE_STIFF_METHOD=kvaerno43` in CI) must solve
 //! the workloads that defined the explicit solver's wall — Van der Pol
 //! at μ up to 5000 and the Robertson kinetics problem — while explicit
 //! Dopri5 at μ = 1000 is pinned to still hit `DtUnderflow` (the wall the
@@ -15,6 +17,19 @@ use rode::prelude::*;
 use rode::problems::{Robertson, VdP};
 use rode::tensor::BatchVec;
 
+/// The implicit method under test. Defaults to TR-BDF2; CI re-runs the
+/// suite with `RODE_STIFF_METHOD=kvaerno43` so every stiff method in the
+/// registry clears the same bar. Tests pinning a *specific* method's
+/// behavior (the Dopri5 stability wall, the trapezoidal-stage divergence
+/// probe) ignore the variable.
+fn stiff_method() -> MethodId {
+    match std::env::var("RODE_STIFF_METHOD") {
+        Ok(name) => MethodId::parse(&name)
+            .unwrap_or_else(|| panic!("RODE_STIFF_METHOD={name} is not a registered method")),
+        Err(_) => MethodId::TRBDF2,
+    }
+}
+
 /// Full bitwise equality of two solutions (NaN-safe via bit comparison).
 fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
     assert_eq!(a.status, b.status, "{label}: status");
@@ -27,7 +42,8 @@ fn assert_bitwise(a: &Solution, b: &Solution, label: &str) {
     assert_eq!(a.trace, b.trace, "{label}: trace");
 }
 
-/// VdP μ ∈ {10, 100, 1000, 5000} all reach Success under TR-BDF2, and
+/// VdP μ ∈ {10, 100, 1000, 5000} all reach Success under the implicit
+/// method under test, and
 /// the loose-tolerance solution agrees with a tight-tolerance
 /// self-reference — the accuracy check that the Newton/Jacobian-reuse
 /// machinery converges to the right trajectory, not just *a* trajectory.
@@ -40,7 +56,7 @@ fn vdp_mu_sweep_solves_with_implicit() {
         // (see `vdp_stiff_span`), so the final-state comparison below is
         // well-conditioned.
         let grid = TimeGrid::linspace_shared(1, 0.0, vdp_stiff_span(mu), 9);
-        let loose = SolveOptions::new(Method::Trbdf2)
+        let loose = SolveOptions::new(stiff_method())
             .with_tols(1e-6, 1e-4)
             .with_max_steps(1_000_000);
         let sol = solve_ivp_parallel(&sys, &y0, &grid, &loose);
@@ -53,7 +69,7 @@ fn vdp_mu_sweep_solves_with_implicit() {
         assert!(st.n_lu_factor >= st.n_jac_evals, "mu={mu}: LU count");
         assert!(st.n_f_evals > 2 * st.n_steps, "mu={mu}: f-eval accounting");
 
-        let tight = SolveOptions::new(Method::Trbdf2)
+        let tight = SolveOptions::new(stiff_method())
             .with_tols(1e-9, 1e-7)
             .with_max_steps(2_000_000);
         let reference = solve_ivp_parallel(&sys, &y0, &grid, &tight);
@@ -77,7 +93,7 @@ fn robertson_solves_with_implicit() {
     let sys = Robertson::new(1);
     let y0 = BatchVec::from_rows(&[Robertson::y0().to_vec()]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 100.0, 11);
-    let opts = SolveOptions::new(Method::Trbdf2)
+    let opts = SolveOptions::new(stiff_method())
         .with_tols(1e-8, 1e-5)
         .with_max_steps(1_000_000);
     let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
@@ -89,7 +105,7 @@ fn robertson_solves_with_implicit() {
         assert!(y[1].abs() < 1e-3, "e={e}: y2 = {} left the QSS regime", y[1]);
     }
 
-    let tight = SolveOptions::new(Method::Trbdf2)
+    let tight = SolveOptions::new(stiff_method())
         .with_tols(1e-10, 1e-8)
         .with_max_steps(2_000_000);
     let reference = solve_ivp_parallel(&sys, &y0, &grid, &tight);
@@ -113,7 +129,7 @@ fn explicit_dopri5_still_underflows_at_mu_1000() {
     let sys = VdP::new(vec![1000.0]);
     let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 400.0, 5);
-    let mut opts = SolveOptions::new(Method::Dopri5)
+    let mut opts = SolveOptions::new(MethodId::DOPRI5)
         .with_tols(1e-6, 1e-4)
         .with_dt0(0.01)
         .with_max_steps(500_000);
@@ -128,13 +144,14 @@ fn explicit_dopri5_still_underflows_at_mu_1000() {
 
     // Same options, implicit method: the wall is gone.
     let mut iopts = opts.clone();
-    iopts.method = Method::Trbdf2;
+    iopts.method = MethodId::TRBDF2;
     let sol = solve_ivp_parallel(&sys, &y0, &grid, &iopts);
     assert_eq!(sol.status[0], Status::Success, "{:?}", sol.status[0]);
 }
 
 /// The acceptance batch: 256 rows, one μ=1000 straggler among easy
-/// μ=0.5 oscillators, solved by the **parallel** loop with TR-BDF2 —
+/// μ=0.5 oscillators, solved by the **parallel** loop with the implicit
+/// method under test —
 /// Success everywhere, and bitwise-identical (trajectories, traces and
 /// every `Stats` counter including `n_f_evals`/`n_jac_evals`/
 /// `n_lu_factor`) across pool kind × threads × steal-chunk × layout ×
@@ -147,7 +164,7 @@ fn implicit_parallel_batch256_bitwise_across_pools_layouts_compaction() {
     let sys = VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
     let grid = TimeGrid::linspace_shared(batch, 0.0, 40.0, 6);
-    let base = SolveOptions::new(Method::Trbdf2)
+    let base = SolveOptions::new(stiff_method())
         .with_tols(1e-6, 1e-4)
         .with_max_steps(1_000_000)
         .with_trace();
@@ -198,7 +215,7 @@ fn implicit_joint_batch256_bitwise_across_pools_and_layouts() {
     let sys = VdP::new(mus);
     let y0 = BatchVec::broadcast(&[2.0, 0.0], batch);
     let grid = TimeGrid::linspace_shared(batch, 0.0, 10.0, 5);
-    let base = SolveOptions::new(Method::Trbdf2)
+    let base = SolveOptions::new(stiff_method())
         .with_tols(1e-6, 1e-4)
         .with_max_steps(1_000_000);
     let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
@@ -246,7 +263,7 @@ fn fixed_step_newton_divergence_is_reported() {
     let sys = Quadratic;
     let y0 = BatchVec::from_rows(&[vec![2.0]]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 2.0, 3);
-    let opts = SolveOptions::new(Method::Trbdf2).with_fixed_dt(1.0).with_max_steps(100);
+    let opts = SolveOptions::new(MethodId::TRBDF2).with_fixed_dt(1.0).with_max_steps(100);
     // Parallel loop: the row fails outright.
     let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
     assert_eq!(sol.status[0], Status::NewtonDiverged, "{:?}", sol.status[0]);
@@ -265,7 +282,7 @@ fn newton_divergence_recovers_through_rejection() {
     let sys = VdP::new(vec![100.0]);
     let y0 = BatchVec::from_rows(&[vec![2.0, 0.0]]);
     let grid = TimeGrid::linspace_shared(1, 0.0, 40.0, 5);
-    let opts = SolveOptions::new(Method::Trbdf2)
+    let opts = SolveOptions::new(stiff_method())
         .with_tols(1e-6, 1e-4)
         .with_dt0(40.0) // the whole span in one step — Newton will diverge
         .with_max_steps(200_000);

@@ -1,9 +1,13 @@
 //! Golden test: the Rust tableaus and the Python tableaus are the same
 //! numbers. `make artifacts` dumps `artifacts/tableaus.json` from
 //! `python/compile/tableaus.py`; this test compares every coefficient.
+//!
+//! Also home to the registry-wide structure invariants: every method the
+//! registry will route to — built-in or runtime-registered — must satisfy
+//! the same shape and consistency checks, enforced over `MethodId::all()`.
 
 use rode::runtime::json::Json;
-use rode::solver::Method;
+use rode::solver::MethodId;
 
 fn load() -> Option<Json> {
     let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tableaus.json");
@@ -14,7 +18,7 @@ fn load() -> Option<Json> {
     Some(Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap())
 }
 
-fn check_method(j: &Json, m: Method) {
+fn check_method(j: &Json, m: MethodId) {
     let tab = m.tableau();
     let jt = j.get(tab.name).unwrap_or_else(|| panic!("{} missing from JSON", tab.name));
     assert_eq!(jt.get("stages").unwrap().as_usize(), Some(tab.stages), "{}", tab.name);
@@ -52,7 +56,53 @@ fn check_method(j: &Json, m: Method) {
 #[test]
 fn python_and_rust_tableaus_agree() {
     let Some(j) = load() else { return };
-    for m in [Method::Dopri5, Method::Tsit5, Method::Bosh3] {
+    for m in [MethodId::DOPRI5, MethodId::TSIT5, MethodId::BOSH3] {
         check_method(&j, m);
     }
+}
+
+/// Structure invariants every registered method must satisfy. Runs over
+/// the full registry snapshot, so a runtime-registered method picked up by
+/// an earlier test in this binary is checked too — the registry has one
+/// quality bar, not one for built-ins and one for everything else.
+#[test]
+fn every_registered_method_has_a_consistent_tableau() {
+    for m in MethodId::all() {
+        let t = m.tableau();
+        let name = t.name;
+        assert_eq!(m.name(), name, "registry name mismatch");
+        assert!(t.stages >= 1, "{name}: no stages");
+        // Shape: strictly-lower-triangular a, per-stage b/c, diag either
+        // absent (explicit) or one entry per stage (ESDIRK).
+        assert_eq!(t.a.len(), t.stages * (t.stages - 1) / 2, "{name}: a shape");
+        assert_eq!(t.b.len(), t.stages, "{name}: b shape");
+        assert_eq!(t.c.len(), t.stages, "{name}: c shape");
+        assert!(t.diag.is_empty() || t.diag.len() == t.stages, "{name}: diag shape");
+        assert_eq!(m.is_implicit(), !t.diag.is_empty(), "{name}: implicit flag");
+        // Quadrature consistency: Σb = 1; the embedded difference sums to
+        // zero (both weight vectors integrate constants exactly).
+        let sb: f64 = t.b.iter().sum();
+        assert!((sb - 1.0).abs() < 1e-9, "{name}: Σb = {sb}");
+        if !t.b_err.is_empty() {
+            assert_eq!(t.b_err.len(), t.stages, "{name}: b_err shape");
+            let se: f64 = t.b_err.iter().sum();
+            assert!(se.abs() < 1e-9, "{name}: Σb_err = {se}");
+            assert!(t.err_order < t.order, "{name}: embedded order not lower");
+        }
+        // Row-sum consistency: c[i] = Σ_j a[i][j] (+ diag[i] for ESDIRK).
+        assert_eq!(t.c[0], 0.0, "{name}: c[0]");
+        let mut at = 0;
+        for i in 1..t.stages {
+            let row: f64 = t.a[at..at + i].iter().sum();
+            at += i;
+            let d = if t.diag.is_empty() { 0.0 } else { t.diag[i] };
+            assert!((row + d - t.c[i]).abs() < 1e-9, "{name}: row {i} sum vs c");
+        }
+        // The compiled form agrees with the data and is slot-cached.
+        let k = m.compiled();
+        assert_eq!(k.is_implicit(), m.is_implicit(), "{name}: compiled flag");
+        assert!(std::ptr::eq(k, m.compiled()), "{name}: compiled not slot-cached");
+    }
+    // The registry starts from the full built-in set.
+    assert!(MethodId::all().len() >= MethodId::BUILTINS.len());
 }

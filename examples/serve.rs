@@ -12,7 +12,6 @@ use rode::coordinator::{
     AotEngine, Coordinator, NativeEngine, ProblemSpec, ServiceConfig, SolveRequest,
 };
 use rode::nn::Rng64;
-use rode::prelude::*;
 use std::time::{Duration, Instant};
 
 fn workload(rng: &mut Rng64, n: usize) -> Vec<SolveRequest> {
@@ -21,13 +20,11 @@ fn workload(rng: &mut Rng64, n: usize) -> Vec<SolveRequest> {
             let mu = rng.range(0.5, 12.0);
             let n_eval = [10usize, 20][rng.below(2)];
             let t1 = rng.range(3.0, 6.0);
-            SolveRequest {
-                id: 0,
-                problem: ProblemSpec::Vdp { mu },
-                y0: vec![rng.normal() * 1.5, rng.normal() * 0.5],
-                t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
-                method: None,
-            }
+            SolveRequest::new(
+                ProblemSpec::Vdp { mu },
+                vec![rng.normal() * 1.5, rng.normal() * 0.5],
+                (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+            )
         })
         .collect()
 }
@@ -39,7 +36,7 @@ fn drive(name: &str, coord: &Coordinator, reqs: Vec<SolveRequest>) {
     let mut ok = 0;
     for rx in rxs {
         if let Ok(resp) = rx.recv_timeout(Duration::from_secs(300)) {
-            if resp.status == Status::Success {
+            if resp.is_success() {
                 ok += 1;
             }
         }
@@ -58,7 +55,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(500);
 
-    let cfg = ServiceConfig { max_batch: 32, max_wait: Duration::from_millis(2) };
+    let cfg = ServiceConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        ..ServiceConfig::default()
+    };
 
     // Native engine service.
     let mut rng = Rng64::new(99);

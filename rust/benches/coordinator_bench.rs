@@ -4,10 +4,10 @@
 //!
 //! Run with `cargo bench --bench coordinator_bench`, or pass section
 //! names to run a subset (`batcher`, `service`, `threads`, `straggler`,
-//! `stiffsweep`), e.g. `cargo bench --bench coordinator_bench --
-//! straggler`. The straggler section writes machine-readable
-//! `BENCH_solver.json` (the stiffsweep section appends to it) so CI can
-//! track the perf trajectory per PR.
+//! `stiffsweep`, `replay`), e.g. `cargo bench --bench coordinator_bench
+//! -- straggler`. The straggler section writes machine-readable
+//! `BENCH_solver.json` (the stiffsweep and replay sections append to it)
+//! so CI can track the perf trajectory per PR.
 
 use rode::bench::{
     append_bench_json, straggler_workload, threads_sweep, time_repeats, vdp_stiff_span,
@@ -24,13 +24,13 @@ use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
 fn req(rng: &mut Rng64, id: u64) -> SolveRequest {
-    SolveRequest {
-        id,
-        problem: ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
-        y0: vec![rng.normal(), rng.normal()],
-        t_eval: (0..20).map(|k| k as f64 * 0.25).collect(),
-        method: None,
-    }
+    let mut r = SolveRequest::new(
+        ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
+        vec![rng.normal(), rng.normal()],
+        (0..20).map(|k| k as f64 * 0.25).collect(),
+    );
+    r.id = id;
+    r
 }
 
 fn bench_batcher() {
@@ -61,7 +61,14 @@ fn bench_service() {
     println!("--- end-to-end service (native engine, 1000 VdP requests) ---");
     for (max_batch, wait_ms) in [(8usize, 1u64), (32, 1), (128, 2)] {
         let coord = Coordinator::spawn(
-            ServiceConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            // max_queue 0: unbounded, the historical semantics of this
+            // section — shedding is measured by the replay section.
+            ServiceConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+                max_queue: 0,
+                ..ServiceConfig::default()
+            },
             || Box::new(NativeEngine::default()),
         );
         let mut rng = Rng64::new(7);
@@ -372,6 +379,118 @@ fn bench_stiffsweep() {
     }
 }
 
+/// Trace replay: a serving-shaped mixed trace — mostly easy VdP, a stiff
+/// tail that dies on the explicit default and must be escalated to
+/// trbdf2, and a sliver of malformed (NaN-state) requests — fired as fast
+/// as possible at a bounded queue. Measures sustained throughput *and*
+/// the degraded-mode machinery: shed, retried and escalated counts, and
+/// the success rate over admitted requests (`replay_success_rate`, which
+/// carries an advisory floor in `BENCH_baseline.json` — malformed traffic
+/// fails by design, so the floor sits below the easy+stiff fraction).
+fn bench_replay() {
+    println!("--- serve replay (mixed easy/stiff/malformed trace, bounded queue) ---");
+    let n = 2000usize;
+    let mut rng = Rng64::new(23);
+    let mut trace = Vec::with_capacity(n);
+    let (mut n_easy, mut n_stiff, mut n_bad) = (0u64, 0u64, 0u64);
+    for _ in 0..n {
+        let roll = rng.below(100);
+        let r = if roll < 85 {
+            n_easy += 1;
+            SolveRequest::new(
+                ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
+                vec![rng.normal(), rng.normal()],
+                (0..20).map(|k| k as f64 * 0.25).collect(),
+            )
+        } else if roll < 95 {
+            // Dies of DtUnderflow on dopri5 under the engine options
+            // below, solves on trbdf2 (pinned in tests/stiff_regression.rs)
+            // — exercises the escalation path end to end.
+            n_stiff += 1;
+            SolveRequest::new(
+                ProblemSpec::Vdp { mu: 1000.0 },
+                vec![2.0, 0.0],
+                (0..5).map(|k| k as f64 * 100.0).collect(),
+            )
+        } else {
+            // Malformed: a NaN state is NonFinite on every method, so
+            // these burn a retry and still fail — hostile traffic the
+            // service must absorb without stalling.
+            n_bad += 1;
+            SolveRequest::new(
+                ProblemSpec::Vdp { mu: 2.0 },
+                vec![f64::NAN, 0.0],
+                (0..20).map(|k| k as f64 * 0.25).collect(),
+            )
+        };
+        trace.push(r);
+    }
+    println!("trace: {n_easy} easy / {n_stiff} stiff / {n_bad} malformed");
+
+    // Pin the explicit method's minimum step above its stability ceiling
+    // at μ = 1000 so the stiff tail genuinely underflows (same options as
+    // the stiff-regression pin).
+    let mut opts = SolveOptions::new(MethodId::DOPRI5)
+        .with_tols(1e-6, 1e-4)
+        .with_dt0(0.01)
+        .with_max_steps(500_000);
+    opts.min_dt_rel = 1e-5;
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            max_queue: 512,
+            ..ServiceConfig::default()
+        },
+        move || Box::new(NativeEngine::new(opts.clone())),
+    );
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = trace.into_iter().map(|r| coord.submit(r)).collect();
+    let mut ok = 0u64;
+    let mut escalated_ok = 0u64;
+    for rx in rxs {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(300)) {
+            if resp.is_success() {
+                ok += 1;
+                if resp.escalated_from.is_some() {
+                    escalated_ok += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    use std::sync::atomic::Ordering;
+    let m = coord.metrics();
+    let shed = m.requests_shed.load(Ordering::Relaxed);
+    let retried = m.requests_retried.load(Ordering::Relaxed);
+    let expired = m.requests_deadline_expired.load(Ordering::Relaxed);
+    let admitted = n as u64 - shed;
+    let success_rate = ok as f64 / admitted.max(1) as f64;
+    let req_per_s = admitted as f64 / wall;
+    println!(
+        "{ok}/{admitted} admitted ok ({escalated_ok} via escalation) in {wall:.2}s = \
+         {req_per_s:.0} req/s | shed={shed} retried={retried}"
+    );
+    println!("{}", m.summary());
+
+    let s = Summary::from_samples(&[wall * 1e3]);
+    let rec = BenchRecord::new("serve-replay", &s)
+        .field("n_requests", n as f64)
+        .field("admitted", admitted as f64)
+        .field("succeeded", ok as f64)
+        .field("escalated_ok", escalated_ok as f64)
+        .field("shed", shed as f64)
+        .field("retried", retried as f64)
+        .field("expired", expired as f64)
+        .field("req_per_s", req_per_s)
+        .field("replay_success_rate", success_rate);
+    match append_bench_json("BENCH_solver.json", &[rec]) {
+        Ok(()) => println!("appended serve-replay record to BENCH_solver.json"),
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name || a == "all");
@@ -389,5 +508,8 @@ fn main() {
     }
     if want("stiffsweep") {
         bench_stiffsweep();
+    }
+    if want("replay") {
+        bench_replay();
     }
 }

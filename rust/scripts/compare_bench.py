@@ -37,6 +37,7 @@ TRACKED = (
     "speedup_vs_scalar",
     "speedup_vs_explicit",
     "steps_vs_trbdf2",
+    "replay_success_rate",
 )
 
 

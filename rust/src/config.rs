@@ -215,6 +215,18 @@ pub struct RodeConfig {
     /// `row_major` | `dim_major`). Bitwise-identical results either way;
     /// see `SolveOptions::layout`.
     pub layout: Layout,
+    /// Bound on admitted-but-unresolved service requests (`max_queue`
+    /// key); submissions beyond it are shed with an `Overloaded` error.
+    /// `0` = unbounded.
+    pub max_queue: usize,
+    /// Default per-request deadline (`deadline_ms` key); requests whose
+    /// deadline passes before dispatch are dropped. Unset = no deadline.
+    pub deadline: Option<Duration>,
+    /// Stiffness-escalation fallback method (`retry_method` key): any
+    /// registry method name, or `off`/`none` to disable escalation.
+    pub retry_method: Option<MethodId>,
+    /// Escalation retries allowed per request (`max_retries` key).
+    pub max_retries: u32,
 }
 
 impl Default for RodeConfig {
@@ -232,6 +244,10 @@ impl Default for RodeConfig {
             steal_chunk: 0,
             compact_threshold: 0.0,
             layout: Layout::default_from_env(),
+            max_queue: 1024,
+            deadline: None,
+            retry_method: Some(MethodId::TRBDF2),
+            max_retries: 1,
         }
     }
 }
@@ -283,6 +299,26 @@ impl RodeConfig {
         if let Some(v) = raw.get("layout") {
             cfg.layout = Layout::parse(v)
                 .ok_or_else(|| anyhow!("unknown layout {v} (row_major|dim_major)"))?;
+        }
+        if let Some(v) = raw.get_usize("max_queue")? {
+            cfg.max_queue = v;
+        }
+        if let Some(v) = raw.get_f64("deadline_ms")? {
+            anyhow::ensure!(v > 0.0, "deadline_ms must be positive, got {v}");
+            cfg.deadline = Some(Duration::from_secs_f64(v / 1e3));
+        }
+        if let Some(v) = raw.get("retry_method") {
+            cfg.retry_method = match v.to_ascii_lowercase().as_str() {
+                "off" | "none" => None,
+                name => Some(
+                    MethodId::parse(name)
+                        .ok_or_else(|| anyhow!("unknown retry_method {name} (or off|none)"))?,
+                ),
+            };
+        }
+        if let Some(v) = raw.get_usize("max_retries")? {
+            cfg.max_retries = u32::try_from(v)
+                .map_err(|_| anyhow!("max_retries out of range: {v}"))?;
         }
         Ok(cfg)
     }
@@ -416,6 +452,31 @@ mod tests {
         assert_eq!(cfg.layout, Layout::RowMajor);
         // Unknown layouts are rejected, not defaulted.
         assert!(RodeConfig::from_raw(&RawConfig::parse("layout = soa").unwrap()).is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_validate() {
+        let raw = RawConfig::parse(
+            "max_queue = 256\ndeadline_ms = 50\nretry_method = kvaerno43\nmax_retries = 2",
+        )
+        .unwrap();
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.max_queue, 256);
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(cfg.retry_method, Some(MethodId::KVAERNO43));
+        assert_eq!(cfg.max_retries, 2);
+        // Defaults: bounded queue, no deadline, trbdf2 escalation.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.max_queue, 1024);
+        assert_eq!(cfg.deadline, None);
+        assert_eq!(cfg.retry_method, Some(MethodId::TRBDF2));
+        assert_eq!(cfg.max_retries, 1);
+        // Escalation can be switched off entirely.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("retry_method = off").unwrap()).unwrap();
+        assert_eq!(cfg.retry_method, None);
+        // Bad values are rejected, not defaulted.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("deadline_ms = -5").unwrap()).is_err());
+        assert!(RodeConfig::from_raw(&RawConfig::parse("retry_method = rk99").unwrap()).is_err());
     }
 
     #[test]

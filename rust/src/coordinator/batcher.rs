@@ -147,16 +147,16 @@ mod tests {
     use crate::coordinator::request::ProblemSpec;
 
     fn req(id: u64, kind: u8, n_eval: usize) -> SolveRequest {
-        SolveRequest {
-            id,
-            problem: match kind {
+        let mut r = SolveRequest::new(
+            match kind {
                 0 => ProblemSpec::Vdp { mu: 1.0 },
                 _ => ProblemSpec::ExpDecay { lambda: 1.0 },
             },
-            y0: vec![1.0, 0.0],
-            t_eval: (0..n_eval).map(|k| k as f64).collect(),
-            method: None,
-        }
+            vec![1.0, 0.0],
+            (0..n_eval).map(|k| k as f64).collect(),
+        );
+        r.id = id;
+        r
     }
 
     #[test]

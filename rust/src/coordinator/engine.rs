@@ -61,9 +61,11 @@ fn to_responses(
                 id: r.id,
                 ys,
                 stats: sol.stats[i].clone(),
-                status: sol.status[i],
+                status: Some(sol.status[i]),
+                error: None,
                 engine,
                 method,
+                escalated_from: None,
             }
         })
         .collect()
@@ -260,13 +262,15 @@ impl SolveEngine for AotEngine {
                         n_initialized: e_req as u64,
                         ..Default::default()
                     },
-                    status: if status[i] == 0.0 {
+                    status: Some(if status[i] == 0.0 {
                         Status::Success
                     } else {
                         Status::MaxStepsReached
-                    },
+                    }),
+                    error: None,
                     engine: "aot-pjrt",
                     method: None,
+                    escalated_from: None,
                 }
             })
             .collect())
@@ -284,12 +288,14 @@ mod tests {
         let requests: Vec<SolveRequest> = mus
             .iter()
             .enumerate()
-            .map(|(i, &mu)| SolveRequest {
-                id: i as u64,
-                problem: ProblemSpec::Vdp { mu },
-                y0: vec![2.0, 0.0],
-                t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
-                method: None,
+            .map(|(i, &mu)| {
+                let mut r = SolveRequest::new(
+                    ProblemSpec::Vdp { mu },
+                    vec![2.0, 0.0],
+                    (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+                );
+                r.id = i as u64;
+                r
             })
             .collect();
         Batch {
@@ -305,7 +311,7 @@ mod tests {
         let batch = vdp_batch(&[1.0, 5.0], 10, 5.0);
         let rs = eng.solve(&batch).unwrap();
         assert_eq!(rs.len(), 2);
-        assert!(rs.iter().all(|r| r.status == Status::Success));
+        assert!(rs.iter().all(|r| r.is_success()));
         assert_eq!(rs[0].ys.len(), 20);
         // Stiffer instance takes more steps.
         assert!(rs[1].stats.n_steps > rs[0].stats.n_steps);
@@ -339,7 +345,7 @@ mod tests {
         }
         batch.key = BucketKey::of(&batch.requests[0]);
         let rs = eng.solve(&batch).unwrap();
-        assert!(rs.iter().all(|r| r.status == Status::Success));
+        assert!(rs.iter().all(|r| r.is_success()));
         // The response reports the routed method, and the implicit path
         // actually ran (Jacobian builds happened).
         assert!(rs.iter().all(|r| r.method == Some(MethodId::TRBDF2)));

@@ -1,5 +1,21 @@
 //! Service metrics: lock-free counters + coarse latency histogram,
 //! shareable across the submitter and worker threads.
+//!
+//! Counter taxonomy — every submitted request ends in exactly one of:
+//!
+//! - `requests_completed` — the solver ran; `SolveResponse::status` holds
+//!   its outcome (which may be a solver-level failure like `DtUnderflow`).
+//! - `requests_failed` — a *service-level* failure: the engine panicked
+//!   or returned an error, or the worker was unavailable. Disjoint from
+//!   solver-level failures, which count as completed.
+//! - `requests_shed` — rejected at admission (bounded queue full).
+//! - `requests_deadline_expired` — dropped at dispatch: the deadline
+//!   passed while the request waited in the batcher.
+//!
+//! `requests_retried` counts stiffness-escalation retries (a retried
+//! request is still terminal exactly once) and `worker_panics` counts
+//! engine panics the worker absorbed; `requests_inflight` is a gauge of
+//! admitted-but-unresolved requests, used by admission control.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -12,7 +28,21 @@ const LAT_BOUNDS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000
 pub struct Metrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
+    /// Service-level failures (panic / engine error / worker unavailable /
+    /// shutdown) — disjoint from solver-level failures, which land in
+    /// `requests_completed` with a non-success status.
     pub requests_failed: AtomicU64,
+    /// Requests shed at admission by the bounded queue.
+    pub requests_shed: AtomicU64,
+    /// Requests dropped at dispatch because their deadline had passed.
+    pub requests_deadline_expired: AtomicU64,
+    /// Stiffness-escalation retries performed (re-enqueues, not requests).
+    pub requests_retried: AtomicU64,
+    /// Engine panics absorbed by the worker (each also rebuilds the engine).
+    pub worker_panics: AtomicU64,
+    /// Gauge: admitted requests not yet resolved (queued, batched or
+    /// solving). Admission control sheds against this.
+    pub requests_inflight: AtomicU64,
     pub batches_dispatched: AtomicU64,
     pub batch_size_sum: AtomicU64,
     pub solver_steps_sum: AtomicU64,
@@ -69,14 +99,21 @@ impl Metrics {
     /// One-line summary for logs and the serve example.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} batches={} mean_batch={:.1} mean_lat={:.0}us p90={}us",
+            "submitted={} completed={} failed={} shed={} expired={} retried={} panics={} \
+             batches={} mean_batch={:.1} mean_lat={:.0}us p50={}us p90={}us p99={}us",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
+            self.requests_shed.load(Ordering::Relaxed),
+            self.requests_deadline_expired.load(Ordering::Relaxed),
+            self.requests_retried.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
             self.batches_dispatched.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
+            self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.9),
+            self.latency_percentile_us(0.99),
         )
     }
 }
@@ -96,6 +133,20 @@ mod tests {
         }
         assert_eq!(m.latency_percentile_us(0.5), 100);
         assert_eq!(m.latency_percentile_us(0.95), 100_000);
+        // p99 lands in the bucket holding the slowest decile.
+        assert_eq!(m.latency_percentile_us(0.99), 100_000);
+    }
+
+    #[test]
+    fn p50_p99_track_distinct_buckets() {
+        let m = Metrics::new();
+        for _ in 0..98 {
+            m.record_latency(Duration::from_micros(200));
+        }
+        m.record_latency(Duration::from_micros(200_000));
+        m.record_latency(Duration::from_micros(200_000));
+        assert_eq!(m.latency_percentile_us(0.5), 300);
+        assert_eq!(m.latency_percentile_us(0.99), 300_000);
     }
 
     #[test]
@@ -110,6 +161,17 @@ mod tests {
     fn summary_contains_counts() {
         let m = Metrics::new();
         m.requests_submitted.store(7, Ordering::Relaxed);
-        assert!(m.summary().contains("submitted=7"));
+        m.requests_shed.store(2, Ordering::Relaxed);
+        m.requests_retried.store(1, Ordering::Relaxed);
+        m.requests_deadline_expired.store(3, Ordering::Relaxed);
+        m.worker_panics.store(4, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("submitted=7"));
+        assert!(s.contains("shed=2"));
+        assert!(s.contains("retried=1"));
+        assert!(s.contains("expired=3"));
+        assert!(s.contains("panics=4"));
+        assert!(s.contains("p50="));
+        assert!(s.contains("p99="));
     }
 }

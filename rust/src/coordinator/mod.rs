@@ -10,5 +10,5 @@ pub mod service;
 pub use batcher::{Batch, BucketKey, DynamicBatcher};
 pub use engine::{AotEngine, JointEngine, NativeEngine, SolveEngine};
 pub use metrics::Metrics;
-pub use request::{ProblemSpec, SolveRequest, SolveResponse};
-pub use service::{Coordinator, ServiceConfig};
+pub use request::{Priority, ProblemSpec, ServiceError, SolveRequest, SolveResponse};
+pub use service::{Coordinator, RetryPolicy, ServiceConfig};

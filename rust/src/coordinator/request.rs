@@ -1,6 +1,7 @@
 //! Request/response types of the solver service.
 
 use crate::solver::{MethodId, Stats, Status};
+use std::time::Duration;
 
 /// Which dynamics a request wants solved. The coordinator buckets
 /// compatible problems together; per-instance parameters (e.g. μ) ride
@@ -23,6 +24,24 @@ impl ProblemSpec {
     }
 }
 
+/// Admission-control priority of a request. Under load the service sheds
+/// low-priority traffic first: each class is admitted only while the
+/// in-flight count stays below its share of `ServiceConfig::max_queue`
+/// (half for `Low`, 7/8 for `Normal`, all of it for `High` — the top
+/// eighth is reserved headroom so high-priority requests still get in
+/// when normal traffic has filled the queue). Priorities never reorder
+/// dispatch; they only decide who gets shed at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Shed first: admitted only while the queue is under half full.
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Shed last: may use the reserved headroom above the normal limit.
+    High,
+}
+
 /// One independent IVP submitted to the service.
 #[derive(Debug, Clone)]
 pub struct SolveRequest {
@@ -40,9 +59,42 @@ pub struct SolveRequest {
     /// ask for `trbdf2`/`kvaerno43` while easy traffic stays on the
     /// engine's explicit default.
     pub method: Option<MethodId>,
+    /// Optional deadline, measured from submission. A request whose
+    /// deadline has passed by the time its batch is dispatched is failed
+    /// with [`ServiceError::DeadlineExpired`] instead of occupying a
+    /// batch slot; a stiffness-escalation retry is likewise abandoned if
+    /// the deadline passes first. `None` = wait forever.
+    pub deadline: Option<Duration>,
+    /// Admission-control class (see [`Priority`]).
+    pub priority: Priority,
 }
 
 impl SolveRequest {
+    /// A request with the common defaults: auto-assigned id, engine
+    /// default method, no deadline, normal priority.
+    pub fn new(problem: ProblemSpec, y0: Vec<f64>, t_eval: Vec<f64>) -> Self {
+        Self { id: 0, problem, y0, t_eval, method: None, deadline: None, priority: Priority::Normal }
+    }
+
+    /// Route this request to a specific method (its own batch bucket).
+    pub fn with_method(mut self, method: MethodId) -> Self {
+        self.method = Some(method);
+        self
+    }
+
+    /// Fail this request with [`ServiceError::DeadlineExpired`] if it has
+    /// not reached an engine within `d` of submission.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Set the admission-control class.
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
     pub fn dim(&self) -> usize {
         self.y0.len()
     }
@@ -52,21 +104,113 @@ impl SolveRequest {
     }
 }
 
-/// The solved trajectory + per-instance solver metadata.
+/// A structured service-level failure. Carried in
+/// [`SolveResponse::error`], so callers can tell *why* a request produced
+/// no trajectory — and in particular can distinguish infrastructure
+/// failures (a panicking batch, an overloaded queue) from genuine solver
+/// outcomes like [`Status::NonFinite`], which earlier versions of the
+/// service conflated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The engine panicked while solving the batch containing this
+    /// request. The panic was confined to that one batch: the worker
+    /// rebuilt its engine and kept serving.
+    WorkerPanic {
+        /// The panic payload (message), for logs and debugging.
+        detail: String,
+    },
+    /// The engine returned an error for the whole batch (e.g. no dynamics
+    /// registered for the problem kind, or an AOT artifact mismatch).
+    EngineError {
+        /// The engine's error text.
+        detail: String,
+    },
+    /// The bounded submission queue was full for this request's priority
+    /// class; the request was shed at admission and never queued.
+    Overloaded {
+        /// In-flight requests at the moment of shedding.
+        inflight: usize,
+        /// The configured queue bound (`ServiceConfig::max_queue`).
+        max_queue: usize,
+    },
+    /// The request's deadline passed before its batch was dispatched (or
+    /// before its escalation retry ran); it was dropped without solving.
+    DeadlineExpired,
+    /// The worker thread has no engine (its engine factory panicked) or
+    /// is gone; the request was failed immediately instead of waiting on
+    /// a response that would never arrive.
+    WorkerUnavailable,
+    /// The service is shutting down and will not solve this request.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::WorkerPanic { detail } => write!(f, "engine panicked: {detail}"),
+            ServiceError::EngineError { detail } => write!(f, "engine error: {detail}"),
+            ServiceError::Overloaded { inflight, max_queue } => {
+                write!(f, "overloaded: {inflight} in flight (max_queue {max_queue})")
+            }
+            ServiceError::DeadlineExpired => write!(f, "deadline expired before dispatch"),
+            ServiceError::WorkerUnavailable => write!(f, "worker unavailable"),
+            ServiceError::ShuttingDown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+/// The solved trajectory + per-instance solver metadata — or, when
+/// [`SolveResponse::error`] is set, a structured account of why the
+/// service could not solve the request.
 #[derive(Debug, Clone)]
 pub struct SolveResponse {
     pub id: u64,
-    /// `(n_eval, dim)` row-major.
+    /// `(n_eval, dim)` row-major. Empty when `error` is set.
     pub ys: Vec<f64>,
     pub stats: Stats,
-    pub status: Status,
-    /// Which engine produced this (diagnostics).
+    /// The solver's per-instance termination status. `None` when the
+    /// request never completed a solve (panic, shed, expired, engine
+    /// error) — see `error` for the reason.
+    pub status: Option<Status>,
+    /// Service-level failure, if any. `None` means the solver ran and
+    /// `status`/`stats`/`ys` describe its outcome (which may still be a
+    /// solver-level failure such as [`Status::DtUnderflow`]).
+    pub error: Option<ServiceError>,
+    /// Which engine produced this (diagnostics); `"service"` for
+    /// responses synthesized by the coordinator itself.
     pub engine: &'static str,
     /// The method that actually solved the bucket: the request's override
     /// if set, else the engine default. `None` when the engine does not
     /// route through the registry (the AOT artifacts bake their method in)
     /// or the batch failed before a method was resolved.
     pub method: Option<MethodId>,
+    /// Set when this response came from a stiffness-escalation retry:
+    /// the method the request *first* failed on (e.g. `dopri5`) before
+    /// the service re-enqueued it on the configured implicit fallback.
+    /// Callers can use this to detect degraded-mode service.
+    pub escalated_from: Option<MethodId>,
+}
+
+impl SolveResponse {
+    /// A response synthesized by the service for a request that never
+    /// completed a solve.
+    pub fn failure(id: u64, error: ServiceError) -> Self {
+        Self {
+            id,
+            ys: Vec::new(),
+            stats: Stats::default(),
+            status: None,
+            error: Some(error),
+            engine: "service",
+            method: None,
+            escalated_from: None,
+        }
+    }
+
+    /// `true` iff the solver ran and reported [`Status::Success`].
+    pub fn is_success(&self) -> bool {
+        self.error.is_none() && self.status == Some(Status::Success)
+    }
 }
 
 #[cfg(test)]
@@ -88,14 +232,44 @@ mod tests {
 
     #[test]
     fn request_shape_accessors() {
-        let r = SolveRequest {
-            id: 1,
-            problem: ProblemSpec::Vdp { mu: 2.0 },
-            y0: vec![1.0, 0.0],
-            t_eval: vec![0.0, 0.5, 1.0],
-            method: None,
-        };
+        let r = SolveRequest::new(
+            ProblemSpec::Vdp { mu: 2.0 },
+            vec![1.0, 0.0],
+            vec![0.0, 0.5, 1.0],
+        );
         assert_eq!(r.dim(), 2);
         assert_eq!(r.n_eval(), 3);
+        assert_eq!(r.priority, Priority::Normal);
+        assert_eq!(r.deadline, None);
+        assert_eq!(r.method, None);
+    }
+
+    #[test]
+    fn request_builders() {
+        let r = SolveRequest::new(ProblemSpec::Vdp { mu: 2.0 }, vec![1.0, 0.0], vec![0.0, 1.0])
+            .with_method(MethodId::TRBDF2)
+            .with_deadline(Duration::from_millis(5))
+            .with_priority(Priority::High);
+        assert_eq!(r.method, Some(MethodId::TRBDF2));
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(r.priority, Priority::High);
+    }
+
+    #[test]
+    fn failure_response_is_not_success() {
+        let r = SolveResponse::failure(7, ServiceError::WorkerUnavailable);
+        assert!(!r.is_success());
+        assert_eq!(r.status, None);
+        assert!(r.ys.is_empty());
+        assert_eq!(r.engine, "service");
+        // Errors render human-readably for logs.
+        assert!(r.error.unwrap().to_string().contains("worker unavailable"));
+    }
+
+    #[test]
+    fn priority_orders_low_to_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
     }
 }

@@ -1,31 +1,119 @@
 //! The solver service: a worker thread owning an engine, fed through a
-//! channel, with dynamic batching and per-request response delivery.
+//! channel, with dynamic batching, per-request response delivery — and
+//! fault tolerance.
 //!
 //! Threads instead of async: the vendored crate set has no tokio, and a
 //! single dedicated worker matches the execution model anyway (one PJRT
 //! client / one native solve at a time per device).
+//!
+//! # Failure domains
+//!
+//! The unit of failure is the **batch**, never the service:
+//!
+//! - An engine panic is caught ([`std::panic::catch_unwind`]), fails only
+//!   that batch's requests with [`ServiceError::WorkerPanic`], and the
+//!   engine is discarded and rebuilt from the factory — the worker keeps
+//!   serving every other bucket. If the *factory* panics, the worker
+//!   degrades to a tombstone loop that fails every request immediately
+//!   with [`ServiceError::WorkerUnavailable`] instead of stranding
+//!   callers on a channel that never fires.
+//! - An engine `Err` fails the batch with [`ServiceError::EngineError`] —
+//!   structurally distinct from a genuine solver-level failure such as
+//!   [`Status::NonFinite`].
+//!
+//! # Degraded-mode serving
+//!
+//! Requests that die of stiffness on an explicit method
+//! (`DtUnderflow` / `NonFinite` / `NewtonDiverged`) are re-enqueued once
+//! into an implicit-method bucket ([`RetryPolicy`], `trbdf2` by default)
+//! via the per-request method routing; the final response records the
+//! escalation in [`SolveResponse::escalated_from`]. Admission is bounded:
+//! beyond `max_queue` in-flight requests, new submissions are shed with
+//! [`ServiceError::Overloaded`] (low-priority traffic first — see
+//! [`Priority`]), and a request whose [`SolveRequest::deadline`] passes
+//! while it waits is dropped at dispatch time with
+//! [`ServiceError::DeadlineExpired`] instead of occupying a batch slot.
+//! See `docs/architecture.md` § "Failure domains & degraded-mode serving".
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{Batch, DynamicBatcher};
 use super::engine::SolveEngine;
 use super::metrics::Metrics;
-use super::request::{SolveRequest, SolveResponse};
-use crate::solver::{Stats, Status};
-use std::sync::atomic::Ordering;
+use super::request::{Priority, ServiceError, SolveRequest, SolveResponse};
+use crate::solver::{MethodId, Status};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// How often the worker wakes to poll deadlines when the batcher is empty.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Stiffness-escalation policy: when a request fails on an explicit
+/// method with a stiffness-shaped status (`DtUnderflow`, `NonFinite`,
+/// `NewtonDiverged`), the service re-enqueues it on `method` — an
+/// implicit, L-stable fallback — up to `max_retries` times, instead of
+/// returning the failure to the caller. The response records the
+/// escalation in [`SolveResponse::escalated_from`]. Failures on implicit
+/// methods (or on engines that don't route methods, like AOT) are
+/// returned as-is.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// The fallback method; `None` disables escalation entirely.
+    pub method: Option<MethodId>,
+    /// Re-enqueues allowed per request (1 = the single escalation).
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { method: Some(MethodId::TRBDF2), max_retries: 1 }
+    }
+}
+
+impl RetryPolicy {
+    /// No escalation: solver failures go straight back to the caller.
+    pub fn disabled() -> Self {
+        Self { method: None, max_retries: 0 }
+    }
+}
+
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Dynamic-batcher flush size.
     pub max_batch: usize,
+    /// Dynamic-batcher flush deadline.
     pub max_wait: Duration,
+    /// Bound on admitted-but-unresolved requests; submissions beyond it
+    /// are shed with [`ServiceError::Overloaded`] (priority-tiered — see
+    /// [`Priority`]). `0` = unbounded (the pre-fault-tolerance behavior).
+    pub max_queue: usize,
+    /// Stiffness-escalation policy.
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// The in-flight bound for a priority class: `Low` may fill half the
+/// queue, `Normal` all but a reserved eighth, `High` everything — so
+/// high-priority traffic still gets in when normal traffic has filled
+/// the queue. (For `max_queue < 8` the Normal and High limits coincide.)
+fn admission_limit(max_queue: usize, p: Priority) -> usize {
+    match p {
+        Priority::Low => (max_queue / 2).max(1),
+        Priority::Normal => (max_queue - max_queue / 8).max(1),
+        Priority::High => max_queue.max(1),
     }
 }
 
@@ -39,45 +127,111 @@ pub struct Coordinator {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    next_id: std::sync::atomic::AtomicU64,
+    /// Cleared by the worker when it can no longer solve (factory panic)
+    /// or has shut down; lets `submit` fail fast without a round-trip.
+    alive: Arc<AtomicBool>,
+    max_queue: usize,
+    next_id: AtomicU64,
 }
 
 impl Coordinator {
     /// Spawn the worker. `make_engine` runs *inside* the worker thread so
-    /// engines holding non-`Send` resources (PJRT client) work.
+    /// engines holding non-`Send` resources (PJRT client) work; it is
+    /// called again to rebuild the engine after a panic, so it must be
+    /// re-invocable (`FnMut`).
     pub fn spawn<F>(cfg: ServiceConfig, make_engine: F) -> Self
     where
-        F: FnOnce() -> Box<dyn SolveEngine> + Send + 'static,
+        F: FnMut() -> Box<dyn SolveEngine> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
+        let alive = Arc::new(AtomicBool::new(true));
+        let max_queue = cfg.max_queue;
         let worker_metrics = metrics.clone();
+        let worker_alive = alive.clone();
         let worker = std::thread::Builder::new()
             .name("rode-worker".into())
-            .spawn(move || worker_loop(rx, cfg, make_engine(), worker_metrics))
+            .spawn(move || {
+                let batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+                Worker {
+                    cfg,
+                    make_engine: Box::new(make_engine),
+                    engine: None,
+                    metrics: worker_metrics,
+                    alive: worker_alive,
+                    batcher,
+                    waiters: Waiters::new(),
+                }
+                .run(rx)
+            })
             .expect("spawn worker");
         Self {
             tx,
             worker: Some(worker),
             metrics,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            alive,
+            max_queue,
+            next_id: AtomicU64::new(1),
         }
     }
 
-    /// Submit a request; the returned receiver yields the response.
+    /// Submit a request; the returned receiver yields exactly one
+    /// response. Requests shed at admission, and requests submitted to a
+    /// dead worker, receive an immediate [`SolveResponse::failure`] — the
+    /// receiver never hangs forever.
     pub fn submit(&self, mut req: SolveRequest) -> Receiver<SolveResponse> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        // A send failure means the worker is gone; the caller will see a
-        // disconnected receiver.
-        let _ = self.tx.send(Msg::Solve(req, tx, Instant::now()));
+        // Admission control: a bounded in-flight gauge with priority-
+        // tiered limits; shedding happens here, before any buffering.
+        if self.max_queue > 0 {
+            let limit = admission_limit(self.max_queue, req.priority) as u64;
+            let prev = self.metrics.requests_inflight.fetch_add(1, Ordering::AcqRel);
+            if prev >= limit {
+                self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+                self.metrics.requests_shed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(SolveResponse::failure(
+                    req.id,
+                    ServiceError::Overloaded {
+                        inflight: prev as usize,
+                        max_queue: self.max_queue,
+                    },
+                ));
+                return rx;
+            }
+        } else {
+            self.metrics.requests_inflight.fetch_add(1, Ordering::AcqRel);
+        }
+        if !self.alive.load(Ordering::Acquire) {
+            // Fast path: the worker is known-dead; don't bother queueing.
+            // (The tombstone loop also answers anything that races past
+            // this check, so correctness never depends on the flag.)
+            self.fail_unqueued(&tx, req.id);
+            return rx;
+        }
+        if let Err(mpsc::SendError(Msg::Solve(req, tx, _))) =
+            self.tx.send(Msg::Solve(req, tx, Instant::now()))
+        {
+            // The worker thread is gone entirely: fail immediately instead
+            // of handing back a receiver that never fires.
+            self.fail_unqueued(&tx, req.id);
+        }
         rx
     }
 
-    /// Convenience: submit and wait.
+    fn fail_unqueued(&self, tx: &Sender<SolveResponse>, id: u64) {
+        self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+        self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(SolveResponse::failure(id, ServiceError::WorkerUnavailable));
+    }
+
+    /// Convenience: submit and wait. Service-level failures surface as
+    /// [`SolveResponse::error`], not as `None` — `None` is reserved for
+    /// the (not expected in practice) case of a response channel dropped
+    /// without a send.
     pub fn solve_blocking(&self, req: SolveRequest) -> Option<SolveResponse> {
         self.submit(req).recv().ok()
     }
@@ -96,80 +250,276 @@ impl Drop for Coordinator {
     }
 }
 
-/// Response channels + submit times keyed by request id.
-type Waiters = std::collections::HashMap<u64, (Sender<SolveResponse>, Instant)>;
+/// Per-request worker-side state: the response channel plus everything
+/// needed for deadlines and retry accounting.
+struct Waiter {
+    tx: Sender<SolveResponse>,
+    t_submit: Instant,
+    /// Escalation retries already consumed.
+    attempts: u32,
+    /// The explicit method this request first failed on, when it was
+    /// re-enqueued onto the implicit fallback.
+    escalated_from: Option<MethodId>,
+}
 
-fn worker_loop(
-    rx: Receiver<Msg>,
+type Waiters = std::collections::HashMap<u64, Waiter>;
+
+/// The worker thread's state machine. One instance lives for the whole
+/// thread; `engine` is `None` only between a panic and the completed
+/// rebuild (or permanently, in the tombstone state).
+struct Worker {
     cfg: ServiceConfig,
-    mut engine: Box<dyn SolveEngine>,
+    make_engine: Box<dyn FnMut() -> Box<dyn SolveEngine> + Send>,
+    engine: Option<Box<dyn SolveEngine>>,
     metrics: Arc<Metrics>,
-) {
-    let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
-    let mut waiters: Waiters = Waiters::new();
+    alive: Arc<AtomicBool>,
+    batcher: DynamicBatcher,
+    waiters: Waiters,
+}
 
-    let dispatch = |batch: super::batcher::Batch,
-                    engine: &mut Box<dyn SolveEngine>,
-                    waiters: &mut Waiters| {
-        metrics.batches_dispatched.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batch_size_sum
-            .fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
-        match engine.solve(&batch) {
-            Ok(responses) => {
-                for resp in responses {
-                    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .solver_steps_sum
-                        .fetch_add(resp.stats.n_steps, Ordering::Relaxed);
-                    if let Some((tx, t_submit)) = waiters.remove(&resp.id) {
-                        metrics.record_latency(t_submit.elapsed());
-                        let _ = tx.send(resp);
-                    }
+impl Worker {
+    fn run(mut self, rx: Receiver<Msg>) {
+        if !self.rebuild_engine() {
+            // The very first engine build panicked: nothing can ever be
+            // solved. Serve immediate failures until shutdown.
+            return self.tombstone(&rx);
+        }
+        loop {
+            // Wait bounded by the next deadline flush.
+            let timeout = self.batcher.next_deadline(Instant::now()).unwrap_or(IDLE_POLL);
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Solve(req, tx, t_submit)) => {
+                    self.waiters.insert(
+                        req.id,
+                        Waiter { tx, t_submit, attempts: 0, escalated_from: None },
+                    );
+                    self.enqueue(req);
                 }
+                Ok(Msg::Shutdown) => break,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
             }
-            Err(e) => {
-                // Fail every request in the batch with a DtUnderflow-free
-                // explicit status; the error text goes to the log.
-                eprintln!("[rode] batch failed on {}: {e}", engine.name());
-                for r in &batch.requests {
-                    metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-                    if let Some((tx, _)) = waiters.remove(&r.id) {
-                        let _ = tx.send(SolveResponse {
-                            id: r.id,
-                            ys: Vec::new(),
-                            stats: Stats::default(),
-                            status: Status::NonFinite,
-                            engine: "failed",
-                            method: batch.key.method,
-                        });
-                    }
-                }
+            for batch in self.batcher.poll_expired(Instant::now()) {
+                self.dispatch(batch);
+            }
+            if self.engine.is_none() {
+                // A panic was absorbed but the rebuild also panicked:
+                // degrade instead of stranding waiters.
+                return self.tombstone(&rx);
             }
         }
-    };
-
-    loop {
-        // Wait bounded by the next deadline flush.
-        let timeout = batcher.next_deadline(Instant::now()).unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Solve(req, resp_tx, t_submit)) => {
-                waiters.insert(req.id, (resp_tx, t_submit));
-                if let Some(batch) = batcher.push(req, Instant::now()) {
-                    dispatch(batch, &mut engine, &mut waiters);
-                }
+        // Drain remaining work — including retries enqueued while
+        // draining — before exiting.
+        while self.engine.is_some() && self.batcher.pending() > 0 {
+            for batch in self.batcher.drain(Instant::now()) {
+                self.dispatch(batch);
             }
-            Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
         }
-        for batch in batcher.poll_expired(Instant::now()) {
-            dispatch(batch, &mut engine, &mut waiters);
+        let ids: Vec<u64> = self.waiters.keys().copied().collect();
+        for id in ids {
+            self.respond(SolveResponse::failure(id, ServiceError::ShuttingDown));
+        }
+        self.alive.store(false, Ordering::Release);
+    }
+
+    /// Terminal degraded state: no engine exists and none can be built.
+    /// Every waiter and every future submission gets an immediate
+    /// `WorkerUnavailable` failure; the thread stays alive to answer
+    /// until the coordinator shuts down, so no receiver ever hangs.
+    fn tombstone(mut self, rx: &Receiver<Msg>) {
+        self.alive.store(false, Ordering::Release);
+        // Requests parked in the batcher fail through their waiters.
+        let _ = self.batcher.drain(Instant::now());
+        let ids: Vec<u64> = self.waiters.keys().copied().collect();
+        for id in ids {
+            self.respond(SolveResponse::failure(id, ServiceError::WorkerUnavailable));
+        }
+        loop {
+            match rx.recv() {
+                Ok(Msg::Solve(req, tx, _)) => {
+                    self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+                    let _ =
+                        tx.send(SolveResponse::failure(req.id, ServiceError::WorkerUnavailable));
+                }
+                Ok(Msg::Shutdown) | Err(_) => return,
+            }
         }
     }
-    // Drain remaining work before exiting.
-    for batch in batcher.drain(Instant::now()) {
-        dispatch(batch, &mut engine, &mut waiters);
+
+    /// (Re)build the engine from the factory, absorbing a factory panic.
+    fn rebuild_engine(&mut self) -> bool {
+        match catch_unwind(AssertUnwindSafe(|| (self.make_engine)())) {
+            Ok(engine) => {
+                self.engine = Some(engine);
+                true
+            }
+            Err(payload) => {
+                eprintln!("[rode] engine factory panicked: {}", panic_message(&payload));
+                self.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                self.engine = None;
+                false
+            }
+        }
+    }
+
+    fn enqueue(&mut self, req: SolveRequest) {
+        if let Some(batch) = self.batcher.push(req, Instant::now()) {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Has this request's deadline passed? (Measured against its original
+    /// submission time, so escalation retries share the same budget.)
+    fn expired(&self, req: &SolveRequest, now: Instant) -> bool {
+        match (req.deadline, self.waiters.get(&req.id)) {
+            (Some(d), Some(w)) => now.duration_since(w.t_submit) > d,
+            _ => false,
+        }
+    }
+
+    fn dispatch(&mut self, batch: Batch) {
+        // Deadline check at dispatch time: a request that expired while
+        // waiting in the batcher never occupies a batch slot.
+        let now = Instant::now();
+        let Batch { key, requests, oldest_wait } = batch;
+        let mut live = Vec::with_capacity(requests.len());
+        for r in requests {
+            if self.expired(&r, now) {
+                self.respond(SolveResponse::failure(r.id, ServiceError::DeadlineExpired));
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let batch = Batch { key, requests: live, oldest_wait };
+        self.metrics.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        self.metrics.batch_size_sum.fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        let Some(engine) = self.engine.as_mut() else {
+            // Only reachable while a dispatch chain is unwinding toward
+            // the tombstone state.
+            self.fail_batch(&batch, ServiceError::WorkerUnavailable);
+            return;
+        };
+        let name = engine.name();
+        match catch_unwind(AssertUnwindSafe(|| engine.solve(&batch))) {
+            Ok(Ok(responses)) => self.deliver(&batch, responses),
+            Ok(Err(e)) => {
+                eprintln!("[rode] batch failed on {name}: {e}");
+                self.fail_batch(&batch, ServiceError::EngineError { detail: e.to_string() });
+            }
+            Err(payload) => {
+                // Failure domain boundary: the panic takes down this
+                // batch's requests and the engine instance — nothing
+                // else. The engine may be in an arbitrary state
+                // mid-unwind, so discard it and rebuild before the next
+                // batch.
+                let detail = panic_message(&payload);
+                eprintln!(
+                    "[rode] engine {name} panicked on a {}-request batch: {detail}",
+                    batch.requests.len()
+                );
+                self.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                self.engine = None;
+                self.fail_batch(&batch, ServiceError::WorkerPanic { detail });
+                self.rebuild_engine();
+            }
+        }
+    }
+
+    fn fail_batch(&mut self, batch: &Batch, err: ServiceError) {
+        for r in &batch.requests {
+            self.respond(SolveResponse::failure(r.id, err.clone()));
+        }
+    }
+
+    /// Route each engine response: escalate stiffness failures that the
+    /// retry policy covers, deliver everything else.
+    fn deliver(&mut self, batch: &Batch, responses: Vec<SolveResponse>) {
+        for resp in responses {
+            if let Some(target) = self.retry_method_for(&resp) {
+                if let Some(orig) = batch.requests.iter().find(|r| r.id == resp.id) {
+                    self.escalate(orig.clone(), resp.method, target);
+                    continue;
+                }
+            }
+            self.respond(resp);
+        }
+    }
+
+    /// The fallback method to escalate `resp` onto, if the policy covers
+    /// this failure: a stiffness-shaped solver status, on a routable
+    /// explicit method, with retry budget left.
+    fn retry_method_for(&self, resp: &SolveResponse) -> Option<MethodId> {
+        if resp.error.is_some() {
+            return None;
+        }
+        let target = self.cfg.retry.method?;
+        let status = resp.status?;
+        if !matches!(status, Status::DtUnderflow | Status::NonFinite | Status::NewtonDiverged) {
+            return None;
+        }
+        // Only explicit failures escalate; a response without a resolved
+        // method (AOT — its artifacts bake the method in) can't be
+        // re-routed at all.
+        let current = resp.method?;
+        if current.is_implicit() || current == target {
+            return None;
+        }
+        let w = self.waiters.get(&resp.id)?;
+        (w.attempts < self.cfg.retry.max_retries).then_some(target)
+    }
+
+    /// Re-enqueue a stiffness casualty into the implicit-method bucket.
+    fn escalate(&mut self, mut req: SolveRequest, failed_on: Option<MethodId>, target: MethodId) {
+        if self.expired(&req, Instant::now()) {
+            // The deadline died with the first attempt; don't burn a
+            // batch slot on a retry nobody is waiting for.
+            self.respond(SolveResponse::failure(req.id, ServiceError::DeadlineExpired));
+            return;
+        }
+        if let Some(w) = self.waiters.get_mut(&req.id) {
+            w.attempts += 1;
+            w.escalated_from = failed_on;
+        }
+        self.metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
+        req.method = Some(target);
+        self.enqueue(req);
+    }
+
+    /// Deliver a terminal response: stamp escalation provenance, settle
+    /// the metrics taxonomy, release the in-flight slot.
+    fn respond(&mut self, mut resp: SolveResponse) {
+        let Some(w) = self.waiters.remove(&resp.id) else { return };
+        resp.escalated_from = w.escalated_from;
+        match &resp.error {
+            None => {
+                self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.solver_steps_sum.fetch_add(resp.stats.n_steps, Ordering::Relaxed);
+                self.metrics.record_latency(w.t_submit.elapsed());
+            }
+            Some(ServiceError::DeadlineExpired) => {
+                self.metrics.requests_deadline_expired.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(_) => {
+                self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+        let _ = w.tx.send(resp);
+    }
+}
+
+/// Best-effort panic payload extraction for logs and `ServiceError`.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -181,26 +531,30 @@ mod tests {
 
     fn service(max_batch: usize, wait_ms: u64) -> Coordinator {
         Coordinator::spawn(
-            ServiceConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            ServiceConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+                ..ServiceConfig::default()
+            },
             || Box::new(NativeEngine::default()),
         )
     }
 
     fn vdp_req(mu: f64) -> SolveRequest {
-        SolveRequest {
-            id: 0,
-            problem: ProblemSpec::Vdp { mu },
-            y0: vec![2.0, 0.0],
-            t_eval: (0..10).map(|k| k as f64 * 0.5).collect(),
-            method: None,
-        }
+        SolveRequest::new(
+            ProblemSpec::Vdp { mu },
+            vec![2.0, 0.0],
+            (0..10).map(|k| k as f64 * 0.5).collect(),
+        )
     }
 
     #[test]
     fn single_request_roundtrip() {
         let c = service(8, 1);
         let resp = c.solve_blocking(vdp_req(2.0)).unwrap();
-        assert_eq!(resp.status, Status::Success);
+        assert!(resp.is_success());
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.escalated_from, None);
         assert_eq!(resp.ys.len(), 20);
         assert!(resp.stats.n_steps > 0);
     }
@@ -212,12 +566,14 @@ mod tests {
         let mut ok = 0;
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-            assert_eq!(resp.status, Status::Success);
+            assert!(resp.is_success());
             ok += 1;
         }
         assert_eq!(ok, 10);
         let m = c.metrics();
         assert_eq!(m.requests_completed.load(Ordering::Relaxed), 10);
+        // All in-flight slots were released.
+        assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
         // max_batch 4 over 10 requests => at least 3 batches.
         assert!(m.batches_dispatched.load(Ordering::Relaxed) >= 3);
         assert!(m.mean_batch_size() > 1.0);
@@ -236,7 +592,7 @@ mod tests {
         }
         for rx in reqs {
             let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-            assert_eq!(resp.status, Status::Success);
+            assert!(resp.is_success());
         }
     }
 
@@ -246,7 +602,7 @@ mod tests {
         let rx = c.submit(vdp_req(1.5));
         drop(c); // shutdown drains the batcher
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-        assert_eq!(resp.status, Status::Success);
+        assert!(resp.is_success());
     }
 
     #[test]
@@ -259,5 +615,32 @@ mod tests {
         let r1 = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(r2.stats.n_steps > r1.stats.n_steps);
+    }
+
+    #[test]
+    fn admission_limits_are_tiered() {
+        assert_eq!(admission_limit(16, Priority::Low), 8);
+        assert_eq!(admission_limit(16, Priority::Normal), 14);
+        assert_eq!(admission_limit(16, Priority::High), 16);
+        // Tiny queues never degenerate to zero.
+        assert_eq!(admission_limit(1, Priority::Low), 1);
+        assert_eq!(admission_limit(1, Priority::Normal), 1);
+        assert_eq!(admission_limit(1, Priority::High), 1);
+        // Below 8, Normal and High coincide.
+        assert_eq!(admission_limit(4, Priority::Normal), 4);
+        assert_eq!(admission_limit(4, Priority::High), 4);
+    }
+
+    #[test]
+    fn unbounded_queue_never_sheds() {
+        let c = Coordinator::spawn(
+            ServiceConfig { max_queue: 0, ..ServiceConfig::default() },
+            || Box::new(NativeEngine::default()),
+        );
+        let rxs: Vec<_> = (0..64).map(|_| c.submit(vdp_req(1.0))).collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_success());
+        }
+        assert_eq!(c.metrics().requests_shed.load(Ordering::Relaxed), 0);
     }
 }

@@ -174,6 +174,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(w) = flags.get("max-wait-ms").and_then(|v| v.parse::<f64>().ok()) {
         cfg.max_wait = Duration::from_secs_f64(w / 1e3);
     }
+    cfg.max_queue = flag_usize_strict(flags, "max-queue", cfg.max_queue)?;
+    if let Some(d) = flags.get("deadline-ms") {
+        let ms: f64 = d.parse().map_err(|_| anyhow!("bad float for --deadline-ms: {d}"))?;
+        anyhow::ensure!(ms > 0.0, "--deadline-ms must be positive, got {ms}");
+        cfg.deadline = Some(Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(m) = flags.get("retry-method") {
+        cfg.retry_method = match m.to_ascii_lowercase().as_str() {
+            "off" | "none" => None,
+            name => Some(
+                MethodId::parse(name)
+                    .ok_or_else(|| anyhow!("unknown --retry-method {name} (or off|none)"))?,
+            ),
+        };
+    }
     let engine_kind = flags.get("engine").cloned().unwrap_or(cfg.engine.clone());
     let artifacts_dir = cfg.artifacts_dir.clone();
     let solve_opts = rode::solver::SolveOptions::new(cfg.method)
@@ -185,15 +200,25 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .with_layout(cfg.layout);
 
     let coord = Coordinator::spawn(
-        ServiceConfig { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
+        ServiceConfig {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            max_queue: cfg.max_queue,
+            retry: rode::coordinator::RetryPolicy {
+                method: cfg.retry_method,
+                max_retries: cfg.max_retries,
+            },
+        },
+        // FnMut: called again to rebuild the engine if it panics, so it
+        // only borrows what it can hand out repeatedly.
         move || -> Box<dyn rode::coordinator::SolveEngine> {
             match engine_kind.as_str() {
                 "aot" => Box::new(
                     rode::coordinator::AotEngine::open(&artifacts_dir)
                         .expect("open AOT engine (run `make artifacts`)"),
                 ),
-                "joint" => Box::new(rode::coordinator::JointEngine { opts: solve_opts }),
-                _ => Box::new(NativeEngine::new(solve_opts)),
+                "joint" => Box::new(rode::coordinator::JointEngine { opts: solve_opts.clone() }),
+                _ => Box::new(NativeEngine::new(solve_opts.clone())),
             }
         },
     );
@@ -204,20 +229,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let mu = rng.range(0.5, 15.0);
         let n_eval = [10, 20, 50][rng.below(3)];
         let t1 = rng.range(2.0, 10.0);
-        rxs.push(coord.submit(SolveRequest {
-            id: 0,
-            problem: ProblemSpec::Vdp { mu },
-            y0: vec![rng.normal(), rng.normal()],
-            t_eval: (0..n_eval)
-                .map(|k| t1 * k as f64 / (n_eval - 1) as f64)
-                .collect(),
-            method: None,
-        }));
+        let mut req = SolveRequest::new(
+            ProblemSpec::Vdp { mu },
+            vec![rng.normal(), rng.normal()],
+            (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+        );
+        req.deadline = cfg.deadline;
+        rxs.push(coord.submit(req));
     }
     let mut ok = 0;
     for rx in rxs {
         let resp = rx.recv()?;
-        if resp.status == Status::Success {
+        if resp.is_success() {
             ok += 1;
         }
     }
@@ -326,7 +349,12 @@ fn main() -> Result<()> {
                  \n                    --layout row_major|dim_major selects the stage-kernel\
                  \n                    memory layout, bitwise-identical results)\
                  \n  serve            coordinator + synthetic workload (also honors --threads,\
-                 \n                   --pool, --steal-chunk, --compact-threshold and --layout)\
+                 \n                   --pool, --steal-chunk, --compact-threshold and --layout;\
+                 \n                    --max-queue N bounds in-flight requests, excess is shed,\
+                 \n                    0 = unbounded;\
+                 \n                    --deadline-ms D drops requests not dispatched within D;\
+                 \n                    --retry-method <name>|off re-routes stiffness failures\
+                 \n                    to an implicit method, default trbdf2)\
                  \n  methods          list registered methods (name, aliases, stages, order)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\

@@ -12,11 +12,15 @@
 //! This file holds exactly one `#[test]` so no concurrent test can touch
 //! the global counter mid-measurement.
 
+use rode::coordinator::{
+    Coordinator, NativeEngine, ProblemSpec, RetryPolicy, ServiceConfig, SolveRequest,
+};
 use rode::prelude::*;
 use rode::problems::VdP;
 use rode::tensor::BatchVec;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
 
 struct CountingAlloc;
 
@@ -83,6 +87,43 @@ fn joint_steps(t1: f64, opts: &SolveOptions) -> (usize, u64) {
         assert!(sol.all_success());
         steps = sol.max_steps();
         std::hint::black_box(sol.ys_flat()[0]);
+    });
+    (n, steps)
+}
+
+/// One request through the full serving path (submit → bucket → dispatch
+/// → response). The request-shaped costs — channel nodes, waiter entry,
+/// batch rebuild, response buffers — are identical for both spans, so a
+/// count difference can only come from per-step allocations leaking into
+/// the service layer. The coordinator is spawned and warmed outside the
+/// measured window; only the worker thread touches the allocator while
+/// the window is open (the submitter blocks on `recv`).
+fn service_steps(t1: f64) -> (usize, u64) {
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(20_000);
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue: 0,
+            retry: RetryPolicy::disabled(),
+        },
+        move || Box::new(NativeEngine::new(opts.clone())),
+    );
+    let req = || {
+        SolveRequest::new(
+            ProblemSpec::Vdp { mu: 2.0 },
+            vec![2.0, 0.0],
+            (0..6).map(|k| k as f64 * t1 / 5.0).collect(),
+        )
+    };
+    let warm = coord.solve_blocking(req()).expect("worker must be alive");
+    assert!(warm.is_success());
+    let mut steps = 0;
+    let n = allocs_during(|| {
+        let resp = coord.solve_blocking(req()).expect("worker must be alive");
+        assert!(resp.is_success());
+        steps = resp.stats.n_steps;
+        std::hint::black_box(resp.ys[0]);
     });
     (n, steps)
 }
@@ -161,6 +202,9 @@ fn steady_state_allocates_nothing() {
                 joint_steps(t1, &opts)
             }),
         ),
+        // Full serving path: request-shaped allocations are fine, but the
+        // count must not scale with solver steps.
+        ("service path (coordinator + native engine)", Box::new(service_steps)),
     ];
 
     for (label, run) in &cases {

@@ -9,13 +9,13 @@ use rode::prelude::*;
 use std::time::Duration;
 
 fn vdp_req(id: u64, mu: f64, n_eval: usize, t1: f64) -> SolveRequest {
-    SolveRequest {
-        id,
-        problem: ProblemSpec::Vdp { mu },
-        y0: vec![2.0, 0.0],
-        t_eval: (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
-        method: None,
-    }
+    let mut r = SolveRequest::new(
+        ProblemSpec::Vdp { mu },
+        vec![2.0, 0.0],
+        (0..n_eval).map(|k| t1 * k as f64 / (n_eval - 1) as f64).collect(),
+    );
+    r.id = id;
+    r
 }
 
 fn artifacts_dir() -> Option<String> {
@@ -32,7 +32,11 @@ fn artifacts_dir() -> Option<String> {
 fn aot_engine_through_coordinator() {
     let Some(dir) = artifacts_dir() else { return };
     let coord = Coordinator::spawn(
-        ServiceConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ServiceConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
         move || Box::new(AotEngine::open(&dir).expect("open AOT engine")),
     );
     let rxs: Vec<_> = (0..8)
@@ -40,7 +44,7 @@ fn aot_engine_through_coordinator() {
         .collect();
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
-        assert_eq!(resp.status, Status::Success, "engine={}", resp.engine);
+        assert_eq!(resp.status, Some(Status::Success), "engine={}", resp.engine);
         assert_eq!(resp.engine, "aot-pjrt");
         assert_eq!(resp.ys.len(), 40);
         assert!(resp.ys.iter().all(|v| v.is_finite()));
@@ -52,11 +56,19 @@ fn aot_engine_through_coordinator() {
 fn aot_and_native_engines_agree() {
     let Some(dir) = artifacts_dir() else { return };
     let native = Coordinator::spawn(
-        ServiceConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
         || Box::new(NativeEngine::default()),
     );
     let aot = Coordinator::spawn(
-        ServiceConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
         move || Box::new(AotEngine::open(&dir).expect("open AOT engine")),
     );
     let reqs: Vec<SolveRequest> =
@@ -68,8 +80,8 @@ fn aot_and_native_engines_agree() {
     let r_aot: Vec<_> =
         reqs.iter().map(|r| aot.solve_blocking(r.clone()).expect("aot")).collect();
     for (n, a) in r_native.iter().zip(&r_aot) {
-        assert_eq!(n.status, Status::Success);
-        assert_eq!(a.status, Status::Success);
+        assert_eq!(n.status, Some(Status::Success));
+        assert_eq!(a.status, Some(Status::Success));
         let max_diff = n
             .ys
             .iter()
@@ -85,14 +97,18 @@ fn aot_engine_pads_partial_batches() {
     // 3 requests against a b=8 artifact: padding must not corrupt results.
     let Some(dir) = artifacts_dir() else { return };
     let coord = Coordinator::spawn(
-        ServiceConfig { max_batch: 3, max_wait: Duration::from_millis(1) },
+        ServiceConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
         move || Box::new(AotEngine::open(&dir).expect("open")),
     );
     let rxs: Vec<_> = (0..3).map(|i| coord.submit(vdp_req(0, 2.0 + i as f64, 20, 4.0))).collect();
     let mut trajectories = Vec::new();
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
-        assert_eq!(resp.status, Status::Success);
+        assert_eq!(resp.status, Some(Status::Success));
         assert!(resp.stats.n_steps > 0);
         trajectories.push(resp.ys);
     }
@@ -113,7 +129,11 @@ fn aot_engine_pads_partial_batches() {
 #[test]
 fn throughput_counters_track_work() {
     let coord = Coordinator::spawn(
-        ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
+        ServiceConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
         || Box::new(NativeEngine::default()),
     );
     let rxs: Vec<_> =

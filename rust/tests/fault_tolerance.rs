@@ -1,0 +1,439 @@
+//! Fault tolerance of the serving layer: scripted engine panics, engine
+//! errors and artificial delays driven through the real coordinator.
+//!
+//! What must hold (the failure-domain contract of `coordinator/service`):
+//!
+//! - a panicking batch fails *only* its own requests, with a structured
+//!   [`ServiceError::WorkerPanic`], and the worker rebuilds its engine
+//!   and keeps serving;
+//! - an engine `Err` is distinguishable from a genuine non-finite solve;
+//! - a stiff request that dies on the explicit default is transparently
+//!   escalated to the implicit fallback and succeeds, with the
+//!   escalation visible in the response and the metrics;
+//! - a full queue sheds with [`ServiceError::Overloaded`] (low priority
+//!   first), expired deadlines are dropped at dispatch, and no receiver
+//!   ever hangs — not even when the worker is dead or shutting down.
+
+use rode::coordinator::{
+    Batch, Coordinator, NativeEngine, Priority, ProblemSpec, RetryPolicy, ServiceConfig,
+    ServiceError, SolveEngine, SolveRequest, SolveResponse,
+};
+use rode::solver::{MethodId, SolveOptions, Status};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Once};
+use std::time::Duration;
+
+/// Injected panics are expected output here; silence the default panic
+/// hook's backtrace spam for payloads carrying our marker, once per
+/// process.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.starts_with("injected:"))
+                .or_else(|| {
+                    info.payload().downcast_ref::<&str>().map(|s| s.starts_with("injected:"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// One scripted behavior for one `solve` call.
+#[derive(Debug, Clone, Copy)]
+enum Fault {
+    /// Delegate to the inner engine.
+    Pass,
+    /// Panic with `"injected: <msg>"`.
+    Panic(&'static str),
+    /// Return `Err(<msg>)` for the whole batch.
+    Fail(&'static str),
+    /// Sleep this many milliseconds, then delegate.
+    Delay(u64),
+}
+
+/// A [`SolveEngine`] that pops one [`Fault`] per solve from a script
+/// shared with the test (and with rebuilt instances — a panic must not
+/// reset the script).
+struct FaultInjectingEngine {
+    inner: NativeEngine,
+    script: Arc<Mutex<VecDeque<Fault>>>,
+}
+
+impl SolveEngine for FaultInjectingEngine {
+    fn name(&self) -> &'static str {
+        "fault-injecting"
+    }
+
+    fn solve(&mut self, batch: &Batch) -> anyhow::Result<Vec<SolveResponse>> {
+        let fault = self.script.lock().unwrap().pop_front().unwrap_or(Fault::Pass);
+        match fault {
+            Fault::Pass => self.inner.solve(batch),
+            Fault::Panic(msg) => panic!("injected: {msg}"),
+            Fault::Fail(msg) => Err(anyhow::anyhow!("{msg}")),
+            Fault::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.solve(batch)
+            }
+        }
+    }
+}
+
+/// Coordinator over a scripted engine; returns the engine-build counter
+/// so tests can assert on rebuilds.
+fn scripted(cfg: ServiceConfig, faults: Vec<Fault>) -> (Coordinator, Arc<AtomicUsize>) {
+    quiet_injected_panics();
+    let script = Arc::new(Mutex::new(VecDeque::from(faults)));
+    let builds = Arc::new(AtomicUsize::new(0));
+    let builds_in_factory = builds.clone();
+    let coord = Coordinator::spawn(cfg, move || -> Box<dyn SolveEngine> {
+        builds_in_factory.fetch_add(1, Ordering::SeqCst);
+        Box::new(FaultInjectingEngine { inner: NativeEngine::default(), script: script.clone() })
+    });
+    (coord, builds)
+}
+
+fn easy_req(mu: f64) -> SolveRequest {
+    SolveRequest::new(
+        ProblemSpec::Vdp { mu },
+        vec![2.0, 0.0],
+        (0..10).map(|k| k as f64 * 0.3).collect(),
+    )
+}
+
+fn cfg_no_retry(max_batch: usize, wait_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        max_batch,
+        max_wait: Duration::from_millis(wait_ms),
+        retry: RetryPolicy::disabled(),
+        ..ServiceConfig::default()
+    }
+}
+
+/// The same options `tests/stiff_regression.rs` pins: μ = 1000 over
+/// [0, 400] underflows on dopri5 (min_dt held above the stability
+/// ceiling) and succeeds on trbdf2.
+fn stiff_wall_opts() -> SolveOptions {
+    let mut opts = SolveOptions::new(MethodId::DOPRI5)
+        .with_tols(1e-6, 1e-4)
+        .with_dt0(0.01)
+        .with_max_steps(500_000);
+    opts.min_dt_rel = 1e-5;
+    opts
+}
+
+fn stiff_req() -> SolveRequest {
+    SolveRequest::new(
+        ProblemSpec::Vdp { mu: 1000.0 },
+        vec![2.0, 0.0],
+        (0..5).map(|k| k as f64 * 100.0).collect(),
+    )
+}
+
+fn recv(rx: std::sync::mpsc::Receiver<SolveResponse>) -> SolveResponse {
+    rx.recv_timeout(Duration::from_secs(60)).expect("receiver must resolve")
+}
+
+#[test]
+fn worker_survives_engine_panic_and_rebuilds() {
+    let (coord, builds) = scripted(cfg_no_retry(1, 1), vec![Fault::Panic("boom")]);
+
+    // First request hits the scripted panic: structured failure, no
+    // trajectory, no solver status.
+    let resp = recv(coord.submit(easy_req(2.0)));
+    match &resp.error {
+        Some(ServiceError::WorkerPanic { detail }) => {
+            assert!(detail.contains("injected: boom"), "detail: {detail}")
+        }
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+    assert_eq!(resp.status, None);
+    assert!(resp.ys.is_empty());
+
+    // The worker is still alive and serving on a rebuilt engine.
+    let resp = recv(coord.submit(easy_req(2.0)));
+    assert!(resp.is_success(), "post-panic request failed: {:?}", resp.error);
+
+    let m = coord.metrics();
+    assert_eq!(builds.load(Ordering::SeqCst), 2, "engine must be rebuilt after the panic");
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn panic_fails_only_its_own_batch() {
+    // Batch of two poisoned requests, then a batch of two healthy ones:
+    // the blast radius of the panic is exactly the first batch.
+    let (coord, _) = scripted(cfg_no_retry(2, 1), vec![Fault::Panic("poisoned batch")]);
+
+    let poisoned: Vec<_> = (0..2).map(|_| coord.submit(easy_req(1.5))).collect();
+    let first: Vec<SolveResponse> = poisoned.into_iter().map(recv).collect();
+    for resp in &first {
+        assert!(
+            matches!(resp.error, Some(ServiceError::WorkerPanic { .. })),
+            "expected WorkerPanic, got {:?}",
+            resp.error
+        );
+    }
+
+    let healthy: Vec<_> = (0..2).map(|_| coord.submit(easy_req(1.5))).collect();
+    for rx in healthy {
+        assert!(recv(rx).is_success());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 2);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn engine_error_is_not_a_solver_failure() {
+    let (coord, builds) = scripted(cfg_no_retry(1, 1), vec![Fault::Fail("no dynamics loaded")]);
+
+    // Engine `Err`: a service-level failure with the engine's message...
+    let resp = recv(coord.submit(easy_req(2.0)));
+    match &resp.error {
+        Some(ServiceError::EngineError { detail }) => {
+            assert!(detail.contains("no dynamics loaded"), "detail: {detail}")
+        }
+        other => panic!("expected EngineError, got {other:?}"),
+    }
+    assert_eq!(resp.status, None);
+
+    // ...while a genuinely non-finite solve is a *completed* request with
+    // a solver status — the two are no longer conflated.
+    let mut nan_req = easy_req(2.0);
+    nan_req.y0 = vec![f64::NAN, 0.0];
+    let resp = recv(coord.submit(nan_req));
+    assert_eq!(resp.error, None);
+    assert_eq!(resp.status, Some(Status::NonFinite));
+
+    let m = coord.metrics();
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+    // An engine Err keeps the engine: no rebuild, no panic counted.
+    assert_eq!(builds.load(Ordering::SeqCst), 1);
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn stiff_request_escalates_to_implicit_and_succeeds() {
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..ServiceConfig::default() // retry: trbdf2, 1 attempt
+        },
+        || Box::new(NativeEngine::new(stiff_wall_opts())),
+    );
+    let resp = recv(coord.submit(stiff_req()));
+    assert!(resp.is_success(), "escalated solve failed: {:?}/{:?}", resp.status, resp.error);
+    assert_eq!(resp.method, Some(MethodId::TRBDF2), "must have been solved by the fallback");
+    assert_eq!(resp.escalated_from, Some(MethodId::DOPRI5), "escalation must be visible");
+    assert!(resp.ys.iter().all(|v| v.is_finite()));
+
+    let m = coord.metrics();
+    assert_eq!(m.requests_retried.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 0);
+    // One terminal response despite two solves.
+    assert_eq!(m.requests_submitted.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn retry_disabled_returns_the_explicit_failure() {
+    let coord = Coordinator::spawn(
+        cfg_no_retry(1, 1),
+        || Box::new(NativeEngine::new(stiff_wall_opts())),
+    );
+    let resp = recv(coord.submit(stiff_req()));
+    // The solver ran and failed — a completed request, not a service
+    // error, and no escalation happened.
+    assert_eq!(resp.error, None);
+    assert_eq!(resp.status, Some(Status::DtUnderflow));
+    assert_eq!(resp.method, Some(MethodId::DOPRI5));
+    assert_eq!(resp.escalated_from, None);
+    assert_eq!(coord.metrics().requests_retried.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn full_queue_sheds_with_overloaded() {
+    // One slow batch occupies the worker while a flood arrives: the
+    // bounded queue admits up to its Normal-class limit and sheds the
+    // rest immediately.
+    let max_queue = 4;
+    let (coord, _) = scripted(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue,
+            retry: RetryPolicy::disabled(),
+        },
+        vec![Fault::Delay(300)],
+    );
+    let slow = coord.submit(easy_req(1.0));
+    // Let the worker pick the slow request up before flooding.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let flood: Vec<_> = (0..10).map(|_| coord.submit(easy_req(1.0))).collect();
+    let responses: Vec<SolveResponse> = flood.into_iter().map(recv).collect();
+    let shed: Vec<_> = responses
+        .iter()
+        .filter(|r| matches!(r.error, Some(ServiceError::Overloaded { .. })))
+        .collect();
+    assert!(!shed.is_empty(), "a 10-deep flood over max_queue=4 must shed");
+    for r in &shed {
+        if let Some(ServiceError::Overloaded { inflight, max_queue: mq }) = &r.error {
+            assert_eq!(*mq, max_queue);
+            assert!(*inflight >= 1);
+        }
+    }
+    assert!(recv(slow).is_success());
+
+    // Accounting: every submission is terminal in exactly one class.
+    let m = coord.metrics();
+    let submitted = m.requests_submitted.load(Ordering::Relaxed);
+    let completed = m.requests_completed.load(Ordering::Relaxed);
+    let failed = m.requests_failed.load(Ordering::Relaxed);
+    let shed_n = m.requests_shed.load(Ordering::Relaxed);
+    let expired = m.requests_deadline_expired.load(Ordering::Relaxed);
+    assert_eq!(submitted, 11);
+    assert_eq!(shed_n, shed.len() as u64);
+    assert_eq!(completed + failed + shed_n + expired, submitted);
+    assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn low_priority_sheds_before_high() {
+    // Fill the queue to the Normal limit (max_queue − max_queue/8 = 7),
+    // then probe each class at the same instant of load: Low is shed,
+    // High still fits in the reserved headroom, a second High overflows.
+    let (coord, _) = scripted(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue: 8,
+            retry: RetryPolicy::disabled(),
+        },
+        vec![Fault::Delay(500)],
+    );
+    let occupants: Vec<_> = (0..7).map(|_| coord.submit(easy_req(1.0))).collect();
+    std::thread::sleep(Duration::from_millis(100));
+
+    let low = recv(coord.submit(easy_req(1.0).with_priority(Priority::Low)));
+    assert!(
+        matches!(low.error, Some(ServiceError::Overloaded { .. })),
+        "low priority must be shed at 7/8 load, got {:?}",
+        low.error
+    );
+    let high = coord.submit(easy_req(1.0).with_priority(Priority::High));
+    let second_high = recv(coord.submit(easy_req(1.0).with_priority(Priority::High)));
+    assert!(
+        matches!(second_high.error, Some(ServiceError::Overloaded { .. })),
+        "the queue is full at 8/8 even for high priority, got {:?}",
+        second_high.error
+    );
+    assert!(recv(high).is_success(), "high priority fits the reserved headroom");
+    for rx in occupants {
+        assert!(recv(rx).is_success());
+    }
+    assert_eq!(coord.metrics().requests_shed.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn expired_deadline_is_dropped_at_dispatch() {
+    // Two requests share one bucket; the batch flushes on the 50 ms wait
+    // timer, by which time the 1 ms deadline is long gone: the expired
+    // request never occupies a batch slot, its neighbor still solves.
+    let (coord, _) = scripted(cfg_no_retry(64, 50), vec![]);
+    let doomed = coord.submit(easy_req(1.0).with_deadline(Duration::from_millis(1)));
+    let healthy = coord.submit(easy_req(1.0));
+
+    let resp = recv(doomed);
+    assert_eq!(resp.error, Some(ServiceError::DeadlineExpired));
+    assert_eq!(resp.status, None);
+    assert!(recv(healthy).is_success());
+
+    let m = coord.metrics();
+    assert_eq!(m.requests_deadline_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+    // The dispatched batch carried only the one live request.
+    assert_eq!(m.batch_size_sum.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn shutdown_under_load_strands_no_receiver() {
+    // Slow batches + shutdown mid-flight: every receiver must resolve —
+    // solved during the drain or failed with ShuttingDown — never hang.
+    let (coord, _) = scripted(
+        cfg_no_retry(1, 1),
+        vec![Fault::Delay(100), Fault::Delay(100), Fault::Delay(100)],
+    );
+    let rxs: Vec<_> = (0..6).map(|_| coord.submit(easy_req(1.0))).collect();
+    drop(coord); // begins shutdown while work is still queued
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("stranded receiver");
+        assert!(
+            resp.is_success() || resp.error == Some(ServiceError::ShuttingDown),
+            "unexpected terminal state: {:?}/{:?}",
+            resp.status,
+            resp.error
+        );
+    }
+}
+
+#[test]
+fn dead_worker_fails_submissions_immediately() {
+    quiet_injected_panics();
+    // The factory itself panics: no engine can ever exist. Submissions
+    // must get an immediate WorkerUnavailable — not a receiver that never
+    // fires.
+    let coord = Coordinator::spawn(
+        ServiceConfig { max_batch: 1, ..ServiceConfig::default() },
+        || -> Box<dyn SolveEngine> { panic!("injected: factory down") },
+    );
+    // Give the worker a moment to hit the factory panic.
+    std::thread::sleep(Duration::from_millis(100));
+    for _ in 0..3 {
+        let resp = recv(coord.submit(easy_req(1.0)));
+        assert_eq!(resp.error, Some(ServiceError::WorkerUnavailable));
+    }
+    assert!(coord.metrics().worker_panics.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn failed_rebuild_degrades_to_immediate_errors() {
+    quiet_injected_panics();
+    // First build succeeds; the engine panics on its first batch; the
+    // rebuild panics too. The worker must degrade to serving immediate
+    // failures rather than dying silently.
+    let builds = Arc::new(AtomicUsize::new(0));
+    let builds_in_factory = builds.clone();
+    let coord = Coordinator::spawn(
+        cfg_no_retry(1, 1),
+        move || -> Box<dyn SolveEngine> {
+            if builds_in_factory.fetch_add(1, Ordering::SeqCst) > 0 {
+                panic!("injected: rebuild refused");
+            }
+            let script = Arc::new(Mutex::new(VecDeque::from(vec![Fault::Panic("one shot")])));
+            Box::new(FaultInjectingEngine { inner: NativeEngine::default(), script })
+        },
+    );
+    let resp = recv(coord.submit(easy_req(1.0)));
+    assert!(matches!(resp.error, Some(ServiceError::WorkerPanic { .. })));
+    // Both the engine panic and the factory panic were absorbed.
+    std::thread::sleep(Duration::from_millis(50));
+    let resp = recv(coord.submit(easy_req(1.0)));
+    assert_eq!(resp.error, Some(ServiceError::WorkerUnavailable));
+    assert_eq!(builds.load(Ordering::SeqCst), 2);
+    assert_eq!(coord.metrics().worker_panics.load(Ordering::Relaxed), 2);
+}

@@ -71,13 +71,14 @@ fn runtime_registration_roundtrip() {
 }
 
 fn vdp_req(id: u64, mu: f64, method: Option<MethodId>) -> SolveRequest {
-    SolveRequest {
-        id,
-        problem: ProblemSpec::Vdp { mu },
-        y0: vec![2.0, 0.0],
-        t_eval: (0..10).map(|k| k as f64 * 0.45).collect(),
-        method,
-    }
+    let mut r = SolveRequest::new(
+        ProblemSpec::Vdp { mu },
+        vec![2.0, 0.0],
+        (0..10).map(|k| k as f64 * 0.45).collect(),
+    );
+    r.id = id;
+    r.method = method;
+    r
 }
 
 /// One service run carrying three method buckets at once: easy traffic on
@@ -102,7 +103,11 @@ fn coordinator_routes_methods_per_request() {
     // when its third request arrives, so batch composition is
     // deterministic and comparable to the standalone solves below.
     let coord = Coordinator::spawn(
-        ServiceConfig { max_batch: 3, max_wait: Duration::from_secs(60) },
+        ServiceConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(60),
+            ..ServiceConfig::default()
+        },
         || Box::new(NativeEngine::default()),
     );
     let mut rxs = Vec::new();
@@ -124,7 +129,7 @@ fn coordinator_routes_methods_per_request() {
         let expect = method.unwrap_or(MethodId::DOPRI5);
         for r in reqs {
             let resp = responses.iter().find(|x| x.id == r.id).expect("id");
-            assert_eq!(resp.status, Status::Success, "group {gi} id {}", r.id);
+            assert_eq!(resp.status, Some(Status::Success), "group {gi} id {}", r.id);
             assert_eq!(resp.method, Some(expect), "group {gi} id {}", r.id);
         }
     }

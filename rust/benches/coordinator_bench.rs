@@ -4,10 +4,11 @@
 //!
 //! Run with `cargo bench --bench coordinator_bench`, or pass section
 //! names to run a subset (`batcher`, `service`, `threads`, `straggler`,
-//! `stiffsweep`, `replay`), e.g. `cargo bench --bench coordinator_bench
-//! -- straggler`. The straggler section writes machine-readable
-//! `BENCH_solver.json` (the stiffsweep and replay sections append to it)
-//! so CI can track the perf trajectory per PR.
+//! `stiffsweep`, `pdesweep`, `replay`), e.g. `cargo bench
+//! --bench coordinator_bench -- straggler`. The straggler section writes
+//! machine-readable `BENCH_solver.json` (the stiffsweep, pdesweep and
+//! replay sections append to it) so CI can track the perf trajectory per
+//! PR.
 
 use rode::bench::{
     append_bench_json, straggler_workload, threads_sweep, time_repeats, vdp_stiff_span,
@@ -379,6 +380,117 @@ fn bench_stiffsweep() {
     }
 }
 
+/// The PDE dim sweep: Fisher–KPP reaction–diffusion (method of lines,
+/// tridiagonal Jacobian) under TR-BDF2, comparing the banded Newton path
+/// against the forced-dense path (`SolveOptions::with_jac_structure`) at
+/// dim {64, 256, 1024}. Both paths must produce **bitwise-identical**
+/// trajectories — the banded factorization is a cost win, not a
+/// different computation — so the wall-time ratio
+/// (`speedup_banded_vs_dense`, O(dim·bw²) vs O(dim³) factor work) is the
+/// whole story. Appends `pdesweep-d{dim}` records to
+/// `BENCH_solver.json`; the dim-1024 ratio carries an enforced floor in
+/// `BENCH_baseline.json` (advisory at 64/256).
+///
+/// A final dim-4096 leg runs the banded path alone: the dense Newton
+/// scratch there would need ~2 × dim² × 8 B ≈ 270 MB *per row* and
+/// ~2·10¹⁰ flops per factorization — the dense path is infeasible, which
+/// is exactly the capability the banded path adds. Completing with
+/// `Status::Success` is the acceptance bar; the record is untracked.
+fn bench_pdesweep() {
+    println!("--- pdesweep (reaction-diffusion, trbdf2, banded vs forced-dense Newton) ---");
+    let batch = 4;
+    let mut records = Vec::new();
+    for &dim in &[64usize, 256, 1024] {
+        let sys = rode::problems::ReactionDiffusion::sweep(batch, dim);
+        let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+        let grid = TimeGrid::linspace_shared(batch, 0.0, 0.1, 3);
+        let base =
+            SolveOptions::new(MethodId::TRBDF2).with_tols(1e-6, 1e-4).with_max_steps(500_000);
+        // The dense leg at dim 1024 factors ~GB-scale flop counts per
+        // repeat; one timed rep keeps the section inside a CI budget.
+        let (warmup, reps) = if dim >= 1024 { (0, 1) } else { (1, 3) };
+
+        let mut run = |opts: &SolveOptions| {
+            let mut steps = 0u64;
+            let mut lu = 0u64;
+            let mut jacs = 0u64;
+            let mut ys: Vec<u64> = Vec::new();
+            let xs = time_repeats(warmup, reps, || {
+                let sol = solve_ivp_parallel(&sys, &y0, &grid, opts);
+                assert!(sol.all_success(), "pdesweep d{dim}: {:?}", &sol.status[..2]);
+                steps = sol.max_steps();
+                lu = sol.stats.iter().map(|s| s.n_lu_factor).sum();
+                jacs = sol.stats.iter().map(|s| s.n_jac_evals).sum();
+                ys = sol.ys_flat().iter().map(|v| v.to_bits()).collect();
+                std::hint::black_box(sol.ys_flat()[0]);
+            });
+            (Summary::from_samples(&xs), steps, lu, jacs, ys)
+        };
+
+        let (s_band, steps, lu_band, jacs, ys_band) = run(&base);
+        let (s_dense, _, lu_dense, _, ys_dense) =
+            run(&base.clone().with_jac_structure(rode::problems::JacStructure::Dense));
+        assert_eq!(
+            ys_band, ys_dense,
+            "d{dim}: banded and forced-dense trajectories must be bitwise identical"
+        );
+        let speedup = s_dense.mean / s_band.mean;
+        println!(
+            "dim={dim:<5} banded {:>9.2} ms ({steps:>5} steps, {lu_band:>6} lu) | dense \
+             {:>9.2} ms ({lu_dense:>6} lu) | banded x{speedup:.2}",
+            s_band.mean, s_dense.mean
+        );
+        records.push(
+            BenchRecord::new(&format!("pdesweep-d{dim}"), &s_band)
+                .field("dim", dim as f64)
+                .field("batch", batch as f64)
+                .field("steps", steps as f64)
+                .field("jac_evals", jacs as f64)
+                .field("n_lu_factor", lu_band as f64)
+                .field("dense_ms", s_dense.mean)
+                .field("dense_n_lu_factor", lu_dense as f64)
+                .field("speedup_banded_vs_dense", speedup),
+        );
+    }
+
+    {
+        let dim = 4096usize;
+        let batch = 2;
+        let sys = rode::problems::ReactionDiffusion::sweep(batch, dim);
+        let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+        let grid = TimeGrid::linspace_shared(batch, 0.0, 0.05, 3);
+        let opts =
+            SolveOptions::new(MethodId::TRBDF2).with_tols(1e-6, 1e-4).with_max_steps(500_000);
+        let mut steps = 0u64;
+        let mut lu = 0u64;
+        let xs = time_repeats(0, 1, || {
+            let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+            assert!(sol.all_success(), "pdesweep d4096 banded: {:?}", &sol.status);
+            steps = sol.max_steps();
+            lu = sol.stats.iter().map(|s| s.n_lu_factor).sum();
+            std::hint::black_box(sol.ys_flat()[0]);
+        });
+        let s = Summary::from_samples(&xs);
+        println!(
+            "dim=4096 banded {:>9.2} ms ({steps} steps, {lu} lu) — dense infeasible, \
+             banded-only leg",
+            s.mean
+        );
+        records.push(
+            BenchRecord::new("pdesweep-d4096-banded", &s)
+                .field("dim", dim as f64)
+                .field("batch", batch as f64)
+                .field("steps", steps as f64)
+                .field("n_lu_factor", lu as f64),
+        );
+    }
+
+    match append_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => println!("appended {} pdesweep records to BENCH_solver.json", records.len()),
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 /// Trace replay: a serving-shaped mixed trace — mostly easy VdP, a stiff
 /// tail that dies on the explicit default and must be escalated to
 /// trbdf2, and a sliver of malformed (NaN-state) requests — fired as fast
@@ -508,6 +620,9 @@ fn main() {
     }
     if want("stiffsweep") {
         bench_stiffsweep();
+    }
+    if want("pdesweep") {
+        bench_pdesweep();
     }
     if want("replay") {
         bench_replay();

@@ -38,6 +38,7 @@ TRACKED = (
     "speedup_vs_explicit",
     "steps_vs_trbdf2",
     "replay_success_rate",
+    "speedup_banded_vs_dense",
 )
 
 

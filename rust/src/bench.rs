@@ -210,6 +210,30 @@ impl<'a> OdeSystem for TimedSystem<'a> {
         self.inner.jac_rows(offset, n, t, y, jac, rows);
         self.model_time.set(self.model_time.get() + start.elapsed());
     }
+
+    fn jac_structure(&self) -> crate::problems::JacStructure {
+        self.inner.jac_structure()
+    }
+
+    fn jac_band_inst(&self, inst: usize, t: f64, y: &[f64], jac: &mut [f64]) {
+        let start = Instant::now();
+        self.inner.jac_band_inst(inst, t, y, jac);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+    }
+
+    fn jac_band_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        let start = Instant::now();
+        self.inner.jac_band_rows(offset, n, t, y, jac, rows);
+        self.model_time.set(self.model_time.get() + start.elapsed());
+    }
 }
 
 /// One solve measured the paper's way.

@@ -222,6 +222,11 @@ pub struct RodeConfig {
     /// Default per-request deadline (`deadline_ms` key); requests whose
     /// deadline passes before dispatch are dropped. Unset = no deadline.
     pub deadline: Option<Duration>,
+    /// Jacobian-structure override for the implicit Newton path (`jac`
+    /// key: `auto` | `dense` | `banded:KL,KU`). `auto` (the default)
+    /// trusts each problem's own declaration; see
+    /// `SolveOptions::jac_structure`.
+    pub jac: Option<crate::problems::JacStructure>,
     /// Stiffness-escalation fallback method (`retry_method` key): any
     /// registry method name, or `off`/`none` to disable escalation.
     pub retry_method: Option<MethodId>,
@@ -246,6 +251,7 @@ impl Default for RodeConfig {
             layout: Layout::default_from_env(),
             max_queue: 1024,
             deadline: None,
+            jac: None,
             retry_method: Some(MethodId::TRBDF2),
             max_retries: 1,
         }
@@ -306,6 +312,14 @@ impl RodeConfig {
         if let Some(v) = raw.get_f64("deadline_ms")? {
             anyhow::ensure!(v > 0.0, "deadline_ms must be positive, got {v}");
             cfg.deadline = Some(Duration::from_secs_f64(v / 1e3));
+        }
+        if let Some(v) = raw.get("jac") {
+            cfg.jac = match v.to_ascii_lowercase().as_str() {
+                "auto" => None,
+                s => Some(crate::problems::JacStructure::parse(s).ok_or_else(|| {
+                    anyhow!("bad jac structure {v} (auto|dense|banded:KL,KU)")
+                })?),
+            };
         }
         if let Some(v) = raw.get("retry_method") {
             cfg.retry_method = match v.to_ascii_lowercase().as_str() {
@@ -477,6 +491,23 @@ mod tests {
         // Bad values are rejected, not defaulted.
         assert!(RodeConfig::from_raw(&RawConfig::parse("deadline_ms = -5").unwrap()).is_err());
         assert!(RodeConfig::from_raw(&RawConfig::parse("retry_method = rk99").unwrap()).is_err());
+    }
+
+    #[test]
+    fn jac_key_parses_and_validates() {
+        use crate::problems::JacStructure;
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("jac = banded:1,1").unwrap()).unwrap();
+        assert_eq!(cfg.jac, Some(JacStructure::Banded { lower: 1, upper: 1 }));
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("jac = dense").unwrap()).unwrap();
+        assert_eq!(cfg.jac, Some(JacStructure::Dense));
+        // `auto` and unset both mean "trust the problem's declaration".
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("jac = auto").unwrap()).unwrap();
+        assert_eq!(cfg.jac, None);
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.jac, None);
+        // Malformed structures are rejected, not defaulted.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("jac = banded:1").unwrap()).is_err());
+        assert!(RodeConfig::from_raw(&RawConfig::parse("jac = sparse").unwrap()).is_err());
     }
 
     #[test]

@@ -195,6 +195,26 @@ impl<S: OdeSystem + ?Sized> OdeSystem for OffsetSystem<'_, S> {
         // Jacobian hook works unchanged inside a shard worker.
         self.inner.jac_rows(self.offset + offset, n, t, y, jac, rows)
     }
+
+    fn jac_structure(&self) -> crate::problems::JacStructure {
+        self.inner.jac_structure()
+    }
+
+    fn jac_band_inst(&self, inst: usize, t: f64, y: &[f64], jac: &mut [f64]) {
+        self.inner.jac_band_inst(self.offset + inst, t, y, jac)
+    }
+
+    fn jac_band_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        self.inner.jac_band_rows(self.offset + offset, n, t, y, jac, rows)
+    }
 }
 
 /// Contiguous near-equal row shards: `min(shards, batch)` ranges whose
@@ -527,6 +547,10 @@ impl<S: OdeSystem + Sync> StageExec for PooledExec<'_, S> {
         Layout::RowMajor
     }
 
+    fn jac_structure(&self) -> crate::problems::JacStructure {
+        self.sys.jac_structure()
+    }
+
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {
         let dim = y.dim();
         let sizes: Vec<usize> = self.bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
@@ -652,6 +676,10 @@ impl<S: OdeSystem + Sync> StageExec for StealExec<'_, S> {
     fn workspace_layout(&self, _requested: Layout) -> Layout {
         // Same reasoning as `PooledExec`: chunked passes are row-major.
         Layout::RowMajor
+    }
+
+    fn jac_structure(&self) -> crate::problems::JacStructure {
+        self.sys.jac_structure()
     }
 
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {

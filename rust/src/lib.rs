@@ -66,7 +66,7 @@ pub mod tensor;
 pub mod prelude {
     pub use crate::config::{ExecPolicy, PoolKind};
     pub use crate::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
-    pub use crate::problems::OdeSystem;
+    pub use crate::problems::{JacStructure, OdeSystem};
     pub use crate::solver::{
         register_method, register_method_with_aliases, solve_ivp_joint, solve_ivp_naive,
         solve_ivp_parallel, Controller, ExecStats, MethodId, RegisterError, SolveOptions,

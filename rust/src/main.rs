@@ -83,6 +83,18 @@ fn flag_usize_strict(flags: &HashMap<String, String>, key: &str, default: usize)
     }
 }
 
+/// Parse `--jac auto|dense|banded:KL,KU`; `None` (and `auto`) trusts the
+/// system's own [`JacStructure`] declaration.
+fn flag_jac(flags: &HashMap<String, String>) -> Result<Option<JacStructure>> {
+    match flags.get("jac") {
+        None => Ok(None),
+        Some(s) if s.eq_ignore_ascii_case("auto") => Ok(None),
+        Some(s) => JacStructure::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("bad --jac {s} (auto|dense|banded:KL,KU)")),
+    }
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let batch = flag_usize(flags, "batch", 5);
     let mu = flag_f64(flags, "mu", 10.0);
@@ -102,15 +114,6 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         .transpose()?
         .unwrap_or(MethodId::TSIT5);
 
-    // Mirrors the paper's Listing 1.
-    let sys = rode::problems::VdP::uniform(batch, mu);
-    let mut rng = rode::nn::Rng64::new(0);
-    let y0 = BatchVec::from_rows(
-        &(0..batch)
-            .map(|_| vec![rng.normal(), rng.normal()])
-            .collect::<Vec<_>>(),
-    );
-    let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
     let mut opts = SolveOptions::new(method)
         .with_tols(1e-6, 1e-5)
         .with_threads(threads)
@@ -120,7 +123,38 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(l) = flag_layout(flags)? {
         opts = opts.with_layout(l);
     }
-    let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+    if let Some(j) = flag_jac(flags)? {
+        opts = opts.with_jac_structure(j);
+    }
+
+    let problem = flags.get("problem").map(String::as_str).unwrap_or("vdp");
+    let sol = match problem {
+        "vdp" => {
+            // Mirrors the paper's Listing 1.
+            let sys = rode::problems::VdP::uniform(batch, mu);
+            let mut rng = rode::nn::Rng64::new(0);
+            let y0 = BatchVec::from_rows(
+                &(0..batch)
+                    .map(|_| vec![rng.normal(), rng.normal()])
+                    .collect::<Vec<_>>(),
+            );
+            let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
+            solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts)
+        }
+        "reaction-diffusion" | "rd" => {
+            // Fisher–KPP method of lines: per-instance diffusion sweep,
+            // tridiagonal Jacobian — the banded Newton showcase.
+            let dim = flag_usize_strict(flags, "dim", 64)?;
+            anyhow::ensure!(dim >= 3, "--dim must be at least 3, got {dim}");
+            let sys = rode::problems::ReactionDiffusion::sweep(batch, dim);
+            let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+            let grid = TimeGrid::linspace_shared(batch, 0.0, t1, n_eval);
+            solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts)
+        }
+        other => {
+            return Err(anyhow!("unknown problem {other} (vdp|reaction-diffusion)"));
+        }
+    };
 
     println!("status: {:?}", sol.status);
     println!(
@@ -189,15 +223,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             ),
         };
     }
+    if flags.contains_key("jac") {
+        cfg.jac = flag_jac(flags)?; // `--jac auto` resets a config-file override
+    }
     let engine_kind = flags.get("engine").cloned().unwrap_or(cfg.engine.clone());
     let artifacts_dir = cfg.artifacts_dir.clone();
-    let solve_opts = rode::solver::SolveOptions::new(cfg.method)
+    let mut solve_opts = rode::solver::SolveOptions::new(cfg.method)
         .with_tols(cfg.atol, cfg.rtol)
         .with_threads(cfg.threads)
         .with_pool(cfg.pool)
         .with_steal_chunk(cfg.steal_chunk)
         .with_compaction(cfg.compact_threshold)
         .with_layout(cfg.layout);
+    if let Some(j) = cfg.jac {
+        solve_opts = solve_opts.with_jac_structure(j);
+    }
 
     let coord = Coordinator::spawn(
         ServiceConfig {
@@ -340,6 +380,12 @@ fn main() -> Result<()> {
                  \n  solve            one-shot native solve (Listing 1 demo)\
                  \n                   (--method <name> — any registered method, see `rode methods`;\
                  \n                    trbdf2 and kvaerno43 are the implicit (stiff) methods;\
+                 \n                    --problem vdp|reaction-diffusion selects the workload,\
+                 \n                    default vdp; reaction-diffusion is the Fisher-KPP method\
+                 \n                    of lines with a per-instance diffusion sweep;\
+                 \n                    --dim N sets the reaction-diffusion grid size, default 64;\
+                 \n                    --jac auto|dense|banded:KL,KU overrides the Newton\
+                 \n                    factorization structure, default auto (trust the problem);\
                  \n                    --threads N shards the batch over N workers; 0 = all cores;\
                  \n                    --pool serial|scoped|persistent selects the worker pool;\
                  \n                    --steal-chunk R sets the work-stealing chunk size in rows,\
@@ -349,7 +395,8 @@ fn main() -> Result<()> {
                  \n                    --layout row_major|dim_major selects the stage-kernel\
                  \n                    memory layout, bitwise-identical results)\
                  \n  serve            coordinator + synthetic workload (also honors --threads,\
-                 \n                   --pool, --steal-chunk, --compact-threshold and --layout;\
+                 \n                   --pool, --steal-chunk, --compact-threshold, --layout\
+                 \n                   and --jac;\
                  \n                    --max-queue N bounds in-flight requests, excess is shed,\
                  \n                    0 = unbounded;\
                  \n                    --deadline-ms D drops requests not dispatched within D;\

@@ -14,6 +14,7 @@ mod fen;
 mod linear;
 mod lotka;
 mod oscillators;
+mod reaction_diffusion;
 mod robertson;
 mod vdp;
 
@@ -22,10 +23,88 @@ pub use fen::{FenDynamics, Mesh};
 pub use linear::{ExponentialDecay, LinearSystem};
 pub use lotka::LotkaVolterra;
 pub use oscillators::{Brusselator, Pendulum};
+pub use reaction_diffusion::ReactionDiffusion;
 pub use robertson::Robertson;
 pub use vdp::VdP;
 
 use crate::tensor::BatchVec;
+
+/// Sparsity structure of a system's Jacobian `∂f/∂y`, used by the
+/// implicit solver ([`crate::solver::implicit`]) to pick the
+/// factorization for the Newton iteration matrix `I − hγJ` and to size
+/// its per-row scratch.
+///
+/// `Dense` stores and factors the full `dim × dim` matrix — O(dim²)
+/// storage, O(dim³) factor. `Banded { lower, upper }` declares that
+/// every instance's Jacobian satisfies `J[i][j] = 0` outside
+/// `−upper ≤ i − j ≤ lower`, and switches the Newton path to the banded
+/// storage and LU of [`crate::solver::linalg`] — O(dim·bandwidth)
+/// storage, O(dim·bandwidth²) factor — which is what makes implicit
+/// steps feasible on method-of-lines discretizations at dim 10²–10⁴
+/// (e.g. [`ReactionDiffusion`], tridiagonal: `lower = upper = 1`).
+///
+/// The structure is a *promise about zeros*, not a different operator:
+/// solving a banded system through the banded path performs the same
+/// nonzero arithmetic as the dense path (the dense elimination's extra
+/// work touches only structural zeros), so banded and dense solves of
+/// the same problem produce bitwise-identical trajectories — the banded
+/// path is purely a cost win.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JacStructure {
+    /// Full `dim × dim` Jacobian (the default).
+    Dense,
+    /// Banded Jacobian: `lower` subdiagonals and `upper` superdiagonals.
+    Banded {
+        /// Number of nonzero subdiagonals (`i − j ≤ lower`).
+        lower: usize,
+        /// Number of nonzero superdiagonals (`j − i ≤ upper`).
+        upper: usize,
+    },
+}
+
+impl JacStructure {
+    /// The `(lower, upper)` bandwidths, treating `Dense` over `dim` as
+    /// the full band `(dim − 1, dim − 1)` and clamping declared banded
+    /// widths to `dim − 1` (a band can't extend past the matrix edge).
+    pub fn bandwidths(&self, dim: usize) -> (usize, usize) {
+        let full = dim.saturating_sub(1);
+        match *self {
+            JacStructure::Dense => (full, full),
+            JacStructure::Banded { lower, upper } => (lower.min(full), upper.min(full)),
+        }
+    }
+
+    /// Canonicalize for a concrete `dim`: `Banded` widths are clamped to
+    /// `dim − 1` so two structures that describe the same set of
+    /// in-matrix positions compare equal. [`crate::solver::implicit`]
+    /// stores the resolved structure in its scratch and compares a
+    /// system's resolved declaration against it when deciding whether
+    /// the analytic band hook applies.
+    pub fn resolved(self, dim: usize) -> JacStructure {
+        match self {
+            JacStructure::Dense => JacStructure::Dense,
+            JacStructure::Banded { lower, upper } => {
+                let full = dim.saturating_sub(1);
+                JacStructure::Banded { lower: lower.min(full), upper: upper.min(full) }
+            }
+        }
+    }
+
+    /// Parse a config/CLI spelling: `dense` or `banded:KL,KU` (e.g.
+    /// `banded:1,1` for tridiagonal).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("dense") {
+            return Some(JacStructure::Dense);
+        }
+        let rest = s.strip_prefix("banded:").or_else(|| s.strip_prefix("banded="))?;
+        let (kl, ku) = rest.split_once(',')?;
+        Some(JacStructure::Banded {
+            lower: kl.trim().parse().ok()?,
+            upper: ku.trim().parse().ok()?,
+        })
+    }
+}
 
 /// A batch of independent ODEs `dy/dt = f(t, y)` with shared structure.
 ///
@@ -154,6 +233,77 @@ pub trait OdeSystem {
                 t[r],
                 &y[r * dim..(r + 1) * dim],
                 &mut jac[r * dd..(r + 1) * dd],
+            )
+        };
+        match rows {
+            Some(idx) => {
+                for &r in idx {
+                    fill(r);
+                }
+            }
+            None => {
+                for r in 0..n {
+                    fill(r);
+                }
+            }
+        }
+    }
+
+    /// Declared sparsity structure of this system's Jacobian. The
+    /// implicit solver selects its factorization (dense vs banded LU)
+    /// and sizes its per-row Newton scratch from this; see
+    /// [`JacStructure`]. Must be a *valid* promise: with
+    /// `Banded { lower, upper }` every entry outside the band must be
+    /// identically zero for every instance, time and state. Defaults to
+    /// [`JacStructure::Dense`].
+    fn jac_structure(&self) -> JacStructure {
+        JacStructure::Dense
+    }
+
+    /// Analytic *banded* Jacobian of instance `inst` at `(t, y)`, for
+    /// systems whose [`OdeSystem::jac_structure`] is
+    /// `Banded { lower, upper }` and whose [`OdeSystem::has_jac`] is
+    /// `true`. `jac` is `dim * (lower + upper + 1)` long in column-major
+    /// band layout: column `j` occupies the `lower + upper + 1` slots
+    /// starting at `j * (lower + upper + 1)`, with entry `(i, j)` at
+    /// offset `upper + i − j` (the [`crate::solver::linalg`] layout
+    /// without the pivot-fill headroom). **Every** slot must be written —
+    /// corner slots whose `(i, j)` falls outside the matrix get `0.0` —
+    /// because the solver reuses the buffer across steps without
+    /// re-zeroing it. The default panics.
+    fn jac_band_inst(&self, _inst: usize, _t: f64, _y: &[f64], _jac: &mut [f64]) {
+        unimplemented!(
+            "system declares a banded Jacobian structure but does not implement jac_band_inst"
+        )
+    }
+
+    /// Banded Jacobians for the contiguous instance range
+    /// `[offset, offset + n)`: block `r` of `jac` (one
+    /// `dim * (lower + upper + 1)` band block, see
+    /// [`OdeSystem::jac_band_inst`]) receives the band of `∂f/∂y` at
+    /// `(t[r], y[r])` for instance `offset + r`. `rows` restricts the
+    /// fill to the listed local rows (`None` = all). Per-row results
+    /// must be independent and deterministic, like
+    /// [`OdeSystem::jac_rows`]. Delegates to
+    /// [`OdeSystem::jac_band_inst`] by default.
+    fn jac_band_rows(
+        &self,
+        offset: usize,
+        n: usize,
+        t: &[f64],
+        y: &[f64],
+        jac: &mut [f64],
+        rows: Option<&[usize]>,
+    ) {
+        let dim = self.dim();
+        let (kl, ku) = self.jac_structure().bandwidths(dim);
+        let block = dim * (kl + ku + 1);
+        let mut fill = |r: usize| {
+            self.jac_band_inst(
+                offset + r,
+                t[r],
+                &y[r * dim..(r + 1) * dim],
+                &mut jac[r * block..(r + 1) * block],
             )
         };
         match rows {

@@ -1,0 +1,293 @@
+//! Fisher–KPP reaction–diffusion, discretized by the 1-D method of
+//! lines — the PDE-scale stiff workload that motivates the banded
+//! Newton path.
+//!
+//! The PDE on `x ∈ [0, 1]` with no-flux (Neumann) boundaries:
+//!
+//! ```text
+//! u_t = D u_xx + r u (1 − u)
+//! ```
+//!
+//! Second-order central differences on `n` grid points (`dx = 1/(n−1)`,
+//! ghost points for the boundaries) turn it into an `n`-dimensional ODE
+//! system:
+//!
+//! ```text
+//! u₀'    = 2c (u₁ − u₀)            + r u₀ (1 − u₀)
+//! uᵢ'    = c (uᵢ₋₁ − 2uᵢ + uᵢ₊₁)   + r uᵢ (1 − uᵢ)     0 < i < n−1
+//! uₙ₋₁'  = 2c (uₙ₋₂ − uₙ₋₁)        + r uₙ₋₁ (1 − uₙ₋₁)
+//! ```
+//!
+//! with `c = D/dx²`. The diffusion operator's spectrum reaches `−4c ≈
+//! −4D(n−1)²`, so stiffness grows quadratically with resolution — at
+//! `n = 1024` the stable explicit step is ~10⁻⁷ of the front's time
+//! scale while an L-stable implicit method steps at the accuracy limit.
+//! The Jacobian is tridiagonal ([`JacStructure::Banded`] with
+//! `lower = upper = 1`), which is exactly what the banded Newton path
+//! exploits: O(n) storage and factor work instead of O(n²)/O(n³).
+//!
+//! The diffusion coefficient `D` is *per-instance* (like Van der Pol's
+//! μ): one batch spans a range of stiffnesses, torchode's
+//! independent-step-size stress test at PDE scale. Both the dense
+//! ([`OdeSystem::jac_inst`]) and banded ([`OdeSystem::jac_band_inst`])
+//! analytic Jacobian hooks are implemented, so the same problem drives
+//! either factorization — the banded-vs-dense bitwise-identity and
+//! speedup benches lean on that.
+
+use super::{JacStructure, OdeSystem};
+
+/// A batch of Fisher–KPP method-of-lines instances with per-instance
+/// diffusion coefficients on a shared `n`-point grid.
+#[derive(Debug, Clone)]
+pub struct ReactionDiffusion {
+    d: Vec<f64>,
+    n: usize,
+    r: f64,
+}
+
+impl ReactionDiffusion {
+    /// Instances with the given per-instance diffusion coefficients on
+    /// an `n`-point grid (`n ≥ 3`), reaction rate `r = 1`.
+    pub fn new(d: Vec<f64>, n: usize) -> Self {
+        assert!(!d.is_empty());
+        assert!(n >= 3, "method-of-lines grid needs at least 3 points, got {n}");
+        assert!(d.iter().all(|&v| v > 0.0), "diffusion coefficients must be positive");
+        Self { d, n, r: 1.0 }
+    }
+
+    /// `batch` identical instances with a shared diffusion coefficient.
+    pub fn uniform(batch: usize, d: f64, n: usize) -> Self {
+        Self::new(vec![d; batch], n)
+    }
+
+    /// `batch` instances with diffusion coefficients spread
+    /// geometrically over a decade (`0.1 … 1.0`) — mixed stiffness in
+    /// one batch, the PDE analogue of the mixed-μ Van der Pol sweep.
+    pub fn sweep(batch: usize, n: usize) -> Self {
+        assert!(batch >= 1);
+        let d = (0..batch)
+            .map(|i| {
+                let f = if batch == 1 { 1.0 } else { i as f64 / (batch - 1) as f64 };
+                0.1 * 10f64.powf(f)
+            })
+            .collect();
+        Self::new(d, n)
+    }
+
+    /// Override the reaction rate `r` (default `1.0`).
+    pub fn with_reaction(mut self, r: f64) -> Self {
+        self.r = r;
+        self
+    }
+
+    /// Diffusion coefficient of instance `inst`.
+    pub fn d(&self, inst: usize) -> f64 {
+        self.d[inst.min(self.d.len() - 1)]
+    }
+
+    /// Reaction rate `r`.
+    pub fn r(&self) -> f64 {
+        self.r
+    }
+
+    /// The grid spacing `dx = 1/(n−1)`.
+    pub fn dx(&self) -> f64 {
+        1.0 / (self.n - 1) as f64
+    }
+
+    /// A travelling-front initial profile shared by every instance:
+    /// `u(x) = 1 / (1 + exp((x − 0.3)/0.05))` — the invaded state `u = 1`
+    /// on the left relaxing to `u = 0` on the right, which Fisher–KPP
+    /// dynamics propagate rightward. One row per instance.
+    pub fn front_y0(&self, batch: usize) -> Vec<Vec<f64>> {
+        let row: Vec<f64> = (0..self.n)
+            .map(|i| {
+                let x = i as f64 * self.dx();
+                1.0 / (1.0 + ((x - 0.3) / 0.05).exp())
+            })
+            .collect();
+        vec![row; batch]
+    }
+
+    /// `c = D/dx²` for instance `inst` — the discrete diffusion scale
+    /// (the Jacobian's off-diagonal entries; its spectrum reaches −4c).
+    fn c(&self, inst: usize) -> f64 {
+        self.d(inst) / (self.dx() * self.dx())
+    }
+}
+
+impl OdeSystem for ReactionDiffusion {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn f_inst(&self, inst: usize, _t: f64, y: &[f64], dy: &mut [f64]) {
+        let n = self.n;
+        let c = self.c(inst);
+        let r = self.r;
+        dy[0] = 2.0 * c * (y[1] - y[0]) + r * y[0] * (1.0 - y[0]);
+        for i in 1..n - 1 {
+            dy[i] = c * (y[i - 1] - 2.0 * y[i] + y[i + 1]) + r * y[i] * (1.0 - y[i]);
+        }
+        dy[n - 1] = 2.0 * c * (y[n - 2] - y[n - 1]) + r * y[n - 1] * (1.0 - y[n - 1]);
+    }
+
+    fn has_jac(&self) -> bool {
+        true
+    }
+
+    fn jac_structure(&self) -> JacStructure {
+        JacStructure::Banded { lower: 1, upper: 1 }
+    }
+
+    /// Dense row-major Jacobian — the oracle for the banded hook and
+    /// what a forced-`Dense` solve factors. Writes all `n²` slots.
+    fn jac_inst(&self, inst: usize, _t: f64, y: &[f64], jac: &mut [f64]) {
+        let n = self.n;
+        let c = self.c(inst);
+        let r = self.r;
+        jac.fill(0.0);
+        jac[0] = -2.0 * c + r * (1.0 - 2.0 * y[0]);
+        jac[1] = 2.0 * c;
+        for i in 1..n - 1 {
+            jac[i * n + (i - 1)] = c;
+            jac[i * n + i] = -2.0 * c + r * (1.0 - 2.0 * y[i]);
+            jac[i * n + (i + 1)] = c;
+        }
+        jac[(n - 1) * n + (n - 2)] = 2.0 * c;
+        jac[(n - 1) * n + (n - 1)] = -2.0 * c + r * (1.0 - 2.0 * y[n - 1]);
+    }
+
+    /// Tridiagonal band: column `j` holds `(super, diag, sub)` =
+    /// `(∂f_{j−1}, ∂f_j, ∂f_{j+1})/∂y_j`, corners zeroed (see
+    /// [`OdeSystem::jac_band_inst`] for the layout).
+    fn jac_band_inst(&self, inst: usize, _t: f64, y: &[f64], jac: &mut [f64]) {
+        let n = self.n;
+        let c = self.c(inst);
+        let r = self.r;
+        for j in 0..n {
+            let col = j * 3;
+            // ∂f_{j−1}/∂y_j: 2c into the left boundary row, c elsewhere.
+            jac[col] = if j == 0 {
+                0.0 // corner (row −1)
+            } else if j == 1 {
+                2.0 * c
+            } else {
+                c
+            };
+            jac[col + 1] = -2.0 * c + r * (1.0 - 2.0 * y[j]);
+            // ∂f_{j+1}/∂y_j: 2c into the right boundary row, c elsewhere.
+            jac[col + 2] = if j == n - 1 {
+                0.0 // corner (row n)
+            } else if j == n - 2 {
+                2.0 * c
+            } else {
+                c
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_states_are_reaction_fixed_points() {
+        // u ≡ 0 and u ≡ 1 are spatially flat (no diffusion flux) fixed
+        // points of the reaction term.
+        let sys = ReactionDiffusion::uniform(1, 0.7, 9);
+        let mut dy = vec![f64::NAN; 9];
+        for u in [0.0, 1.0] {
+            sys.f_inst(0, 0.0, &vec![u; 9], &mut dy);
+            assert!(dy.iter().all(|&v| v == 0.0), "u ≡ {u}: dy = {dy:?}");
+        }
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        let n = 7;
+        let sys = ReactionDiffusion::new(vec![0.35], n);
+        let y = &sys.front_y0(1)[0];
+        let mut jac = vec![0.0; n * n];
+        sys.jac_inst(0, 0.0, y, &mut jac);
+        let mut fp = vec![0.0; n];
+        let mut fm = vec![0.0; n];
+        let mut yy = y.clone();
+        for j in 0..n {
+            let h = 1e-7 * (1.0 + y[j].abs());
+            yy[j] = y[j] + h;
+            sys.f_inst(0, 0.0, &yy, &mut fp);
+            yy[j] = y[j] - h;
+            sys.f_inst(0, 0.0, &yy, &mut fm);
+            yy[j] = y[j];
+            for i in 0..n {
+                let fd = (fp[i] - fm[i]) / (2.0 * h);
+                let scale = 1.0 + fd.abs();
+                assert!(
+                    (jac[i * n + j] - fd).abs() < 1e-3 * scale,
+                    "J[{i}][{j}] = {} vs fd {fd}",
+                    jac[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn band_layout_matches_dense_jacobian() {
+        let n = 8;
+        let sys = ReactionDiffusion::new(vec![1.3, 0.2], n);
+        for inst in 0..2 {
+            let y = &sys.front_y0(2)[inst];
+            let mut dense = vec![0.0; n * n];
+            let mut band = vec![f64::NAN; n * 3];
+            sys.jac_inst(inst, 0.0, y, &mut dense);
+            sys.jac_band_inst(inst, 0.0, y, &mut band);
+            for j in 0..n {
+                for (slot, i) in [(0usize, j as isize - 1), (1, j as isize), (2, j as isize + 1)]
+                {
+                    let b = band[j * 3 + slot];
+                    if i < 0 || i >= n as isize {
+                        assert_eq!(b, 0.0, "corner ({i}, {j}) must be written as 0");
+                    } else {
+                        let d = dense[i as usize * n + j];
+                        assert_eq!(b, d, "band ({i}, {j}) = {b} vs dense {d}");
+                    }
+                }
+            }
+            // Everything outside the band really is zero in the dense
+            // oracle — the structure declaration is a valid promise.
+            for i in 0..n {
+                for j in 0..n {
+                    if (i as isize - j as isize).abs() > 1 {
+                        assert_eq!(dense[i * n + j], 0.0, "({i}, {j}) outside the band");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_spans_a_decade() {
+        let sys = ReactionDiffusion::sweep(5, 16);
+        assert!((sys.d(0) - 0.1).abs() < 1e-12);
+        assert!((sys.d(4) - 1.0).abs() < 1e-12);
+        for i in 1..5 {
+            assert!(sys.d(i) > sys.d(i - 1));
+        }
+    }
+
+    #[test]
+    fn front_profile_is_monotone_in_unit_interval() {
+        let sys = ReactionDiffusion::uniform(3, 1.0, 64);
+        let y0 = sys.front_y0(3);
+        assert_eq!(y0.len(), 3);
+        for row in &y0 {
+            assert_eq!(row.len(), 64);
+            assert!(row.windows(2).all(|w| w[1] < w[0]), "front must decay rightward");
+            assert!(row.iter().all(|&u| (0.0..=1.0).contains(&u)));
+            assert!(row[0] > 0.9 && row[63] < 0.1);
+        }
+    }
+}

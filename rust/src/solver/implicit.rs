@@ -18,6 +18,18 @@
 //! is recovered algebraically (`k_s = (z_s − rhs)/(hγ)`) so convergence
 //! costs one dynamics evaluation per Newton iteration and none extra.
 //!
+//! The factorization is **structure-aware**: a system declaring a banded
+//! Jacobian ([`crate::problems::JacStructure::Banded`], e.g. the
+//! method-of-lines [`crate::problems::ReactionDiffusion`]) gets banded
+//! storage and the banded LU of [`super::linalg`] — O(dim·bandwidth)
+//! scratch and O(dim·bandwidth²) factorization instead of O(dim²)/
+//! O(dim³) — plus Curtis–Powell–Reid colored finite differences
+//! (`kl + ku + 1` evaluations per Jacobian instead of `dim`) when no
+//! analytic band hook exists. The banded elimination performs the same
+//! nonzero arithmetic as the dense one, so banded and dense solves of
+//! the same problem are bitwise-identical; the structure is purely a
+//! cost win, and it is what opens implicit stepping at dim 10²–10⁴.
+//!
 //! **Divergence feeds the rejection path, not a dt death spiral**: when
 //! the iteration fails ([`NEWTON_MAX_ITERS`] exhausted, the increment
 //! growing faster than [`NEWTON_DIV_RATE`], a singular iteration matrix,
@@ -66,7 +78,7 @@ use super::step::{
     accumulate_stage_row, combine_rows_fused, CompiledTableau, RkRows, RkWorkspace, MAX_STAGES,
 };
 use super::Tolerances;
-use crate::problems::OdeSystem;
+use crate::problems::{JacStructure, OdeSystem};
 use crate::tensor::BatchVec;
 
 /// Maximum simplified-Newton iterations per implicit stage before the
@@ -102,9 +114,21 @@ pub const NEWTON_REJECT_FACTOR: f64 = 0.25;
 /// solve performs zero heap allocations (`tests/alloc_regression.rs`).
 pub(crate) struct NewtonWs {
     dim: usize,
-    /// Per-slot Jacobian `J ≈ ∂f/∂y`, row-major `dim × dim` blocks.
+    /// Resolved Jacobian structure the scratch is sized for (bandwidths
+    /// clamped to `dim − 1`); selects dense vs banded storage and LU.
+    structure: JacStructure,
+    /// Per-slot Jacobian block length: `dim²` dense, `dim·(kl+ku+1)`
+    /// banded (column-major band, no pivot headroom).
+    jac_block: usize,
+    /// Per-slot LU block length: `dim²` dense, `dim·(2kl+ku+1)` banded
+    /// (band plus the `kl` pivot-fill headroom rows per column).
+    lu_block: usize,
+    /// Per-slot Jacobian `J ≈ ∂f/∂y`: row-major `dim × dim` blocks when
+    /// dense, [`linalg::banded_index`]-layout band blocks (without the
+    /// fill headroom) when banded.
     jac: Vec<f64>,
-    /// Per-slot LU factors of `I − hγJ`.
+    /// Per-slot LU factors of `I − hγJ` (dense row-major or banded
+    /// storage to match `structure`).
     lu: Vec<f64>,
     /// Per-slot pivot indices of the LU.
     piv: Vec<usize>,
@@ -132,12 +156,25 @@ pub(crate) struct NewtonWs {
 }
 
 impl NewtonWs {
-    /// Fresh Newton state for `batch` slots of dimension `dim`.
-    pub(crate) fn new(batch: usize, dim: usize, tols: &Tolerances) -> Self {
+    /// Fresh Newton state for `batch` slots of dimension `dim`, sized
+    /// for the given Jacobian structure: O(dim²) per slot for dense,
+    /// O(dim·bandwidth) for banded — the storage side of what makes
+    /// implicit steps feasible at PDE dimensions.
+    pub(crate) fn new(batch: usize, dim: usize, tols: &Tolerances, jac: JacStructure) -> Self {
+        let structure = jac.resolved(dim);
+        let (jac_block, lu_block) = match structure {
+            JacStructure::Dense => (dim * dim, dim * dim),
+            JacStructure::Banded { lower, upper } => {
+                (dim * (lower + upper + 1), dim * linalg::banded_width(lower, upper))
+            }
+        };
         Self {
             dim,
-            jac: vec![0.0; batch * dim * dim],
-            lu: vec![0.0; batch * dim * dim],
+            structure,
+            jac_block,
+            lu_block,
+            jac: vec![0.0; batch * jac_block],
+            lu: vec![0.0; batch * lu_block],
             piv: vec![0; batch * dim],
             lu_hg: vec![f64::NAN; batch],
             jac_valid: vec![false; batch],
@@ -183,9 +220,9 @@ impl NewtonWs {
     /// are never read before being written within an attempt, so only
     /// the cross-step state moves.
     pub(crate) fn compact_move(&mut self, dst: usize, src: usize) {
-        let dd = self.dim * self.dim;
-        self.jac.copy_within(src * dd..(src + 1) * dd, dst * dd);
-        self.lu.copy_within(src * dd..(src + 1) * dd, dst * dd);
+        let (jb, lb) = (self.jac_block, self.lu_block);
+        self.jac.copy_within(src * jb..(src + 1) * jb, dst * jb);
+        self.lu.copy_within(src * lb..(src + 1) * lb, dst * lb);
         self.piv.copy_within(src * self.dim..(src + 1) * self.dim, dst * self.dim);
         self.lu_hg[dst] = self.lu_hg[src];
         self.jac_valid[dst] = self.jac_valid[src];
@@ -201,6 +238,9 @@ impl NewtonWs {
     /// The whole-batch mutable view (the serial attempt's shape).
     pub(crate) fn view_mut(&mut self) -> NewtonRows<'_> {
         NewtonRows {
+            structure: self.structure,
+            jac_block: self.jac_block,
+            lu_block: self.lu_block,
             jac: &mut self.jac,
             lu: &mut self.lu,
             piv: &mut self.piv,
@@ -225,12 +265,13 @@ impl NewtonWs {
     /// `crate::exec`'s workspace views.
     pub(crate) fn split_views(&mut self, bounds: &[(usize, usize)]) -> Vec<NewtonRows<'_>> {
         let dim = self.dim;
-        let dd = dim * dim;
-        let sz_dd: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * dd).collect();
+        let (structure, jb, lb) = (self.structure, self.jac_block, self.lu_block);
+        let sz_jac: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * jb).collect();
+        let sz_lu: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * lb).collect();
         let sz_d: Vec<usize> = bounds.iter().map(|&(lo, hi)| (hi - lo) * dim).collect();
         let sz_r: Vec<usize> = bounds.iter().map(|&(lo, hi)| hi - lo).collect();
-        let mut jac = split_mut(&mut self.jac, &sz_dd).into_iter();
-        let mut lu = split_mut(&mut self.lu, &sz_dd).into_iter();
+        let mut jac = split_mut(&mut self.jac, &sz_jac).into_iter();
+        let mut lu = split_mut(&mut self.lu, &sz_lu).into_iter();
         let mut piv = split_mut(&mut self.piv, &sz_d).into_iter();
         let mut lu_hg = split_mut(&mut self.lu_hg, &sz_r).into_iter();
         let mut jac_valid = split_mut(&mut self.jac_valid, &sz_r).into_iter();
@@ -248,6 +289,9 @@ impl NewtonWs {
         bounds
             .iter()
             .map(|_| NewtonRows {
+                structure,
+                jac_block: jb,
+                lu_block: lb,
                 jac: jac.next().unwrap(),
                 lu: lu.next().unwrap(),
                 piv: piv.next().unwrap(),
@@ -286,6 +330,9 @@ fn split_mut<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
 /// owns during a sharded implicit attempt. Indexed locally — row `r` of
 /// the view is slot `offset + r` of the solve.
 pub(crate) struct NewtonRows<'a> {
+    structure: JacStructure,
+    jac_block: usize,
+    lu_block: usize,
     jac: &'a mut [f64],
     lu: &'a mut [f64],
     piv: &'a mut [usize],
@@ -307,10 +354,11 @@ pub(crate) struct NewtonRows<'a> {
 impl NewtonRows<'_> {
     /// The per-row working set of local row `r`.
     fn row(&mut self, r: usize, dim: usize) -> RowNewton<'_> {
-        let dd = dim * dim;
+        let (jb, lb) = (self.jac_block, self.lu_block);
         RowNewton {
-            jac: &mut self.jac[r * dd..(r + 1) * dd],
-            lu: &mut self.lu[r * dd..(r + 1) * dd],
+            structure: self.structure,
+            jac: &mut self.jac[r * jb..(r + 1) * jb],
+            lu: &mut self.lu[r * lb..(r + 1) * lb],
             piv: &mut self.piv[r * dim..(r + 1) * dim],
             lu_hg: &mut self.lu_hg[r],
             jac_valid: &mut self.jac_valid[r],
@@ -332,6 +380,7 @@ impl NewtonRows<'_> {
 /// One row's Newton working set: mutable borrows of the slot's blocks of
 /// [`NewtonWs`].
 struct RowNewton<'a> {
+    structure: JacStructure,
     jac: &'a mut [f64],
     lu: &'a mut [f64],
     piv: &'a mut [usize],
@@ -363,11 +412,24 @@ fn fail_row(st: &mut RowNewton<'_>, jac_fresh: bool) {
     *st.lu_hg = f64::NAN;
 }
 
-/// Build the row's Jacobian at the step start `(t, y)`: the analytic
-/// [`OdeSystem::jac_rows`] hook when the system provides one, forward
-/// differences against the warm step-start slope `f0 = k[0]` otherwise
-/// (each FD column costs one dynamics evaluation, accounted to the
-/// row's `fevals`; the build itself increments `jacs`).
+/// Build the row's Jacobian at the step start `(t, y)` in the storage
+/// the workspace's [`JacStructure`] selects.
+///
+/// Dense: the analytic [`OdeSystem::jac_rows`] hook when the system
+/// provides one, forward differences against the warm step-start slope
+/// `f0 = k[0]` otherwise (one dynamics evaluation per column).
+///
+/// Banded: the analytic [`OdeSystem::jac_band_rows`] hook when the
+/// system provides one *and* its declared structure matches the
+/// workspace structure (a caller override with different bandwidths
+/// falls back to differences — the analytic hook's block layout follows
+/// the system's own declaration); otherwise forward differences with
+/// **Curtis–Powell–Reid coloring**: columns `j ≡ c (mod kl+ku+1)`
+/// touch disjoint row ranges, so one perturbed evaluation recovers a
+/// whole color — `kl + ku + 1` evaluations total regardless of `dim`,
+/// which is what keeps FD Jacobians affordable at PDE dimensions.
+/// Each evaluation is accounted to the row's `fevals`; the build
+/// itself increments `jacs`.
 fn build_jacobian(
     sys: &dyn OdeSystem,
     g: usize,
@@ -377,25 +439,128 @@ fn build_jacobian(
     f0: &[f64],
     st: &mut RowNewton<'_>,
 ) {
-    if sys.has_jac() {
-        sys.jac_rows(g, 1, &[t], yrow, st.jac, None);
-    } else {
-        let fd_eps = f64::EPSILON.sqrt();
-        st.pert.copy_from_slice(yrow);
-        for j in 0..dim {
-            let dy = fd_eps * (1.0 + yrow[j].abs());
-            st.pert[j] = yrow[j] + dy;
-            sys.f_rows(g, 1, &[t], st.pert, st.fz, None);
-            *st.fevals += 1;
-            for i in 0..dim {
-                st.jac[i * dim + j] = (st.fz[i] - f0[i]) / dy;
+    match st.structure {
+        JacStructure::Dense => {
+            if sys.has_jac() {
+                sys.jac_rows(g, 1, &[t], yrow, st.jac, None);
+            } else {
+                dense_fd(sys, g, dim, t, yrow, f0, st);
             }
-            st.pert[j] = yrow[j];
+        }
+        JacStructure::Banded { lower: kl, upper: ku } => {
+            if sys.has_jac() && sys.jac_structure().resolved(dim) == st.structure {
+                sys.jac_band_rows(g, 1, &[t], yrow, st.jac, None);
+            } else {
+                // Curtis–Powell–Reid colored forward differences.
+                let wj = kl + ku + 1;
+                let nc = wj.min(dim);
+                let fd_eps = f64::EPSILON.sqrt();
+                st.pert.copy_from_slice(yrow);
+                for c in 0..nc {
+                    let mut j = c;
+                    while j < dim {
+                        let dy = fd_eps * (1.0 + yrow[j].abs());
+                        st.pert[j] = yrow[j] + dy;
+                        j += nc;
+                    }
+                    sys.f_rows(g, 1, &[t], st.pert, st.fz, None);
+                    *st.fevals += 1;
+                    let mut j = c;
+                    while j < dim {
+                        let dy = fd_eps * (1.0 + yrow[j].abs());
+                        let lo = j.saturating_sub(ku);
+                        let hi = (j + kl).min(dim - 1);
+                        for i in lo..=hi {
+                            st.jac[j * wj + (ku + i) - j] = (st.fz[i] - f0[i]) / dy;
+                        }
+                        st.pert[j] = yrow[j];
+                        j += nc;
+                    }
+                }
+            }
         }
     }
     *st.jacs += 1;
     *st.jac_valid = true;
     *st.jac_age = 0;
+}
+
+/// Plain per-column forward differences into a dense `dim × dim` block.
+fn dense_fd(
+    sys: &dyn OdeSystem,
+    g: usize,
+    dim: usize,
+    t: f64,
+    yrow: &[f64],
+    f0: &[f64],
+    st: &mut RowNewton<'_>,
+) {
+    let fd_eps = f64::EPSILON.sqrt();
+    st.pert.copy_from_slice(yrow);
+    for j in 0..dim {
+        let dy = fd_eps * (1.0 + yrow[j].abs());
+        st.pert[j] = yrow[j] + dy;
+        sys.f_rows(g, 1, &[t], st.pert, st.fz, None);
+        *st.fevals += 1;
+        for i in 0..dim {
+            st.jac[i * dim + j] = (st.fz[i] - f0[i]) / dy;
+        }
+        st.pert[j] = yrow[j];
+    }
+}
+
+/// Back-solve one Newton system `M·x = b` in place through the row's
+/// current factors, dispatching on the workspace structure.
+#[inline]
+fn solve_newton_system(
+    structure: JacStructure,
+    lu: &[f64],
+    piv: &[usize],
+    dim: usize,
+    x: &mut [f64],
+) {
+    match structure {
+        JacStructure::Dense => linalg::lu_solve(lu, piv, dim, x),
+        JacStructure::Banded { lower, upper } => {
+            linalg::banded_lu_solve(lu, piv, dim, lower, upper, x)
+        }
+    }
+}
+
+/// Assemble and factor the row's iteration matrix `M = I − hγJ` in the
+/// structure-matching storage. Returns `false` on a singular pivot.
+fn factor_newton_matrix(st: &mut RowNewton<'_>, dim: usize, hg: f64) -> bool {
+    match st.structure {
+        JacStructure::Dense => {
+            for i in 0..dim {
+                for j in 0..dim {
+                    st.lu[i * dim + j] = -hg * st.jac[i * dim + j];
+                }
+                st.lu[i * dim + i] += 1.0;
+            }
+            linalg::lu_factor(st.lu, st.piv, dim)
+        }
+        JacStructure::Banded { lower: kl, upper: ku } => {
+            // The LU storage carries kl pivot-fill headroom rows the
+            // band Jacobian does not; zero everything, then write the
+            // band — the same −hγ·J and +1 diagonal arithmetic as the
+            // dense assembly, entry for entry.
+            for v in st.lu.iter_mut() {
+                *v = 0.0;
+            }
+            let wj = kl + ku + 1;
+            let wl = linalg::banded_width(kl, ku);
+            for j in 0..dim {
+                let lo = j.saturating_sub(ku);
+                let hi = (j + kl).min(dim - 1);
+                for i in lo..=hi {
+                    st.lu[j * wl + (kl + ku + i) - j] = -hg * st.jac[j * wj + (ku + i) - j];
+                }
+                st.lu[j * wl + kl + ku] += 1.0;
+            }
+            linalg::banded_lu_factor(st.lu, st.piv, dim, kl, ku)
+        }
+    }
 }
 
 /// Run the stage solves of one attempt for one row (stages 1..S over
@@ -453,7 +618,7 @@ fn solve_stages_row(
             for d in 0..dim {
                 st.del[d] = -(st.z[d] - rhs[d] - hd * st.fz[d]);
             }
-            linalg::lu_solve(st.lu, st.piv, dim, st.del);
+            solve_newton_system(st.structure, st.lu, st.piv, dim, st.del);
             for d in 0..dim {
                 st.z[d] += st.del[d];
             }
@@ -531,13 +696,7 @@ fn implicit_row(
     let mut need_factor = jac_fresh || drifted;
     loop {
         if need_factor {
-            for i in 0..dim {
-                for j in 0..dim {
-                    st.lu[i * dim + j] = -hg * st.jac[i * dim + j];
-                }
-                st.lu[i * dim + i] += 1.0;
-            }
-            if !linalg::lu_factor(st.lu, st.piv, dim) {
+            if !factor_newton_matrix(&mut st, dim, hg) {
                 if jac_fresh {
                     fail_row(&mut st, true);
                     return;
@@ -573,7 +732,7 @@ fn implicit_row(
     let has_err = !ct.berr_nz.is_empty();
     combine_rows_fused(ct, k, r, dim, h, yrow, y_new_row, err_row, has_err);
     if has_err {
-        linalg::lu_solve(st.lu, st.piv, dim, err_row);
+        solve_newton_system(st.structure, st.lu, st.piv, dim, err_row);
     }
 }
 
@@ -709,6 +868,10 @@ mod tests {
     use crate::tensor::Layout;
 
     fn trbdf2_ws(batch: usize, dim: usize) -> RkWorkspace {
+        trbdf2_ws_jac(batch, dim, JacStructure::Dense)
+    }
+
+    fn trbdf2_ws_jac(batch: usize, dim: usize, jac: JacStructure) -> RkWorkspace {
         let ct = CompiledTableau::cached(MethodId::TRBDF2);
         RkWorkspace::new_for_tableau(
             ct,
@@ -716,6 +879,7 @@ mod tests {
             dim,
             Layout::RowMajor,
             &Tolerances::scalar(1e-10, 1e-10),
+            jac,
         )
     }
 
@@ -796,6 +960,41 @@ mod tests {
         let (_, je3, lu3) = ws.newton.as_mut().unwrap().take_work(0);
         assert_eq!(je3, 0);
         assert_eq!(lu3, 1, "hγ drift forces a refactorization");
+    }
+
+    /// A banded-structure workspace over a diagonal system (decay is
+    /// `Banded { 0, 0 }`) must reproduce the dense attempt bit for bit:
+    /// the banded elimination performs the same nonzero arithmetic, and
+    /// the colored FD build recovers the same diagonal entries.
+    #[test]
+    fn banded_structure_matches_dense_bitwise() {
+        let sys = ExponentialDecay::new(vec![2.0], 4);
+        let ct = CompiledTableau::cached(MethodId::TRBDF2);
+        let y = BatchVec::from_rows(&[vec![1.0, -0.5, 2.0, 0.25]]);
+        let mut ws_d = trbdf2_ws(1, 4);
+        let mut ws_b = trbdf2_ws_jac(1, 4, JacStructure::Banded { lower: 0, upper: 0 });
+        rk_attempt(ct, &sys, &[0.0], &[0.2], &y, &mut ws_d, &[false], None, true);
+        rk_attempt(ct, &sys, &[0.0], &[0.2], &y, &mut ws_b, &[false], None, true);
+        assert!(ws_d.newton.as_ref().unwrap().newton_ok(0));
+        assert!(ws_b.newton.as_ref().unwrap().newton_ok(0));
+        for d in 0..4 {
+            assert_eq!(
+                ws_d.y_new.row(0)[d].to_bits(),
+                ws_b.y_new.row(0)[d].to_bits(),
+                "y_new[{d}] differs between dense and banded structure"
+            );
+            assert_eq!(
+                ws_d.err.row(0)[d].to_bits(),
+                ws_b.err.row(0)[d].to_bits(),
+                "err[{d}] differs between dense and banded structure"
+            );
+        }
+        // The colored FD build costs one evaluation per color (1 here)
+        // instead of one per column (4).
+        let (fe_b, je_b, lu_b) = ws_b.newton.as_mut().unwrap().take_work(0);
+        let (fe_d, je_d, lu_d) = ws_d.newton.as_mut().unwrap().take_work(0);
+        assert_eq!((je_b, lu_b), (je_d, lu_d));
+        assert_eq!(fe_d - fe_b, 3, "colored FD saves dim − colors evaluations");
     }
 
     /// Newton work is per-row: a two-row batch where only one row is

@@ -93,6 +93,7 @@ pub(crate) fn joint_core(
         dim,
         exec.workspace_layout(opts.layout),
         &opts.tols,
+        opts.jac_structure.unwrap_or_else(|| exec.jac_structure()),
     );
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];

@@ -1,16 +1,30 @@
-//! Small dense linear algebra for the implicit (ESDIRK) solver.
+//! Small dense and banded linear algebra for the implicit (ESDIRK)
+//! solver.
 //!
 //! The simplified-Newton iteration of [`super::implicit`] solves one
-//! `dim × dim` system `(I − hγJ)·δ = −F` per iteration per row. State
-//! dimensions in this crate are small (VdP: 2, Robertson: 3, neural
-//! dynamics: tens), so a textbook LU factorization with partial pivoting
-//! is both the fastest and the most predictable choice: no blocking, no
-//! allocation, purely sequential arithmetic — the factorization of a
-//! given matrix is **bit-for-bit deterministic** wherever it runs, which
-//! is what lets implicit solves stay bitwise-identical across pool
-//! kinds, thread counts and layouts.
+//! `dim × dim` system `(I − hγJ)·δ = −F` per iteration per row. For
+//! small state dimensions (VdP: 2, Robertson: 3, neural dynamics: tens)
+//! a textbook dense LU factorization with partial pivoting is both the
+//! fastest and the most predictable choice: no blocking, no allocation,
+//! purely sequential arithmetic — the factorization of a given matrix
+//! is **bit-for-bit deterministic** wherever it runs, which is what
+//! lets implicit solves stay bitwise-identical across pool kinds,
+//! thread counts and layouts.
 //!
-//! Both entry points work in place on caller-provided scratch (the
+//! Method-of-lines discretizations (the reaction–diffusion problems)
+//! push `dim` to 10²–10⁴, where dense O(dim³) factorization is
+//! infeasible — but their Jacobians are *banded* (`kl` subdiagonals,
+//! `ku` superdiagonals). The banded pair [`banded_lu_factor`] /
+//! [`banded_lu_solve`] factors the same iteration matrix in
+//! O(dim·(kl+ku)²) time and O(dim·(2kl+ku+1)) storage, in the LAPACK
+//! `dgbtf2`/`dgbtrs` layout, with the same determinism contract: the
+//! pivot choices and every per-element floating-point operation match
+//! the dense elimination exactly, so a full-band banded factorization
+//! (`kl = ku = n−1`) solves bit-for-bit like the dense one, and on a
+//! genuinely banded matrix the banded and dense paths produce
+//! bitwise-identical solutions (`tests/linalg_props.rs`).
+//!
+//! All entry points work in place on caller-provided scratch (the
 //! per-row blocks of [`super::step::RkWorkspace`]'s Newton scratch), so
 //! the steady state of an implicit solve performs zero heap allocations
 //! (`tests/alloc_regression.rs`).
@@ -89,6 +103,235 @@ pub fn lu_solve(a: &[f64], piv: &[usize], n: usize, x: &mut [f64]) {
             s -= a[i * n + j] * x[j];
         }
         x[i] = s / a[i * n + i];
+    }
+}
+
+/// Width of one column of banded storage for a matrix with `kl`
+/// subdiagonals and `ku` superdiagonals: `kl + ku + 1` band rows plus
+/// `kl` extra rows of headroom for the fill that partial pivoting can
+/// push into the upper triangle (U gains at most `kl` superdiagonals).
+pub const fn banded_width(kl: usize, ku: usize) -> usize {
+    2 * kl + ku + 1
+}
+
+/// Flat index of entry `A[i, j]` in the column-major banded storage of
+/// [`banded_lu_factor`]: column `j` occupies the `banded_width(kl, ku)`
+/// slots starting at `j * banded_width(kl, ku)`, with the diagonal at
+/// offset `kl + ku` and entry `(i, j)` at offset `kl + ku + i − j`.
+/// Representable: `j − i ≤ ku + kl` (band plus pivot fill) and
+/// `i − j ≤ kl`.
+#[inline]
+pub fn banded_index(kl: usize, ku: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i + ku + kl >= j && j + kl >= i, "({i}, {j}) outside banded storage");
+    j * banded_width(kl, ku) + (kl + ku + i) - j
+}
+
+/// Factor the `n × n` banded matrix in `ab` in place as `P·A = L·U`
+/// with partial pivoting — the banded analogue of [`lu_factor`], in
+/// LAPACK `dgbtf2` storage (see [`banded_index`]; `ab` is
+/// `n * banded_width(kl, ku)` long, the `kl` headroom rows per column
+/// zero on entry). On return the multiplier rows below each column's
+/// diagonal hold `L` (attached to their *original* rows — unlike the
+/// dense factorization, later pivot swaps do not relabel earlier
+/// multipliers; [`banded_lu_solve`] interleaves the recorded swaps
+/// instead, which yields bitwise-identical solutions) and the band
+/// above holds `U`, widened by pivot fill to at most `kl + ku`
+/// superdiagonals. `piv[k]` records the absolute row swapped into
+/// position `k`. Returns `false` on an exactly zero pivot column, like
+/// the dense path.
+///
+/// Determinism contract: the pivot search covers exactly the rows the
+/// dense search would find nonzero (everything below `k + kl` in a
+/// banded matrix is structurally zero), breaks ties identically (first
+/// maximum wins), and the elimination performs, for every element, the
+/// same single fused `x −= m·u` update per step `k` that the dense
+/// loop performs — so factoring with full bandwidth
+/// (`kl = ku = n − 1`) reproduces the dense pivots and solutions
+/// bit-for-bit, and on a banded matrix the dense path's extra
+/// arithmetic touches only structural zeros.
+pub fn banded_lu_factor(ab: &mut [f64], piv: &mut [usize], n: usize, kl: usize, ku: usize) -> bool {
+    let w = banded_width(kl, ku);
+    debug_assert_eq!(ab.len(), n * w);
+    debug_assert!(piv.len() >= n);
+    // Rightmost column the elimination has filled so far: row swaps and
+    // updates at step k must reach every column where row k or the
+    // pivot row have entries (monotone, ≤ k + ku + kl).
+    let mut ju = 0usize;
+    for k in 0..n {
+        let km = kl.min(n - 1 - k);
+        let col = k * w + kl + ku; // A[k, k]
+        // Pivot: largest magnitude in column k on rows k..=k+km
+        // (first maximum wins, matching the dense search).
+        let mut p = 0usize;
+        let mut best = ab[col].abs();
+        for i in 1..=km {
+            let v = ab[col + i].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        piv[k] = k + p;
+        if best == 0.0 {
+            return false;
+        }
+        ju = ju.max((k + ku + p).min(n - 1));
+        if p != 0 {
+            for j in k..=ju {
+                let idx = j * w + (kl + ku) - (j - k);
+                ab.swap(idx, idx + p);
+            }
+        }
+        // Column scale: store the multipliers m_i = A[k+i, k] / pivot —
+        // the same single division the dense loop performs.
+        let pivot = ab[col];
+        for i in 1..=km {
+            ab[col + i] /= pivot;
+        }
+        // Rank-1 update, column-oriented: each element (k+i, j) receives
+        // exactly one `x −= m_i · u_kj`, the identical operation (and
+        // identical operands) of the dense row-oriented loop — only the
+        // traversal order over *independent* elements differs, which
+        // cannot change any element's value. No zero-skip on `u_kj`:
+        // the dense loop has none, and skipping would break bitwise
+        // parity on inf/NaN multipliers.
+        for j in (k + 1)..=ju {
+            let ucol = j * w + (kl + ku) - (j - k); // A[k, j]
+            let ukj = ab[ucol];
+            for i in 1..=km {
+                ab[ucol + i] -= ab[col + i] * ukj;
+            }
+        }
+    }
+    true
+}
+
+/// Solve `A·x = b` in place using the factors produced by
+/// [`banded_lu_factor`]: `x` enters holding `b` and leaves holding the
+/// solution. Row swaps are interleaved with the forward substitution
+/// (the multipliers stay attached to their original rows), which
+/// applies, per solution component, the same multiplier·x products in
+/// the same order as [`lu_solve`]'s permute-then-substitute — the two
+/// conventions are bitwise-equivalent relabelings of each other.
+pub fn banded_lu_solve(ab: &[f64], piv: &[usize], n: usize, kl: usize, ku: usize, x: &mut [f64]) {
+    let w = banded_width(kl, ku);
+    debug_assert_eq!(ab.len(), n * w);
+    debug_assert!(piv.len() >= n && x.len() >= n);
+    // Forward: interleaved swap + column-oriented unit-L elimination.
+    for k in 0..n {
+        let p = piv[k];
+        if p != k {
+            x.swap(k, p);
+        }
+        let km = kl.min(n - 1 - k);
+        let col = k * w + kl + ku;
+        let xk = x[k];
+        for i in 1..=km {
+            x[k + i] -= ab[col + i] * xk;
+        }
+    }
+    // Backward: U with up to ku + kl superdiagonals of pivot fill.
+    for i in (0..n).rev() {
+        let hi = (i + ku + kl).min(n - 1);
+        let mut s = x[i];
+        for j in (i + 1)..=hi {
+            s -= ab[j * w + (kl + ku) - (j - i)] * x[j];
+        }
+        x[i] = s / ab[i * w + kl + ku];
+    }
+}
+
+/// Owning banded-storage matrix in the [`banded_lu_factor`] layout —
+/// the assembly/test convenience wrapper around the in-place free
+/// functions (the solver's Newton scratch uses the free functions on
+/// workspace slices directly and never allocates per step).
+#[derive(Clone, Debug)]
+pub struct BandedMatrix {
+    n: usize,
+    kl: usize,
+    ku: usize,
+    ab: Vec<f64>,
+}
+
+impl BandedMatrix {
+    /// An `n × n` zero matrix with `kl` sub- and `ku` superdiagonals
+    /// (storage includes the `kl` pivot-fill headroom rows).
+    pub fn zeros(n: usize, kl: usize, ku: usize) -> Self {
+        Self { n, kl, ku, ab: vec![0.0; n * banded_width(kl, ku)] }
+    }
+
+    /// Build from a row-major dense `n × n` matrix, keeping only the
+    /// entries inside the `(kl, ku)` band.
+    pub fn from_dense(a: &[f64], n: usize, kl: usize, ku: usize) -> Self {
+        assert_eq!(a.len(), n * n);
+        let mut m = Self::zeros(n, kl, ku);
+        for i in 0..n {
+            let jlo = i.saturating_sub(kl);
+            let jhi = (i + ku).min(n.saturating_sub(1));
+            for j in jlo..=jhi {
+                m.ab[banded_index(kl, ku, i, j)] = a[i * n + j];
+            }
+        }
+        m
+    }
+
+    /// Matrix order.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Subdiagonal count.
+    pub fn kl(&self) -> usize {
+        self.kl
+    }
+
+    /// Superdiagonal count.
+    pub fn ku(&self) -> usize {
+        self.ku
+    }
+
+    /// Entry `A[i, j]`; zero outside the band.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        assert!(i < self.n && j < self.n);
+        if j + self.kl < i || i + self.ku < j {
+            0.0
+        } else {
+            self.ab[banded_index(self.kl, self.ku, i, j)]
+        }
+    }
+
+    /// Set entry `A[i, j]`; panics outside the band.
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        assert!(i < self.n && j < self.n);
+        assert!(
+            j + self.kl >= i && i + self.ku >= j,
+            "({i}, {j}) outside the ({}, {}) band",
+            self.kl,
+            self.ku
+        );
+        self.ab[banded_index(self.kl, self.ku, i, j)] = v;
+    }
+
+    /// The raw banded storage (length `n * banded_width(kl, ku)`).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.ab
+    }
+
+    /// Mutable raw banded storage.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.ab
+    }
+
+    /// Factor in place via [`banded_lu_factor`]; `piv` must hold `n`
+    /// slots. Returns `false` on a singular pivot column.
+    pub fn factor(&mut self, piv: &mut [usize]) -> bool {
+        banded_lu_factor(&mut self.ab, piv, self.n, self.kl, self.ku)
+    }
+
+    /// Solve against factors produced by [`Self::factor`] via
+    /// [`banded_lu_solve`].
+    pub fn solve(&self, piv: &[usize], x: &mut [f64]) {
+        banded_lu_solve(&self.ab, piv, self.n, self.kl, self.ku, x);
     }
 }
 
@@ -173,5 +416,128 @@ mod tests {
         for (x, y) in lu1.iter().zip(&lu2) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    /// Banded solve of a dense matrix restricted to its band, compared
+    /// against the dense oracle run on the same band-restricted matrix.
+    fn banded_vs_dense(a_banded: &[f64], b: &[f64], n: usize, kl: usize, ku: usize) {
+        let dense = solve(a_banded, b, n);
+        let mut m = BandedMatrix::from_dense(a_banded, n, kl, ku);
+        let mut piv = vec![0usize; n];
+        let ok = m.factor(&mut piv);
+        assert_eq!(ok, dense.is_some(), "banded and dense must agree on singularity");
+        let Some(xd) = dense else { return };
+        let mut xb = b.to_vec();
+        m.solve(&piv, &mut xb);
+        for i in 0..n {
+            assert!(
+                (xb[i] - xd[i]).abs() <= 1e-12 * (1.0 + xd[i].abs()),
+                "x[{i}]: banded {} vs dense {}",
+                xb[i],
+                xd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn banded_tridiagonal_matches_dense() {
+        // A stiff-looking tridiagonal (the 1-D Laplacian Newton shape).
+        let n = 6;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0 + 2.0 * 0.3;
+            if i > 0 {
+                a[i * n + i - 1] = -0.3;
+            }
+            if i + 1 < n {
+                a[i * n + i + 1] = -0.31;
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|i| (i as f64) - 2.5).collect();
+        banded_vs_dense(&a, &b, n, 1, 1);
+    }
+
+    #[test]
+    fn banded_needs_pivoting() {
+        // Zero on the diagonal forces a row swap and pivot fill.
+        let n = 4;
+        #[rustfmt::skip]
+        let a = vec![
+            0.0, 2.0, 0.0, 0.0,
+            3.0, 1.0, 1.0, 0.0,
+            0.0, 4.0, 0.5, 2.0,
+            0.0, 0.0, 1.0, 1.0,
+        ];
+        banded_vs_dense(&a, &[1.0, -2.0, 0.5, 3.0], n, 1, 1);
+    }
+
+    #[test]
+    fn full_band_is_bitwise_dense() {
+        // kl = ku = n−1: every slot representable, the elimination must
+        // reproduce the dense pivots and solution bit-for-bit.
+        let n = 4;
+        #[rustfmt::skip]
+        let a = vec![
+            0.5, -1.0, 2.0, 0.25,
+            3.0, 1.0, -0.5, 1.5,
+            -2.0, 4.0, 0.5, 2.0,
+            1.0, -3.0, 1.0, 1.0,
+        ];
+        let b = [1.0, -2.0, 0.5, 3.0];
+        let mut lu = a.clone();
+        let mut pd = vec![0usize; n];
+        assert!(lu_factor(&mut lu, &mut pd, n));
+        let mut xd = b.to_vec();
+        lu_solve(&lu, &pd, n, &mut xd);
+
+        let mut m = BandedMatrix::from_dense(&a, n, n - 1, n - 1);
+        let mut pb = vec![0usize; n];
+        assert!(m.factor(&mut pb));
+        let mut xb = b.to_vec();
+        m.solve(&pb, &mut xb);
+        assert_eq!(pd, pb, "pivot sequences must match");
+        for i in 0..n {
+            assert_eq!(xd[i].to_bits(), xb[i].to_bits(), "x[{i}] differs from dense");
+        }
+    }
+
+    #[test]
+    fn diagonal_only_band() {
+        let n = 5;
+        let mut m = BandedMatrix::zeros(n, 0, 0);
+        for i in 0..n {
+            m.set(i, i, (i + 1) as f64);
+        }
+        let mut piv = vec![0usize; n];
+        assert!(m.factor(&mut piv));
+        let mut x: Vec<f64> = (0..n).map(|i| (i + 1) as f64 * 3.0).collect();
+        m.solve(&piv, &mut x);
+        for (i, v) in x.iter().enumerate() {
+            assert_eq!(*v, 3.0, "x[{i}]");
+            assert_eq!(piv[i], i);
+        }
+    }
+
+    #[test]
+    fn banded_reports_singular() {
+        let mut m = BandedMatrix::zeros(3, 1, 1);
+        // Column 1 entirely zero within reach of elimination.
+        m.set(0, 0, 1.0);
+        m.set(2, 2, 1.0);
+        let mut piv = vec![0usize; 3];
+        assert!(!m.factor(&mut piv));
+    }
+
+    #[test]
+    fn banded_matrix_get_set_roundtrip() {
+        let mut m = BandedMatrix::zeros(5, 2, 1);
+        m.set(3, 1, 7.5); // subdiagonal 2
+        m.set(2, 3, -1.5); // superdiagonal 1
+        m.set(4, 4, 2.0);
+        assert_eq!(m.get(3, 1), 7.5);
+        assert_eq!(m.get(2, 3), -1.5);
+        assert_eq!(m.get(4, 4), 2.0);
+        assert_eq!(m.get(0, 4), 0.0); // outside the band
+        assert_eq!(m.get(4, 0), 0.0);
     }
 }

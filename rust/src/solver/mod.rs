@@ -231,6 +231,14 @@ pub struct SolveOptions {
     /// The process default honors the `RODE_LAYOUT` environment variable
     /// (how CI runs the suite in both layouts).
     pub layout: Layout,
+    /// Jacobian-structure override for the implicit Newton path. `None`
+    /// (the default) trusts the system's own declaration
+    /// ([`crate::problems::OdeSystem::jac_structure`]); `Some(Dense)`
+    /// forces the dense factorization on a banded system (the
+    /// banded-vs-dense comparisons in `benches/coordinator_bench.rs`
+    /// lean on this). Results are bitwise-identical for any structure
+    /// that covers the system's true nonzeros; only cost differs.
+    pub jac_structure: Option<crate::problems::JacStructure>,
 }
 
 impl SolveOptions {
@@ -248,6 +256,7 @@ impl SolveOptions {
             compact_threshold: 0.0,
             exec: ExecPolicy::default(),
             layout: Layout::default_from_env(),
+            jac_structure: None,
         }
     }
 
@@ -300,6 +309,14 @@ impl SolveOptions {
     /// way.
     pub fn with_layout(mut self, layout: Layout) -> Self {
         self.layout = layout;
+        self
+    }
+
+    /// Override the Jacobian structure used by the implicit Newton path
+    /// (see [`SolveOptions::jac_structure`]); results are
+    /// bitwise-identical for any structure covering the true nonzeros.
+    pub fn with_jac_structure(mut self, jac: crate::problems::JacStructure) -> Self {
+        self.jac_structure = Some(jac);
         self
     }
 

@@ -130,7 +130,8 @@ pub(crate) fn solve_ivp_parallel_core(
     let mut next_eval = vec![0usize; batch];
     let span: Vec<f64> = (0..batch).map(|i| grid.t1(i) - grid.t0(i)).collect();
 
-    let mut ws = RkWorkspace::new_for_tableau(ct, batch, dim, opts.layout, &opts.tols);
+    let jac = opts.jac_structure.unwrap_or_else(|| sys.jac_structure());
+    let mut ws = RkWorkspace::new_for_tableau(ct, batch, dim, opts.layout, &opts.tols, jac);
     // Previous-step slopes for Hermite interpolation (f at step start).
     let mut f_start = BatchVec::zeros(batch, dim);
     let mut interp_coeffs = vec![0.0; DOPRI5_NCOEFF * dim];

@@ -46,7 +46,7 @@ use super::kernels;
 use super::norm::scaled_sumsq_rows;
 use super::tableau::Tableau;
 use super::Tolerances;
-use crate::problems::OdeSystem;
+use crate::problems::{JacStructure, OdeSystem};
 use crate::tensor::{BatchVec, LaneStore, Layout};
 
 /// Upper bound on tableau stages supported by the stack-allocated
@@ -225,23 +225,26 @@ impl RkWorkspace {
 
     /// Workspace sized for a compiled tableau: the explicit buffers in
     /// the requested [`Layout`], plus the per-slot Newton scratch
-    /// ([`super::implicit`]) when the tableau is implicit. Implicit
-    /// attempts are layout-blind (the per-row Newton solves have no lane
-    /// passes to transpose for), so an implicit workspace skips the SoA
-    /// mirrors a `DimMajor` request would otherwise allocate — results
-    /// are bitwise-identical in both layouts either way. This is the
-    /// constructor the solve loops use.
+    /// ([`super::implicit`]) when the tableau is implicit — sized for
+    /// the given Jacobian structure (`jac`), which selects dense or
+    /// banded factorization storage (O(dim²) vs O(dim·bandwidth) per
+    /// slot). Implicit attempts are layout-blind (the per-row Newton
+    /// solves have no lane passes to transpose for), so an implicit
+    /// workspace skips the SoA mirrors a `DimMajor` request would
+    /// otherwise allocate — results are bitwise-identical in both
+    /// layouts either way. This is the constructor the solve loops use.
     pub fn new_for_tableau(
         ct: &CompiledTableau,
         batch: usize,
         dim: usize,
         layout: Layout,
         tols: &Tolerances,
+        jac: JacStructure,
     ) -> Self {
         let layout = if ct.is_implicit() { Layout::RowMajor } else { layout };
         let mut ws = Self::new_with_layout(ct.tab.stages, batch, dim, layout);
         if ct.is_implicit() {
-            ws.newton = Some(NewtonWs::new(batch, dim, tols));
+            ws.newton = Some(NewtonWs::new(batch, dim, tols, jac));
         }
         ws
     }
@@ -889,6 +892,14 @@ pub(crate) trait StageExec {
         requested
     }
 
+    /// The Jacobian structure the underlying system declares
+    /// ([`crate::problems::OdeSystem::jac_structure`]), used to size the
+    /// Newton scratch when no per-solve override is given. Executors
+    /// wrapping a concrete system forward its declaration.
+    fn jac_structure(&self) -> JacStructure {
+        JacStructure::Dense
+    }
+
     /// One batched dynamics evaluation (initial slopes, non-FSAL refresh).
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>);
 
@@ -945,6 +956,10 @@ pub(crate) struct InlineExec<'a> {
 impl StageExec for InlineExec<'_> {
     fn dim(&self) -> usize {
         self.sys.dim()
+    }
+
+    fn jac_structure(&self) -> JacStructure {
+        self.sys.jac_structure()
     }
 
     fn eval(&self, t: &[f64], y: &BatchVec, dy: &mut BatchVec, active: Option<&[bool]>) {

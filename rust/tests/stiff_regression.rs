@@ -14,7 +14,7 @@
 use rode::bench::vdp_stiff_span;
 use rode::exec::{solve_ivp_joint_pooled, solve_ivp_parallel_pooled};
 use rode::prelude::*;
-use rode::problems::{Robertson, VdP};
+use rode::problems::{ReactionDiffusion, Robertson, VdP};
 use rode::tensor::BatchVec;
 
 /// The implicit method under test. Defaults to TR-BDF2; CI re-runs the
@@ -238,6 +238,168 @@ fn implicit_joint_batch256_bitwise_across_pools_and_layouts() {
                 &serial,
                 &got,
                 &format!("joint {} {} threads={threads} chunk={chunk}", kind.name(), layout.name()),
+            );
+        }
+    }
+}
+
+/// The reaction–diffusion workload (Fisher–KPP method of lines,
+/// tridiagonal Jacobian → banded Newton) reaches `Status::Success` with
+/// the implicit method under test, does real Newton work, keeps the
+/// state inside the PDE's invariant region `[0, 1]`, and agrees with a
+/// tight-tolerance self-reference — the accuracy bar for the banded
+/// factorization, not just a "didn't crash" check.
+#[test]
+fn reaction_diffusion_solves_with_implicit_and_matches_tight_reference() {
+    let (batch, dim) = (4, 64);
+    let sys = ReactionDiffusion::sweep(batch, dim);
+    let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 0.5, 5);
+    let opts = SolveOptions::new(stiff_method())
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(200_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success(), "{:?}", sol.status);
+    for i in 0..batch {
+        assert!(sol.stats[i].n_jac_evals > 0, "row {i}: no Jacobian builds");
+        assert!(sol.stats[i].n_lu_factor >= sol.stats[i].n_jac_evals, "row {i}: LU count");
+        for e in 0..5 {
+            for &u in sol.y(i, e) {
+                assert!(
+                    (-1e-3..=1.0 + 1e-3).contains(&u),
+                    "row {i} eval {e}: u = {u} left the invariant region [0, 1]"
+                );
+            }
+        }
+    }
+
+    let tight = SolveOptions::new(stiff_method())
+        .with_tols(1e-9, 1e-7)
+        .with_max_steps(2_000_000);
+    let reference = solve_ivp_parallel(&sys, &y0, &grid, &tight);
+    assert!(reference.all_success(), "tight: {:?}", reference.status);
+    for i in 0..batch {
+        for d in 0..dim {
+            let (got, want) = (sol.y_final(i)[d], reference.y_final(i)[d]);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "row {i} d={d}: {got} vs tight reference {want}"
+            );
+        }
+    }
+}
+
+/// The banded factorization is a cost win, not a different computation:
+/// forcing the dense path on the same reaction–diffusion problem (via
+/// the `SolveOptions::jac_structure` override) must reproduce the banded
+/// solve **bitwise** — trajectories and every `Stats` counter (both arms
+/// use the analytic Jacobian hooks, so even `n_f_evals` agrees).
+#[test]
+fn reaction_diffusion_banded_matches_forced_dense_bitwise() {
+    let (batch, dim) = (3, 48);
+    let sys = ReactionDiffusion::sweep(batch, dim);
+    let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 0.4, 4);
+    let base = SolveOptions::new(stiff_method())
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(200_000)
+        .with_trace();
+    let banded = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(banded.all_success(), "banded: {:?}", banded.status);
+    let dense = solve_ivp_parallel(
+        &sys,
+        &y0,
+        &grid,
+        &base.clone().with_jac_structure(JacStructure::Dense),
+    );
+    assert_bitwise(&banded, &dense, "banded vs forced-dense");
+}
+
+/// The banded-path acceptance matrix: a mixed-stiffness
+/// reaction–diffusion batch through the **parallel** loop must be
+/// bitwise-identical across pool kind × threads × steal-chunk × layout ×
+/// compaction — the same determinism contract the dense implicit path
+/// holds, now with the banded Newton scratch moving under compaction and
+/// splitting across shard workers.
+#[test]
+fn reaction_diffusion_parallel_bitwise_across_pools_layouts_compaction() {
+    let (batch, dim) = (32, 64);
+    let sys = ReactionDiffusion::sweep(batch, dim);
+    let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 0.25, 4);
+    let base = SolveOptions::new(stiff_method())
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(200_000)
+        .with_trace();
+    let serial = solve_ivp_parallel(&sys, &y0, &grid, &base);
+    assert!(serial.all_success(), "serial: {:?}", &serial.status[..4]);
+
+    for layout in [Layout::RowMajor, Layout::DimMajor] {
+        for compact in [0.0, 0.5] {
+            for (kind, threads, chunk) in [
+                (PoolKind::Scoped, 4, 0),
+                (PoolKind::Persistent, 4, 0),
+                (PoolKind::Persistent, 7, 5),
+            ] {
+                let opts = base
+                    .clone()
+                    .with_layout(layout)
+                    .with_compaction(compact)
+                    .with_threads(threads)
+                    .with_pool(kind)
+                    .with_steal_chunk(chunk);
+                let got = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+                assert_bitwise(
+                    &serial,
+                    &got,
+                    &format!(
+                        "rd parallel {} {} compact={compact} threads={threads} chunk={chunk}",
+                        kind.name(),
+                        layout.name()
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The same reaction–diffusion batch through the **joint** loop: the
+/// banded Newton scratch splits across the pooled joint executors'
+/// workspace views, bitwise-identically across pool kinds, thread
+/// counts, steal-chunks and layouts.
+#[test]
+fn reaction_diffusion_joint_bitwise_across_pools_and_layouts() {
+    let (batch, dim) = (32, 64);
+    let sys = ReactionDiffusion::sweep(batch, dim);
+    let y0 = BatchVec::from_rows(&sys.front_y0(batch));
+    let grid = TimeGrid::linspace_shared(batch, 0.0, 0.2, 3);
+    let base = SolveOptions::new(stiff_method())
+        .with_tols(1e-6, 1e-4)
+        .with_max_steps(200_000);
+    let serial = solve_ivp_joint(&sys, &y0, &grid, &base);
+    assert!(serial.all_success(), "serial joint: {:?}", &serial.status[..4]);
+
+    for layout in [Layout::RowMajor, Layout::DimMajor] {
+        for (kind, threads, chunk) in [
+            (PoolKind::Scoped, 4, 0),
+            (PoolKind::Persistent, 4, 0),
+            (PoolKind::Persistent, 3, 8),
+        ] {
+            let opts = base
+                .clone()
+                .with_layout(layout)
+                .with_threads(threads)
+                .with_pool(kind)
+                .with_steal_chunk(chunk);
+            let got = solve_ivp_joint_pooled(&sys, &y0, &grid, &opts);
+            assert_bitwise(
+                &serial,
+                &got,
+                &format!(
+                    "rd joint {} {} threads={threads} chunk={chunk}",
+                    kind.name(),
+                    layout.name()
+                ),
             );
         }
     }

@@ -491,17 +491,11 @@ fn bench_pdesweep() {
     }
 }
 
-/// Trace replay: a serving-shaped mixed trace — mostly easy VdP, a stiff
-/// tail that dies on the explicit default and must be escalated to
-/// trbdf2, and a sliver of malformed (NaN-state) requests — fired as fast
-/// as possible at a bounded queue. Measures sustained throughput *and*
-/// the degraded-mode machinery: shed, retried and escalated counts, and
-/// the success rate over admitted requests (`replay_success_rate`, which
-/// carries an advisory floor in `BENCH_baseline.json` — malformed traffic
-/// fails by design, so the floor sits below the easy+stiff fraction).
-fn bench_replay() {
-    println!("--- serve replay (mixed easy/stiff/malformed trace, bounded queue) ---");
-    let n = 2000usize;
+/// The serving-shaped mixed trace the replay legs share: mostly easy VdP
+/// (several grid shapes, so a fleet has more than one bucket to spread),
+/// a stiff tail that dies on the explicit default, and a sliver of
+/// malformed (NaN-state) requests the service must absorb.
+fn replay_trace(n: usize) -> (Vec<SolveRequest>, u64, u64, u64) {
     let mut rng = Rng64::new(23);
     let mut trace = Vec::with_capacity(n);
     let (mut n_easy, mut n_stiff, mut n_bad) = (0u64, 0u64, 0u64);
@@ -509,10 +503,11 @@ fn bench_replay() {
         let roll = rng.below(100);
         let r = if roll < 85 {
             n_easy += 1;
+            let n_eval = [10usize, 20, 40, 80][rng.below(4)];
             SolveRequest::new(
                 ProblemSpec::Vdp { mu: rng.range(0.5, 10.0) },
                 vec![rng.normal(), rng.normal()],
-                (0..20).map(|k| k as f64 * 0.25).collect(),
+                (0..n_eval).map(|k| k as f64 * 0.25).collect(),
             )
         } else if roll < 95 {
             // Dies of DtUnderflow on dopri5 under the engine options
@@ -537,8 +532,29 @@ fn bench_replay() {
         };
         trace.push(r);
     }
-    println!("trace: {n_easy} easy / {n_stiff} stiff / {n_bad} malformed");
+    (trace, n_easy, n_stiff, n_bad)
+}
 
+/// What one replay leg measured (throughput + degraded-mode counters).
+struct ReplayLeg {
+    wall_ms: f64,
+    admitted: u64,
+    ok: u64,
+    escalated_ok: u64,
+    shed: u64,
+    retried: u64,
+    expired: u64,
+    req_per_s: f64,
+    success_rate: f64,
+    classified: u64,
+    cls_hits: u64,
+    cls_misses: u64,
+}
+
+/// Fire the trace at a fresh coordinator with the given fleet size and
+/// classifier setting, as fast as possible, and collect the counters.
+fn run_replay(trace: Vec<SolveRequest>, workers: usize, classifier_on: bool) -> ReplayLeg {
+    use std::sync::atomic::Ordering;
     // Pin the explicit method's minimum step above its stability ceiling
     // at μ = 1000 so the stiff tail genuinely underflows (same options as
     // the stiff-regression pin).
@@ -552,11 +568,18 @@ fn bench_replay() {
             max_batch: 32,
             max_wait: Duration::from_millis(1),
             max_queue: 512,
+            workers,
+            classifier: if classifier_on {
+                rode::coordinator::ClassifierPolicy::enabled()
+            } else {
+                rode::coordinator::ClassifierPolicy::default()
+            },
             ..ServiceConfig::default()
         },
         move || Box::new(NativeEngine::new(opts.clone())),
     );
 
+    let n = trace.len() as u64;
     let t0 = Instant::now();
     let rxs: Vec<_> = trace.into_iter().map(|r| coord.submit(r)).collect();
     let mut ok = 0u64;
@@ -572,33 +595,101 @@ fn bench_replay() {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    use std::sync::atomic::Ordering;
     let m = coord.metrics();
     let shed = m.requests_shed.load(Ordering::Relaxed);
-    let retried = m.requests_retried.load(Ordering::Relaxed);
-    let expired = m.requests_deadline_expired.load(Ordering::Relaxed);
-    let admitted = n as u64 - shed;
-    let success_rate = ok as f64 / admitted.max(1) as f64;
-    let req_per_s = admitted as f64 / wall;
-    println!(
-        "{ok}/{admitted} admitted ok ({escalated_ok} via escalation) in {wall:.2}s = \
-         {req_per_s:.0} req/s | shed={shed} retried={retried}"
-    );
+    let admitted = n - shed;
     println!("{}", m.summary());
+    ReplayLeg {
+        wall_ms: wall * 1e3,
+        admitted,
+        ok,
+        escalated_ok,
+        shed,
+        retried: m.requests_retried.load(Ordering::Relaxed),
+        expired: m.requests_deadline_expired.load(Ordering::Relaxed),
+        req_per_s: admitted as f64 / wall,
+        success_rate: ok as f64 / admitted.max(1) as f64,
+        classified: m.classified_stiff.load(Ordering::Relaxed),
+        cls_hits: m.classifier_hits.load(Ordering::Relaxed),
+        cls_misses: m.classifier_misses.load(Ordering::Relaxed),
+    }
+}
 
-    let s = Summary::from_samples(&[wall * 1e3]);
-    let rec = BenchRecord::new("serve-replay", &s)
+fn replay_record(name: &str, n: usize, leg: &ReplayLeg) -> BenchRecord {
+    let s = Summary::from_samples(&[leg.wall_ms]);
+    BenchRecord::new(name, &s)
         .field("n_requests", n as f64)
-        .field("admitted", admitted as f64)
-        .field("succeeded", ok as f64)
-        .field("escalated_ok", escalated_ok as f64)
-        .field("shed", shed as f64)
-        .field("retried", retried as f64)
-        .field("expired", expired as f64)
-        .field("req_per_s", req_per_s)
-        .field("replay_success_rate", success_rate);
-    match append_bench_json("BENCH_solver.json", &[rec]) {
-        Ok(()) => println!("appended serve-replay record to BENCH_solver.json"),
+        .field("admitted", leg.admitted as f64)
+        .field("succeeded", leg.ok as f64)
+        .field("escalated_ok", leg.escalated_ok as f64)
+        .field("shed", leg.shed as f64)
+        .field("retried", leg.retried as f64)
+        .field("expired", leg.expired as f64)
+        .field("req_per_s", leg.req_per_s)
+        .field("replay_success_rate", leg.success_rate)
+}
+
+/// Trace replay: the mixed trace fired at a bounded queue, in three legs.
+///
+/// - `serve-replay` — one worker, classifier off: the historical record
+///   (`replay_success_rate` carries a floor in `BENCH_baseline.json` —
+///   malformed traffic fails by design, so the floor sits below the
+///   easy+stiff fraction).
+/// - `serve-replay-w4` — four workers, classifier off: the fleet
+///   throughput leg; `replay_throughput_w4_vs_w1` (advisory floor) is
+///   the four-worker speedup over the one-worker leg.
+/// - `serve-replay-classified` — four workers, classifier on: the stiff
+///   tail is routed to trbdf2 *before* the first solve, so `retried`
+///   drops to roughly the malformed sliver; `classifier_hit_rate`
+///   (advisory floor) is hits over classified-stiff.
+fn bench_replay() {
+    println!("--- serve replay (mixed easy/stiff/malformed trace, bounded queue) ---");
+    let n = 2000usize;
+    let (trace, n_easy, n_stiff, n_bad) = replay_trace(n);
+    println!("trace: {n_easy} easy / {n_stiff} stiff / {n_bad} malformed");
+
+    let mut legs = Vec::new();
+    for (tag, workers, classifier_on) in
+        [("w1", 1usize, false), ("w4", 4, false), ("w4+classifier", 4, true)]
+    {
+        let leg = run_replay(trace.clone(), workers, classifier_on);
+        println!(
+            "{tag:<14} {}/{} admitted ok ({} via escalation) in {:.2}s = {:>7.0} req/s | \
+             shed={} retried={} classified={}",
+            leg.ok,
+            leg.admitted,
+            leg.escalated_ok,
+            leg.wall_ms / 1e3,
+            leg.req_per_s,
+            leg.shed,
+            leg.retried,
+            leg.classified
+        );
+        legs.push(leg);
+    }
+    let (w1, w4, cls) = (&legs[0], &legs[1], &legs[2]);
+    let throughput_ratio = w4.req_per_s / w1.req_per_s.max(1e-9);
+    let hit_rate = cls.cls_hits as f64 / cls.classified.max(1) as f64;
+    println!(
+        "fleet throughput w4/w1: x{throughput_ratio:.2} | classifier: {}/{} hits \
+         ({} misses), retried {} -> {} vs classifier-off",
+        cls.cls_hits, cls.classified, cls.cls_misses, w4.retried, cls.retried
+    );
+
+    let records = [
+        replay_record("serve-replay", n, w1),
+        replay_record("serve-replay-w4", n, w4)
+            .field("workers", 4.0)
+            .field("replay_throughput_w4_vs_w1", throughput_ratio),
+        replay_record("serve-replay-classified", n, cls)
+            .field("workers", 4.0)
+            .field("classified_stiff", cls.classified as f64)
+            .field("classifier_misses", cls.cls_misses as f64)
+            .field("retried_without_classifier", w4.retried as f64)
+            .field("classifier_hit_rate", hit_rate),
+    ];
+    match append_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => println!("appended {} serve-replay records to BENCH_solver.json", records.len()),
         Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
     }
 }

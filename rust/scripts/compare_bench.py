@@ -39,6 +39,8 @@ TRACKED = (
     "steps_vs_trbdf2",
     "replay_success_rate",
     "speedup_banded_vs_dense",
+    "replay_throughput_w4_vs_w1",
+    "classifier_hit_rate",
 )
 
 

@@ -232,6 +232,13 @@ pub struct RodeConfig {
     pub retry_method: Option<MethodId>,
     /// Escalation retries allowed per request (`max_retries` key).
     pub max_retries: u32,
+    /// Coordinator worker threads (`workers` key): each runs its own
+    /// engine + batcher; `0` = one per available core.
+    pub workers: usize,
+    /// Proactive stiffness classifier (`classifier` key): probe each
+    /// admitted request's dominant eigenvalue and route stiff ones to
+    /// the implicit fallback *before* the first solve.
+    pub classifier: bool,
 }
 
 impl Default for RodeConfig {
@@ -254,6 +261,8 @@ impl Default for RodeConfig {
             jac: None,
             retry_method: Some(MethodId::TRBDF2),
             max_retries: 1,
+            workers: 0,
+            classifier: false,
         }
     }
 }
@@ -333,6 +342,12 @@ impl RodeConfig {
         if let Some(v) = raw.get_usize("max_retries")? {
             cfg.max_retries = u32::try_from(v)
                 .map_err(|_| anyhow!("max_retries out of range: {v}"))?;
+        }
+        if let Some(v) = raw.get_usize("workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = raw.get_bool("classifier")? {
+            cfg.classifier = v;
         }
         Ok(cfg)
     }
@@ -508,6 +523,21 @@ mod tests {
         // Malformed structures are rejected, not defaulted.
         assert!(RodeConfig::from_raw(&RawConfig::parse("jac = banded:1").unwrap()).is_err());
         assert!(RodeConfig::from_raw(&RawConfig::parse("jac = sparse").unwrap()).is_err());
+    }
+
+    #[test]
+    fn fleet_keys_parse_and_validate() {
+        let raw = RawConfig::parse("workers = 4\nclassifier = true").unwrap();
+        let cfg = RodeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert!(cfg.classifier);
+        // Defaults: one worker per core, classifier off.
+        let cfg = RodeConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.workers, 0);
+        assert!(!cfg.classifier);
+        // Bad values are rejected, not defaulted.
+        assert!(RodeConfig::from_raw(&RawConfig::parse("workers = many").unwrap()).is_err());
+        assert!(RodeConfig::from_raw(&RawConfig::parse("classifier = on").unwrap()).is_err());
     }
 
     #[test]

@@ -16,6 +16,11 @@ use std::time::{Duration, Instant};
 
 /// Requests batch together iff these agree (the lowered artifacts and the
 /// native engine both need rectangular batches).
+///
+/// The key's `Hash` also drives fleet dispatch: the coordinator routes a
+/// request to `hash(key) % alive_workers` (`coordinator/fleet.rs`), so
+/// every request that *could* share a batch lands on the same worker's
+/// batcher and fleet parallelism never fragments batches.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BucketKey {
     pub kind: &'static str,

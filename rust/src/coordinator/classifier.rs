@@ -1,0 +1,342 @@
+//! Proactive stiffness classification: route a request to the implicit
+//! fallback *before* the first solve, instead of paying a failed explicit
+//! attempt and escalating afterwards.
+//!
+//! # Decision rule
+//!
+//! An explicit Runge–Kutta pair is stability-limited to steps with
+//! `|λ_max| · h` inside its stability region, where `λ_max` is the
+//! dominant eigenvalue of the Jacobian. The classifier estimates
+//! `|λ_max|` at `(t0, y0)` with a few finite-difference Jacobian–vector
+//! power iterations (the same `sqrt(ε)·(1+|y|)` perturbation convention
+//! as `solver/implicit.rs`'s FD Jacobians, but directional — O(iters)
+//! `f` evaluations, never a full Jacobian), and compares the implied
+//! stability-limited step count
+//!
+//! ```text
+//!   n_explicit ≈ |λ_max| · (t1 − t0) / radius(explicit method)
+//! ```
+//!
+//! against a budget. Above the budget, an accuracy-adequate explicit
+//! solve would spend almost all of its steps fighting stability — the
+//! defining symptom of stiffness — so the request is routed to the
+//! implicit fallback up front. The stability radius is derived from the
+//! tableau itself: the stability polynomial of an explicit RK method is
+//! `R(z) = 1 + Σ_k z^k · bᵀA^{k−1}𝟙`, and the radius is the extent of
+//! `|R(z)| ≤ 1` along the negative real axis (Dopri5 ≈ 3.3, Euler = 2).
+//!
+//! # Cost model
+//!
+//! Classification costs `iters + 1` dynamics evaluations on a *single*
+//! instance — microseconds, versus the milliseconds-to-seconds of a
+//! doomed explicit attempt across a whole batch. The estimate is local
+//! to `(t0, y0)`, so a problem that only becomes stiff later can be
+//! misclassified as explicit; the PR 7 escalation retry remains in place
+//! as the safety net for exactly that case (counted as a
+//! `classifier_miss` in [`super::Metrics`]).
+
+use super::request::{ProblemSpec, SolveRequest};
+use crate::problems::{ExponentialDecay, OdeSystem, VdP};
+use crate::solver::MethodId;
+
+/// Classifier outcome for one request, carried on its envelope so the
+/// hit/miss counters can be settled when the request turns terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Classified {
+    /// Classifier disabled, request carried an explicit method override,
+    /// or the estimate was unusable (empty span, non-finite state).
+    NotRun,
+    /// Predicted comfortably explicit; left on the engine default.
+    Explicit,
+    /// Predicted stiff; `SolveRequest::method` was set to the implicit
+    /// fallback before the first solve.
+    Stiff,
+}
+
+/// Tuning knobs for the proactive classifier. Disabled by default: the
+/// reactive escalation retry alone is the PR 7 behavior, and several
+/// tests pin it.
+#[derive(Debug, Clone)]
+pub struct ClassifierPolicy {
+    pub enabled: bool,
+    /// The explicit method whose stability radius bounds the step — the
+    /// method a default-routed request would actually run on.
+    pub explicit: MethodId,
+    /// Stability-limited explicit step count above which the implicit
+    /// fallback is predicted cheaper. The default is deliberately high:
+    /// a false `Stiff` costs one implicit solve (always succeeds, merely
+    /// slower on easy problems), but the budget should still dwarf the
+    /// accuracy-limited step count of any reasonable explicit solve.
+    pub step_budget: f64,
+    /// Power-iteration count; each costs one `f` evaluation. Four is
+    /// enough to separate |λ| = 10 from |λ| = 1000 by orders of magnitude.
+    pub iters: usize,
+}
+
+impl Default for ClassifierPolicy {
+    fn default() -> Self {
+        Self { enabled: false, explicit: MethodId::DOPRI5, step_budget: 2e4, iters: 4 }
+    }
+}
+
+impl ClassifierPolicy {
+    /// The default policy with classification switched on.
+    pub fn enabled() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+}
+
+/// A policy with its explicit method's stability radius precomputed
+/// (the radius scan is per-method, not per-request).
+#[derive(Debug, Clone)]
+pub struct Classifier {
+    policy: ClassifierPolicy,
+    radius: f64,
+}
+
+impl Classifier {
+    pub fn new(policy: ClassifierPolicy) -> Self {
+        let radius = stability_radius(policy.explicit);
+        Self { policy, radius }
+    }
+
+    /// The negative-real-axis stability radius of the policy's explicit
+    /// method.
+    pub fn radius(&self) -> f64 {
+        self.radius
+    }
+
+    /// Classify a request at `(t0, y0)`. Never touches requests that
+    /// already carry a method override — the caller chose, explicitly.
+    pub fn classify(&self, req: &SolveRequest) -> Classified {
+        if !self.policy.enabled || req.method.is_some() {
+            return Classified::NotRun;
+        }
+        let (Some(&t0), Some(&t1)) = (req.t_eval.first(), req.t_eval.last()) else {
+            return Classified::NotRun;
+        };
+        let span = t1 - t0;
+        if !span.is_finite() || span <= 0.0 || self.radius <= 0.0 {
+            return Classified::NotRun;
+        }
+        let Some(lambda) = dominant_eigenvalue(&req.problem, t0, &req.y0, self.policy.iters)
+        else {
+            return Classified::NotRun;
+        };
+        if lambda * span / self.radius > self.policy.step_budget {
+            Classified::Stiff
+        } else {
+            Classified::Explicit
+        }
+    }
+}
+
+/// Estimate `|λ_max|` of `∂f/∂y` at `(t0, y0)` by forward-difference
+/// Jacobian–vector power iteration. Returns `None` when the state or the
+/// dynamics are non-finite (the solve itself will report `NonFinite`
+/// soon enough) — a classifier must never panic on garbage input.
+fn dominant_eigenvalue(
+    problem: &ProblemSpec,
+    t0: f64,
+    y0: &[f64],
+    iters: usize,
+) -> Option<f64> {
+    match problem {
+        ProblemSpec::Vdp { mu } => power_iteration(&VdP::new(vec![*mu]), t0, y0, iters),
+        ProblemSpec::ExpDecay { lambda } => {
+            power_iteration(&ExponentialDecay::new(vec![*lambda], y0.len()), t0, y0, iters)
+        }
+    }
+}
+
+fn power_iteration<S: OdeSystem>(sys: &S, t0: f64, y0: &[f64], iters: usize) -> Option<f64> {
+    let dim = y0.len();
+    if dim == 0 || !t0.is_finite() || y0.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    let mut f0 = vec![0.0; dim];
+    sys.f_inst(0, t0, y0, &mut f0);
+    if f0.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    // Directional FD with the implicit.rs perturbation convention.
+    let ynorm = y0.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let eps = f64::EPSILON.sqrt() * (1.0 + ynorm);
+    // Deterministic start vector with unequal, sign-alternating entries so
+    // it is not orthogonal to the dominant eigenvector of common Jacobians.
+    let mut v: Vec<f64> = (0..dim)
+        .map(|i| {
+            let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+            sign / (1.0 + i as f64)
+        })
+        .collect();
+    let norm0 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    for x in v.iter_mut() {
+        *x /= norm0;
+    }
+    let mut yp = vec![0.0; dim];
+    let mut fp = vec![0.0; dim];
+    let mut lambda = 0.0;
+    for _ in 0..iters.max(1) {
+        for i in 0..dim {
+            yp[i] = y0[i] + eps * v[i];
+        }
+        sys.f_inst(0, t0, &yp, &mut fp);
+        let mut norm_sq = 0.0;
+        for i in 0..dim {
+            let w = (fp[i] - f0[i]) / eps; // ≈ (J v)[i]
+            v[i] = w;
+            norm_sq += w * w;
+        }
+        let norm = norm_sq.sqrt();
+        if !norm.is_finite() {
+            return None;
+        }
+        if norm == 0.0 {
+            return Some(0.0); // constant dynamics: nothing is stiff
+        }
+        lambda = norm;
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    Some(lambda)
+}
+
+/// Extent of the stability region of an explicit RK method along the
+/// negative real axis, derived from its tableau: scan for the largest
+/// `x` with `|R(−x)| ≤ 1` where `R(z) = 1 + Σ_k z^k · bᵀA^{k−1}𝟙`.
+/// Implicit (A-/L-stable) methods report `f64::INFINITY`.
+pub fn stability_radius(m: MethodId) -> f64 {
+    if m.is_implicit() {
+        return f64::INFINITY;
+    }
+    let t = m.tableau();
+    let s = t.stages;
+    // coeff[k] = bᵀ A^{k−1} 𝟙 for k ≥ 1; coeff[0] = 1.
+    let mut coeff = vec![0.0; s + 1];
+    coeff[0] = 1.0;
+    let mut w = vec![1.0; s]; // A^{k−1} 𝟙, starting at k = 1
+    for k in 1..=s {
+        coeff[k] = t.b.iter().zip(&w).map(|(bi, wi)| bi * wi).sum();
+        let mut nw = vec![0.0; s];
+        for i in 1..s {
+            let mut acc = 0.0;
+            for j in 0..i {
+                acc += t.a(i, j) * w[j];
+            }
+            nw[i] = acc;
+        }
+        w = nw;
+    }
+    // Walk out from the origin; the real-axis stability interval of every
+    // explicit RK tableau in the registry is connected, so stop once the
+    // scan has left it decisively.
+    let dx = 1e-2;
+    let mut radius = 0.0;
+    let mut x = 0.0;
+    while x < 50.0 {
+        x += dx;
+        let z = -x;
+        let mut r = 0.0;
+        let mut zk = 1.0;
+        for &c in &coeff {
+            r += c * zk;
+            zk *= z;
+        }
+        if r.abs() <= 1.0 + 1e-12 {
+            radius = x;
+        } else if x > radius + 1.0 {
+            break;
+        }
+    }
+    radius
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(problem: ProblemSpec, y0: Vec<f64>, t1: f64) -> SolveRequest {
+        SolveRequest::new(problem, y0, vec![0.0, t1 / 2.0, t1])
+    }
+
+    #[test]
+    fn stability_radii_match_theory() {
+        // Euler: R(z) = 1 + z, stable on [−2, 0].
+        let euler = stability_radius(MethodId::EULER);
+        assert!((euler - 2.0).abs() < 0.05, "euler radius {euler}");
+        // Classical RK4: real-axis radius ≈ 2.785.
+        let rk4 = stability_radius(MethodId::RK4);
+        assert!((rk4 - 2.785).abs() < 0.05, "rk4 radius {rk4}");
+        // Dopri5: real-axis radius ≈ 3.3.
+        let dopri5 = stability_radius(MethodId::DOPRI5);
+        assert!(dopri5 > 3.0 && dopri5 < 3.6, "dopri5 radius {dopri5}");
+        // Implicit methods have no real-axis limit.
+        assert_eq!(stability_radius(MethodId::TRBDF2), f64::INFINITY);
+        assert_eq!(stability_radius(MethodId::KVAERNO43), f64::INFINITY);
+    }
+
+    #[test]
+    fn power_iteration_recovers_linear_eigenvalue() {
+        // ẏ = −λy has J = −λI: the dominant eigenvalue is exactly λ.
+        let sys = ExponentialDecay::new(vec![50.0], 3);
+        let lam = power_iteration(&sys, 0.0, &[1.0, 2.0, 3.0], 4).unwrap();
+        assert!((lam - 50.0).abs() / 50.0 < 1e-2, "estimated {lam}");
+    }
+
+    #[test]
+    fn power_iteration_sees_vdp_stiffness() {
+        // VdP at (2, 0): J = [[0, 1], [−2μ·x·v − 1, μ(1 − x²)]], so the
+        // dominant eigenvalue is ≈ 3μ for large μ.
+        let sys = VdP::new(vec![1000.0]);
+        let lam = power_iteration(&sys, 0.0, &[2.0, 0.0], 4).unwrap();
+        assert!(lam > 2000.0 && lam < 4000.0, "estimated {lam}");
+    }
+
+    #[test]
+    fn classifies_stiff_vdp_and_easy_vdp_apart() {
+        let c = Classifier::new(ClassifierPolicy::enabled());
+        // μ = 1000 over a relaxation period: hundreds of thousands of
+        // stability-limited steps.
+        let stiff = req(ProblemSpec::Vdp { mu: 1000.0 }, vec![2.0, 0.0], 400.0);
+        assert_eq!(c.classify(&stiff), Classified::Stiff);
+        // μ = 2 over a few periods: comfortably explicit.
+        let easy = req(ProblemSpec::Vdp { mu: 2.0 }, vec![2.0, 0.0], 5.0);
+        assert_eq!(c.classify(&easy), Classified::Explicit);
+        // Fast linear decay over a long horizon is also stiff.
+        let decay = req(ProblemSpec::ExpDecay { lambda: 1e6 }, vec![1.0], 100.0);
+        assert_eq!(c.classify(&decay), Classified::Stiff);
+    }
+
+    #[test]
+    fn disabled_or_overridden_requests_are_not_run() {
+        let off = Classifier::new(ClassifierPolicy::default());
+        let stiff = req(ProblemSpec::Vdp { mu: 1000.0 }, vec![2.0, 0.0], 400.0);
+        assert_eq!(off.classify(&stiff), Classified::NotRun);
+        let on = Classifier::new(ClassifierPolicy::enabled());
+        let routed = stiff.clone().with_method(MethodId::DOPRI5);
+        assert_eq!(on.classify(&routed), Classified::NotRun);
+    }
+
+    #[test]
+    fn garbage_input_degrades_to_not_run() {
+        let c = Classifier::new(ClassifierPolicy::enabled());
+        // Non-finite state.
+        let nan = req(ProblemSpec::Vdp { mu: 1.0 }, vec![f64::NAN, 0.0], 5.0);
+        assert_eq!(c.classify(&nan), Classified::NotRun);
+        // Empty time grid / empty span.
+        let mut empty = req(ProblemSpec::Vdp { mu: 1.0 }, vec![2.0, 0.0], 5.0);
+        empty.t_eval.clear();
+        assert_eq!(c.classify(&empty), Classified::NotRun);
+        let zero_span = SolveRequest::new(
+            ProblemSpec::Vdp { mu: 1.0 },
+            vec![2.0, 0.0],
+            vec![1.0, 1.0],
+        );
+        assert_eq!(c.classify(&zero_span), Classified::NotRun);
+        // Empty state vector.
+        let hollow = SolveRequest::new(ProblemSpec::ExpDecay { lambda: 1.0 }, vec![], vec![0.0, 1.0]);
+        assert_eq!(c.classify(&hollow), Classified::NotRun);
+    }
+}

@@ -66,6 +66,7 @@ fn to_responses(
                 engine,
                 method,
                 escalated_from: None,
+                classified_stiff: false,
             }
         })
         .collect()
@@ -271,6 +272,7 @@ impl SolveEngine for AotEngine {
                     engine: "aot-pjrt",
                     method: None,
                     escalated_from: None,
+                    classified_stiff: false,
                 }
             })
             .collect())

@@ -1,0 +1,318 @@
+//! Fleet plumbing: the shared routing/health state between the
+//! coordinator front-end and its N worker threads.
+//!
+//! # Health state machine
+//!
+//! Each worker is `Healthy → Rebuilding → (Healthy | Tombstoned)`:
+//!
+//! - `Healthy` — owns a live engine and serves its share of buckets.
+//! - `Rebuilding` — absorbed an engine panic and is re-running the
+//!   factory (with bounded exponential backoff after repeated panics);
+//!   new traffic still routes to it and queues in its channel.
+//! - `Tombstoned` — terminal: the factory itself panicked, so no engine
+//!   can ever be built. The worker forwards its parked queue to healthy
+//!   peers ("drains onto survivors") and keeps forwarding anything that
+//!   still arrives, so no receiver is ever stranded.
+//!
+//! # Routing
+//!
+//! Dispatch is by **bucket affinity**: a request's [`BucketKey`] hashes
+//! to one worker among the non-tombstoned set, so same-shaped traffic
+//! lands on one batcher and batches as well as it did with a single
+//! worker. When a worker tombstones, the healthy set shrinks and the
+//! same hash remaps its buckets onto survivors — failover is just the
+//! modulus changing. [`ServiceError::WorkerUnavailable`] is reachable
+//! only when the whole fleet is tombstoned.
+
+use super::batcher::BucketKey;
+use super::classifier::Classified;
+use super::metrics::Metrics;
+use super::request::{ServiceError, SolveRequest, SolveResponse};
+use crate::solver::MethodId;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One worker's position in the health state machine. Stored as a u8
+/// atomic in [`FleetShared`] so the submit path and sibling workers can
+/// read it without locks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerHealth {
+    /// Engine live, serving traffic.
+    Healthy,
+    /// Engine lost to a panic; the factory is rebuilding it.
+    Rebuilding,
+    /// Terminal: the factory panicked, no engine can be built. The
+    /// worker's queue has drained onto survivors.
+    Tombstoned,
+}
+
+impl WorkerHealth {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => WorkerHealth::Healthy,
+            1 => WorkerHealth::Rebuilding,
+            _ => WorkerHealth::Tombstoned,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            WorkerHealth::Healthy => 0,
+            WorkerHealth::Rebuilding => 1,
+            WorkerHealth::Tombstoned => 2,
+        }
+    }
+}
+
+/// Everything a request needs to travel between workers: the original
+/// request plus the response channel and the retry/classifier state that
+/// must survive a failover hop.
+pub(crate) struct EnvelopeInner {
+    pub req: SolveRequest,
+    pub tx: Sender<SolveResponse>,
+    pub t_submit: Instant,
+    /// Escalation retries already consumed (failover preserves the
+    /// once-per-request budget).
+    pub attempts: u32,
+    /// The explicit method this request first failed on, if it was
+    /// escalated before the hop.
+    pub escalated_from: Option<MethodId>,
+    /// What the proactive classifier said at submit time.
+    pub classified: Classified,
+}
+
+/// A drop-guarded [`EnvelopeInner`]: if the envelope is destroyed without
+/// being claimed by a worker — e.g. it was sitting in a channel that a
+/// shutting-down worker dropped while a tombstoned peer was failing over
+/// onto it — the guard settles the metrics taxonomy and answers the
+/// caller with [`ServiceError::ShuttingDown`]. This is what makes "no
+/// submitted receiver is ever stranded" a structural property instead of
+/// a property of every individual race.
+pub(crate) struct Envelope {
+    inner: Option<EnvelopeInner>,
+    metrics: Arc<Metrics>,
+}
+
+impl Envelope {
+    pub fn new(
+        req: SolveRequest,
+        tx: Sender<SolveResponse>,
+        classified: Classified,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self {
+            inner: Some(EnvelopeInner {
+                req,
+                tx,
+                t_submit: Instant::now(),
+                attempts: 0,
+                escalated_from: None,
+                classified,
+            }),
+            metrics,
+        }
+    }
+
+    /// Re-wrap in-flight state for a failover hop.
+    pub fn from_parts(inner: EnvelopeInner, metrics: Arc<Metrics>) -> Self {
+        Self { inner: Some(inner), metrics }
+    }
+
+    pub fn req(&self) -> &SolveRequest {
+        &self.inner.as_ref().expect("claimed envelope").req
+    }
+
+    /// Take ownership of the contents, disarming the drop guard. The
+    /// claimer is now responsible for answering the caller exactly once.
+    pub fn claim(mut self) -> EnvelopeInner {
+        self.inner.take().expect("claimed envelope")
+    }
+
+    /// Answer the caller with a terminal service failure and settle the
+    /// metrics taxonomy (failed + in-flight release).
+    pub fn fail(mut self, err: ServiceError) {
+        let metrics = self.metrics.clone();
+        let inner = self.inner.take().expect("claimed envelope");
+        metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+        let _ = inner.tx.send(SolveResponse::failure(inner.req.id, err));
+    }
+}
+
+impl Drop for Envelope {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
+            let _ = inner.tx.send(SolveResponse::failure(inner.req.id, ServiceError::ShuttingDown));
+        }
+    }
+}
+
+pub(crate) enum Msg {
+    Solve(Envelope),
+    Shutdown,
+}
+
+/// Shared fleet state: one channel and one health slot per worker.
+pub(crate) struct FleetShared {
+    txs: Vec<Sender<Msg>>,
+    health: Vec<AtomicU8>,
+}
+
+impl FleetShared {
+    pub fn new(txs: Vec<Sender<Msg>>) -> Self {
+        let health = txs.iter().map(|_| AtomicU8::new(WorkerHealth::Healthy.as_u8())).collect();
+        Self { txs, health }
+    }
+
+    pub fn len(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn health(&self, i: usize) -> WorkerHealth {
+        WorkerHealth::from_u8(self.health[i].load(Ordering::Acquire))
+    }
+
+    pub fn set_health(&self, i: usize, h: WorkerHealth) {
+        self.health[i].store(h.as_u8(), Ordering::Release);
+    }
+
+    pub fn alive_count(&self) -> usize {
+        (0..self.len()).filter(|&i| self.health(i) != WorkerHealth::Tombstoned).count()
+    }
+
+    /// The affinity target for a bucket hash: position `hash % alive`
+    /// within the non-tombstoned set. `None` iff the whole fleet is dead.
+    /// Allocation-free — this sits on the zero-alloc submit path.
+    pub fn route(&self, hash: u64) -> Option<usize> {
+        self.pick(hash, usize::MAX)
+    }
+
+    /// The failover target for work stranded on worker `exclude`: the
+    /// affinity choice among the surviving peers.
+    pub fn failover_target(&self, exclude: usize, hash: u64) -> Option<usize> {
+        self.pick(hash, exclude)
+    }
+
+    fn pick(&self, hash: u64, exclude: usize) -> Option<usize> {
+        // Count-then-scan can race a concurrent tombstone; retry, then
+        // settle for any live worker rather than reporting a dead fleet.
+        for _ in 0..2 {
+            let alive =
+                (0..self.len()).filter(|&i| i != exclude && self.health(i) != WorkerHealth::Tombstoned).count();
+            if alive == 0 {
+                return None;
+            }
+            let target = (hash % alive as u64) as usize;
+            let mut seen = 0;
+            for i in 0..self.len() {
+                if i != exclude && self.health(i) != WorkerHealth::Tombstoned {
+                    if seen == target {
+                        return Some(i);
+                    }
+                    seen += 1;
+                }
+            }
+        }
+        (0..self.len()).find(|&i| i != exclude && self.health(i) != WorkerHealth::Tombstoned)
+    }
+
+    /// Send to worker `i`; on failure (its thread is gone — a shutdown
+    /// race) the message comes back to the caller for the next candidate.
+    pub fn send(&self, i: usize, msg: Msg) -> Result<(), Msg> {
+        self.txs[i].send(msg).map_err(|e| e.0)
+    }
+
+    /// Broadcast shutdown (best-effort: exited workers are fine).
+    pub fn shutdown_all(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+    }
+}
+
+/// Stable affinity hash of a bucket key.
+pub(crate) fn bucket_hash(key: &BucketKey) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn shared(n: usize) -> (FleetShared, Vec<mpsc::Receiver<Msg>>) {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| mpsc::channel()).unzip();
+        (FleetShared::new(txs), rxs)
+    }
+
+    #[test]
+    fn routing_is_stable_and_skips_tombstones() {
+        let (s, _rxs) = shared(4);
+        let h = 12345u64;
+        let first = s.route(h).unwrap();
+        // Affinity: the same hash keeps landing on the same worker.
+        assert_eq!(s.route(h), Some(first));
+        // Tombstoning the target remaps the hash onto a survivor.
+        s.set_health(first, WorkerHealth::Tombstoned);
+        let second = s.route(h).unwrap();
+        assert_ne!(second, first);
+        // Rebuilding workers still receive traffic (their queue holds it).
+        s.set_health(second, WorkerHealth::Rebuilding);
+        assert_eq!(s.route(h), Some(second));
+        assert_eq!(s.alive_count(), 3);
+    }
+
+    #[test]
+    fn whole_fleet_dead_routes_nowhere() {
+        let (s, _rxs) = shared(2);
+        s.set_health(0, WorkerHealth::Tombstoned);
+        s.set_health(1, WorkerHealth::Tombstoned);
+        assert_eq!(s.route(7), None);
+        assert_eq!(s.alive_count(), 0);
+    }
+
+    #[test]
+    fn failover_excludes_the_dying_worker() {
+        let (s, _rxs) = shared(3);
+        for hash in 0..64u64 {
+            for w in 0..3 {
+                if let Some(t) = s.failover_target(w, hash) {
+                    assert_ne!(t, w);
+                }
+            }
+        }
+        // A one-worker fleet has nowhere to fail over to.
+        let (solo, _r) = shared(1);
+        assert_eq!(solo.failover_target(0, 9), None);
+    }
+
+    #[test]
+    fn send_returns_message_when_worker_gone() {
+        let (s, rxs) = shared(2);
+        let mut rxs = rxs.into_iter();
+        drop(rxs.next().unwrap()); // kill worker 0's receiver
+        let _rx1 = rxs.next().unwrap(); // keep worker 1's alive
+        match s.send(0, Msg::Shutdown) {
+            Err(Msg::Shutdown) => {}
+            _ => panic!("expected the message back from a dead channel"),
+        }
+        assert!(s.send(1, Msg::Shutdown).is_ok());
+    }
+
+    #[test]
+    fn bucket_hash_is_deterministic_per_key() {
+        let k1 = BucketKey { kind: "vdp", dim: 2, n_eval: 10, method: None };
+        let k2 = BucketKey { kind: "vdp", dim: 2, n_eval: 10, method: None };
+        let k3 = BucketKey { kind: "vdp", dim: 2, n_eval: 10, method: Some(MethodId::TRBDF2) };
+        assert_eq!(bucket_hash(&k1), bucket_hash(&k2));
+        // Not required, but overwhelmingly expected: the method changes the hash.
+        assert_ne!(bucket_hash(&k1), bucket_hash(&k3));
+    }
+}

@@ -14,8 +14,24 @@
 //!
 //! `requests_retried` counts stiffness-escalation retries (a retried
 //! request is still terminal exactly once) and `worker_panics` counts
-//! engine panics the worker absorbed; `requests_inflight` is a gauge of
+//! engine panics the workers absorbed; `requests_inflight` is a gauge of
 //! admitted-but-unresolved requests, used by admission control.
+//!
+//! With the worker fleet the taxonomy is updated from N threads
+//! concurrently, but stays *exact*, not approximate: every admitted
+//! request increments the in-flight gauge once and is settled into
+//! exactly one terminal counter by whichever thread answers it (worker,
+//! failover peer, or envelope drop guard), so
+//!
+//! ```text
+//!   submitted = completed + failed + shed + expired + inflight
+//! ```
+//!
+//! holds at every quiescent point. `tests/fault_tolerance.rs` asserts it
+//! after concurrent multi-worker runs. Per-worker panic/rebuild
+//! breakdowns (sized by [`Metrics::for_workers`]) and the proactive-
+//! classifier counters (`classified_stiff` / `classifier_hits` /
+//! `classifier_misses`) ride alongside the taxonomy.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -38,21 +54,77 @@ pub struct Metrics {
     pub requests_deadline_expired: AtomicU64,
     /// Stiffness-escalation retries performed (re-enqueues, not requests).
     pub requests_retried: AtomicU64,
-    /// Engine panics absorbed by the worker (each also rebuilds the engine).
+    /// Engine panics absorbed across the fleet (engine *and* factory
+    /// panics; each engine panic also triggers a rebuild attempt).
     pub worker_panics: AtomicU64,
+    /// Successful engine rebuilds after a panic, across the fleet.
+    pub worker_rebuilds: AtomicU64,
+    /// Requests the proactive classifier routed to the implicit fallback
+    /// before their first solve.
+    pub classified_stiff: AtomicU64,
+    /// Classified-stiff requests that then solved successfully on the
+    /// implicit method — zero failed explicit attempts paid.
+    pub classifier_hits: AtomicU64,
+    /// Classified-explicit requests that still escalated reactively: the
+    /// classifier was wrong and the PR 7 retry safety net caught it.
+    pub classifier_misses: AtomicU64,
     /// Gauge: admitted requests not yet resolved (queued, batched or
     /// solving). Admission control sheds against this.
     pub requests_inflight: AtomicU64,
     pub batches_dispatched: AtomicU64,
     pub batch_size_sum: AtomicU64,
     pub solver_steps_sum: AtomicU64,
+    /// Per-worker panic/rebuild breakdowns; empty unless built with
+    /// [`Metrics::for_workers`].
+    per_worker: Vec<WorkerMetrics>,
     latency_buckets: [AtomicU64; 9],
     latency_sum_us: AtomicU64,
+}
+
+/// One worker's share of the fleet-wide panic/rebuild counters.
+#[derive(Debug, Default)]
+struct WorkerMetrics {
+    panics: AtomicU64,
+    rebuilds: AtomicU64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Metrics with per-worker breakdown slots for an `n`-worker fleet.
+    pub fn for_workers(n: usize) -> Self {
+        Self {
+            per_worker: (0..n).map(|_| WorkerMetrics::default()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Record an absorbed panic on worker `idx` (fleet total + breakdown).
+    pub fn record_worker_panic(&self, idx: usize) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = self.per_worker.get(idx) {
+            w.panics.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a successful post-panic engine rebuild on worker `idx`.
+    pub fn record_worker_rebuild(&self, idx: usize) {
+        self.worker_rebuilds.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = self.per_worker.get(idx) {
+            w.rebuilds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Panics absorbed by worker `idx` (0 when out of range).
+    pub fn worker_panics_of(&self, idx: usize) -> u64 {
+        self.per_worker.get(idx).map_or(0, |w| w.panics.load(Ordering::Relaxed))
+    }
+
+    /// Successful rebuilds on worker `idx` (0 when out of range).
+    pub fn worker_rebuilds_of(&self, idx: usize) -> u64 {
+        self.per_worker.get(idx).map_or(0, |w| w.rebuilds.load(Ordering::Relaxed))
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -96,10 +168,12 @@ impl Metrics {
         u64::MAX
     }
 
-    /// One-line summary for logs and the serve example.
+    /// One-line summary for logs and the serve example. Multi-worker
+    /// metrics append a per-worker `panics/rebuilds` breakdown.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "submitted={} completed={} failed={} shed={} expired={} retried={} panics={} \
+             rebuilds={} classified={} cls_hits={} cls_misses={} \
              batches={} mean_batch={:.1} mean_lat={:.0}us p50={}us p90={}us p99={}us",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
@@ -108,13 +182,32 @@ impl Metrics {
             self.requests_deadline_expired.load(Ordering::Relaxed),
             self.requests_retried.load(Ordering::Relaxed),
             self.worker_panics.load(Ordering::Relaxed),
+            self.worker_rebuilds.load(Ordering::Relaxed),
+            self.classified_stiff.load(Ordering::Relaxed),
+            self.classifier_hits.load(Ordering::Relaxed),
+            self.classifier_misses.load(Ordering::Relaxed),
             self.batches_dispatched.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.9),
             self.latency_percentile_us(0.99),
-        )
+        );
+        if self.per_worker.len() > 1 {
+            s.push_str(" workers=[");
+            for (i, w) in self.per_worker.iter().enumerate() {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&format!(
+                    "{i}:p{}/r{}",
+                    w.panics.load(Ordering::Relaxed),
+                    w.rebuilds.load(Ordering::Relaxed)
+                ));
+            }
+            s.push(']');
+        }
+        s
     }
 }
 
@@ -173,5 +266,48 @@ mod tests {
         assert!(s.contains("panics=4"));
         assert!(s.contains("p50="));
         assert!(s.contains("p99="));
+    }
+
+    #[test]
+    fn per_worker_breakdown_tracks_fleet_totals() {
+        let m = Metrics::for_workers(3);
+        m.record_worker_panic(0);
+        m.record_worker_panic(0);
+        m.record_worker_panic(2);
+        m.record_worker_rebuild(0);
+        assert_eq!(m.worker_panics.load(Ordering::Relaxed), 3);
+        assert_eq!(m.worker_rebuilds.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_panics_of(0), 2);
+        assert_eq!(m.worker_panics_of(1), 0);
+        assert_eq!(m.worker_panics_of(2), 1);
+        assert_eq!(m.worker_rebuilds_of(0), 1);
+        // Totals = sum of the breakdown.
+        let sum: u64 = (0..3).map(|i| m.worker_panics_of(i)).sum();
+        assert_eq!(sum, m.worker_panics.load(Ordering::Relaxed));
+        let s = m.summary();
+        assert!(s.contains("workers=[0:p2/r1 1:p0/r0 2:p1/r0]"), "{s}");
+        assert!(s.contains("rebuilds=1"));
+    }
+
+    #[test]
+    fn out_of_range_worker_still_counts_fleet_total() {
+        // Metrics::new() has no breakdown slots; fleet totals still work.
+        let m = Metrics::new();
+        m.record_worker_panic(7);
+        assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_panics_of(7), 0);
+        assert!(!m.summary().contains("workers=["));
+    }
+
+    #[test]
+    fn classifier_counters_render() {
+        let m = Metrics::new();
+        m.classified_stiff.store(5, Ordering::Relaxed);
+        m.classifier_hits.store(4, Ordering::Relaxed);
+        m.classifier_misses.store(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("classified=5"));
+        assert!(s.contains("cls_hits=4"));
+        assert!(s.contains("cls_misses=1"));
     }
 }

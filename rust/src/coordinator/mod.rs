@@ -2,13 +2,17 @@
 //! and metrics. See DESIGN.md §1.
 
 pub mod batcher;
+pub mod classifier;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod service;
 
 pub use batcher::{Batch, BucketKey, DynamicBatcher};
+pub use classifier::{Classified, Classifier, ClassifierPolicy};
 pub use engine::{AotEngine, JointEngine, NativeEngine, SolveEngine};
+pub use fleet::WorkerHealth;
 pub use metrics::Metrics;
 pub use request::{Priority, ProblemSpec, ServiceError, SolveRequest, SolveResponse};
 pub use service::{Coordinator, RetryPolicy, ServiceConfig};

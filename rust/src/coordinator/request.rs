@@ -189,6 +189,11 @@ pub struct SolveResponse {
     /// the service re-enqueued it on the configured implicit fallback.
     /// Callers can use this to detect degraded-mode service.
     pub escalated_from: Option<MethodId>,
+    /// `true` when the proactive stiffness classifier routed this request
+    /// to the implicit fallback *before* its first solve (so no failed
+    /// explicit attempt was paid — contrast with `escalated_from`, the
+    /// reactive path). Always `false` when the classifier is disabled.
+    pub classified_stiff: bool,
 }
 
 impl SolveResponse {
@@ -204,6 +209,7 @@ impl SolveResponse {
             engine: "service",
             method: None,
             escalated_from: None,
+            classified_stiff: false,
         }
     }
 

@@ -1,54 +1,78 @@
-//! The solver service: a worker thread owning an engine, fed through a
-//! channel, with dynamic batching, per-request response delivery — and
-//! fault tolerance.
+//! The solver service: a supervised fleet of worker threads, each owning
+//! an engine, fed through per-worker channels with bucket-affinity
+//! routing, dynamic batching, per-request response delivery — and fault
+//! tolerance.
 //!
-//! Threads instead of async: the vendored crate set has no tokio, and a
-//! single dedicated worker matches the execution model anyway (one PJRT
-//! client / one native solve at a time per device).
+//! Threads instead of async: the vendored crate set has no tokio, and
+//! dedicated workers match the execution model anyway (one PJRT client /
+//! one native solve at a time per engine). One worker per core by
+//! default ([`ServiceConfig::workers`]).
 //!
 //! # Failure domains
 //!
-//! The unit of failure is the **batch**, never the service:
+//! The unit of failure is the **batch**, then the **worker**, never the
+//! service:
 //!
 //! - An engine panic is caught ([`std::panic::catch_unwind`]), fails only
 //!   that batch's requests with [`ServiceError::WorkerPanic`], and the
-//!   engine is discarded and rebuilt from the factory — the worker keeps
-//!   serving every other bucket. If the *factory* panics, the worker
-//!   degrades to a tombstone loop that fails every request immediately
-//!   with [`ServiceError::WorkerUnavailable`] instead of stranding
-//!   callers on a channel that never fires.
+//!   engine is discarded and rebuilt from the factory (with bounded
+//!   exponential backoff after repeated panics) — the worker keeps
+//!   serving every other bucket, and sibling workers never notice.
+//! - If the *factory* panics, that worker tombstones: it forwards its
+//!   parked queue to the surviving workers ("drains onto survivors") and
+//!   keeps forwarding anything that still arrives. Routing drops it from
+//!   the affinity set, so its buckets remap to healthy peers.
+//!   [`ServiceError::WorkerUnavailable`] is returned only when the whole
+//!   fleet is tombstoned.
 //! - An engine `Err` fails the batch with [`ServiceError::EngineError`] —
 //!   structurally distinct from a genuine solver-level failure such as
 //!   [`Status::NonFinite`].
 //!
 //! # Degraded-mode serving
 //!
-//! Requests that die of stiffness on an explicit method
-//! (`DtUnderflow` / `NonFinite` / `NewtonDiverged`) are re-enqueued once
-//! into an implicit-method bucket ([`RetryPolicy`], `trbdf2` by default)
-//! via the per-request method routing; the final response records the
-//! escalation in [`SolveResponse::escalated_from`]. Admission is bounded:
-//! beyond `max_queue` in-flight requests, new submissions are shed with
-//! [`ServiceError::Overloaded`] (low-priority traffic first — see
-//! [`Priority`]), and a request whose [`SolveRequest::deadline`] passes
-//! while it waits is dropped at dispatch time with
+//! Stiff traffic is handled *proactively* when the
+//! [`ClassifierPolicy`](super::classifier::ClassifierPolicy) is enabled:
+//! a few FD Jacobian–vector power iterations at `(t0, y0)` bound the
+//! dominant eigenvalue against the explicit method's stability radius,
+//! and predicted-stiff requests are routed to the implicit fallback
+//! *before* their first solve (`coordinator/classifier.rs`). The
+//! *reactive* path remains as the safety net: requests that die of
+//! stiffness on an explicit method (`DtUnderflow` / `NonFinite` /
+//! `NewtonDiverged`) are re-enqueued once into an implicit-method bucket
+//! ([`RetryPolicy`], `trbdf2` by default), and the final response records
+//! the escalation in [`SolveResponse::escalated_from`]. Admission is
+//! bounded: beyond `max_queue` in-flight requests, new submissions are
+//! shed with [`ServiceError::Overloaded`] (low-priority traffic first —
+//! see [`Priority`]), and a request whose [`SolveRequest::deadline`]
+//! passes while it waits is dropped at dispatch time with
 //! [`ServiceError::DeadlineExpired`] instead of occupying a batch slot.
-//! See `docs/architecture.md` § "Failure domains & degraded-mode serving".
+//! See `docs/architecture.md` § "Fleet supervision & proactive
+//! classification".
 
-use super::batcher::{Batch, DynamicBatcher};
+use super::batcher::{Batch, BucketKey, DynamicBatcher};
+use super::classifier::{Classified, Classifier, ClassifierPolicy};
 use super::engine::SolveEngine;
+use super::fleet::{bucket_hash, Envelope, EnvelopeInner, FleetShared, Msg, WorkerHealth};
 use super::metrics::Metrics;
 use super::request::{Priority, ServiceError, SolveRequest, SolveResponse};
 use crate::solver::{MethodId, Status};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// How often the worker wakes to poll deadlines when the batcher is empty.
+/// How often a worker wakes to poll deadlines when its batcher is empty.
 const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Base delay before re-running the engine factory after *consecutive*
+/// panics (the first rebuild is immediate); doubles per panic in the
+/// streak, capped at [`REBUILD_BACKOFF_MAX`]. Bounds how fast a
+/// crash-looping engine can spin the factory without ever delaying the
+/// common single-panic recovery.
+const REBUILD_BACKOFF_BASE: Duration = Duration::from_millis(10);
+const REBUILD_BACKOFF_MAX: Duration = Duration::from_millis(250);
 
 /// Stiffness-escalation policy: when a request fails on an explicit
 /// method with a stiffness-shaped status (`DtUnderflow`, `NonFinite`,
@@ -82,16 +106,23 @@ impl RetryPolicy {
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Dynamic-batcher flush size.
+    /// Dynamic-batcher flush size (per worker).
     pub max_batch: usize,
     /// Dynamic-batcher flush deadline.
     pub max_wait: Duration,
-    /// Bound on admitted-but-unresolved requests; submissions beyond it
-    /// are shed with [`ServiceError::Overloaded`] (priority-tiered — see
-    /// [`Priority`]). `0` = unbounded (the pre-fault-tolerance behavior).
+    /// Bound on admitted-but-unresolved requests across the whole fleet;
+    /// submissions beyond it are shed with [`ServiceError::Overloaded`]
+    /// (priority-tiered — see [`Priority`]). `0` = unbounded (the
+    /// pre-fault-tolerance behavior).
     pub max_queue: usize,
-    /// Stiffness-escalation policy.
+    /// Worker fleet size; `0` = one worker per available core. Each
+    /// worker owns its own engine (built by the shared factory) and its
+    /// own batcher; requests route to workers by bucket affinity.
+    pub workers: usize,
+    /// Reactive stiffness-escalation policy (the safety net).
     pub retry: RetryPolicy,
+    /// Proactive stiffness classification (disabled by default).
+    pub classifier: ClassifierPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -100,7 +131,9 @@ impl Default for ServiceConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             max_queue: 1024,
+            workers: 0,
             retry: RetryPolicy::default(),
+            classifier: ClassifierPolicy::default(),
         }
     }
 }
@@ -117,68 +150,93 @@ fn admission_limit(max_queue: usize, p: Priority) -> usize {
     }
 }
 
-enum Msg {
-    Solve(SolveRequest, Sender<SolveResponse>, Instant),
-    Shutdown,
+/// Resolve `ServiceConfig::workers`: `0` means one per available core.
+fn resolve_workers(cfg: usize) -> usize {
+    if cfg > 0 {
+        cfg
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
 }
+
+/// The engine factory, shared by every worker so each can (re)build its
+/// own engine instance. `FnMut` behind a mutex: factories carry state
+/// (fault-injection scripts, artifact handles); the lock serializes
+/// builds, and a poisoned lock (factory panicked mid-build on another
+/// worker) is cleared rather than cascading the panic fleet-wide.
+type SharedFactory = Arc<Mutex<Box<dyn FnMut() -> Box<dyn SolveEngine> + Send>>>;
 
 /// Handle to a running solver service.
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    shared: Arc<FleetShared>,
+    handles: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    /// Cleared by the worker when it can no longer solve (factory panic)
-    /// or has shut down; lets `submit` fail fast without a round-trip.
-    alive: Arc<AtomicBool>,
     max_queue: usize,
     next_id: AtomicU64,
+    classifier: Classifier,
+    /// Where classified-stiff requests are routed: the retry fallback
+    /// method (so proactive and reactive paths agree), `trbdf2` if
+    /// retries are disabled.
+    fallback: MethodId,
 }
 
 impl Coordinator {
-    /// Spawn the worker. `make_engine` runs *inside* the worker thread so
-    /// engines holding non-`Send` resources (PJRT client) work; it is
-    /// called again to rebuild the engine after a panic, so it must be
-    /// re-invocable (`FnMut`).
+    /// Spawn the worker fleet. `make_engine` runs *inside* worker threads
+    /// so engines holding non-`Send` resources (PJRT client) work; it is
+    /// called once per worker and again to rebuild an engine after a
+    /// panic, so it must be re-invocable (`FnMut`).
     pub fn spawn<F>(cfg: ServiceConfig, make_engine: F) -> Self
     where
         F: FnMut() -> Box<dyn SolveEngine> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let metrics = Arc::new(Metrics::new());
-        let alive = Arc::new(AtomicBool::new(true));
-        let max_queue = cfg.max_queue;
-        let worker_metrics = metrics.clone();
-        let worker_alive = alive.clone();
-        let worker = std::thread::Builder::new()
-            .name("rode-worker".into())
-            .spawn(move || {
-                let batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
-                Worker {
-                    cfg,
-                    make_engine: Box::new(make_engine),
-                    engine: None,
-                    metrics: worker_metrics,
-                    alive: worker_alive,
-                    batcher,
-                    waiters: Waiters::new(),
-                }
-                .run(rx)
-            })
-            .expect("spawn worker");
+        let n = resolve_workers(cfg.workers);
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| mpsc::channel::<Msg>()).unzip();
+        let shared = Arc::new(FleetShared::new(txs));
+        let metrics = Arc::new(Metrics::for_workers(n));
+        let factory: SharedFactory = Arc::new(Mutex::new(Box::new(make_engine)));
+        let mut handles = Vec::with_capacity(n);
+        for (idx, rx) in rxs.into_iter().enumerate() {
+            let cfg = cfg.clone();
+            let make_engine = factory.clone();
+            let metrics = metrics.clone();
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("rode-worker-{idx}"))
+                .spawn(move || {
+                    let batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+                    Worker {
+                        idx,
+                        cfg,
+                        make_engine,
+                        engine: None,
+                        metrics,
+                        shared,
+                        batcher,
+                        waiters: Waiters::new(),
+                        panic_streak: 0,
+                    }
+                    .run(rx)
+                })
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        let classifier = Classifier::new(cfg.classifier.clone());
+        let fallback = cfg.retry.method.unwrap_or(MethodId::TRBDF2);
         Self {
-            tx,
-            worker: Some(worker),
+            shared,
+            handles,
             metrics,
-            alive,
-            max_queue,
+            max_queue: cfg.max_queue,
             next_id: AtomicU64::new(1),
+            classifier,
+            fallback,
         }
     }
 
     /// Submit a request; the returned receiver yields exactly one
     /// response. Requests shed at admission, and requests submitted to a
-    /// dead worker, receive an immediate [`SolveResponse::failure`] — the
-    /// receiver never hangs forever.
+    /// fully-dead fleet, receive an immediate [`SolveResponse::failure`] —
+    /// the receiver never hangs forever.
     pub fn submit(&self, mut req: SolveRequest) -> Receiver<SolveResponse> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -205,27 +263,36 @@ impl Coordinator {
         } else {
             self.metrics.requests_inflight.fetch_add(1, Ordering::AcqRel);
         }
-        if !self.alive.load(Ordering::Acquire) {
-            // Fast path: the worker is known-dead; don't bother queueing.
-            // (The tombstone loop also answers anything that races past
-            // this check, so correctness never depends on the flag.)
-            self.fail_unqueued(&tx, req.id);
-            return rx;
+        // Proactive classification — admitted requests only, so shed
+        // traffic never pays the FD probes and the hit/miss counters
+        // denominate over requests that actually ran.
+        let classified = self.classifier.classify(&req);
+        if classified == Classified::Stiff {
+            req.method = Some(self.fallback);
+            self.metrics.classified_stiff.fetch_add(1, Ordering::Relaxed);
         }
-        if let Err(mpsc::SendError(Msg::Solve(req, tx, _))) =
-            self.tx.send(Msg::Solve(req, tx, Instant::now()))
-        {
-            // The worker thread is gone entirely: fail immediately instead
-            // of handing back a receiver that never fires.
-            self.fail_unqueued(&tx, req.id);
+        // Bucket-affinity routing (hash *after* classification: the
+        // routed method is part of the bucket).
+        let hash = bucket_hash(&BucketKey::of(&req));
+        let mut env = Envelope::new(req, tx, classified, self.metrics.clone());
+        loop {
+            let Some(i) = self.shared.route(hash) else {
+                // The whole fleet is tombstoned — the only path to an
+                // unavailability failure at submit.
+                env.fail(ServiceError::WorkerUnavailable);
+                return rx;
+            };
+            match self.shared.send(i, Msg::Solve(env)) {
+                Ok(()) => return rx,
+                Err(Msg::Solve(back)) => {
+                    // That worker's thread is gone entirely (shutdown
+                    // race); record it dead and reroute.
+                    self.shared.set_health(i, WorkerHealth::Tombstoned);
+                    env = back;
+                }
+                Err(Msg::Shutdown) => unreachable!("solve send returned a shutdown message"),
+            }
         }
-        rx
-    }
-
-    fn fail_unqueued(&self, tx: &Sender<SolveResponse>, id: u64) {
-        self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
-        self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(SolveResponse::failure(id, ServiceError::WorkerUnavailable));
     }
 
     /// Convenience: submit and wait. Service-level failures surface as
@@ -239,19 +306,34 @@ impl Coordinator {
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
+
+    /// Number of workers in the fleet.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Health of worker `i` (see [`WorkerHealth`]).
+    pub fn worker_health(&self, i: usize) -> WorkerHealth {
+        self.shared.health(i)
+    }
+
+    /// Workers not currently tombstoned.
+    pub fn alive_workers(&self) -> usize {
+        self.shared.alive_count()
+    }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.shared.shutdown_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
 
 /// Per-request worker-side state: the response channel plus everything
-/// needed for deadlines and retry accounting.
+/// needed for deadlines, retry accounting and classifier bookkeeping.
 struct Waiter {
     tx: Sender<SolveResponse>,
     t_submit: Instant,
@@ -260,41 +342,44 @@ struct Waiter {
     /// The explicit method this request first failed on, when it was
     /// re-enqueued onto the implicit fallback.
     escalated_from: Option<MethodId>,
+    /// What the proactive classifier said at submit time.
+    classified: Classified,
 }
 
 type Waiters = std::collections::HashMap<u64, Waiter>;
 
-/// The worker thread's state machine. One instance lives for the whole
+/// A worker thread's state machine. One instance lives for the whole
 /// thread; `engine` is `None` only between a panic and the completed
-/// rebuild (or permanently, in the tombstone state).
+/// rebuild (or permanently, in the tombstone state). The worker's
+/// position in the fleet health array mirrors this: `Healthy` while
+/// serving, `Rebuilding` between panic and rebuild, `Tombstoned` when
+/// the factory is dead or the worker has shut down.
 struct Worker {
+    idx: usize,
     cfg: ServiceConfig,
-    make_engine: Box<dyn FnMut() -> Box<dyn SolveEngine> + Send>,
+    make_engine: SharedFactory,
     engine: Option<Box<dyn SolveEngine>>,
     metrics: Arc<Metrics>,
-    alive: Arc<AtomicBool>,
+    shared: Arc<FleetShared>,
     batcher: DynamicBatcher,
     waiters: Waiters,
+    /// Consecutive engine panics without an intervening successful batch;
+    /// drives the rebuild backoff.
+    panic_streak: u32,
 }
 
 impl Worker {
     fn run(mut self, rx: Receiver<Msg>) {
-        if !self.rebuild_engine() {
+        if !self.rebuild_engine(false) {
             // The very first engine build panicked: nothing can ever be
-            // solved. Serve immediate failures until shutdown.
+            // solved here. Hand everything to the survivors.
             return self.tombstone(&rx);
         }
         loop {
             // Wait bounded by the next deadline flush.
             let timeout = self.batcher.next_deadline(Instant::now()).unwrap_or(IDLE_POLL);
             match rx.recv_timeout(timeout) {
-                Ok(Msg::Solve(req, tx, t_submit)) => {
-                    self.waiters.insert(
-                        req.id,
-                        Waiter { tx, t_submit, attempts: 0, escalated_from: None },
-                    );
-                    self.enqueue(req);
-                }
+                Ok(Msg::Solve(env)) => self.accept(env),
                 Ok(Msg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -319,44 +404,113 @@ impl Worker {
         for id in ids {
             self.respond(SolveResponse::failure(id, ServiceError::ShuttingDown));
         }
-        self.alive.store(false, Ordering::Release);
+        self.shared.set_health(self.idx, WorkerHealth::Tombstoned);
+        // Anything a racing peer still forwards here lands in a channel
+        // whose receiver is about to drop; the envelope drop guard
+        // answers those callers with `ShuttingDown`.
+    }
+
+    /// Take ownership of an envelope: park its response state and batch
+    /// its request.
+    fn accept(&mut self, env: Envelope) {
+        let EnvelopeInner { req, tx, t_submit, attempts, escalated_from, classified } =
+            env.claim();
+        self.waiters.insert(
+            req.id,
+            Waiter { tx, t_submit, attempts, escalated_from, classified },
+        );
+        self.enqueue(req);
     }
 
     /// Terminal degraded state: no engine exists and none can be built.
-    /// Every waiter and every future submission gets an immediate
-    /// `WorkerUnavailable` failure; the thread stays alive to answer
-    /// until the coordinator shuts down, so no receiver ever hangs.
+    /// The parked queue fails over to surviving workers — with their
+    /// original submit times, retry budgets and classifier verdicts —
+    /// and everything that keeps arriving is forwarded the same way, so
+    /// no receiver ever hangs. Only when no survivor exists do requests
+    /// fail with `WorkerUnavailable`.
     fn tombstone(mut self, rx: &Receiver<Msg>) {
-        self.alive.store(false, Ordering::Release);
-        // Requests parked in the batcher fail through their waiters.
-        let _ = self.batcher.drain(Instant::now());
+        self.shared.set_health(self.idx, WorkerHealth::Tombstoned);
+        for batch in self.batcher.drain(Instant::now()) {
+            for req in batch.requests {
+                self.fail_over(req);
+            }
+        }
+        // Waiters without a parked request (none expected) can't be
+        // forwarded — fail them rather than strand them.
         let ids: Vec<u64> = self.waiters.keys().copied().collect();
         for id in ids {
             self.respond(SolveResponse::failure(id, ServiceError::WorkerUnavailable));
         }
         loop {
             match rx.recv() {
-                Ok(Msg::Solve(req, tx, _)) => {
-                    self.metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-                    self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
-                    let _ =
-                        tx.send(SolveResponse::failure(req.id, ServiceError::WorkerUnavailable));
-                }
+                Ok(Msg::Solve(env)) => self.forward(env),
                 Ok(Msg::Shutdown) | Err(_) => return,
             }
         }
     }
 
-    /// (Re)build the engine from the factory, absorbing a factory panic.
-    fn rebuild_engine(&mut self) -> bool {
-        match catch_unwind(AssertUnwindSafe(|| (self.make_engine)())) {
+    /// Re-wrap a parked request (plus its waiter state) for a survivor.
+    fn fail_over(&mut self, req: SolveRequest) {
+        let Some(w) = self.waiters.remove(&req.id) else { return };
+        let env = Envelope::from_parts(
+            EnvelopeInner {
+                req,
+                tx: w.tx,
+                t_submit: w.t_submit,
+                attempts: w.attempts,
+                escalated_from: w.escalated_from,
+                classified: w.classified,
+            },
+            self.metrics.clone(),
+        );
+        self.forward(env);
+    }
+
+    /// Send an envelope to a surviving peer, walking the fleet as peers
+    /// die under us; `WorkerUnavailable` only when none is left.
+    fn forward(&self, mut env: Envelope) {
+        let hash = bucket_hash(&BucketKey::of(env.req()));
+        loop {
+            let Some(j) = self.shared.failover_target(self.idx, hash) else {
+                return env.fail(ServiceError::WorkerUnavailable);
+            };
+            match self.shared.send(j, Msg::Solve(env)) {
+                Ok(()) => return,
+                Err(Msg::Solve(back)) => {
+                    self.shared.set_health(j, WorkerHealth::Tombstoned);
+                    env = back;
+                }
+                Err(Msg::Shutdown) => return,
+            }
+        }
+    }
+
+    /// (Re)build the engine from the shared factory, absorbing a factory
+    /// panic. `is_rebuild` distinguishes post-panic recovery (counted in
+    /// `worker_rebuilds`) from the initial build.
+    fn rebuild_engine(&mut self, is_rebuild: bool) -> bool {
+        let factory = self.make_engine.clone();
+        match catch_unwind(AssertUnwindSafe(move || {
+            // A factory that panicked on another worker poisons the lock;
+            // clearing it keeps one dead build from cascading fleet-wide.
+            let mut make = factory.lock().unwrap_or_else(|p| p.into_inner());
+            (make)()
+        })) {
             Ok(engine) => {
                 self.engine = Some(engine);
+                if is_rebuild {
+                    self.metrics.record_worker_rebuild(self.idx);
+                }
+                self.shared.set_health(self.idx, WorkerHealth::Healthy);
                 true
             }
             Err(payload) => {
-                eprintln!("[rode] engine factory panicked: {}", panic_message(&payload));
-                self.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[rode] engine factory panicked on worker {}: {}",
+                    self.idx,
+                    panic_message(&payload)
+                );
+                self.metrics.record_worker_panic(self.idx);
                 self.engine = None;
                 false
             }
@@ -370,7 +524,8 @@ impl Worker {
     }
 
     /// Has this request's deadline passed? (Measured against its original
-    /// submission time, so escalation retries share the same budget.)
+    /// submission time, so escalation retries and failover hops share the
+    /// same budget.)
     fn expired(&self, req: &SolveRequest, now: Instant) -> bool {
         match (req.deadline, self.waiters.get(&req.id)) {
             (Some(d), Some(w)) => now.duration_since(w.t_submit) > d,
@@ -405,7 +560,10 @@ impl Worker {
         };
         let name = engine.name();
         match catch_unwind(AssertUnwindSafe(|| engine.solve(&batch))) {
-            Ok(Ok(responses)) => self.deliver(&batch, responses),
+            Ok(Ok(responses)) => {
+                self.panic_streak = 0;
+                self.deliver(&batch, responses);
+            }
             Ok(Err(e)) => {
                 eprintln!("[rode] batch failed on {name}: {e}");
                 self.fail_batch(&batch, ServiceError::EngineError { detail: e.to_string() });
@@ -418,13 +576,19 @@ impl Worker {
                 // batch.
                 let detail = panic_message(&payload);
                 eprintln!(
-                    "[rode] engine {name} panicked on a {}-request batch: {detail}",
+                    "[rode] engine {name} panicked on worker {} ({}-request batch): {detail}",
+                    self.idx,
                     batch.requests.len()
                 );
-                self.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                self.metrics.record_worker_panic(self.idx);
                 self.engine = None;
                 self.fail_batch(&batch, ServiceError::WorkerPanic { detail });
-                self.rebuild_engine();
+                self.panic_streak += 1;
+                self.shared.set_health(self.idx, WorkerHealth::Rebuilding);
+                if let Some(delay) = rebuild_backoff(self.panic_streak) {
+                    std::thread::sleep(delay);
+                }
+                self.rebuild_engine(true);
             }
         }
     }
@@ -473,6 +637,8 @@ impl Worker {
     }
 
     /// Re-enqueue a stiffness casualty into the implicit-method bucket.
+    /// (Locally — the waiter lives here, and moving buckets between
+    /// workers mid-request would buy nothing.)
     fn escalate(&mut self, mut req: SolveRequest, failed_on: Option<MethodId>, target: MethodId) {
         if self.expired(&req, Instant::now()) {
             // The deadline died with the first attempt; don't burn a
@@ -483,22 +649,36 @@ impl Worker {
         if let Some(w) = self.waiters.get_mut(&req.id) {
             w.attempts += 1;
             w.escalated_from = failed_on;
+            if w.attempts == 1 && w.classified == Classified::Explicit {
+                // The proactive classifier said "explicit" and the solve
+                // still died of stiffness: a miss, caught by the reactive
+                // safety net.
+                self.metrics.classifier_misses.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.metrics.requests_retried.fetch_add(1, Ordering::Relaxed);
         req.method = Some(target);
         self.enqueue(req);
     }
 
-    /// Deliver a terminal response: stamp escalation provenance, settle
-    /// the metrics taxonomy, release the in-flight slot.
+    /// Deliver a terminal response: stamp escalation/classifier
+    /// provenance, settle the metrics taxonomy, release the in-flight
+    /// slot.
     fn respond(&mut self, mut resp: SolveResponse) {
         let Some(w) = self.waiters.remove(&resp.id) else { return };
         resp.escalated_from = w.escalated_from;
+        resp.classified_stiff = w.classified == Classified::Stiff;
         match &resp.error {
             None => {
                 self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
                 self.metrics.solver_steps_sum.fetch_add(resp.stats.n_steps, Ordering::Relaxed);
                 self.metrics.record_latency(w.t_submit.elapsed());
+                if resp.classified_stiff && resp.status == Some(Status::Success) {
+                    // A proactive routing that solved first try on the
+                    // implicit method: the classifier saved a failed
+                    // explicit attempt.
+                    self.metrics.classifier_hits.fetch_add(1, Ordering::Relaxed);
+                }
             }
             Some(ServiceError::DeadlineExpired) => {
                 self.metrics.requests_deadline_expired.fetch_add(1, Ordering::Relaxed);
@@ -510,6 +690,19 @@ impl Worker {
         self.metrics.requests_inflight.fetch_sub(1, Ordering::AcqRel);
         let _ = w.tx.send(resp);
     }
+}
+
+/// Backoff before the next factory run after `panic_streak` consecutive
+/// engine panics: the first panic in a streak rebuilds immediately;
+/// consecutive panics double the delay from [`REBUILD_BACKOFF_BASE`] up
+/// to [`REBUILD_BACKOFF_MAX`].
+fn rebuild_backoff(panic_streak: u32) -> Option<Duration> {
+    if panic_streak <= 1 {
+        return None;
+    }
+    let doublings = (panic_streak - 2).min(10);
+    let delay = REBUILD_BACKOFF_BASE.saturating_mul(1u32 << doublings);
+    Some(delay.min(REBUILD_BACKOFF_MAX))
 }
 
 /// Best-effort panic payload extraction for logs and `ServiceError`.
@@ -555,6 +748,7 @@ mod tests {
         assert!(resp.is_success());
         assert_eq!(resp.error, None);
         assert_eq!(resp.escalated_from, None);
+        assert!(!resp.classified_stiff);
         assert_eq!(resp.ys.len(), 20);
         assert!(resp.stats.n_steps > 0);
     }
@@ -574,7 +768,9 @@ mod tests {
         assert_eq!(m.requests_completed.load(Ordering::Relaxed), 10);
         // All in-flight slots were released.
         assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
-        // max_batch 4 over 10 requests => at least 3 batches.
+        // max_batch 4 over 10 same-bucket requests => at least 3 batches
+        // (bucket affinity keeps one shape on one worker, so batching is
+        // as tight as the single-worker service).
         assert!(m.batches_dispatched.load(Ordering::Relaxed) >= 3);
         assert!(m.mean_batch_size() > 1.0);
     }
@@ -642,5 +838,76 @@ mod tests {
             assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_success());
         }
         assert_eq!(c.metrics().requests_shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn worker_count_resolution() {
+        assert_eq!(resolve_workers(3), 3);
+        // 0 = one per core, and there is always at least one core.
+        assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn fleet_size_follows_config() {
+        let c = Coordinator::spawn(
+            ServiceConfig { workers: 3, ..ServiceConfig::default() },
+            || Box::new(NativeEngine::default()),
+        );
+        assert_eq!(c.workers(), 3);
+        assert_eq!(c.alive_workers(), 3);
+        for i in 0..3 {
+            assert_ne!(c.worker_health(i), WorkerHealth::Tombstoned);
+        }
+        // The fleet solves; affinity routes same-bucket traffic together.
+        let rxs: Vec<_> = (0..8).map(|_| c.submit(vdp_req(2.0))).collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_success());
+        }
+        assert_eq!(c.metrics().requests_inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn rebuild_backoff_is_bounded_and_skips_first_panic() {
+        assert_eq!(rebuild_backoff(0), None);
+        assert_eq!(rebuild_backoff(1), None); // first panic: rebuild immediately
+        assert_eq!(rebuild_backoff(2), Some(REBUILD_BACKOFF_BASE));
+        assert_eq!(rebuild_backoff(3), Some(REBUILD_BACKOFF_BASE * 2));
+        // The cap holds even for absurd streaks.
+        assert_eq!(rebuild_backoff(40), Some(REBUILD_BACKOFF_MAX));
+    }
+
+    #[test]
+    fn proactive_classifier_routes_before_first_solve() {
+        // Classifier on, reactive retry off: if the stiff request solves,
+        // it solved implicit on the *first* attempt.
+        let c = Coordinator::spawn(
+            ServiceConfig {
+                workers: 1,
+                retry: RetryPolicy::disabled(),
+                classifier: ClassifierPolicy::enabled(),
+                ..ServiceConfig::default()
+            },
+            || {
+                Box::new(NativeEngine::new(
+                    crate::solver::SolveOptions::new(MethodId::DOPRI5)
+                        .with_tols(1e-6, 1e-4)
+                        .with_max_steps(500_000),
+                ))
+            },
+        );
+        let stiff = SolveRequest::new(
+            ProblemSpec::Vdp { mu: 1000.0 },
+            vec![2.0, 0.0],
+            (0..5).map(|k| k as f64 * 100.0).collect(),
+        );
+        let resp = c.solve_blocking(stiff).unwrap();
+        assert!(resp.is_success(), "status {:?} error {:?}", resp.status, resp.error);
+        assert!(resp.classified_stiff);
+        assert_eq!(resp.method, Some(MethodId::TRBDF2));
+        assert_eq!(resp.escalated_from, None); // no reactive retry happened
+        let m = c.metrics();
+        assert_eq!(m.classified_stiff.load(Ordering::Relaxed), 1);
+        assert_eq!(m.classifier_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_retried.load(Ordering::Relaxed), 0);
     }
 }

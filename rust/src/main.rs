@@ -226,6 +226,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("jac") {
         cfg.jac = flag_jac(flags)?; // `--jac auto` resets a config-file override
     }
+    cfg.workers = flag_usize_strict(flags, "workers", cfg.workers)?;
+    if let Some(v) = flags.get("classifier") {
+        cfg.classifier = match v.to_ascii_lowercase().as_str() {
+            "true" | "on" => true, // bare `--classifier` parses as "true"
+            "false" | "off" => false,
+            other => return Err(anyhow!("bad --classifier {other} (on|off)")),
+        };
+    }
     let engine_kind = flags.get("engine").cloned().unwrap_or(cfg.engine.clone());
     let artifacts_dir = cfg.artifacts_dir.clone();
     let mut solve_opts = rode::solver::SolveOptions::new(cfg.method)
@@ -244,9 +252,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             max_batch: cfg.max_batch,
             max_wait: cfg.max_wait,
             max_queue: cfg.max_queue,
+            workers: cfg.workers,
             retry: rode::coordinator::RetryPolicy {
                 method: cfg.retry_method,
                 max_retries: cfg.max_retries,
+            },
+            classifier: if cfg.classifier {
+                rode::coordinator::ClassifierPolicy::enabled()
+            } else {
+                rode::coordinator::ClassifierPolicy::default()
             },
         },
         // FnMut: called again to rebuild the engine if it panics, so it
@@ -401,7 +415,12 @@ fn main() -> Result<()> {
                  \n                    0 = unbounded;\
                  \n                    --deadline-ms D drops requests not dispatched within D;\
                  \n                    --retry-method <name>|off re-routes stiffness failures\
-                 \n                    to an implicit method, default trbdf2)\
+                 \n                    to an implicit method, default trbdf2;\
+                 \n                    --workers N runs N supervised coordinator workers, each\
+                 \n                    with its own engine; 0 = one per core (the default);\
+                 \n                    --classifier on|off probes each request's dominant\
+                 \n                    eigenvalue and routes stiff ones straight to the implicit\
+                 \n                    fallback before the first solve, default off)\
                  \n  methods          list registered methods (name, aliases, stages, order)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\

@@ -124,6 +124,10 @@ fn service_steps(t1: f64) -> (usize, u64) {
             max_wait: Duration::from_millis(1),
             max_queue: 0,
             retry: RetryPolicy::disabled(),
+            // One worker: the allocation window assumes exactly one worker
+            // thread touches the allocator while it is open.
+            workers: 1,
+            ..ServiceConfig::default()
         },
         move || Box::new(NativeEngine::new(opts.clone())),
     );

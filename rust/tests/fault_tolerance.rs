@@ -12,11 +12,18 @@
 //!   escalation visible in the response and the metrics;
 //! - a full queue sheds with [`ServiceError::Overloaded`] (low priority
 //!   first), expired deadlines are dropped at dispatch, and no receiver
-//!   ever hangs — not even when the worker is dead or shutting down.
+//!   ever hangs — not even when the worker is dead or shutting down;
+//! - in a multi-worker fleet, one worker tombstoning moves its traffic
+//!   onto survivors (`WorkerUnavailable` only when the whole fleet is
+//!   dead), and a wrong call by the proactive stiffness classifier is
+//!   caught by the reactive escalation safety net.
+//!
+//! Tests that count engine builds or rely on scripted fault ordering pin
+//! `workers: 1`; the fleet tests pin explicit worker counts.
 
 use rode::coordinator::{
-    Batch, Coordinator, NativeEngine, Priority, ProblemSpec, RetryPolicy, ServiceConfig,
-    ServiceError, SolveEngine, SolveRequest, SolveResponse,
+    Batch, ClassifierPolicy, Coordinator, NativeEngine, Priority, ProblemSpec, RetryPolicy,
+    ServiceConfig, ServiceError, SolveEngine, SolveRequest, SolveResponse, WorkerHealth,
 };
 use rode::solver::{MethodId, SolveOptions, Status};
 use std::collections::VecDeque;
@@ -114,6 +121,9 @@ fn cfg_no_retry(max_batch: usize, wait_ms: u64) -> ServiceConfig {
         max_batch,
         max_wait: Duration::from_millis(wait_ms),
         retry: RetryPolicy::disabled(),
+        // One worker: these tests count engine builds / rely on the shared
+        // fault script being consumed in submission order.
+        workers: 1,
         ..ServiceConfig::default()
     }
 }
@@ -277,6 +287,8 @@ fn full_queue_sheds_with_overloaded() {
             max_wait: Duration::from_millis(1),
             max_queue,
             retry: RetryPolicy::disabled(),
+            workers: 1,
+            ..ServiceConfig::default()
         },
         vec![Fault::Delay(300)],
     );
@@ -323,6 +335,8 @@ fn low_priority_sheds_before_high() {
             max_wait: Duration::from_millis(1),
             max_queue: 8,
             retry: RetryPolicy::disabled(),
+            workers: 1,
+            ..ServiceConfig::default()
         },
         vec![Fault::Delay(500)],
     );
@@ -436,4 +450,339 @@ fn failed_rebuild_degrades_to_immediate_errors() {
     assert_eq!(resp.error, Some(ServiceError::WorkerUnavailable));
     assert_eq!(builds.load(Ordering::SeqCst), 2);
     assert_eq!(coord.metrics().worker_panics.load(Ordering::Relaxed), 2);
+}
+
+// ---------------------------------------------------------------- fleet
+
+#[test]
+fn fleet_one_worker_tombstones_and_survivors_serve() {
+    quiet_injected_panics();
+    // Two workers (builds 1 and 2). The shared script panics the first
+    // solve; the factory refuses the rebuild (build 3), so exactly the
+    // worker that took the poisoned batch tombstones. Later traffic for
+    // the same bucket must land on the survivor — not fail.
+    let script = Arc::new(Mutex::new(VecDeque::from(vec![Fault::Panic("mid-replay")])));
+    let builds = Arc::new(AtomicUsize::new(0));
+    let builds_in_factory = builds.clone();
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            retry: RetryPolicy::disabled(),
+            workers: 2,
+            ..ServiceConfig::default()
+        },
+        move || -> Box<dyn SolveEngine> {
+            if builds_in_factory.fetch_add(1, Ordering::SeqCst) >= 2 {
+                panic!("injected: rebuild refused");
+            }
+            let script = script.clone();
+            Box::new(FaultInjectingEngine { inner: NativeEngine::default(), script })
+        },
+    );
+    assert_eq!(coord.workers(), 2);
+
+    // Blast radius: exactly the poisoned batch fails...
+    let resp = recv(coord.submit(easy_req(1.5)));
+    assert!(matches!(resp.error, Some(ServiceError::WorkerPanic { .. })));
+    std::thread::sleep(Duration::from_millis(100)); // let the rebuild fail
+
+    // ...the dead worker is tombstoned, and its bucket fails over.
+    assert_eq!(coord.alive_workers(), 1);
+    let tombstoned = (0..2)
+        .filter(|&i| coord.worker_health(i) == WorkerHealth::Tombstoned)
+        .count();
+    assert_eq!(tombstoned, 1);
+    for _ in 0..3 {
+        let resp = recv(coord.submit(easy_req(1.5)));
+        assert!(resp.is_success(), "failover request failed: {:?}", resp.error);
+    }
+
+    let m = coord.metrics();
+    // One engine panic + one factory panic, split across the breakdown.
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 2);
+    assert_eq!((0..2).map(|i| m.worker_panics_of(i)).sum::<u64>(), 2);
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 3);
+    assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn fleet_dead_factory_on_one_worker_fails_over() {
+    quiet_injected_panics();
+    // The factory works once, then refuses: one worker never gets an
+    // engine and tombstones at startup. Every request still succeeds on
+    // the survivor — a half-dead fleet is degraded, not down.
+    let builds = Arc::new(AtomicUsize::new(0));
+    let builds_in_factory = builds.clone();
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            retry: RetryPolicy::disabled(),
+            workers: 2,
+            ..ServiceConfig::default()
+        },
+        move || -> Box<dyn SolveEngine> {
+            if builds_in_factory.fetch_add(1, Ordering::SeqCst) >= 1 {
+                panic!("injected: factory down");
+            }
+            Box::new(NativeEngine::default())
+        },
+    );
+    std::thread::sleep(Duration::from_millis(100)); // let startup settle
+    assert_eq!(coord.alive_workers(), 1);
+
+    // Spread traffic over several buckets so both halves of the hash
+    // space are exercised; none may see WorkerUnavailable.
+    let rxs: Vec<_> = (0..8)
+        .map(|k| {
+            let mut r = easy_req(1.0 + k as f64 * 0.1);
+            r.t_eval = (0..10 + k).map(|j| j as f64 * 0.3).collect();
+            coord.submit(r)
+        })
+        .collect();
+    for rx in rxs {
+        let resp = recv(rx);
+        assert!(resp.is_success(), "degraded fleet dropped a request: {:?}", resp.error);
+    }
+    assert_eq!(coord.metrics().requests_completed.load(Ordering::Relaxed), 8);
+}
+
+#[test]
+fn fleet_fully_dead_returns_worker_unavailable() {
+    quiet_injected_panics();
+    // Both factories refuse: only now — with zero alive workers — may the
+    // service answer WorkerUnavailable.
+    let coord = Coordinator::spawn(
+        ServiceConfig { workers: 2, ..ServiceConfig::default() },
+        || -> Box<dyn SolveEngine> { panic!("injected: factory down") },
+    );
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(coord.alive_workers(), 0);
+    for i in 0..2 {
+        assert_eq!(coord.worker_health(i), WorkerHealth::Tombstoned);
+    }
+    for _ in 0..3 {
+        let resp = recv(coord.submit(easy_req(1.0)));
+        assert_eq!(resp.error, Some(ServiceError::WorkerUnavailable));
+    }
+    assert_eq!(coord.metrics().requests_inflight.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn fleet_shutdown_under_load_strands_no_receiver() {
+    // Three workers, slow batches, a scripted panic, and shutdown while
+    // requests are still in flight (some mid-failover): every receiver
+    // must resolve with a terminal response — never hang.
+    let (coord, _) = scripted(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            retry: RetryPolicy::disabled(),
+            workers: 3,
+            ..ServiceConfig::default()
+        },
+        vec![Fault::Delay(100), Fault::Panic("mid-shutdown"), Fault::Delay(100)],
+    );
+    let rxs: Vec<_> = (0..12)
+        .map(|k| {
+            let mut r = easy_req(1.0);
+            r.t_eval = (0..8 + (k % 4)).map(|j| j as f64 * 0.3).collect();
+            coord.submit(r)
+        })
+        .collect();
+    drop(coord); // begins shutdown while work is queued on all workers
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("stranded receiver");
+        assert!(
+            resp.is_success()
+                || matches!(
+                    resp.error,
+                    Some(ServiceError::ShuttingDown)
+                        | Some(ServiceError::WorkerPanic { .. })
+                        | Some(ServiceError::WorkerUnavailable)
+                ),
+            "unexpected terminal state: {:?}/{:?}",
+            resp.status,
+            resp.error
+        );
+    }
+}
+
+#[test]
+fn fleet_metrics_taxonomy_is_exact_under_concurrency() {
+    quiet_injected_panics();
+    // Four workers, four submitter threads, mixed traffic (panicking
+    // batches, NaN solves, tight deadlines, priorities). Whatever the
+    // interleaving, the terminal classes must partition submissions
+    // exactly — no request double-counted or lost.
+    let (coord, _) = scripted(
+        ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            retry: RetryPolicy::disabled(),
+            workers: 4,
+            ..ServiceConfig::default()
+        },
+        vec![Fault::Panic("taxonomy"), Fault::Delay(50), Fault::Panic("taxonomy")],
+    );
+    let coord = Arc::new(coord);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let rxs: Vec<_> = (0..25)
+                    .map(|k| {
+                        let mut r = easy_req(1.0 + (k % 5) as f64);
+                        r.t_eval = (0..6 + (k % 3)).map(|j| j as f64 * 0.3).collect();
+                        if k % 7 == 0 {
+                            r.y0 = vec![f64::NAN, 0.0]; // completed, NonFinite
+                        }
+                        if k % 11 == 3 {
+                            r = r.with_deadline(Duration::from_micros(1));
+                        }
+                        if t % 2 == 0 && k % 13 == 5 {
+                            r = r.with_priority(Priority::Low);
+                        }
+                        coord.submit(r)
+                    })
+                    .collect();
+                for rx in rxs {
+                    recv(rx); // any terminal response; must not hang
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let m = coord.metrics();
+    let submitted = m.requests_submitted.load(Ordering::Relaxed);
+    let completed = m.requests_completed.load(Ordering::Relaxed);
+    let failed = m.requests_failed.load(Ordering::Relaxed);
+    let shed = m.requests_shed.load(Ordering::Relaxed);
+    let expired = m.requests_deadline_expired.load(Ordering::Relaxed);
+    assert_eq!(submitted, 100);
+    assert_eq!(
+        completed + failed + shed + expired,
+        submitted,
+        "taxonomy must partition: {completed}+{failed}+{shed}+{expired} != {submitted}"
+    );
+    assert_eq!(m.requests_inflight.load(Ordering::Relaxed), 0);
+    // The per-worker breakdown reconciles with the fleet total.
+    let panics = m.worker_panics.load(Ordering::Relaxed);
+    assert_eq!(panics, 2, "both scripted panics must be consumed");
+    assert_eq!((0..4).map(|i| m.worker_panics_of(i)).sum::<u64>(), panics);
+    assert_eq!(
+        (0..4).map(|i| m.worker_rebuilds_of(i)).sum::<u64>(),
+        m.worker_rebuilds.load(Ordering::Relaxed)
+    );
+}
+
+// ----------------------------------------------------- classifier
+
+/// Classifier on, but with a step budget so generous nothing looks stiff:
+/// the stiff request is *misclassified* as explicit, dies on dopri5, and
+/// the reactive escalation safety net still lands it.
+#[test]
+fn misclassified_stiff_request_is_caught_by_escalation() {
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            classifier: ClassifierPolicy {
+                enabled: true,
+                step_budget: 1e12, // nothing ever classifies as stiff
+                ..ClassifierPolicy::default()
+            },
+            ..ServiceConfig::default() // retry: trbdf2, 1 attempt
+        },
+        || Box::new(NativeEngine::new(stiff_wall_opts())),
+    );
+    let resp = recv(coord.submit(stiff_req()));
+    assert!(resp.is_success(), "safety net failed: {:?}/{:?}", resp.status, resp.error);
+    assert_eq!(resp.method, Some(MethodId::TRBDF2));
+    assert_eq!(resp.escalated_from, Some(MethodId::DOPRI5), "must be the reactive path");
+    assert!(!resp.classified_stiff);
+
+    let m = coord.metrics();
+    assert_eq!(m.classified_stiff.load(Ordering::Relaxed), 0);
+    assert_eq!(m.classifier_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(m.classifier_misses.load(Ordering::Relaxed), 1, "the wrong call is recorded");
+    assert_eq!(m.requests_retried.load(Ordering::Relaxed), 1);
+}
+
+/// The opposite wrong call: a zero step budget classifies *everything* as
+/// stiff. An easy request then solves on the implicit fallback — slower,
+/// but still a success; a false positive must never fail a request.
+#[test]
+fn classifier_false_positive_still_succeeds() {
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            classifier: ClassifierPolicy {
+                enabled: true,
+                step_budget: 0.0, // everything classifies as stiff
+                ..ClassifierPolicy::default()
+            },
+            ..ServiceConfig::default()
+        },
+        || Box::new(NativeEngine::new(stiff_wall_opts())),
+    );
+    let resp = recv(coord.submit(easy_req(2.0)));
+    assert!(resp.is_success(), "false positive failed: {:?}/{:?}", resp.status, resp.error);
+    assert_eq!(resp.method, Some(MethodId::TRBDF2), "routed proactively to the fallback");
+    assert!(resp.classified_stiff);
+    assert_eq!(resp.escalated_from, None, "no explicit attempt was paid");
+
+    let m = coord.metrics();
+    assert_eq!(m.classified_stiff.load(Ordering::Relaxed), 1);
+    assert_eq!(m.classifier_hits.load(Ordering::Relaxed), 1);
+    assert_eq!(m.requests_retried.load(Ordering::Relaxed), 0);
+}
+
+/// The headline contract: with the classifier on, a stiff request solves
+/// on the implicit method with *zero* failed explicit attempts, and the
+/// reactive retry counter stays untouched.
+#[test]
+fn classifier_routes_stiff_traffic_with_zero_explicit_failures() {
+    let coord = Coordinator::spawn(
+        ServiceConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            classifier: ClassifierPolicy::enabled(),
+            retry: RetryPolicy::disabled(), // no safety net: proactive or bust
+            ..ServiceConfig::default()
+        },
+        || Box::new(NativeEngine::new(stiff_wall_opts())),
+    );
+    // Stiff and easy traffic interleaved: only the stiff ones reroute.
+    let stiff_rxs: Vec<_> = (0..3).map(|_| coord.submit(stiff_req())).collect();
+    let easy_rxs: Vec<_> = (0..3).map(|_| coord.submit(easy_req(2.0))).collect();
+    for rx in stiff_rxs {
+        let resp = recv(rx);
+        assert!(resp.is_success(), "proactive route failed: {:?}/{:?}", resp.status, resp.error);
+        assert_eq!(resp.method, Some(MethodId::TRBDF2));
+        assert!(resp.classified_stiff);
+        assert_eq!(resp.escalated_from, None);
+    }
+    for rx in easy_rxs {
+        let resp = recv(rx);
+        assert!(resp.is_success());
+        assert!(!resp.classified_stiff, "easy traffic stays explicit");
+        assert_eq!(resp.method, Some(MethodId::DOPRI5));
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.classified_stiff.load(Ordering::Relaxed), 3);
+    assert_eq!(m.classifier_hits.load(Ordering::Relaxed), 3);
+    assert_eq!(m.classifier_misses.load(Ordering::Relaxed), 0);
+    assert_eq!(m.requests_retried.load(Ordering::Relaxed), 0, "no reactive retries paid");
+    assert_eq!(m.requests_failed.load(Ordering::Relaxed), 0);
 }

@@ -4,11 +4,11 @@
 //!
 //! Run with `cargo bench --bench coordinator_bench`, or pass section
 //! names to run a subset (`batcher`, `service`, `threads`, `straggler`,
-//! `stiffsweep`, `pdesweep`, `replay`), e.g. `cargo bench
+//! `stiffsweep`, `pdesweep`, `replay`, `adjointsweep`), e.g. `cargo bench
 //! --bench coordinator_bench -- straggler`. The straggler section writes
-//! machine-readable `BENCH_solver.json` (the stiffsweep, pdesweep and
-//! replay sections append to it) so CI can track the perf trajectory per
-//! PR.
+//! machine-readable `BENCH_solver.json` (the stiffsweep, pdesweep,
+//! replay and adjointsweep sections append to it) so CI can track the
+//! perf trajectory per PR.
 
 use rode::bench::{
     append_bench_json, straggler_workload, threads_sweep, time_repeats, vdp_stiff_span,
@@ -20,7 +20,10 @@ use rode::coordinator::{
 use rode::exec::solve_ivp_parallel_pooled;
 use rode::nn::Rng64;
 use rode::solver::reference::solve_ivp_parallel_reference;
-use rode::solver::{solve_ivp_parallel, MethodId, PoolKind, SolveOptions, TimeGrid};
+use rode::solver::{
+    backsolve_adjoint_parallel, rk_backward_adaptive, rk_forward_tape_adaptive, solve_ivp_parallel,
+    AdjointOptions, MethodId, PoolKind, SolveOptions, TimeGrid,
+};
 use rode::tensor::BatchVec;
 use std::time::{Duration, Instant};
 
@@ -694,6 +697,115 @@ fn bench_replay() {
     }
 }
 
+/// The adjoint sweep: backsolve vs adaptive-tape wall time and tape
+/// memory on the two adjoint-shaped workloads — a heterogeneous VdP
+/// batch (tiny state, one parameter: the two adjoints cost about the
+/// same) and the CNF model (the parameter block dominates the augmented
+/// backsolve state `b·(2f+p)`, while the tape only stores `f`-sized
+/// stages: discretize-then-optimize wins wall time, the backsolve wins
+/// memory). Appends `adjointsweep-vdp` / `adjointsweep-cnf` records to
+/// `BENCH_solver.json`; `speedup_tape_vs_backsolve` carries advisory
+/// floors in `BENCH_baseline.json`, and `tape_bytes` records the memory
+/// the backsolve avoids.
+fn bench_adjointsweep() {
+    println!("--- adjointsweep (backsolve vs adaptive tape, VdP + CNF) ---");
+    let mut records = Vec::new();
+
+    let mut leg = |name: &str,
+                   sys: &dyn rode::problems::OdeSystem,
+                   y0: &BatchVec,
+                   dl: &BatchVec,
+                   t1: f64| {
+        let b = y0.batch();
+        let grid = TimeGrid::linspace_shared(b, 0.0, t1, 2);
+        let fw =
+            SolveOptions::new(MethodId::DOPRI5).with_tols(1e-6, 1e-6).with_max_steps(200_000);
+
+        // Adaptive tape: traced forward + replay + exact discrete backward.
+        let mut tape_bytes = 0usize;
+        let mut tape_steps = 0usize;
+        let xs_tape = time_repeats(1, 3, || {
+            let (sol, tape) = rk_forward_tape_adaptive(sys, y0, 0.0, t1, &fw);
+            assert!(sol.all_success());
+            let (dy0, dp) = rk_backward_adaptive(sys, &tape, dl);
+            tape_bytes = tape.tape_bytes();
+            tape_steps = tape.total_steps();
+            std::hint::black_box((dy0.row(0)[0], dp.first().copied()));
+        });
+        let s_tape = Summary::from_samples(&xs_tape);
+
+        // Backsolve: plain forward + O(checkpoints)-memory continuous adjoint.
+        let adj = AdjointOptions::new(fw.clone()).with_checkpoints(4);
+        let t0s = vec![0.0; b];
+        let t1s = vec![t1; b];
+        let mut bw_steps = 0u64;
+        let xs_back = time_repeats(1, 3, || {
+            let sol = solve_ivp_parallel(sys, y0, &grid, &fw);
+            assert!(sol.all_success());
+            let mut y1 = BatchVec::zeros(b, y0.dim());
+            for i in 0..b {
+                y1.row_mut(i).copy_from_slice(sol.y_final(i));
+            }
+            let res = backsolve_adjoint_parallel(sys, y0, &y1, dl, &t0s, &t1s, &adj);
+            bw_steps = res.stats.iter().map(|s| s.n_steps).sum();
+            std::hint::black_box(res.dl_dy0.row(0)[0]);
+        });
+        let s_back = Summary::from_samples(&xs_back);
+        let speedup = s_back.mean / s_tape.mean;
+        println!(
+            "{name:<6} tape {:>9.2} ms ({tape_steps:>6} steps, {tape_bytes:>9} B) | backsolve \
+             {:>9.2} ms ({bw_steps:>6} bw steps, 0 B) | tape x{speedup:.2}",
+            s_tape.mean, s_back.mean
+        );
+        records.push(
+            BenchRecord::new(&format!("adjointsweep-{name}"), &s_tape)
+                .field("batch", b as f64)
+                .field("dim", y0.dim() as f64)
+                .field("tape_bytes", tape_bytes as f64)
+                .field("tape_total_steps", tape_steps as f64)
+                .field("backsolve_ms", s_back.mean)
+                .field("backsolve_steps", bw_steps as f64)
+                .field("speedup_tape_vs_backsolve", speedup),
+        );
+    };
+
+    {
+        let b = 16;
+        let mut rng = Rng64::new(17);
+        let sys = rode::problems::VdP::new((0..b).map(|_| rng.range(0.5, 2.5)).collect());
+        let y0 = BatchVec::broadcast(&[1.5, 0.0], b);
+        let dl = BatchVec::broadcast(&[1.0, 0.0], b);
+        leg("vdp", &sys, &y0, &dl, 2.0);
+    }
+    {
+        let b = 16;
+        let d = 2;
+        let mut rng = Rng64::new(3);
+        let model = rode::problems::CnfDynamics::new(d, &[32, 32], &mut rng);
+        let f = d + 1;
+        let mut y0 = BatchVec::zeros(b, f);
+        let mut dl = BatchVec::zeros(b, f);
+        for i in 0..b {
+            let c = if rng.uniform() < 0.5 { -1.5 } else { 1.5 };
+            y0.row_mut(i)[0] = c + 0.4 * rng.normal();
+            y0.row_mut(i)[1] = 0.4 * rng.normal();
+            let row = dl.row_mut(i);
+            for k in 0..d {
+                row[k] = 0.5 / b as f64;
+            }
+            row[d] = 1.0 / b as f64;
+        }
+        leg("cnf", &model, &y0, &dl, 1.0);
+    }
+
+    match append_bench_json("BENCH_solver.json", &records) {
+        Ok(()) => {
+            println!("appended {} adjointsweep records to BENCH_solver.json", records.len())
+        }
+        Err(e) => eprintln!("failed to write BENCH_solver.json: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name || a == "all");
@@ -717,5 +829,8 @@ fn main() {
     }
     if want("replay") {
         bench_replay();
+    }
+    if want("adjointsweep") {
+        bench_adjointsweep();
     }
 }

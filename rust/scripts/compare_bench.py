@@ -41,6 +41,7 @@ TRACKED = (
     "speedup_banded_vs_dense",
     "replay_throughput_w4_vs_w1",
     "classifier_hit_rate",
+    "speedup_tape_vs_backsolve",
 )
 
 

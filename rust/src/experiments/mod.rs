@@ -17,11 +17,13 @@
 mod cnf_t5;
 mod fen_t4;
 mod pid_fig2;
+mod train;
 mod vdp_t3;
 
 pub use cnf_t5::{cnf_table5, CnfT5Config, CnfT5Row};
 pub use fen_t4::{fen_table4, FenT4Config, FenT4Row};
 pub use pid_fig2::{pid_fig2, PidFig2Config, PidFig2Point};
+pub use train::{train_cnf, train_fen, AdjointMode, TrainConfig, TrainReport};
 pub use vdp_t3::{
     fused_launches_per_step, sec41_steps, vdp_table3, Sec41Point, VdpT3Config, VdpT3Row,
     SIM_LAUNCH_MS,

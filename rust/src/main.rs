@@ -303,6 +303,55 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `rode train` — run a real training workload (CNF or FEN) with a
+/// selectable adjoint mode; the CI training-smoke job drives this.
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    use rode::experiments::{train_cnf, train_fen, AdjointMode, TrainConfig};
+    let model = flags.get("model").map(String::as_str).unwrap_or("cnf");
+    let mode = match flags.get("adjoint") {
+        None => AdjointMode::FixedTape,
+        Some(s) => AdjointMode::parse(s)
+            .ok_or_else(|| anyhow!("unknown --adjoint {s} (fixed|tape|backsolve)"))?,
+    };
+    let cfg = TrainConfig {
+        steps: flag_usize(flags, "steps", 20),
+        batch: flag_usize(flags, "batch", 8),
+        hidden: vec![flag_usize(flags, "hidden", 16)],
+        lr: flag_f64(flags, "lr", 1e-2),
+        t1: flag_f64(flags, "t1", 1.0),
+        mode,
+        checkpoints: flag_usize_strict(flags, "checkpoints", 1)?,
+        n_rk: flag_usize_strict(flags, "n-rk", 12)?,
+        n_nodes: flag_usize(flags, "nodes", 12),
+        seed: flag_usize(flags, "seed", 7) as u64,
+    };
+    let rep = match model {
+        "cnf" => train_cnf(&cfg),
+        "fen" => train_fen(&cfg),
+        other => return Err(anyhow!("unknown --model {other} (cnf|fen)")),
+    };
+    println!("model: {model}  adjoint: {}  steps: {}", rep.mode.name(), cfg.steps);
+    for (i, l) in rep.losses.iter().enumerate() {
+        println!("  step {i:>3}  loss {l:.6}");
+    }
+    println!("final loss: {:.6}", rep.final_loss);
+    println!("peak tape:  {} bytes", rep.tape_bytes);
+    println!("wall time:  {:.1} ms", rep.wall_ms);
+    anyhow::ensure!(
+        rep.final_loss.is_finite() && rep.losses.iter().all(|l| l.is_finite()),
+        "training produced a non-finite loss"
+    );
+    if cfg.steps >= 5 {
+        anyhow::ensure!(
+            rep.final_loss < rep.losses[0],
+            "loss did not decrease: {} -> {}",
+            rep.losses[0],
+            rep.final_loss
+        );
+    }
+    Ok(())
+}
+
 /// `rode methods` — dump the method registry as a table. Everything the
 /// process can route to is listed, so a runtime-registered method would
 /// appear here too.
@@ -384,13 +433,14 @@ fn main() -> Result<()> {
     match cmd {
         "solve" => cmd_solve(&flags),
         "serve" => cmd_serve(&flags),
+        "train" => cmd_train(&flags),
         "methods" => cmd_methods(),
         "check-artifacts" => cmd_check_artifacts(&flags),
         "tables" => tables::run(&args[1.min(args.len())..], &flags),
         _ => {
             println!(
                 "rode — parallel ODE solver stack (torchode reproduction)\n\n\
-                 usage: rode <solve|serve|methods|check-artifacts|tables> [--flags]\n\
+                 usage: rode <solve|serve|train|methods|check-artifacts|tables> [--flags]\n\
                  \n  solve            one-shot native solve (Listing 1 demo)\
                  \n                   (--method <name> — any registered method, see `rode methods`;\
                  \n                    trbdf2 and kvaerno43 are the implicit (stiff) methods;\
@@ -421,6 +471,14 @@ fn main() -> Result<()> {
                  \n                    --classifier on|off probes each request's dominant\
                  \n                    eigenvalue and routes stiff ones straight to the implicit\
                  \n                    fallback before the first solve, default off)\
+                 \n  train            run a training workload end to end\
+                 \n                   (--model cnf|fen selects the workload, default cnf;\
+                 \n                    --adjoint fixed|tape|backsolve selects how gradients\
+                 \n                    flow through the solve, default fixed;\
+                 \n                    --checkpoints K segments the backsolve state re-solve;\
+                 \n                    --steps N optimizer steps, --batch B, --lr F, --t1 F,\
+                 \n                    --hidden W, --n-rk N fixed-tape substeps,\
+                 \n                    --nodes N FEN mesh size, --seed S)\
                  \n  methods          list registered methods (name, aliases, stages, order)\
                  \n  check-artifacts  compile & smoke-run AOT artifacts\
                  \n  tables <which>   regenerate paper tables/figures\

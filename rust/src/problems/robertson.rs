@@ -91,6 +91,30 @@ impl OdeSystem for Robertson {
         jac[7] = 2.0 * K2 * y2;
         jac[8] = 0.0;
     }
+
+    fn has_vjp(&self) -> bool {
+        true
+    }
+
+    /// `out_y = Jᵀa` with the analytic Jacobian above; the rate constants
+    /// are fixed, so there are no parameter gradients (`n_params = 0`).
+    /// Makes Robertson usable as a *stiff* adjoint/training workload
+    /// (`tests/adjoint_gradients.rs` differentiates through it with both
+    /// the tape and the backsolve modes).
+    fn vjp_inst(
+        &self,
+        _inst: usize,
+        _t: f64,
+        y: &[f64],
+        a: &[f64],
+        out_y: &mut [f64],
+        _out_p: &mut [f64],
+    ) {
+        let (y2, y3) = (y[1], y[2]);
+        out_y[0] = -K1 * a[0] + K1 * a[1];
+        out_y[1] = K3 * y3 * a[0] + (-K3 * y3 - 2.0 * K2 * y2) * a[1] + 2.0 * K2 * y2 * a[2];
+        out_y[2] = K3 * y2 * a[0] - K3 * y2 * a[1];
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +129,16 @@ mod tests {
             sys.f_inst(0, 0.0, &y, &mut dy);
             let s: f64 = dy.iter().sum();
             assert!(s.abs() < 1e-12, "Σdy = {s} for {y:?}");
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        let sys = Robertson::new(1);
+        assert!(sys.has_vjp());
+        let y = [0.7, 3.0e-5, 0.3 - 3.0e-5];
+        for a in [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.3, -0.8, 0.5]] {
+            crate::problems::check_vjp_y(&sys, 0, 0.0, &y, &a);
         }
     }
 

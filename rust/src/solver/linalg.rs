@@ -106,6 +106,47 @@ pub fn lu_solve(a: &[f64], piv: &[usize], n: usize, x: &mut [f64]) {
     }
 }
 
+/// Solve `Aᵀ·x = b` in place using the factors produced by
+/// [`lu_factor`] for `A` — no transposed copy, no refactorization.
+///
+/// With `P·A = L·U` the transposed system is `Uᵀ·Lᵀ·P·x = b`:
+/// forward-substitute `Uᵀ` (lower triangular, diagonal `U[i][i]`),
+/// back-substitute `Lᵀ` (unit upper triangular), then undo the recorded
+/// row swaps in reverse order to peel off `P`. This is what backprop
+/// through an implicit Newton stage solves: the implicit-function
+/// theorem turns a VJP seed `u` on a stage slope into
+/// `w = (I − hγJ)⁻ᵀ·u` against the very matrix the forward Newton
+/// factored ([`super::backprop`]). Sequential arithmetic only — the
+/// same bitwise-determinism contract as [`lu_solve`].
+pub fn lu_solve_transposed(a: &[f64], piv: &[usize], n: usize, x: &mut [f64]) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert!(piv.len() >= n && x.len() >= n);
+    // Forward: Uᵀ — x[i] = (x[i] − Σ_{j<i} U[j][i]·x[j]) / U[i][i].
+    for i in 0..n {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= a[j * n + i] * x[j];
+        }
+        x[i] = s / a[i * n + i];
+    }
+    // Backward: Lᵀ (unit diagonal) — x[i] -= Σ_{j>i} L[j][i]·x[j].
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in (i + 1)..n {
+            s -= a[j * n + i] * x[j];
+        }
+        x[i] = s;
+    }
+    // Undo P: the swaps were applied k = 0..n during elimination, so
+    // invert them in reverse order.
+    for k in (0..n).rev() {
+        let p = piv[k];
+        if p != k {
+            x.swap(k, p);
+        }
+    }
+}
+
 /// Width of one column of banded storage for a matrix with `kl`
 /// subdiagonals and `ku` superdiagonals: `kl + ku + 1` band rows plus
 /// `kl` extra rows of headroom for the fill that partial pivoting can
@@ -539,5 +580,73 @@ mod tests {
         assert_eq!(m.get(4, 4), 2.0);
         assert_eq!(m.get(0, 4), 0.0); // outside the band
         assert_eq!(m.get(4, 0), 0.0);
+    }
+
+    #[test]
+    fn transposed_solve_matches_explicit_transpose() {
+        // Aᵀx = b through the factors of A must agree with solving the
+        // explicitly transposed matrix through its own factorization.
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            (rng >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let a: Vec<f64> = (0..n * n).map(|_| next() * 4.0).collect();
+            let b: Vec<f64> = (0..n).map(|_| next() * 2.0).collect();
+
+            let mut lu = a.clone();
+            let mut piv = vec![0usize; n];
+            if !lu_factor(&mut lu, &mut piv, n) {
+                continue; // singular draw — skip, the next size re-rolls
+            }
+            let mut x = b.clone();
+            lu_solve_transposed(&lu, &piv, n, &mut x);
+
+            let mut at = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    at[j * n + i] = a[i * n + j];
+                }
+            }
+            let mut lut = at;
+            let mut pivt = vec![0usize; n];
+            assert!(lu_factor(&mut lut, &mut pivt, n));
+            let mut xt = b.clone();
+            lu_solve(&lut, &pivt, n, &mut xt);
+
+            // Residual check against the original system, both ways
+            // (relative: a badly conditioned draw inflates |x|).
+            let scale = 1.0 + x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            for i in 0..n {
+                let mut r = -b[i];
+                for j in 0..n {
+                    r += a[j * n + i] * x[j]; // (Aᵀ x)_i
+                }
+                assert!(r.abs() < 1e-8 * scale, "n={n} residual[{i}] = {r}");
+                assert!(
+                    (x[i] - xt[i]).abs() < 1e-8 * scale,
+                    "n={n} x[{i}]: {} vs {}",
+                    x[i],
+                    xt[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_solve_identity_and_permutation() {
+        // A pure permutation matrix exercises only the pivot bookkeeping.
+        let n = 3;
+        let a = [0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0];
+        let mut lu = a.to_vec();
+        let mut piv = vec![0usize; n];
+        assert!(lu_factor(&mut lu, &mut piv, n));
+        let mut x = vec![1.0, 2.0, 3.0];
+        lu_solve_transposed(&lu, &piv, n, &mut x);
+        // Aᵀ x = b with A mapping e1→e3, e2→e1, e3→e2: x = A b.
+        assert_eq!(x, vec![2.0, 3.0, 1.0]);
     }
 }

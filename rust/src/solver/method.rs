@@ -212,9 +212,11 @@ impl MethodId {
     }
 
     /// Whether this method has implicit stages (Newton-based stage
-    /// solves; supported by the parallel and joint loops and every
-    /// pooled entry point, but not by the frozen reference loop, the
-    /// naive baseline or the backprop/adjoint paths).
+    /// solves; supported by the parallel and joint loops, every pooled
+    /// entry point, and the training paths — [`super::backprop`]
+    /// differentiates through the Newton solve via the implicit-function
+    /// theorem and [`super::adjoint`] only needs the forward solve — but
+    /// not by the frozen reference loop or the naive baseline).
     pub fn is_implicit(self) -> bool {
         self.record().compiled.is_implicit()
     }

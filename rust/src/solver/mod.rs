@@ -37,7 +37,14 @@ pub mod step;
 pub mod tableau;
 
 pub use active::ActiveSet;
-pub use adjoint::{adjoint_backward_joint, adjoint_backward_parallel, AdjointOptions, AdjointResult};
+pub use adjoint::{
+    adjoint_backward_joint, adjoint_backward_parallel, backsolve_adjoint_joint,
+    backsolve_adjoint_parallel, AdjointOptions, AdjointResult,
+};
+pub use backprop::{
+    replay_tape, rk_backward, rk_backward_adaptive, rk_forward_tape, rk_forward_tape_adaptive,
+    AdaptiveTape, RkTape,
+};
 pub use controller::{Controller, ControllerState, StepDecision};
 pub use joint::solve_ivp_joint;
 pub use method::{register_method, register_method_with_aliases, MethodId, RegisterError};

@@ -72,7 +72,9 @@ pub struct CompiledTableau {
     /// The shared implicit diagonal coefficient γ of an (ES)DIRK tableau
     /// (`0.0` for explicit methods). Derived from `Tableau::diag` with
     /// the single-γ structure checked, so one LU of `I − hγJ` per step
-    /// serves every implicit stage ([`super::implicit`]).
+    /// serves every implicit stage ([`super::implicit`]); the same
+    /// matrix, transposed, carries the implicit-function-theorem
+    /// backward solves in [`super::backprop`].
     pub gamma: f64,
 }
 

@@ -1,0 +1,372 @@
+//! Property suite for the adjoint family: every way of getting
+//! `∂L/∂(y0, θ)` through a solve must agree with central finite
+//! differences — and with the other ways.
+//!
+//! Three modes under test (see `docs/architecture.md`):
+//!
+//! - **fixed tape** (`rk_forward_tape` / `rk_backward`): exact gradient
+//!   of the fixed-step discrete map, so FD is run on that same discrete
+//!   map and the agreement is tight. Covers explicit *and* implicit
+//!   (DIRK) methods — the implicit backward differentiates through the
+//!   Newton solve via the implicit-function theorem.
+//! - **adaptive tape** (`rk_forward_tape_adaptive` /
+//!   `rk_backward_adaptive`): the recorded step trace is replayed and
+//!   differentiated exactly; FD is run on the adaptive forward loss at
+//!   tight tolerances.
+//! - **backsolve** (`backsolve_adjoint_parallel`): continuous adjoint
+//!   with checkpointed state re-solve; compared against FD of a
+//!   high-accuracy reference solve.
+//!
+//! Plus the determinism contract: gradients are **bitwise identical**
+//! across pool kinds × thread counts × memory layouts, because the
+//! forward trace is bitwise-stable (the solver's own parity contract)
+//! and both backward passes are row-serial.
+
+use rode::config::PoolKind;
+use rode::prelude::*;
+use rode::problems::{ExponentialDecay, Robertson, VdP};
+use rode::solver::{
+    backsolve_adjoint_parallel, replay_tape, rk_backward, rk_backward_adaptive, rk_forward_tape,
+    rk_forward_tape_adaptive, AdjointOptions,
+};
+
+/// Build a single-instance system for the given scalar parameter value.
+type MakeSys = dyn Fn(f64) -> Box<dyn OdeSystem>;
+
+struct Case {
+    name: &'static str,
+    make: Box<MakeSys>,
+    /// Nominal parameter (fed back through `make` for FD).
+    param: Option<f64>,
+    y0: Vec<f64>,
+    /// Loss weights: `L = Σ_d w[d] · y_d(t1)`.
+    w: Vec<f64>,
+    t1: f64,
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case {
+            name: "linear-decay",
+            make: Box::new(|lam| Box::new(ExponentialDecay::new(vec![lam], 1))),
+            param: Some(0.8),
+            y0: vec![2.0],
+            w: vec![1.0],
+            t1: 1.5,
+        },
+        Case {
+            name: "vdp",
+            make: Box::new(|mu| Box::new(VdP::new(vec![mu]))),
+            param: Some(1.2),
+            y0: vec![1.2, -0.4],
+            w: vec![1.0, -0.3],
+            t1: 1.5,
+        },
+        Case {
+            name: "robertson",
+            make: Box::new(|_| Box::new(Robertson::new(1))),
+            param: None,
+            y0: vec![1.0, 0.0, 0.0],
+            w: vec![1.0, 0.5, -0.2],
+            t1: 0.01,
+        },
+    ]
+}
+
+fn weighted(w: &[f64], y: &[f64]) -> f64 {
+    w.iter().zip(y).map(|(wi, yi)| wi * yi).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Fixed tape: FD on the discrete map itself, explicit and implicit methods.
+// ---------------------------------------------------------------------------
+
+fn fixed_loss(sys: &dyn OdeSystem, y0: &[f64], w: &[f64], t1: f64, n: usize, m: MethodId) -> f64 {
+    let y0b = BatchVec::from_rows(&[y0.to_vec()]);
+    let tape = rk_forward_tape(sys, &y0b, 0.0, t1 / n as f64, n, m);
+    weighted(w, tape.y_final().row(0))
+}
+
+#[test]
+fn fixed_tape_gradients_match_discrete_fd() {
+    // DIRK stages on the explicit side too: DOPRI5 run at fixed step.
+    for m in [MethodId::DOPRI5, MethodId::TRBDF2, MethodId::KVAERNO43] {
+        for c in cases() {
+            let n = 60;
+            let sys = (c.make)(c.param.unwrap_or(0.0));
+            let y0b = BatchVec::from_rows(&[c.y0.clone()]);
+            let tape = rk_forward_tape(sys.as_ref(), &y0b, 0.0, c.t1 / n as f64, n, m);
+            let seed = BatchVec::from_rows(&[c.w.clone()]);
+            let (dy0, dp) = rk_backward(sys.as_ref(), &tape, &seed);
+            // FD w.r.t. each initial-condition component.
+            for d in 0..c.y0.len() {
+                let h = 1e-5 * (1.0 + c.y0[d].abs());
+                let mut yp = c.y0.clone();
+                yp[d] += h;
+                let mut ym = c.y0.clone();
+                ym[d] -= h;
+                let fd = (fixed_loss(sys.as_ref(), &yp, &c.w, c.t1, n, m)
+                    - fixed_loss(sys.as_ref(), &ym, &c.w, c.t1, n, m))
+                    / (2.0 * h);
+                let got = dy0.row(0)[d];
+                assert!(
+                    (got - fd).abs() < 2e-4 * (1.0 + fd.abs()),
+                    "{} {m:?} dy0[{d}]: {got} vs fd {fd}",
+                    c.name,
+                );
+            }
+            // FD w.r.t. the scalar parameter, where the case has one.
+            if let Some(p) = c.param {
+                let h = 1e-5 * (1.0 + p.abs());
+                let sp = (c.make)(p + h);
+                let sm = (c.make)(p - h);
+                let fd = (fixed_loss(sp.as_ref(), &c.y0, &c.w, c.t1, n, m)
+                    - fixed_loss(sm.as_ref(), &c.y0, &c.w, c.t1, n, m))
+                    / (2.0 * h);
+                assert!(
+                    (dp[0] - fd).abs() < 2e-4 * (1.0 + fd.abs()),
+                    "{} {m:?} dθ: {} vs fd {fd}",
+                    c.name,
+                    dp[0]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive tape: FD on the adaptive forward loss at tight tolerances.
+// ---------------------------------------------------------------------------
+
+fn adaptive_loss(sys: &dyn OdeSystem, y0: &[f64], w: &[f64], t1: f64, opts: &SolveOptions) -> f64 {
+    let y0b = BatchVec::from_rows(&[y0.to_vec()]);
+    let (sol, tape) = rk_forward_tape_adaptive(sys, &y0b, 0.0, t1, opts);
+    assert!(sol.all_success());
+    weighted(w, tape.y_final().row(0))
+}
+
+#[test]
+fn adaptive_tape_gradients_match_fd() {
+    // Explicit and implicit adaptive solves; the implicit replay
+    // re-solves every DIRK stage through Newton.
+    let combos: Vec<(MethodId, &str)> = vec![
+        (MethodId::DOPRI5, "linear-decay"),
+        (MethodId::DOPRI5, "vdp"),
+        (MethodId::DOPRI5, "robertson"),
+        (MethodId::TRBDF2, "vdp"),
+        (MethodId::KVAERNO43, "vdp"),
+        (MethodId::TRBDF2, "robertson"),
+    ];
+    for (m, name) in combos {
+        let c = cases().into_iter().find(|c| c.name == name).unwrap();
+        let sys = (c.make)(c.param.unwrap_or(0.0));
+        let opts = SolveOptions::new(m).with_tols(1e-9, 1e-9).with_max_steps(200_000);
+        let y0b = BatchVec::from_rows(&[c.y0.clone()]);
+        let (sol, tape) = rk_forward_tape_adaptive(sys.as_ref(), &y0b, 0.0, c.t1, &opts);
+        assert!(sol.all_success(), "{name} {m:?} forward failed");
+        let seed = BatchVec::from_rows(&[c.w.clone()]);
+        let (dy0, dp) = rk_backward_adaptive(sys.as_ref(), &tape, &seed);
+        for d in 0..c.y0.len() {
+            let h = 1e-5 * (1.0 + c.y0[d].abs());
+            let mut yp = c.y0.clone();
+            yp[d] += h;
+            let mut ym = c.y0.clone();
+            ym[d] -= h;
+            let fd = (adaptive_loss(sys.as_ref(), &yp, &c.w, c.t1, &opts)
+                - adaptive_loss(sys.as_ref(), &ym, &c.w, c.t1, &opts))
+                / (2.0 * h);
+            let got = dy0.row(0)[d];
+            assert!(
+                (got - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "{name} {m:?} dy0[{d}]: {got} vs fd {fd}"
+            );
+        }
+        if let Some(p) = c.param {
+            let h = 1e-5 * (1.0 + p.abs());
+            let fd = (adaptive_loss((c.make)(p + h).as_ref(), &c.y0, &c.w, c.t1, &opts)
+                - adaptive_loss((c.make)(p - h).as_ref(), &c.y0, &c.w, c.t1, &opts))
+                / (2.0 * h);
+            assert!(
+                (dp[0] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "{name} {m:?} dθ: {} vs fd {fd}",
+                dp[0]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backsolve: continuous adjoint vs FD of a high-accuracy reference solve.
+// ---------------------------------------------------------------------------
+
+fn reference_loss(sys: &dyn OdeSystem, y0: &[f64], w: &[f64], t1: f64) -> f64 {
+    let y0b = BatchVec::from_rows(&[y0.to_vec()]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, t1, 2);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-12, 1e-12).with_max_steps(500_000);
+    let sol = solve_ivp_parallel(sys, &y0b, &grid, &opts);
+    assert!(sol.all_success());
+    weighted(w, sol.y_final(0))
+}
+
+fn backsolve_grad(
+    sys: &dyn OdeSystem,
+    y0: &[f64],
+    w: &[f64],
+    t1: f64,
+    checkpoints: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let y0b = BatchVec::from_rows(&[y0.to_vec()]);
+    let grid = TimeGrid::linspace_shared(1, 0.0, t1, 2);
+    let fw = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10).with_max_steps(500_000);
+    let sol = solve_ivp_parallel(sys, &y0b, &grid, &fw);
+    assert!(sol.all_success());
+    let y1 = BatchVec::from_rows(&[sol.y_final(0).to_vec()]);
+    let dl = BatchVec::from_rows(&[w.to_vec()]);
+    let opts = AdjointOptions::new(fw).with_checkpoints(checkpoints);
+    let res = backsolve_adjoint_parallel(sys, &y0b, &y1, &dl, &[0.0], &[t1], &opts);
+    assert!(res.status.iter().all(|s| *s == Status::Success));
+    (res.dl_dy0.row(0).to_vec(), res.dl_dparams)
+}
+
+#[test]
+fn backsolve_gradients_match_fd() {
+    // Robertson's stiff mode amplifies reversal error as e^{10⁴·s}, so
+    // the backsolve leg uses a one-relaxation-time horizon and enough
+    // checkpoints to keep each segment's amplification mild — exactly
+    // the regime checkpointing exists for.
+    let combos: Vec<(&str, f64, usize)> =
+        vec![("linear-decay", 1.5, 1), ("vdp", 1.5, 1), ("vdp", 1.5, 4), ("robertson", 5e-4, 5)];
+    for (name, t1, k) in combos {
+        let c = cases().into_iter().find(|c| c.name == name).unwrap();
+        let sys = (c.make)(c.param.unwrap_or(0.0));
+        let (dy0, dp) = backsolve_grad(sys.as_ref(), &c.y0, &c.w, t1, k);
+        for d in 0..c.y0.len() {
+            let h = 1e-5 * (1.0 + c.y0[d].abs());
+            let mut yp = c.y0.clone();
+            yp[d] += h;
+            let mut ym = c.y0.clone();
+            ym[d] -= h;
+            let fd = (reference_loss(sys.as_ref(), &yp, &c.w, t1)
+                - reference_loss(sys.as_ref(), &ym, &c.w, t1))
+                / (2.0 * h);
+            assert!(
+                (dy0[d] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "{name} k={k} dy0[{d}]: {} vs fd {fd}",
+                dy0[d]
+            );
+        }
+        if let Some(p) = c.param {
+            let h = 1e-5 * (1.0 + p.abs());
+            let fd = (reference_loss((c.make)(p + h).as_ref(), &c.y0, &c.w, t1)
+                - reference_loss((c.make)(p - h).as_ref(), &c.y0, &c.w, t1))
+                / (2.0 * h);
+            assert!(
+                (dp[0] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "{name} k={k} dθ: {} vs fd {fd}",
+                dp[0]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-mode agreement: three estimators of the same continuous gradient.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_three_modes_agree_on_vdp() {
+    let c = cases().into_iter().find(|c| c.name == "vdp").unwrap();
+    let sys = (c.make)(c.param.unwrap());
+    let y0b = BatchVec::from_rows(&[c.y0.clone()]);
+    let seed = BatchVec::from_rows(&[c.w.clone()]);
+
+    let n = 400;
+    let tape = rk_forward_tape(sys.as_ref(), &y0b, 0.0, c.t1 / n as f64, n, MethodId::DOPRI5);
+    let (fx_dy0, fx_dp) = rk_backward(sys.as_ref(), &tape, &seed);
+
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-10, 1e-10);
+    let (sol, atape) = rk_forward_tape_adaptive(sys.as_ref(), &y0b, 0.0, c.t1, &opts);
+    assert!(sol.all_success());
+    let (ad_dy0, ad_dp) = rk_backward_adaptive(sys.as_ref(), &atape, &seed);
+
+    let (bs_dy0, bs_dp) = backsolve_grad(sys.as_ref(), &c.y0, &c.w, c.t1, 2);
+
+    for d in 0..c.y0.len() {
+        let a = fx_dy0.row(0)[d];
+        let b = ad_dy0.row(0)[d];
+        let s = bs_dy0[d];
+        assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "fixed vs adaptive dy0[{d}]: {a} vs {b}");
+        assert!((a - s).abs() < 1e-4 * (1.0 + a.abs()), "fixed vs backsolve dy0[{d}]: {a} vs {s}");
+    }
+    assert!((fx_dp[0] - ad_dp[0]).abs() < 1e-4 * (1.0 + fx_dp[0].abs()));
+    assert!((fx_dp[0] - bs_dp[0]).abs() < 1e-4 * (1.0 + fx_dp[0].abs()));
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: bitwise-identical gradients across exec configurations.
+// ---------------------------------------------------------------------------
+
+fn grad_bits(dy0: &BatchVec, dp: &[f64]) -> Vec<u64> {
+    let mut bits = Vec::new();
+    for i in 0..dy0.batch() {
+        bits.extend(dy0.row(i).iter().map(|v| v.to_bits()));
+    }
+    bits.extend(dp.iter().map(|v| v.to_bits()));
+    bits
+}
+
+#[test]
+fn gradients_bitwise_identical_across_exec_configs() {
+    let b = 6;
+    let sys = VdP::new(vec![0.6, 1.4, 2.2, 0.9, 3.0, 1.1]);
+    let y0 = BatchVec::broadcast(&[1.5, 0.0], b);
+    let seed = BatchVec::broadcast(&[1.0, -0.5], b);
+    let t1 = 1.2;
+    let grid = TimeGrid::linspace_shared(b, 0.0, t1, 2);
+    let base = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8).with_trace();
+
+    let mut tape_ref: Option<Vec<u64>> = None;
+    let mut back_ref: Option<Vec<u64>> = None;
+    for kind in [PoolKind::Serial, PoolKind::Scoped, PoolKind::Persistent] {
+        for threads in [1usize, 3] {
+            for layout in [Layout::RowMajor, Layout::DimMajor] {
+                let label = format!("{} threads={threads} {}", kind.name(), layout.name());
+                let opts =
+                    base.clone().with_pool(kind).with_threads(threads).with_layout(layout);
+
+                // Adaptive tape: pooled, traced forward → serial replay.
+                let sol = solve_ivp_parallel_pooled(&sys, &y0, &grid, &opts);
+                assert!(sol.all_success(), "{label}");
+                let tape = replay_tape(&sys, &y0, &sol, MethodId::DOPRI5);
+                let (dy0, dp) = rk_backward_adaptive(&sys, &tape, &seed);
+                let bits = grad_bits(&dy0, &dp);
+                match &tape_ref {
+                    None => tape_ref = Some(bits),
+                    Some(r) => assert_eq!(r, &bits, "adaptive-tape grads differ: {label}"),
+                }
+
+                // Backsolve: pooled forward for y1, adjoint under the
+                // same varied layout.
+                let mut y1 = BatchVec::zeros(b, 2);
+                for i in 0..b {
+                    y1.row_mut(i).copy_from_slice(sol.y_final(i));
+                }
+                let adj = AdjointOptions::new(opts.clone()).with_checkpoints(2);
+                let res = backsolve_adjoint_parallel(
+                    &sys,
+                    &y0,
+                    &y1,
+                    &seed,
+                    &vec![0.0; b],
+                    &vec![t1; b],
+                    &adj,
+                );
+                let bits = grad_bits(&res.dl_dy0, &res.dl_dparams);
+                match &back_ref {
+                    None => back_ref = Some(bits),
+                    Some(r) => assert_eq!(r, &bits, "backsolve grads differ: {label}"),
+                }
+            }
+        }
+    }
+}

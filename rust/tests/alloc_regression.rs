@@ -16,7 +16,8 @@ use rode::coordinator::{
     Coordinator, NativeEngine, ProblemSpec, RetryPolicy, ServiceConfig, SolveRequest,
 };
 use rode::prelude::*;
-use rode::problems::{ReactionDiffusion, VdP};
+use rode::problems::{ExponentialDecay, ReactionDiffusion, VdP};
+use rode::solver::{backsolve_adjoint_parallel, AdjointOptions};
 use rode::tensor::BatchVec;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -150,6 +151,39 @@ fn service_steps(t1: f64) -> (usize, u64) {
     (n, steps)
 }
 
+/// The backsolve adjoint's memory contract: the whole backward pass
+/// (checkpoint re-solve plus per-segment augmented solves) performs a
+/// span-independent number of allocations even as the forward and
+/// backward step counts grow with the horizon — O(checkpoints) memory,
+/// never O(steps). The forward solve for `y1` runs outside the window;
+/// everything `backsolve_adjoint_parallel` does is inside it.
+fn backsolve_steps(t1: f64) -> (usize, u64) {
+    let lams = vec![0.15, 0.3, 0.5, 0.2, 0.45, 0.25, 0.4, 0.35];
+    let b = lams.len();
+    let sys = ExponentialDecay::new(lams, 2);
+    let y0 = BatchVec::broadcast(&[2.0, -1.0], b);
+    let grid = TimeGrid::linspace_shared(b, 0.0, t1, 2);
+    let opts = SolveOptions::new(MethodId::DOPRI5).with_tols(1e-8, 1e-8).with_max_steps(20_000);
+    let sol = solve_ivp_parallel(&sys, &y0, &grid, &opts);
+    assert!(sol.all_success());
+    let mut y1 = BatchVec::zeros(b, 2);
+    for i in 0..b {
+        y1.row_mut(i).copy_from_slice(sol.y_final(i));
+    }
+    let dl = BatchVec::broadcast(&[1.0, 0.5], b);
+    let t0s = vec![0.0; b];
+    let t1s = vec![t1; b];
+    let adj = AdjointOptions::new(opts).with_checkpoints(3);
+    let mut steps = 0;
+    let n = allocs_during(|| {
+        let res = backsolve_adjoint_parallel(&sys, &y0, &y1, &dl, &t0s, &t1s, &adj);
+        assert!(res.status.iter().all(|s| *s == Status::Success));
+        steps = res.stats.iter().map(|s| s.n_steps).sum();
+        std::hint::black_box(res.dl_dparams[0]);
+    });
+    (n, steps)
+}
+
 type Case = (&'static str, Box<dyn Fn(f64) -> (usize, u64)>);
 
 /// Allocation counts must not scale with step count, for the parallel
@@ -255,6 +289,8 @@ fn steady_state_allocates_nothing() {
                 rd_steps(t1 / 10.0, &opts)
             }),
         ),
+        // Backsolve adjoint: the training-facing O(1)-memory backward.
+        ("backsolve adjoint (checkpointed)", Box::new(backsolve_steps)),
         // Full serving path: request-shaped allocations are fine, but the
         // count must not scale with solver steps.
         ("service path (coordinator + native engine)", Box::new(service_steps)),
